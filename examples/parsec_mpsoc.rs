@@ -1,0 +1,166 @@
+//! END-TO-END driver: the full three-layer system on a real small workload.
+//!
+//! This example proves all layers compose:
+//!
+//!   L1/L2 (build time)   Pallas addrgen + blackscholes kernels, AOT-lowered
+//!                        to artifacts/*.hlo.txt
+//!   runtime              Rust loads the HLO via PJRT and executes it:
+//!                        traces for every core + real Black-Scholes prices
+//!   L3                   the prices are *carried through the simulated
+//!                        coherent memory*: a producer core stores each
+//!                        price to a shared line, a barrier synchronises,
+//!                        and consumer cores load + verify them (any stale
+//!                        or lost data shows up as value_mismatches)
+//!   PDES                 the same system runs under the serial reference
+//!                        and the parti PDES kernel; speedup + accuracy are
+//!                        reported like Fig. 8
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example parsec_mpsoc
+//! ```
+
+use std::sync::Arc;
+
+use parti_sim::config::{Mode, RunConfig};
+use parti_sim::harness::{make_workload, run_with_workload};
+use parti_sim::pdes::HostModel;
+use parti_sim::runtime::{blackscholes_payload, Runtime, PAYLOAD_B};
+use parti_sim::sim::time::NS;
+use parti_sim::stats::compare;
+use parti_sim::workload::gen::{squares32, SQUARES_KEY};
+use parti_sim::workload::trace::NO_EXPECT;
+use parti_sim::workload::{CoreTrace, Workload, FIG8_APPS};
+
+const SHARED: u64 = 0x8000_0000;
+
+/// Build the payload-verification workload: core 0 produces PJRT-computed
+/// option prices into shared memory; the other cores consume and check.
+fn blackscholes_payload_workload(
+    rt: &Runtime,
+    n_consumers: usize,
+    n_opts: usize,
+) -> anyhow::Result<Workload> {
+    // Deterministic option batch (mirrors model.option_inputs()).
+    let u = |i: usize, k: u64| {
+        squares32(i as u64 * 5 + k, SQUARES_KEY) as f32 / u32::MAX as f32
+    };
+    let spot: Vec<f32> = (0..PAYLOAD_B).map(|i| 5.0 + 95.0 * u(i, 0)).collect();
+    let strike: Vec<f32> = (0..PAYLOAD_B).map(|i| 5.0 + 95.0 * u(i, 1)).collect();
+    let rate: Vec<f32> = (0..PAYLOAD_B).map(|i| 0.01 + 0.09 * u(i, 2)).collect();
+    let vol: Vec<f32> = (0..PAYLOAD_B).map(|i| 0.05 + 0.55 * u(i, 3)).collect();
+    let time: Vec<f32> = (0..PAYLOAD_B).map(|i| 0.1 + 2.9 * u(i, 4)).collect();
+    let (call, _put) = blackscholes_payload(rt, &spot, &strike, &rate, &vol, &time)?;
+
+    // Producer: store price bits to shared lines, then barrier.
+    let mut p_addr = Vec::new();
+    let mut p_store = Vec::new();
+    let mut p_val = Vec::new();
+    for i in 0..n_opts {
+        p_addr.push(SHARED + i as u64 * 64);
+        p_store.push(true);
+        p_val.push(call[i].to_bits() as u64);
+    }
+    // After the barrier the producer idles on private loads.
+    for i in 0..n_opts {
+        p_addr.push(0x1000_0000 + i as u64 * 64);
+        p_store.push(false);
+        p_val.push(0);
+    }
+    let producer = CoreTrace {
+        gap: vec![2; p_addr.len()],
+        expected: vec![NO_EXPECT; p_addr.len()],
+        addr: p_addr,
+        is_store: p_store,
+        value: p_val,
+    };
+
+    // Consumers: private warm-up until the barrier, then load + verify.
+    let mut cores = vec![Arc::new(producer)];
+    for c in 0..n_consumers {
+        let mut addr = Vec::new();
+        let mut expected = Vec::new();
+        for i in 0..n_opts {
+            // per-consumer private warm-up region
+            addr.push(0x1_1000_0000 + ((c as u64) << 24) + i as u64 * 64);
+            expected.push(NO_EXPECT);
+        }
+        for i in 0..n_opts {
+            addr.push(SHARED + i as u64 * 64);
+            expected.push(call[i].to_bits() as u64);
+        }
+        let n = addr.len();
+        cores.push(Arc::new(CoreTrace {
+            addr,
+            is_store: vec![false; n],
+            gap: vec![2; n],
+            value: vec![0; n],
+            expected,
+        }));
+    }
+    Ok(Workload {
+        cores,
+        barrier_every: n_opts,
+        name: "blackscholes-payload".into(),
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = Runtime::default_dir();
+    anyhow::ensure!(
+        Runtime::artifacts_available(&dir),
+        "artifacts/ missing — run `make artifacts` first"
+    );
+    let rt = Runtime::new(dir)?;
+
+    // ---- Part 1: Black-Scholes prices through the simulated memory ----
+    println!("=== Part 1: PJRT Black-Scholes payload through coherent memory ===");
+    let w = blackscholes_payload_workload(&rt, 3, 512)?;
+    let mut cfg = RunConfig::default();
+    cfg.system.cores = w.n_cores();
+    for mode in [Mode::Serial, Mode::Virtual] {
+        let mut c = cfg.clone();
+        c.mode = mode;
+        c.quantum = 8 * NS;
+        let r = run_with_workload(&c, &w)?;
+        let mism = r.stats.sum_suffix(".value_mismatches");
+        println!(
+            "{mode:?}: {} ops committed, {} price loads verified, {} mismatches",
+            r.stats.sum_suffix(".committed_ops"),
+            512 * 3,
+            mism
+        );
+        anyhow::ensure!(mism == 0.0, "payload corrupted in {mode:?} mode");
+    }
+
+    // ---- Part 2: Fig. 8-style PARSEC subset on 8 cores ----
+    println!("\n=== Part 2: PARSEC subset + STREAM @ 8 cores (Fig. 8 shape) ===");
+    println!(
+        "{:<14} {:>9} {:>10} {:>8}",
+        "app", "speedup", "terr(%)", "csum"
+    );
+    for app in FIG8_APPS {
+        let mut s_cfg = RunConfig::default();
+        s_cfg.app = app.to_string();
+        s_cfg.system.cores = 8;
+        s_cfg.ops_per_core = 2048;
+        let workload = make_workload(&s_cfg)?;
+        let serial = run_with_workload(&s_cfg, &workload)?;
+        let mut p_cfg = s_cfg.clone();
+        p_cfg.mode = Mode::Virtual;
+        p_cfg.quantum = 8 * NS;
+        let pdes = run_with_workload(&p_cfg, &workload)?;
+        let mut host = HostModel::default();
+        host.calibrate_cost(&serial);
+        let speedup = host.speedup(serial.events, pdes.work.as_ref().unwrap());
+        let acc = compare(&serial, &pdes);
+        println!(
+            "{:<14} {:>8.2}x {:>10.2} {:>8}",
+            app,
+            speedup,
+            acc.sim_time_error * 100.0,
+            if acc.checksum_match { "ok" } else { "DIFF" }
+        );
+    }
+    println!("\nAll layers composed: Pallas -> HLO -> PJRT -> traces/payloads -> Ruby CHI-lite -> PDES.");
+    Ok(())
+}

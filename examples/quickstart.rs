@@ -1,0 +1,54 @@
+//! Quickstart: build a 4-core MPSoC (Table 2 defaults), run a workload on
+//! the reference serial kernel and on the parti PDES kernel, and compare.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use parti_sim::config::{Mode, RunConfig};
+use parti_sim::harness::{compare_modes, run_once};
+use parti_sim::pdes::HostModel;
+use parti_sim::sim::time::NS;
+use parti_sim::stats::Summary;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Configure: 4 ARM-like O3 cores, CHI-lite Ruby hierarchy.
+    let mut cfg = RunConfig::default();
+    cfg.app = "blackscholes".to_string();
+    cfg.system.cores = 4;
+    cfg.ops_per_core = 4096;
+
+    // 2. Reference run on the single-thread DES kernel.
+    let serial = run_once(&cfg)?;
+    println!("--- serial reference ---");
+    println!("{}", Summary::from_result(&serial).to_json());
+
+    // 3. parti PDES: per-core time domains + shared domain, quantum 8 ns.
+    let mut par = cfg.clone();
+    par.mode = Mode::Virtual; // deterministic PDES; use Parallel on a many-core host
+    par.quantum = 8 * NS;
+    let mut host = HostModel::default(); // models the paper's 64-core host
+    let row = compare_modes(&cfg, &par, &mut host)?;
+
+    println!("\n--- parti-sim PDES (quantum 8 ns, modeled 64-core host) ---");
+    println!("speedup:            {:.2}x", row.speedup);
+    println!("sim-time error:     {:.2}%", row.sim_time_error * 100.0);
+    println!(
+        "miss-rate err (pp): l1i={:.3} l1d={:.3} l2={:.3} l3={:.3}",
+        row.miss_rate_err_pp[0],
+        row.miss_rate_err_pp[1],
+        row.miss_rate_err_pp[2],
+        row.miss_rate_err_pp[3]
+    );
+    println!(
+        "functional check:   load checksums {}",
+        if row.checksum_match { "match" } else { "MISMATCH" }
+    );
+    println!(
+        "pdes artefacts:     {} cross-domain events, {} postponed (t_pp mean {:.2} ns)",
+        row.run.pdes.cross_events,
+        row.run.pdes.postponed,
+        row.run.pdes.tpp_mean() / 1000.0
+    );
+    Ok(())
+}

@@ -1,0 +1,107 @@
+"""AOT-lower the L2 model to HLO *text* artifacts for the Rust runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``). The HLO text parser reassigns ids, so text
+round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Artifacts (written to ``--outdir``, default ../artifacts):
+
+  workload.hlo.txt      params u64[16]                     -> (addr u64[N], store u32[N], gap u32[N])
+  blackscholes.hlo.txt  5 x f32[B]                          -> (call f32[B], put f32[B])
+  stream.hlo.txt        b f32[B], c f32[B], scalar f32[1]   -> a f32[B]
+  manifest.json         shapes + constants the Rust side asserts against
+
+Usage: cd python && python -m compile.aot [--outdir ../artifacts] [--out ../artifacts/model.hlo.txt]
+"""
+
+import argparse
+import json
+import pathlib
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .kernels import PARAMS_LEN  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_workload() -> str:
+    spec = jax.ShapeDtypeStruct((PARAMS_LEN,), jnp.uint64)
+    return to_hlo_text(jax.jit(model.workload_trace).lower(spec))
+
+
+def lower_blackscholes() -> str:
+    spec = jax.ShapeDtypeStruct((model.PAYLOAD_B,), jnp.float32)
+    return to_hlo_text(
+        jax.jit(model.blackscholes_payload).lower(spec, spec, spec, spec, spec)
+    )
+
+
+def lower_stream() -> str:
+    vec = jax.ShapeDtypeStruct((model.PAYLOAD_B,), jnp.float32)
+    scl = jax.ShapeDtypeStruct((1,), jnp.float32)
+    return to_hlo_text(jax.jit(model.stream_payload).lower(vec, vec, scl))
+
+
+ARTIFACTS = {
+    "workload": lower_workload,
+    "blackscholes": lower_blackscholes,
+    "stream": lower_stream,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    # --out kept for Makefile compatibility: names the stamp artifact; all
+    # artifacts are always emitted into its directory.
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    outdir = pathlib.Path(args.out).parent if args.out else pathlib.Path(args.outdir)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    manifest = {
+        "params_len": PARAMS_LEN,
+        "trace_n": model.TRACE_N,
+        "payload_b": model.PAYLOAD_B,
+        "artifacts": {},
+    }
+    for name, lower in ARTIFACTS.items():
+        text = lower()
+        path = outdir / f"{name}.hlo.txt"
+        path.write_text(text)
+        manifest["artifacts"][name] = {
+            "file": path.name,
+            "chars": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    (outdir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    if args.out:
+        # Stamp file expected by the Makefile dependency rule.
+        stamp = pathlib.Path(args.out)
+        if stamp.name not in {f"{n}.hlo.txt" for n in ARTIFACTS}:
+            stamp.write_text(
+                "\n".join(f"{n}.hlo.txt" for n in ARTIFACTS) + "\n"
+            )
+    print(f"wrote {outdir / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

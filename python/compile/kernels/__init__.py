@@ -1,0 +1,17 @@
+"""L1 Pallas kernels for the parti-sim workload-synthesis pipeline.
+
+Everything here runs at *build time only* (``make artifacts``); the Rust
+coordinator executes the AOT-lowered HLO via PJRT and never imports Python.
+
+uint64 math is used throughout the address generator, so x64 mode must be
+enabled before any jax import downstream of this package.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from . import ref  # noqa: E402,F401
+from .addrgen import addrgen, ADDRGEN_BLOCK, PARAMS_LEN  # noqa: E402,F401
+from .blackscholes import blackscholes, BS_BLOCK  # noqa: E402,F401
+from .stream_triad import stream_triad, TRIAD_BLOCK  # noqa: E402,F401

@@ -1,0 +1,145 @@
+"""Pallas address-stream generator kernel (the trace-synthesis hot spot).
+
+One invocation produces, for a single simulated core, a block-tiled stream of
+``n`` memory operations: line-aligned addresses, a load/store flag, and the
+compute-cycle gap preceding each operation. The knobs (working-set sizes,
+stride, sharing fraction, ...) parameterise the PARSEC/STREAM-like behaviours
+of Table 3 in the paper.
+
+Tiling (§Perf / §Hardware-Adaptation in DESIGN.md): the grid iterates over
+``n // ADDRGEN_BLOCK`` steps; each step materialises one block of the three
+output streams entirely in VMEM (3 × 1024 lanes × ≤8 B = 24 KiB ≪ VMEM).
+There is no matmul — this is a VPU-bound elementwise kernel — so the MXU is
+idle by design. The kernel is lowered with ``interpret=True``: the CPU PJRT
+backend cannot execute Mosaic custom-calls, and interpret mode folds the grid
+into plain HLO that any backend runs. On a real TPU the 1-D iota below would
+need to be a 2-D ``broadcasted_iota``; interpret mode accepts 1-D.
+
+Parameter vector layout (uint64[PARAMS_LEN], shared with the Rust
+re-implementation in ``rust/src/workload/generator.rs`` — keep in sync):
+
+  [0] seed            [1] core_id        [2] offset (stream position)
+  [3] private_base    [4] private_size   [5] shared_base
+  [6] shared_size     [7] stride         [8] share_milli
+  [9] random_milli   [10] line_bytes    [11] compute_base
+ [12] compute_spread [13] store_milli   [14..15] reserved
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import SQUARES_KEY
+
+ADDRGEN_BLOCK = 1024
+PARAMS_LEN = 16
+
+# Parameter indices (mirror of the table above).
+P_SEED = 0
+P_CORE_ID = 1
+P_OFFSET = 2
+P_PRIVATE_BASE = 3
+P_PRIVATE_SIZE = 4
+P_SHARED_BASE = 5
+P_SHARED_SIZE = 6
+P_STRIDE = 7
+P_SHARE_MILLI = 8
+P_RANDOM_MILLI = 9
+P_LINE_BYTES = 10
+P_COMPUTE_BASE = 11
+P_COMPUTE_SPREAD = 12
+P_STORE_MILLI = 13
+
+
+def _squares32(ctr, key):
+    """squares32 CBRNG round function — see ref.squares32_ref."""
+    x = ctr * key
+    y = x
+    z = y + key
+    x = x * x + y
+    x = (x >> jnp.uint64(32)) | (x << jnp.uint64(32))
+    x = x * x + z
+    x = (x >> jnp.uint64(32)) | (x << jnp.uint64(32))
+    x = x * x + y
+    x = (x >> jnp.uint64(32)) | (x << jnp.uint64(32))
+    x = x * x + z
+    return (x >> jnp.uint64(32)).astype(jnp.uint32)
+
+
+def _addrgen_kernel(params_ref, addr_ref, store_ref, gap_ref):
+    """One grid step: synthesise ADDRGEN_BLOCK ops for the current block."""
+    blk = pl.program_id(0)
+    p = params_ref[...]
+    key = jnp.uint64(SQUARES_KEY)
+
+    seed = p[P_SEED]
+    core_id = p[P_CORE_ID]
+    offset = p[P_OFFSET]
+    line_bytes = jnp.maximum(p[P_LINE_BYTES], jnp.uint64(1))
+    private_lines = jnp.maximum(p[P_PRIVATE_SIZE] // line_bytes, jnp.uint64(1))
+    shared_lines = jnp.maximum(p[P_SHARED_SIZE] // line_bytes, jnp.uint64(1))
+
+    # Global stream index of each lane in this block.
+    lane = jax.lax.iota(jnp.uint64, ADDRGEN_BLOCK)
+    i = offset + blk.astype(jnp.uint64) * jnp.uint64(ADDRGEN_BLOCK) + lane
+
+    base_ctr = seed ^ (core_id << jnp.uint64(40))
+    ctr = base_ctr + i * jnp.uint64(4)
+    r0 = _squares32(ctr, key)
+    r1 = _squares32(ctr + jnp.uint64(1), key)
+    r2 = _squares32(ctr + jnp.uint64(2), key)
+    r3 = _squares32(ctr + jnp.uint64(3), key)
+
+    # Sequential walk advances one line every 8 ops (sub-line spatial
+    # locality: ~8 consecutive accesses land in one 64B line).
+    seq_line = ((i >> jnp.uint64(3)) * p[P_STRIDE]) % private_lines
+    rnd_line = r1.astype(jnp.uint64) % private_lines
+    use_rnd = (r1 % jnp.uint32(1000)) < p[P_RANDOM_MILLI].astype(jnp.uint32)
+    priv_line = jnp.where(use_rnd, rnd_line, seq_line)
+    priv_addr = p[P_PRIVATE_BASE] + priv_line * line_bytes
+
+    shared_line = r1.astype(jnp.uint64) % shared_lines
+    shared_addr = p[P_SHARED_BASE] + shared_line * line_bytes
+
+    use_shared = (r0 % jnp.uint32(1000)) < p[P_SHARE_MILLI].astype(jnp.uint32)
+    addr_ref[...] = jnp.where(use_shared, shared_addr, priv_addr)
+
+    store_ref[...] = (
+        (r2 % jnp.uint32(1000)) < p[P_STORE_MILLI].astype(jnp.uint32)
+    ).astype(jnp.uint32)
+
+    spread = jnp.maximum(p[P_COMPUTE_SPREAD].astype(jnp.uint32), jnp.uint32(1))
+    gap_ref[...] = (
+        p[P_COMPUTE_BASE].astype(jnp.uint32) + r3 % spread
+    ).astype(jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def addrgen(params: jnp.ndarray, *, n: int = 16384):
+    """Generate ``n`` trace ops for one core.
+
+    params: uint64[PARAMS_LEN] (layout in module docstring).
+    Returns (addr: uint64[n], is_store: uint32[n], gap_cycles: uint32[n]).
+    ``n`` must be a multiple of ADDRGEN_BLOCK.
+    """
+    if n % ADDRGEN_BLOCK != 0:
+        raise ValueError(f"n={n} must be a multiple of {ADDRGEN_BLOCK}")
+    grid = (n // ADDRGEN_BLOCK,)
+    return pl.pallas_call(
+        _addrgen_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((PARAMS_LEN,), lambda i: (0,))],
+        out_specs=[
+            pl.BlockSpec((ADDRGEN_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((ADDRGEN_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((ADDRGEN_BLOCK,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.uint64),
+            jax.ShapeDtypeStruct((n,), jnp.uint32),
+            jax.ShapeDtypeStruct((n,), jnp.uint32),
+        ],
+        interpret=True,
+    )(params)

@@ -1,0 +1,77 @@
+"""Pallas Black-Scholes kernel — the PARSEC ``blackscholes`` payload.
+
+European call/put option pricing with the Abramowitz & Stegun 26.2.17
+polynomial CND, exactly as PARSEC's C implementation. The simulated cores in
+the Rust coordinator "execute" blackscholes by streaming the trace produced
+by ``addrgen``; this kernel produces the numeric results the example binaries
+use to verify functional end-to-end correctness (data written through the
+simulated coherent memory equals this kernel's output).
+
+Tiling: 1-D grid over blocks of BS_BLOCK lanes; five f32 input blocks + two
+f32 output blocks = 28 KiB of VMEM per step. Elementwise/VPU-bound (exp, log,
+sqrt) — no MXU use. interpret=True for CPU PJRT (see addrgen.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BS_BLOCK = 1024
+
+_A1 = 0.31938153
+_A2 = -0.356563782
+_A3 = 1.781477937
+_A4 = -1.821255978
+_A5 = 1.330274429
+_INV_SQRT_2PI = 0.3989422804014327
+
+
+def _cnd(x):
+    l = jnp.abs(x)
+    k = 1.0 / (1.0 + 0.2316419 * l)
+    poly = k * (_A1 + k * (_A2 + k * (_A3 + k * (_A4 + k * _A5))))
+    w = 1.0 - _INV_SQRT_2PI * jnp.exp(-l * l / 2.0) * poly
+    return jnp.where(x < 0.0, 1.0 - w, w)
+
+
+def _bs_kernel(spot_ref, strike_ref, rate_ref, vol_ref, time_ref,
+               call_ref, put_ref):
+    spot = spot_ref[...]
+    strike = strike_ref[...]
+    rate = rate_ref[...]
+    vol = vol_ref[...]
+    t = time_ref[...]
+
+    sqrt_t = jnp.sqrt(t)
+    d1 = (jnp.log(spot / strike) + (rate + 0.5 * vol * vol) * t) / (vol * sqrt_t)
+    d2 = d1 - vol * sqrt_t
+    disc = strike * jnp.exp(-rate * t)
+    call_ref[...] = spot * _cnd(d1) - disc * _cnd(d2)
+    put_ref[...] = disc * _cnd(-d2) - spot * _cnd(-d1)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def blackscholes(spot, strike, rate, vol, time):
+    """Price a batch of European options.
+
+    All inputs: f32[n] with n a multiple of BS_BLOCK.
+    Returns (call: f32[n], put: f32[n]).
+    """
+    n = spot.shape[0]
+    if n % BS_BLOCK != 0:
+        raise ValueError(f"n={n} must be a multiple of {BS_BLOCK}")
+    grid = (n // BS_BLOCK,)
+    spec = pl.BlockSpec((BS_BLOCK,), lambda i: (i,))
+    return pl.pallas_call(
+        _bs_kernel,
+        grid=grid,
+        in_specs=[spec] * 5,
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(spot, strike, rate, vol, time)

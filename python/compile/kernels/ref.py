@@ -1,0 +1,164 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth the Pallas implementations are tested against
+(pytest + hypothesis in python/tests/). They are also what the L2 model
+falls back to for shapes the kernels do not tile evenly.
+"""
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# squares32: counter-based PRNG (Widynski, "Squares: A Fast Counter-Based
+# RNG"). Deterministic, stateless, vectorises trivially -> ideal for
+# reproducible address-stream synthesis on both the JAX and Rust sides.
+# The Rust workload generator re-implements the identical function so that
+# procedurally generated fallback traces match AOT-artifact traces bit-for-bit.
+# ---------------------------------------------------------------------------
+
+SQUARES_KEY = 0xC58EFD154CE32F6D
+
+
+def squares32_ref(ctr: jnp.ndarray, key: int = SQUARES_KEY) -> jnp.ndarray:
+    """32-bit output counter-based RNG. ctr: uint64 array -> uint32 array."""
+    ctr = ctr.astype(jnp.uint64)
+    key = jnp.uint64(key)
+    x = ctr * key
+    y = x
+    z = y + key
+    # round 1
+    x = x * x + y
+    x = (x >> jnp.uint64(32)) | (x << jnp.uint64(32))
+    # round 2
+    x = x * x + z
+    x = (x >> jnp.uint64(32)) | (x << jnp.uint64(32))
+    # round 3
+    x = x * x + y
+    x = (x >> jnp.uint64(32)) | (x << jnp.uint64(32))
+    # round 4
+    x = x * x + z
+    return (x >> jnp.uint64(32)).astype(jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# Address-stream synthesis.
+#
+# Each simulated core executes a stream of memory ops. The address stream is
+# a mixture of:
+#   * private sequential/strided accesses within the core's working set
+#   * random accesses within the private working set
+#   * accesses to a globally shared region (fraction `share_milli`/1000)
+# matching the knobs that differentiate the PARSEC applications in Table 3.
+# All parameters are integers (milli-fractions) so the kernel is pure uint
+# math and bit-exact against the Rust re-implementation.
+# ---------------------------------------------------------------------------
+
+
+def addrgen_ref(
+    core_id,
+    n,
+    *,
+    seed,
+    private_base,
+    private_size,
+    shared_base,
+    shared_size,
+    stride,
+    share_milli,
+    random_milli,
+    line_bytes=64,
+    compute_base=0,
+    compute_spread=1,
+    store_milli=300,
+    offset=0,
+):
+    """Reference address-stream generator (mirror of the Pallas kernel in
+    addrgen.py and of rust/src/workload/generator.rs — keep all three in
+    sync).
+
+    Returns (addrs: uint64[n], is_store: uint32[n], gap: uint32[n]).
+
+    Per element i (counter = seed ^ (core_id<<40), stream position offset+i,
+    counter stride 4):
+      r0 -> selects shared vs private (r0 % 1000 < share_milli)
+      r1 -> random offset source
+      r2 -> store decision (r2 % 1000 < store_milli)
+      r3 -> compute-cycle gap (compute_base + r3 % compute_spread)
+    Private pattern: strided walk (i * stride) % private_lines for the
+    sequential part, random within the working set when r1 % 1000 <
+    random_milli. Shared pattern: random line in the shared region.
+    Addresses are line-aligned.
+    """
+    i = jnp.arange(n, dtype=jnp.uint64) + jnp.uint64(offset)
+    base_ctr = jnp.uint64(seed) ^ (jnp.uint64(core_id) << jnp.uint64(40))
+    ctr = base_ctr + i * jnp.uint64(4)
+    r0 = squares32_ref(ctr)
+    r1 = squares32_ref(ctr + jnp.uint64(1))
+    r2 = squares32_ref(ctr + jnp.uint64(2))
+    r3 = squares32_ref(ctr + jnp.uint64(3))
+
+    private_lines = jnp.uint64(max(private_size // line_bytes, 1))
+    shared_lines = jnp.uint64(max(shared_size // line_bytes, 1))
+
+    # One line per 8 sequential ops (spatial locality within a 64B line).
+    seq_line = ((i >> jnp.uint64(3)) * jnp.uint64(stride)) % private_lines
+    rnd_line = r1.astype(jnp.uint64) % private_lines
+    use_rnd = (r1 % jnp.uint32(1000)) < jnp.uint32(random_milli)
+    priv_line = jnp.where(use_rnd, rnd_line, seq_line)
+    priv_addr = jnp.uint64(private_base) + priv_line * jnp.uint64(line_bytes)
+
+    shared_line = r1.astype(jnp.uint64) % shared_lines
+    shared_addr = jnp.uint64(shared_base) + shared_line * jnp.uint64(line_bytes)
+
+    use_shared = (r0 % jnp.uint32(1000)) < jnp.uint32(share_milli)
+    addr = jnp.where(use_shared, shared_addr, priv_addr)
+    is_store = ((r2 % jnp.uint32(1000)) < jnp.uint32(store_milli)).astype(
+        jnp.uint32
+    )
+    gap = (
+        jnp.uint32(compute_base) + r3 % jnp.uint32(max(compute_spread, 1))
+    ).astype(jnp.uint32)
+    return addr, is_store, gap
+
+
+# ---------------------------------------------------------------------------
+# Black-Scholes (PARSEC blackscholes payload). European call/put prices.
+# ---------------------------------------------------------------------------
+
+
+def _cnd_ref(x):
+    """Cumulative normal distribution, Abramowitz & Stegun 26.2.17 — the same
+    polynomial PARSEC's blackscholes uses (keeps both sides comparable)."""
+    a1, a2, a3, a4, a5 = (
+        0.31938153,
+        -0.356563782,
+        1.781477937,
+        -1.821255978,
+        1.330274429,
+    )
+    l = jnp.abs(x)
+    k = 1.0 / (1.0 + 0.2316419 * l)
+    poly = k * (a1 + k * (a2 + k * (a3 + k * (a4 + k * a5))))
+    w = 1.0 - 1.0 / jnp.sqrt(2.0 * jnp.pi) * jnp.exp(-l * l / 2.0) * poly
+    return jnp.where(x < 0.0, 1.0 - w, w)
+
+
+def blackscholes_ref(spot, strike, rate, vol, time):
+    """Returns (call, put) prices, float32 arrays of the input shape."""
+    sqrt_t = jnp.sqrt(time)
+    d1 = (jnp.log(spot / strike) + (rate + 0.5 * vol * vol) * time) / (
+        vol * sqrt_t
+    )
+    d2 = d1 - vol * sqrt_t
+    disc = strike * jnp.exp(-rate * time)
+    call = spot * _cnd_ref(d1) - disc * _cnd_ref(d2)
+    put = disc * _cnd_ref(-d2) - spot * _cnd_ref(-d1)
+    return call, put
+
+
+# ---------------------------------------------------------------------------
+# STREAM triad payload: a = b + scalar * c.
+# ---------------------------------------------------------------------------
+
+
+def stream_triad_ref(b, c, scalar):
+    return b + scalar * c

@@ -1,0 +1,39 @@
+"""Pallas STREAM triad kernel: a[i] = b[i] + scalar * c[i].
+
+The payload of the STREAM bandwidth benchmark (www.cs.virginia.edu/stream).
+Purely bandwidth-bound — one FMA per 12 loaded/stored bytes — which is the
+point: in the paper STREAM is the workload that maximises off-chip traffic
+and therefore minimises PDES speedup. The Rust coordinator replays the
+corresponding addrgen trace; this kernel provides the numeric ground truth.
+
+The scalar arrives as an f32[1] SMEM-style block (broadcast in-kernel).
+interpret=True for CPU PJRT (see addrgen.py).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TRIAD_BLOCK = 2048
+
+
+def _triad_kernel(b_ref, c_ref, s_ref, a_ref):
+    a_ref[...] = b_ref[...] + s_ref[0] * c_ref[...]
+
+
+@jax.jit
+def stream_triad(b, c, scalar):
+    """b, c: f32[n] (n multiple of TRIAD_BLOCK); scalar: f32[1] -> f32[n]."""
+    n = b.shape[0]
+    if n % TRIAD_BLOCK != 0:
+        raise ValueError(f"n={n} must be a multiple of {TRIAD_BLOCK}")
+    grid = (n // TRIAD_BLOCK,)
+    spec = pl.BlockSpec((TRIAD_BLOCK,), lambda i: (i,))
+    return pl.pallas_call(
+        _triad_kernel,
+        grid=grid,
+        in_specs=[spec, spec, pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(b, c, scalar)

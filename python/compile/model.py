@@ -1,0 +1,102 @@
+"""L2 — the workload-synthesis model (build-time JAX, calls kernels.*).
+
+The paper evaluates parti-gem5 with ARM binaries (a bare-metal sort, a PARSEC
+subset, STREAM). Our simulated cores execute *op traces*; this module is the
+compute graph that synthesises those traces and the workloads' numeric
+payloads. It is lowered once by ``aot.py`` into ``artifacts/*.hlo.txt`` and
+executed from the Rust runtime via PJRT — Python never runs on the
+simulation path.
+
+Exported entry points (one HLO artifact each):
+
+  workload_trace(params)            -> (addr u64[N], is_store u32[N], gap u32[N])
+  blackscholes_payload(spot, ...)   -> (call f32[B], put f32[B])
+  stream_payload(b, c, scalar)      -> a f32[B]
+
+``option_inputs`` derives Black-Scholes option-parameter streams from the
+same counter-based RNG, so the Rust side can regenerate identical inputs and
+check functional end-to-end correctness of data passed through the simulated
+coherent memory.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import (
+    addrgen,
+    blackscholes,
+    stream_triad,
+    ADDRGEN_BLOCK,
+    PARAMS_LEN,
+)
+from .kernels.ref import addrgen_ref, squares32_ref
+
+# Fixed artifact shapes (the Rust side slices / re-invokes as needed).
+TRACE_N = 16384
+PAYLOAD_B = 4096
+
+
+def workload_trace(params: jnp.ndarray):
+    """Synthesise TRACE_N ops for one core. params: uint64[PARAMS_LEN]."""
+    addr, is_store, gap = addrgen(params, n=TRACE_N)
+    return addr, is_store, gap
+
+
+def blackscholes_payload(spot, strike, rate, vol, time):
+    """Price PAYLOAD_B options (PARSEC blackscholes ground truth)."""
+    return blackscholes(spot, strike, rate, vol, time)
+
+
+def stream_payload(b, c, scalar):
+    """STREAM triad ground truth."""
+    return stream_triad(b, c, scalar)
+
+
+def option_inputs(seed: int, n: int = PAYLOAD_B):
+    """Deterministic option-parameter streams from squares32 (pure jnp).
+
+    Used by aot.py to bake example inputs next to the artifacts and by the
+    tests; the Rust side regenerates the identical streams (same CBRNG).
+    """
+    i = jnp.arange(n, dtype=jnp.uint64) + (jnp.uint64(seed) << jnp.uint64(20))
+
+    def u(k):
+        r = squares32_ref(i * jnp.uint64(5) + jnp.uint64(k))
+        return r.astype(jnp.float32) / jnp.float32(2**32)
+
+    spot = 5.0 + 95.0 * u(0)
+    strike = 5.0 + 95.0 * u(1)
+    rate = 0.01 + 0.09 * u(2)
+    vol = 0.05 + 0.55 * u(3)
+    time = 0.1 + 2.9 * u(4)
+    return spot, strike, rate, vol, time
+
+
+def trace_ref(params_dict, n: int = TRACE_N):
+    """Pure-jnp oracle for workload_trace addresses (used by python/tests)."""
+    addr, is_store, _gap = addrgen_ref(
+        params_dict["core_id"],
+        n,
+        seed=params_dict["seed"],
+        private_base=params_dict["private_base"],
+        private_size=params_dict["private_size"],
+        shared_base=params_dict["shared_base"],
+        shared_size=params_dict["shared_size"],
+        stride=params_dict["stride"],
+        share_milli=params_dict["share_milli"],
+        random_milli=params_dict["random_milli"],
+        line_bytes=params_dict["line_bytes"],
+    )
+    return addr, is_store
+
+
+__all__ = [
+    "workload_trace",
+    "blackscholes_payload",
+    "stream_payload",
+    "option_inputs",
+    "trace_ref",
+    "TRACE_N",
+    "PAYLOAD_B",
+    "ADDRGEN_BLOCK",
+    "PARAMS_LEN",
+]

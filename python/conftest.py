@@ -1,0 +1,4 @@
+import sys, pathlib
+
+# Make `compile.*` importable when pytest runs from the repository root.
+sys.path.insert(0, str(pathlib.Path(__file__).parent))

@@ -1,0 +1,356 @@
+"""Kernel-vs-reference correctness: the CORE signal for the L1 layer.
+
+Each Pallas kernel (interpret=True) must match its pure-jnp oracle exactly
+(integer kernels) or to f32 tolerance (float kernels), across a hypothesis
+sweep of shapes and parameters.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import (
+    addrgen,
+    blackscholes,
+    stream_triad,
+    ADDRGEN_BLOCK,
+    BS_BLOCK,
+    TRIAD_BLOCK,
+    PARAMS_LEN,
+)
+from compile.kernels.addrgen import (
+    P_SEED,
+    P_CORE_ID,
+    P_OFFSET,
+    P_PRIVATE_BASE,
+    P_PRIVATE_SIZE,
+    P_SHARED_BASE,
+    P_SHARED_SIZE,
+    P_STRIDE,
+    P_SHARE_MILLI,
+    P_RANDOM_MILLI,
+    P_LINE_BYTES,
+    P_COMPUTE_BASE,
+    P_COMPUTE_SPREAD,
+    P_STORE_MILLI,
+)
+from compile.kernels.ref import (
+    addrgen_ref,
+    blackscholes_ref,
+    stream_triad_ref,
+    squares32_ref,
+)
+
+
+def make_params(
+    *,
+    seed=42,
+    core_id=0,
+    offset=0,
+    private_base=0x1000_0000,
+    private_size=64 * 1024,
+    shared_base=0x8000_0000,
+    shared_size=8 * 1024 * 1024,
+    stride=1,
+    share_milli=100,
+    random_milli=200,
+    line_bytes=64,
+    compute_base=2,
+    compute_spread=8,
+    store_milli=300,
+):
+    p = np.zeros(PARAMS_LEN, dtype=np.uint64)
+    p[P_SEED] = seed
+    p[P_CORE_ID] = core_id
+    p[P_OFFSET] = offset
+    p[P_PRIVATE_BASE] = private_base
+    p[P_PRIVATE_SIZE] = private_size
+    p[P_SHARED_BASE] = shared_base
+    p[P_SHARED_SIZE] = shared_size
+    p[P_STRIDE] = stride
+    p[P_SHARE_MILLI] = share_milli
+    p[P_RANDOM_MILLI] = random_milli
+    p[P_LINE_BYTES] = line_bytes
+    p[P_COMPUTE_BASE] = compute_base
+    p[P_COMPUTE_SPREAD] = compute_spread
+    p[P_STORE_MILLI] = store_milli
+    return jnp.asarray(p)
+
+
+def ref_from_params(p, n):
+    p = np.asarray(p)
+    return addrgen_ref(
+        int(p[P_CORE_ID]),
+        n,
+        seed=int(p[P_SEED]),
+        private_base=int(p[P_PRIVATE_BASE]),
+        private_size=int(p[P_PRIVATE_SIZE]),
+        shared_base=int(p[P_SHARED_BASE]),
+        shared_size=int(p[P_SHARED_SIZE]),
+        stride=int(p[P_STRIDE]),
+        share_milli=int(p[P_SHARE_MILLI]),
+        random_milli=int(p[P_RANDOM_MILLI]),
+        line_bytes=int(p[P_LINE_BYTES]),
+        compute_base=int(p[P_COMPUTE_BASE]),
+        compute_spread=int(p[P_COMPUTE_SPREAD]),
+        store_milli=int(p[P_STORE_MILLI]),
+        offset=int(p[P_OFFSET]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# squares32 sanity
+# ---------------------------------------------------------------------------
+
+
+class TestSquares32:
+    def test_deterministic(self):
+        c = jnp.arange(128, dtype=jnp.uint64)
+        a = squares32_ref(c)
+        b = squares32_ref(c)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_distribution_rough_uniformity(self):
+        c = jnp.arange(1 << 16, dtype=jnp.uint64)
+        r = np.asarray(squares32_ref(c))
+        # mean of uint32 uniform is ~2^31; allow 1% slack
+        assert abs(r.mean() - 2**31) < 0.01 * 2**32
+        # no constant output
+        assert len(np.unique(r)) > 60000
+
+    def test_different_counters_differ(self):
+        a = np.asarray(squares32_ref(jnp.uint64(1)))
+        b = np.asarray(squares32_ref(jnp.uint64(2)))
+        assert a != b
+
+    def test_known_vector_stability(self):
+        """Pinned goldens — keep in sync with
+        rust/tests/artifact_parity.rs::squares32_matches_python_goldens."""
+        c = jnp.asarray([0, 1, 2, 12345678901234, 2**63], dtype=jnp.uint64)
+        r = [int(x) for x in np.asarray(squares32_ref(c))]
+        assert r == [
+            0x8352D815,
+            0x4D645C71,
+            0x5F664B34,
+            0x837DF4DA,
+            0x0BB1AB45,
+        ], [hex(x) for x in r]
+
+
+# ---------------------------------------------------------------------------
+# addrgen kernel vs ref
+# ---------------------------------------------------------------------------
+
+
+class TestAddrgen:
+    def test_matches_ref_default(self):
+        p = make_params()
+        a_k, s_k, g_k = addrgen(p, n=2 * ADDRGEN_BLOCK)
+        a_r, s_r, g_r = ref_from_params(p, 2 * ADDRGEN_BLOCK)
+        np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_r))
+        np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+        np.testing.assert_array_equal(np.asarray(g_k), np.asarray(g_r))
+
+    def test_rejects_unaligned_n(self):
+        with pytest.raises(ValueError):
+            addrgen(make_params(), n=ADDRGEN_BLOCK + 1)
+
+    def test_offset_continuation(self):
+        """Two half-length calls with offset must equal one full call."""
+        p0 = make_params(offset=0)
+        p1 = make_params(offset=ADDRGEN_BLOCK)
+        full_a, full_s, full_g = addrgen(p0, n=2 * ADDRGEN_BLOCK)
+        a0, s0, g0 = addrgen(p0, n=ADDRGEN_BLOCK)
+        a1, s1, g1 = addrgen(p1, n=ADDRGEN_BLOCK)
+        np.testing.assert_array_equal(
+            np.asarray(full_a), np.concatenate([a0, a1])
+        )
+        np.testing.assert_array_equal(
+            np.asarray(full_g), np.concatenate([g0, g1])
+        )
+
+    def test_line_alignment(self):
+        p = make_params(line_bytes=64)
+        a, _, _ = addrgen(p, n=ADDRGEN_BLOCK)
+        assert (np.asarray(a) % 64 == 0).all()
+
+    def test_share_milli_zero_stays_private(self):
+        p = make_params(share_milli=0)
+        a, _, _ = addrgen(p, n=ADDRGEN_BLOCK)
+        a = np.asarray(a)
+        assert (a >= 0x1000_0000).all()
+        assert (a < 0x1000_0000 + 64 * 1024).all()
+
+    def test_share_milli_full_stays_shared(self):
+        p = make_params(share_milli=1000)
+        a, _, _ = addrgen(p, n=ADDRGEN_BLOCK)
+        a = np.asarray(a)
+        assert (a >= 0x8000_0000).all()
+
+    def test_share_fraction_approximate(self):
+        p = make_params(share_milli=250)
+        a, _, _ = addrgen(p, n=8 * ADDRGEN_BLOCK)
+        frac = (np.asarray(a) >= 0x8000_0000).mean()
+        assert 0.2 < frac < 0.3
+
+    def test_store_fraction_approximate(self):
+        p = make_params(store_milli=300)
+        _, s, _ = addrgen(p, n=8 * ADDRGEN_BLOCK)
+        frac = np.asarray(s).mean()
+        assert 0.25 < frac < 0.35
+
+    def test_cores_get_disjoint_streams(self):
+        a0, _, _ = addrgen(make_params(core_id=0), n=ADDRGEN_BLOCK)
+        a1, _, _ = addrgen(make_params(core_id=1), n=ADDRGEN_BLOCK)
+        assert not np.array_equal(np.asarray(a0), np.asarray(a1))
+
+    def test_gap_bounds(self):
+        p = make_params(compute_base=5, compute_spread=10)
+        _, _, g = addrgen(p, n=ADDRGEN_BLOCK)
+        g = np.asarray(g)
+        assert (g >= 5).all() and (g < 15).all()
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        core_id=st.integers(0, 127),
+        seed=st.integers(0, 2**32 - 1),
+        stride=st.integers(1, 64),
+        share_milli=st.integers(0, 1000),
+        random_milli=st.integers(0, 1000),
+        private_size=st.sampled_from([4096, 65536, 1 << 20]),
+        store_milli=st.integers(0, 1000),
+    )
+    def test_matches_ref_hypothesis(
+        self, core_id, seed, stride, share_milli, random_milli,
+        private_size, store_milli,
+    ):
+        p = make_params(
+            core_id=core_id,
+            seed=seed,
+            stride=stride,
+            share_milli=share_milli,
+            random_milli=random_milli,
+            private_size=private_size,
+            store_milli=store_milli,
+        )
+        a_k, s_k, g_k = addrgen(p, n=ADDRGEN_BLOCK)
+        a_r, s_r, g_r = ref_from_params(p, ADDRGEN_BLOCK)
+        np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_r))
+        np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+        np.testing.assert_array_equal(np.asarray(g_k), np.asarray(g_r))
+
+
+# ---------------------------------------------------------------------------
+# blackscholes kernel vs ref
+# ---------------------------------------------------------------------------
+
+
+def _bs_inputs(n, seed=0):
+    rng = np.random.default_rng(seed)
+    spot = rng.uniform(5, 100, n).astype(np.float32)
+    strike = rng.uniform(5, 100, n).astype(np.float32)
+    rate = rng.uniform(0.01, 0.1, n).astype(np.float32)
+    vol = rng.uniform(0.05, 0.6, n).astype(np.float32)
+    t = rng.uniform(0.1, 3.0, n).astype(np.float32)
+    return spot, strike, rate, vol, t
+
+
+class TestBlackScholes:
+    def test_matches_ref(self):
+        ins = _bs_inputs(2 * BS_BLOCK)
+        c_k, p_k = blackscholes(*map(jnp.asarray, ins))
+        c_r, p_r = blackscholes_ref(*map(jnp.asarray, ins))
+        np.testing.assert_allclose(c_k, c_r, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(p_k, p_r, rtol=1e-5, atol=1e-5)
+
+    def test_rejects_unaligned(self):
+        ins = _bs_inputs(BS_BLOCK + 3)
+        with pytest.raises(ValueError):
+            blackscholes(*map(jnp.asarray, ins))
+
+    def test_put_call_parity(self):
+        """C - P == S - K*exp(-rT) (model-independent identity)."""
+        spot, strike, rate, vol, t = _bs_inputs(BS_BLOCK, seed=7)
+        c, p = blackscholes(*map(jnp.asarray, (spot, strike, rate, vol, t)))
+        lhs = np.asarray(c) - np.asarray(p)
+        rhs = spot - strike * np.exp(-rate * t)
+        np.testing.assert_allclose(lhs, rhs, rtol=2e-4, atol=2e-3)
+
+    def test_prices_nonnegative(self):
+        ins = _bs_inputs(BS_BLOCK, seed=3)
+        c, p = blackscholes(*map(jnp.asarray, ins))
+        assert (np.asarray(c) >= -1e-4).all()
+        assert (np.asarray(p) >= -1e-4).all()
+
+    def test_deep_itm_call_close_to_intrinsic(self):
+        n = BS_BLOCK
+        spot = np.full(n, 100.0, np.float32)
+        strike = np.full(n, 1.0, np.float32)
+        rate = np.full(n, 0.05, np.float32)
+        vol = np.full(n, 0.2, np.float32)
+        t = np.full(n, 0.5, np.float32)
+        c, _ = blackscholes(*map(jnp.asarray, (spot, strike, rate, vol, t)))
+        intrinsic = spot - strike * np.exp(-rate * t)
+        np.testing.assert_allclose(np.asarray(c), intrinsic, rtol=1e-3)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref_hypothesis(self, seed):
+        ins = _bs_inputs(BS_BLOCK, seed=seed)
+        c_k, p_k = blackscholes(*map(jnp.asarray, ins))
+        c_r, p_r = blackscholes_ref(*map(jnp.asarray, ins))
+        np.testing.assert_allclose(c_k, c_r, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(p_k, p_r, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# stream triad kernel vs ref
+# ---------------------------------------------------------------------------
+
+
+class TestStreamTriad:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(0)
+        b = rng.standard_normal(2 * TRIAD_BLOCK).astype(np.float32)
+        c = rng.standard_normal(2 * TRIAD_BLOCK).astype(np.float32)
+        s = np.asarray([3.0], np.float32)
+        a_k = stream_triad(jnp.asarray(b), jnp.asarray(c), jnp.asarray(s))
+        a_r = stream_triad_ref(b, c, 3.0)
+        # interpret-mode Pallas may contract b + s*c into an FMA
+        np.testing.assert_allclose(np.asarray(a_k), a_r, rtol=1e-4, atol=1e-6)
+
+    def test_rejects_unaligned(self):
+        b = jnp.zeros(TRIAD_BLOCK + 1, jnp.float32)
+        with pytest.raises(ValueError):
+            stream_triad(b, b, jnp.zeros(1, jnp.float32))
+
+    def test_zero_scalar_copies_b(self):
+        rng = np.random.default_rng(1)
+        b = rng.standard_normal(TRIAD_BLOCK).astype(np.float32)
+        c = rng.standard_normal(TRIAD_BLOCK).astype(np.float32)
+        a = stream_triad(
+            jnp.asarray(b), jnp.asarray(c), jnp.zeros(1, jnp.float32)
+        )
+        np.testing.assert_array_equal(np.asarray(a), b)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        scalar=st.floats(-100, 100, width=32, allow_nan=False),
+        blocks=st.integers(1, 3),
+    )
+    def test_matches_ref_hypothesis(self, seed, scalar, blocks):
+        rng = np.random.default_rng(seed)
+        n = blocks * TRIAD_BLOCK
+        b = rng.standard_normal(n).astype(np.float32)
+        c = rng.standard_normal(n).astype(np.float32)
+        a_k = stream_triad(
+            jnp.asarray(b),
+            jnp.asarray(c),
+            jnp.asarray([scalar], dtype=jnp.float32),
+        )
+        a_r = stream_triad_ref(b, c, np.float32(scalar))
+        np.testing.assert_allclose(np.asarray(a_k), a_r, rtol=1e-5, atol=1e-5)

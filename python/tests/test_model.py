@@ -1,0 +1,105 @@
+"""L2 model tests: trace synthesis composition, option-input determinism,
+and the AOT lowering path (HLO text emission + shape manifest)."""
+
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.aot import ARTIFACTS, to_hlo_text, lower_workload
+from compile.kernels import PARAMS_LEN
+from compile.kernels.ref import blackscholes_ref
+from tests.test_kernel import make_params, ref_from_params
+
+
+class TestWorkloadTrace:
+    def test_shapes_and_dtypes(self):
+        a, s, g = model.workload_trace(make_params())
+        assert a.shape == (model.TRACE_N,) and a.dtype == jnp.uint64
+        assert s.shape == (model.TRACE_N,) and s.dtype == jnp.uint32
+        assert g.shape == (model.TRACE_N,) and g.dtype == jnp.uint32
+
+    def test_matches_ref(self):
+        p = make_params(core_id=3, share_milli=400)
+        a, s, g = model.workload_trace(p)
+        a_r, s_r, g_r = ref_from_params(p, model.TRACE_N)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(a_r))
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(s_r))
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(g_r))
+
+    def test_trace_ref_wrapper(self):
+        d = dict(
+            core_id=1, seed=9, private_base=0x1000, private_size=4096,
+            shared_base=0x200000, shared_size=65536, stride=2,
+            share_milli=150, random_milli=100, line_bytes=64,
+        )
+        a, s = model.trace_ref(d, n=1024)
+        assert a.shape == (1024,)
+        assert np.asarray(a).min() >= 0x1000
+
+
+class TestOptionInputs:
+    def test_deterministic(self):
+        a = model.option_inputs(seed=5)
+        b = model.option_inputs(seed=5)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_seeds_differ(self):
+        a = model.option_inputs(seed=5)
+        b = model.option_inputs(seed=6)
+        assert not np.array_equal(np.asarray(a[0]), np.asarray(b[0]))
+
+    def test_ranges(self):
+        spot, strike, rate, vol, t = map(
+            np.asarray, model.option_inputs(seed=1)
+        )
+        assert spot.min() >= 5.0 and spot.max() <= 100.0
+        assert rate.min() >= 0.01 and rate.max() <= 0.1
+        assert vol.min() >= 0.05 and vol.max() <= 0.6
+        assert t.min() >= 0.1 and t.max() <= 3.0
+
+    def test_payload_pipeline(self):
+        ins = model.option_inputs(seed=2)
+        c_k, p_k = model.blackscholes_payload(*ins)
+        c_r, p_r = blackscholes_ref(*ins)
+        np.testing.assert_allclose(c_k, c_r, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(p_k, p_r, rtol=1e-5, atol=1e-5)
+
+
+class TestAotLowering:
+    def test_all_artifacts_lower_to_hlo_text(self):
+        for name, lower in ARTIFACTS.items():
+            text = lower()
+            assert text.startswith("HloModule"), name
+            assert "ENTRY" in text, name
+
+    def test_workload_hlo_io_shapes(self):
+        text = lower_workload()
+        # One u64[16] parameter; tuple of (u64[N], u32[N], u32[N]) root.
+        assert "u64[16]" in text
+        assert f"u64[{model.TRACE_N}]" in text
+        assert f"u32[{model.TRACE_N}]" in text
+
+    def test_emission_writes_files(self, tmp_path, monkeypatch):
+        import sys
+        from compile import aot
+
+        monkeypatch.setattr(
+            sys, "argv", ["aot", "--outdir", str(tmp_path)]
+        )
+        aot.main()
+        names = {p.name for p in tmp_path.iterdir()}
+        assert {
+            "workload.hlo.txt",
+            "blackscholes.hlo.txt",
+            "stream.hlo.txt",
+            "manifest.json",
+        } <= names
+        manifest = json.loads((tmp_path / "manifest.json").read_text())
+        assert manifest["trace_n"] == model.TRACE_N
+        assert manifest["params_len"] == PARAMS_LEN

@@ -1,0 +1,36 @@
+//! Shared helpers for the hand-rolled bench harness (offline environment —
+//! criterion is unavailable; these benches measure with `std::time::Instant`
+//! and print median-of-N results in a criterion-like format).
+
+use std::time::Instant;
+
+/// Measure `f` `runs` times; returns (median_ns, min_ns, max_ns).
+pub fn measure<F: FnMut()>(runs: usize, mut f: F) -> (u128, u128, u128) {
+    let mut samples: Vec<u128> = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos());
+    }
+    samples.sort_unstable();
+    (
+        samples[samples.len() / 2],
+        samples[0],
+        *samples.last().unwrap(),
+    )
+}
+
+pub fn report(name: &str, median_ns: u128, min_ns: u128, max_ns: u128) {
+    println!(
+        "{name:<48} median {:>12.3} ms   [{:.3} .. {:.3}]",
+        median_ns as f64 / 1e6,
+        min_ns as f64 / 1e6,
+        max_ns as f64 / 1e6
+    );
+}
+
+/// Run-and-report in one call.
+pub fn bench<F: FnMut()>(name: &str, runs: usize, f: F) {
+    let (m, lo, hi) = measure(runs, f);
+    report(name, m, lo, hi);
+}

@@ -1,0 +1,37 @@
+//! Bench: regenerate Fig. 7 — speedup & simulated-time error vs core count
+//! × quantum, for the synthetic bare-metal benchmark and blackscholes.
+//!
+//! Scale via env: FIG7_OPS (default 2048), FIG7_MAX_CORES (default 32 —
+//! pass 120 for the paper's full sweep), FIG7_HOST_CORES (default 64).
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use parti_sim::harness::figures::{fig7, render_rows, FigureOpts};
+
+fn env_usize(k: &str, d: usize) -> usize {
+    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+fn main() {
+    let opts = FigureOpts {
+        ops_per_core: env_usize("FIG7_OPS", 2048),
+        max_cores: env_usize("FIG7_MAX_CORES", 32),
+        host_cores: env_usize("FIG7_HOST_CORES", 64),
+        ..Default::default()
+    };
+    let t = std::time::Instant::now();
+    let rows = fig7(&opts).expect("fig7");
+    println!("== Fig. 7 (paper: speedup up to 42.7x @120 cores; terr <3% synthetic, <=6% blackscholes) ==\n");
+    println!("{}", render_rows(&rows));
+    // Headline numbers in the paper's terms:
+    let best = rows
+        .iter()
+        .max_by(|a, b| a.1.speedup.partial_cmp(&b.1.speedup).unwrap())
+        .unwrap();
+    println!(
+        "max speedup: {:.2}x ({} @ {} cores, q={}ns)",
+        best.1.speedup, best.0, best.1.cores, best.1.quantum_ns
+    );
+    println!("bench wall time: {:.1}s", t.elapsed().as_secs_f64());
+}

@@ -1,0 +1,43 @@
+//! Bench: regenerate Fig. 8 — speedup & simulated-time error for the
+//! PARSEC subset + STREAM on a 32-core target, per quantum.
+//!
+//! Scale via env: FIG8_OPS (default 2048), FIG8_CORES (default 32),
+//! FIG8_HOST_CORES (default 64).
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use parti_sim::harness::figures::{fig8, render_rows, FigureOpts};
+
+fn env_usize(k: &str, d: usize) -> usize {
+    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+fn main() {
+    let opts = FigureOpts {
+        ops_per_core: env_usize("FIG8_OPS", 2048),
+        max_cores: env_usize("FIG8_CORES", 32),
+        host_cores: env_usize("FIG8_HOST_CORES", 64),
+        ..Default::default()
+    };
+    let t = std::time::Instant::now();
+    let rows = fig8(&opts).expect("fig8");
+    println!("== Fig. 8 (paper @32 cores: swaptions 12.6x best, dedup 3.6x worst, avg 10.7x; terr <15% for q<=12ns) ==\n");
+    println!("{}", render_rows(&rows));
+
+    // Per-app best speedup + the paper's ordering observation.
+    let mut by_app: std::collections::BTreeMap<String, f64> = Default::default();
+    for (app, r) in &rows {
+        let e = by_app.entry(app.clone()).or_insert(0.0);
+        *e = e.max(r.speedup);
+    }
+    println!("best speedup per app (ordering should put low-sharing apps on top):");
+    let mut v: Vec<_> = by_app.into_iter().collect();
+    v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    for (app, s) in &v {
+        println!("  {app:<14} {s:>6.2}x");
+    }
+    let avg: f64 = v.iter().map(|(_, s)| s).sum::<f64>() / v.len() as f64;
+    println!("average best speedup: {avg:.2}x (paper: 10.7x on a real 64-core host)");
+    println!("bench wall time: {:.1}s", t.elapsed().as_secs_f64());
+}

@@ -1,0 +1,87 @@
+//! Micro-benchmarks of the simulation kernel hot paths (the §Perf targets
+//! for L3): event-queue throughput, message-buffer ops, cache-array
+//! lookups, and end-to-end serial events/s.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::bench;
+
+use parti_sim::config::RunConfig;
+use parti_sim::harness::{make_workload, run_with_workload};
+use parti_sim::mem::{CacheArray, LineState};
+use parti_sim::ruby::new_inbox;
+use parti_sim::ruby::{MsgKind, RubyMsg};
+use parti_sim::sim::event::{prio, EventKind};
+use parti_sim::sim::ids::CompId;
+use parti_sim::sim::queue::EventQueue;
+
+fn main() {
+    println!("== kernel_micro ==");
+
+    // Event queue: schedule+pop 100k events with mixed ticks.
+    bench("event_queue schedule+pop 100k", 11, || {
+        let mut q = EventQueue::new();
+        for i in 0..100_000u64 {
+            q.schedule(
+                (i.wrapping_mul(2654435761)) % 1_000_000,
+                prio::DEFAULT,
+                CompId(0),
+                EventKind::CpuTick,
+            );
+        }
+        while q.pop().is_some() {}
+    });
+
+    // Message buffer: enqueue/drain 100k messages across 3 buffers.
+    bench("inbox push+drain 100k", 11, || {
+        let inbox = new_inbox(&[usize::MAX; 3]);
+        let mut ib = inbox.lock().unwrap();
+        for i in 0..100_000u64 {
+            let m = RubyMsg {
+                kind: MsgKind::ReadShared,
+                addr: i * 64,
+                value: 0,
+                src: CompId(0),
+                dst: CompId(1),
+                txn: i,
+                core: 0,
+                issued: 0,
+            };
+            ib.bufs[(i % 3) as usize].push_for_test(i % 1000, m);
+        }
+        let _ = ib.drain_ready(u64::MAX);
+    });
+
+    // Cache array: 1M accesses with 80/20 locality.
+    bench("cache_array 1M accesses", 7, || {
+        let mut c = CacheArray::new(64 * 1024, 2, 64);
+        let mut hits = 0u64;
+        for i in 0..1_000_000u64 {
+            let addr = if i % 5 == 0 {
+                (i.wrapping_mul(2654435761)) % (1 << 22)
+            } else {
+                (i % 512) * 64
+            } & !63;
+            match c.access(addr) {
+                Some(_) => hits += 1,
+                None => {
+                    c.allocate(addr, LineState::Shared, addr);
+                }
+            }
+        }
+        std::hint::black_box(hits);
+    });
+
+    // End-to-end serial kernel throughput (the L3 §Perf headline).
+    let mut cfg = RunConfig::default();
+    cfg.app = "blackscholes".to_string();
+    cfg.system.cores = 4;
+    cfg.ops_per_core = 4096;
+    let w = make_workload(&cfg).expect("workload");
+    let mut events_per_sec = 0.0;
+    bench("serial end-to-end 4c x 4096 ops", 5, || {
+        let r = run_with_workload(&cfg, &w).unwrap();
+        events_per_sec = r.events_per_sec();
+    });
+    println!("serial kernel throughput: {events_per_sec:.0} events/s");
+}

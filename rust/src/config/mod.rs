@@ -1,0 +1,251 @@
+//! System configuration (Table 2 of the paper) and run configuration.
+
+use crate::cpu::CpuModel;
+use crate::sim::time::{Tick, NS};
+
+/// Cache geometry + latency.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CacheConfig {
+    pub size_bytes: u64,
+    pub assoc: usize,
+    pub latency_ns: u64,
+}
+
+/// The simulated platform (defaults = Table 2).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SystemConfig {
+    /// Simulated cores.
+    pub cores: usize,
+    /// CPU clock in MHz (Table 2: 2 GHz).
+    pub cpu_mhz: u64,
+    pub l1i: CacheConfig,
+    pub l1d: CacheConfig,
+    pub l2: CacheConfig,
+    pub l3: CacheConfig,
+    pub line_bytes: u64,
+    /// NoC link + router latency (Table 2: 0.5 ns).
+    pub noc_latency_ns_x10: u64,
+    /// Router buffer size in messages (Table 2: 4).
+    pub router_buffer: usize,
+    /// Link flits charged for a data message (32-bit links, Table 2).
+    pub data_flits: u64,
+    /// DRAM clock in MHz (Table 2: 1 GHz).
+    pub dram_mhz: u64,
+    /// Fraction of ops that touch IO devices (milli); exercises the
+    /// crossbar path of §4.3. The paper's workloads do this via the OS.
+    pub io_milli: u64,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            cores: 2,
+            cpu_mhz: 2000,
+            l1i: CacheConfig { size_bytes: 32 * 1024, assoc: 2, latency_ns: 1 },
+            l1d: CacheConfig { size_bytes: 64 * 1024, assoc: 2, latency_ns: 1 },
+            l2: CacheConfig {
+                size_bytes: 2 * 1024 * 1024,
+                assoc: 8,
+                latency_ns: 4,
+            },
+            l3: CacheConfig {
+                size_bytes: 16 * 1024 * 1024,
+                assoc: 8,
+                latency_ns: 6,
+            },
+            line_bytes: 64,
+            noc_latency_ns_x10: 5, // 0.5 ns
+            router_buffer: 4,
+            data_flits: 4,
+            dram_mhz: 1000,
+            io_milli: 0,
+        }
+    }
+}
+
+impl SystemConfig {
+    pub fn with_cores(cores: usize) -> Self {
+        SystemConfig { cores, ..Default::default() }
+    }
+
+    pub fn noc_latency(&self) -> Tick {
+        self.noc_latency_ns_x10 * NS / 10
+    }
+
+    /// L3-hit round-trip latency — the paper's recipe for the max quantum
+    /// (§5.1: links + cache access latencies ≈ 16 ns).
+    pub fn l3_hit_latency(&self) -> Tick {
+        // 8 link crossings + L1 + L2 + L3 access latencies.
+        8 * self.noc_latency()
+            + (self.l1d.latency_ns + self.l2.latency_ns + self.l3.latency_ns)
+                * NS
+    }
+}
+
+/// Which kernel executes the machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Reference single-thread DES.
+    Serial,
+    /// Threaded PDES (one thread per domain).
+    Parallel,
+    /// Sequentialized PDES + host model (deterministic; DESIGN.md §3).
+    Virtual,
+}
+
+impl Mode {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "serial" => Mode::Serial,
+            "parallel" => Mode::Parallel,
+            "virtual" => Mode::Virtual,
+            _ => return None,
+        })
+    }
+}
+
+/// A full run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub system: SystemConfig,
+    pub cpu_model: CpuModel,
+    pub mode: Mode,
+    /// Quantum t_qΔ in ticks (ignored in serial mode).
+    pub quantum: Tick,
+    pub app: String,
+    pub ops_per_core: usize,
+    pub seed: u64,
+    /// Hard simulated-time limit.
+    pub max_ticks: Tick,
+    /// Modeled host cores for virtual mode.
+    pub host_cores: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            system: SystemConfig::default(),
+            cpu_model: CpuModel::O3,
+            mode: Mode::Serial,
+            quantum: 16 * NS,
+            app: "synthetic".to_string(),
+            ops_per_core: 4096,
+            seed: 42,
+            max_ticks: 10_000_000_000_000, // 10 s simulated
+            host_cores: 64,
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Serialise to a flat `key = value` config file (TOML-compatible
+    /// subset; hand-rolled because the build environment is offline).
+    pub fn to_toml(&self) -> String {
+        let c = self;
+        let mut s = String::new();
+        let mut kv = |k: &str, v: u64| s.push_str(&format!("{k} = {v}\n"));
+        kv("cores", c.cores as u64);
+        kv("cpu_mhz", c.cpu_mhz);
+        for (p, cc) in [("l1i", &c.l1i), ("l1d", &c.l1d), ("l2", &c.l2), ("l3", &c.l3)] {
+            kv(&format!("{p}_size_bytes"), cc.size_bytes);
+            kv(&format!("{p}_assoc"), cc.assoc as u64);
+            kv(&format!("{p}_latency_ns"), cc.latency_ns);
+        }
+        kv("line_bytes", c.line_bytes);
+        kv("noc_latency_ns_x10", c.noc_latency_ns_x10);
+        kv("router_buffer", c.router_buffer as u64);
+        kv("data_flits", c.data_flits);
+        kv("dram_mhz", c.dram_mhz);
+        kv("io_milli", c.io_milli);
+        s
+    }
+
+    /// Parse the `key = value` format emitted by [`Self::to_toml`].
+    /// Unknown keys are rejected; missing keys keep their defaults.
+    pub fn from_toml(s: &str) -> Result<Self, String> {
+        let mut c = SystemConfig::default();
+        for (lineno, line) in s.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let k = k.trim();
+            let v: u64 = v
+                .trim()
+                .parse()
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            let cache = |c: &mut CacheConfig, field: &str, v: u64| match field {
+                "size_bytes" => c.size_bytes = v,
+                "assoc" => c.assoc = v as usize,
+                "latency_ns" => c.latency_ns = v,
+                _ => unreachable!(),
+            };
+            match k {
+                "cores" => c.cores = v as usize,
+                "cpu_mhz" => c.cpu_mhz = v,
+                "line_bytes" => c.line_bytes = v,
+                "noc_latency_ns_x10" => c.noc_latency_ns_x10 = v,
+                "router_buffer" => c.router_buffer = v as usize,
+                "data_flits" => c.data_flits = v,
+                "dram_mhz" => c.dram_mhz = v,
+                "io_milli" => c.io_milli = v,
+                _ => {
+                    let (p, field) = k
+                        .split_once('_')
+                        .ok_or_else(|| format!("unknown key {k}"))?;
+                    let target = match p {
+                        "l1i" => &mut c.l1i,
+                        "l1d" => &mut c.l1d,
+                        "l2" => &mut c.l2,
+                        "l3" => &mut c.l3,
+                        _ => return Err(format!("unknown key {k}")),
+                    };
+                    match field {
+                        "size_bytes" | "assoc" | "latency_ns" => {
+                            cache(target, field, v)
+                        }
+                        _ => return Err(format!("unknown key {k}")),
+                    }
+                }
+            }
+        }
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table2() {
+        let c = SystemConfig::default();
+        assert_eq!(c.cpu_mhz, 2000);
+        assert_eq!(c.l1i.size_bytes, 32 * 1024);
+        assert_eq!(c.l1d.size_bytes, 64 * 1024);
+        assert_eq!(c.l1d.assoc, 2);
+        assert_eq!(c.l2.size_bytes, 2 * 1024 * 1024);
+        assert_eq!(c.l2.assoc, 8);
+        assert_eq!(c.l3.size_bytes, 16 * 1024 * 1024);
+        assert_eq!(c.router_buffer, 4);
+        assert_eq!(c.noc_latency(), 500);
+    }
+
+    #[test]
+    fn l3_hit_latency_matches_paper_quantum() {
+        // §5.1: ~16 ns L3 hit -> the max quantum used in the sweeps.
+        let c = SystemConfig::default();
+        assert_eq!(c.l3_hit_latency(), 15 * NS);
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let c = SystemConfig::with_cores(8);
+        let s = c.to_toml();
+        let back = SystemConfig::from_toml(&s).unwrap();
+        assert_eq!(c, back);
+    }
+}

@@ -1,0 +1,289 @@
+//! Atomic-mode CPU and memory (§3.3's atomic protocol, Table 1's
+//! AtomicCPU).
+//!
+//! The atomic protocol completes a whole transaction in one synchronous
+//! call chain, so the memory hierarchy here is a plain function: per-core
+//! L1/L2 arrays, a shared L3 and the functional backing store, returning a
+//! latency. No coherence protocol is modelled (Table 1: Ruby ✗ for
+//! Atomic/KVM) — stores write through to the shared levels. Used for
+//! fast-forwarding to ROIs and for the atomic-vs-timing throughput
+//! comparison (§3.3 reports timing+O3 ≈ 20% of atomic throughput).
+//!
+//! Batching: each event executes up to `batch` ops, accumulating simulated
+//! latency — this mirrors gem5's atomic mode executing long instruction
+//! runs without event-queue round trips.
+
+use std::sync::{Arc, Mutex};
+
+use rustc_hash::FxHashMap;
+
+use crate::mem::{CacheArray, LineState};
+use crate::sim::component::{Component, Ctx};
+use crate::sim::event::{prio, EventKind};
+use crate::sim::stats::StatSink;
+use crate::sim::time::{Clock, Tick};
+use crate::workload::CoreTrace;
+
+/// Latencies for the synchronous hierarchy walk.
+#[derive(Clone, Copy, Debug)]
+pub struct AtomicLatencies {
+    pub l1: Tick,
+    pub l2: Tick,
+    pub l3: Tick,
+    pub dram: Tick,
+}
+
+/// The shared functional memory for atomic/KVM modes.
+pub struct AtomicMem {
+    l1d: Vec<CacheArray>,
+    l2: Vec<CacheArray>,
+    l3: CacheArray,
+    store: FxHashMap<u64, u64>,
+    lat: AtomicLatencies,
+    line_bytes: u64,
+}
+
+impl AtomicMem {
+    pub fn new(
+        n_cores: usize,
+        l1_bytes: u64,
+        l1_assoc: usize,
+        l2_bytes: u64,
+        l2_assoc: usize,
+        l3_bytes: u64,
+        l3_assoc: usize,
+        line_bytes: u64,
+        lat: AtomicLatencies,
+    ) -> Arc<Mutex<Self>> {
+        Arc::new(Mutex::new(AtomicMem {
+            l1d: (0..n_cores)
+                .map(|_| CacheArray::new(l1_bytes, l1_assoc, line_bytes))
+                .collect(),
+            l2: (0..n_cores)
+                .map(|_| CacheArray::new(l2_bytes, l2_assoc, line_bytes))
+                .collect(),
+            l3: CacheArray::new(l3_bytes, l3_assoc, line_bytes),
+            store: FxHashMap::default(),
+            lat,
+            line_bytes,
+        }))
+    }
+
+    /// Synchronous access: functional effect + latency (the atomic call
+    /// chain of Fig. 2a).
+    pub fn access(&mut self, core: usize, addr: u64, is_store: bool, value: u64) -> (Tick, u64) {
+        let line = addr & !(self.line_bytes - 1);
+        if is_store {
+            // Write-through everywhere (no coherence in atomic mode);
+            // invalidate other cores' copies functionally so later reads
+            // see the new data.
+            self.store.insert(line, value);
+            if let Some(l) = self.l1d[core].peek_mut(line) {
+                l.data = value;
+            }
+            if let Some(l) = self.l2[core].peek_mut(line) {
+                l.data = value;
+            }
+            if let Some(l) = self.l3.peek_mut(line) {
+                l.data = value;
+            }
+            for (i, c) in self.l1d.iter_mut().enumerate() {
+                if i != core {
+                    c.invalidate(line);
+                }
+            }
+            for (i, c) in self.l2.iter_mut().enumerate() {
+                if i != core {
+                    c.invalidate(line);
+                }
+            }
+            return (self.lat.l1, 0);
+        }
+        // Load walk.
+        if let Some(l) = self.l1d[core].access(line) {
+            return (self.lat.l1, l.data);
+        }
+        if let Some(l) = self.l2[core].access(line) {
+            let data = l.data;
+            self.l1d[core].allocate(line, LineState::Shared, data);
+            return (self.lat.l1 + self.lat.l2, data);
+        }
+        if let Some(l) = self.l3.access(line) {
+            let data = l.data;
+            self.l2[core].allocate(line, LineState::Shared, data);
+            self.l1d[core].allocate(line, LineState::Shared, data);
+            return (self.lat.l1 + self.lat.l2 + self.lat.l3, data);
+        }
+        let data = *self.store.get(&line).unwrap_or(&0);
+        self.l3.allocate(line, LineState::Shared, data);
+        self.l2[core].allocate(line, LineState::Shared, data);
+        self.l1d[core].allocate(line, LineState::Shared, data);
+        (self.lat.l1 + self.lat.l2 + self.lat.l3 + self.lat.dram, data)
+    }
+
+    pub fn l1_miss_rate(&self, core: usize) -> f64 {
+        self.l1d[core].miss_rate()
+    }
+}
+
+/// The interpreter-like atomic CPU: fixed issue cost per op plus the
+/// synchronous memory latency.
+pub struct AtomicCpu {
+    name: String,
+    core: u16,
+    clock: Clock,
+    mem: Arc<Mutex<AtomicMem>>,
+    trace: Arc<CoreTrace>,
+    batch: usize,
+    idx: usize,
+    committed_ops: u64,
+    pub load_checksum: u64,
+    finish_tick: Tick,
+    done: bool,
+}
+
+impl AtomicCpu {
+    pub fn new(
+        name: String,
+        core: u16,
+        clock: Clock,
+        mem: Arc<Mutex<AtomicMem>>,
+        trace: Arc<CoreTrace>,
+    ) -> Self {
+        AtomicCpu {
+            name,
+            core,
+            clock,
+            mem,
+            trace,
+            // gem5's atomic mode still interprets instruction-by-
+            // instruction; a modest batch keeps per-op interpreter
+            // overhead in the model (§3.3 calibration).
+            batch: 24,
+            idx: 0,
+            committed_ops: 0,
+            load_checksum: 0,
+            finish_tick: 0,
+            done: false,
+        }
+    }
+}
+
+impl Component for AtomicCpu {
+    fn handle(&mut self, kind: EventKind, ctx: &mut Ctx) {
+        match kind {
+            EventKind::CpuTick => {
+                if self.done {
+                    return;
+                }
+                let mut elapsed: Tick = 0;
+                let end = (self.idx + self.batch).min(self.trace.len());
+                {
+                    let mut mem = self.mem.lock().unwrap();
+                    while self.idx < end {
+                        let i = self.idx;
+                        elapsed += self
+                            .clock
+                            .cycles(self.trace.gap[i] as u64 + 1);
+                        let (lat, data) = mem.access(
+                            self.core as usize,
+                            self.trace.addr[i],
+                            self.trace.is_store[i],
+                            self.trace.value[i],
+                        );
+                        elapsed += lat;
+                        if !self.trace.is_store[i] {
+                            let tag = (i & 63) as u32;
+                            self.load_checksum = self
+                                .load_checksum
+                                .wrapping_add(data.rotate_left(tag));
+                        }
+                        self.committed_ops += 1;
+                        self.idx += 1;
+                    }
+                }
+                if self.idx >= self.trace.len() {
+                    self.done = true;
+                    self.finish_tick = ctx.now() + elapsed;
+                    ctx.core_done();
+                } else {
+                    ctx.schedule_abs_prio(
+                        ctx.now() + elapsed,
+                        ctx.self_id(),
+                        EventKind::CpuTick,
+                        prio::CPU,
+                    );
+                }
+            }
+            other => panic!("{}: unexpected event {other:?}", self.name),
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn init(&mut self, ctx: &mut Ctx) {
+        if self.trace.is_empty() {
+            self.done = true;
+            ctx.core_done();
+        } else {
+            ctx.schedule_self(0, EventKind::CpuTick);
+        }
+    }
+
+    fn stats(&self, out: &mut StatSink) {
+        out.add_u64("committed_ops", self.committed_ops);
+        out.add_u64("finish_tick", self.finish_tick);
+        out.add_u64("load_checksum", self.load_checksum);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mem2() -> Arc<Mutex<AtomicMem>> {
+        AtomicMem::new(
+            2,
+            1024,
+            2,
+            4096,
+            4,
+            16384,
+            8,
+            64,
+            AtomicLatencies { l1: 1000, l2: 4000, l3: 6000, dram: 50_000 },
+        )
+    }
+
+    #[test]
+    fn store_visible_to_other_core() {
+        let m = mem2();
+        let mut mem = m.lock().unwrap();
+        mem.access(0, 0x100, true, 99);
+        let (_, v) = mem.access(1, 0x100, false, 0);
+        assert_eq!(v, 99);
+    }
+
+    #[test]
+    fn second_load_is_l1_hit() {
+        let m = mem2();
+        let mut mem = m.lock().unwrap();
+        let (cold, _) = mem.access(0, 0x200, false, 0);
+        let (hot, _) = mem.access(0, 0x200, false, 0);
+        assert!(hot < cold);
+        assert_eq!(hot, 1000);
+    }
+
+    #[test]
+    fn store_invalidate_other_l1() {
+        let m = mem2();
+        let mut mem = m.lock().unwrap();
+        mem.access(1, 0x300, false, 0); // core1 caches line
+        mem.access(0, 0x300, true, 7); // core0 stores
+        let (lat, v) = mem.access(1, 0x300, false, 0);
+        assert_eq!(v, 7);
+        assert!(lat > 1000, "core1's copy must have been invalidated");
+    }
+}

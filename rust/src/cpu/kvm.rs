@@ -1,0 +1,80 @@
+//! KVM-like fast-forward CPU (Table 1's KVMCPU).
+//!
+//! Executes the whole trace functionally in a single event at near-zero
+//! simulated cost (the paper: "near-native execution speeds ... should only
+//! be used to fast-forward to ROIs"). Warms the functional memory and the
+//! atomic cache arrays so a subsequent detailed run starts from a warmed
+//! checkpoint (`parti-sim ffwd`).
+
+use std::sync::{Arc, Mutex};
+
+use crate::sim::component::{Component, Ctx};
+use crate::sim::event::EventKind;
+use crate::sim::stats::StatSink;
+use crate::sim::time::NS;
+use crate::workload::CoreTrace;
+
+use super::atomic::AtomicMem;
+
+pub struct KvmCpu {
+    name: String,
+    core: u16,
+    mem: Arc<Mutex<AtomicMem>>,
+    trace: Arc<CoreTrace>,
+    committed_ops: u64,
+    pub load_checksum: u64,
+}
+
+impl KvmCpu {
+    pub fn new(
+        name: String,
+        core: u16,
+        mem: Arc<Mutex<AtomicMem>>,
+        trace: Arc<CoreTrace>,
+    ) -> Self {
+        KvmCpu { name, core, mem, trace, committed_ops: 0, load_checksum: 0 }
+    }
+}
+
+impl Component for KvmCpu {
+    fn handle(&mut self, kind: EventKind, ctx: &mut Ctx) {
+        match kind {
+            EventKind::CpuTick => {
+                {
+                    let mut mem = self.mem.lock().unwrap();
+                    for i in 0..self.trace.len() {
+                        let (_lat, data) = mem.access(
+                            self.core as usize,
+                            self.trace.addr[i],
+                            self.trace.is_store[i],
+                            self.trace.value[i],
+                        );
+                        if !self.trace.is_store[i] {
+                            let tag = (i & 63) as u32;
+                            self.load_checksum = self
+                                .load_checksum
+                                .wrapping_add(data.rotate_left(tag));
+                        }
+                        self.committed_ops += 1;
+                    }
+                }
+                ctx.core_done();
+            }
+            other => panic!("{}: unexpected event {other:?}", self.name),
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn init(&mut self, ctx: &mut Ctx) {
+        // Stagger cores by 1 ns so the serial kernel interleaves them.
+        ctx.schedule_self(self.core as u64 * NS, EventKind::CpuTick);
+    }
+
+    fn stats(&self, out: &mut StatSink) {
+        out.add_u64("committed_ops", self.committed_ops);
+        out.add_u64("load_checksum", self.load_checksum);
+    }
+}

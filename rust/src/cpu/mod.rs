@@ -1,0 +1,42 @@
+//! CPU models (Table 1 of the paper).
+//!
+//! | model      | pipeline     | protocol | Ruby | parallel |
+//! |------------|--------------|----------|------|----------|
+//! | [`KvmCpu`] | n/a (native) | n/a      | ✗    | ffwd only|
+//! | [`AtomicCpu`] | none      | atomic   | ✗    | serial   |
+//! | [`TimingCpu`] Minor | in-order | timing | ✓  | **this work** |
+//! | [`TimingCpu`] O3 | out-of-order | timing | ✓ | **this work** |
+
+pub mod atomic;
+pub mod kvm;
+pub mod timing;
+
+pub use atomic::{AtomicCpu, AtomicLatencies, AtomicMem};
+pub use kvm::KvmCpu;
+pub use timing::{CpuParams, PipelineKind, TimingCpu};
+
+/// Which CPU model drives the cores of a run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CpuModel {
+    Kvm,
+    Atomic,
+    Minor,
+    O3,
+}
+
+impl CpuModel {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "kvm" => CpuModel::Kvm,
+            "atomic" => CpuModel::Atomic,
+            "minor" => CpuModel::Minor,
+            "o3" => CpuModel::O3,
+            _ => return None,
+        })
+    }
+
+    /// Does this model use the timing protocol + Ruby hierarchy?
+    pub fn is_timing(self) -> bool {
+        matches!(self, CpuModel::Minor | CpuModel::O3)
+    }
+}

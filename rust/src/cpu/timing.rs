@@ -1,0 +1,385 @@
+//! Timing CPU models: the in-order MinorCPU and the out-of-order O3CPU.
+//!
+//! Both replay a [`CoreTrace`] through the timing protocol (§3.3): every
+//! memory op becomes a two-phase transaction through the sequencer and the
+//! Ruby hierarchy. The two models share this implementation and differ in
+//! their issue discipline (DESIGN.md §3 abstraction of gem5's pipelines):
+//!
+//! * **Minor** (in-order): one outstanding memory access; compute gaps and
+//!   memory latency fully serialise.
+//! * **O3** (out-of-order): up to `lsq_size` outstanding accesses and
+//!   `width` issues per cycle; compute gaps overlap with in-flight misses
+//!   (memory-level parallelism), retirement is counted at response.
+//!
+//! Instruction fetch is modelled architecturally: one line-granular ifetch
+//! through the L1I every `ifetch_every` ops, walking a private code region.
+
+use std::sync::Arc;
+
+use crate::proto::{Cmd, Packet};
+use crate::sim::component::{Component, Ctx};
+use crate::sim::event::{prio, EventKind};
+use crate::sim::ids::CompId;
+use crate::sim::shared::BarrierOutcome;
+use crate::sim::stats::StatSink;
+use crate::sim::time::{Clock, Tick};
+use crate::workload::CoreTrace;
+
+use crate::ruby::sequencer::IFETCH_SIZE;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PipelineKind {
+    Minor,
+    O3,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct CpuParams {
+    pub kind: PipelineKind,
+    /// Max outstanding memory accesses (LSQ entries).
+    pub lsq_size: usize,
+    /// Issues per cycle.
+    pub width: usize,
+    /// Instruction fetch every N ops (0 = never).
+    pub ifetch_every: usize,
+    /// Replace every Nth op with an IO access through the crossbar
+    /// (0 = never). Exercises the §4.3 path.
+    pub io_every: usize,
+    /// Base address of the IO window (see [`crate::xbar`]).
+    pub io_base: u64,
+    /// Number of IO pages to rotate over.
+    pub io_pages: u64,
+}
+
+impl CpuParams {
+    pub fn minor() -> Self {
+        CpuParams {
+            kind: PipelineKind::Minor,
+            lsq_size: 1,
+            width: 1,
+            ifetch_every: 16,
+            io_every: 0,
+            io_base: crate::xbar::IO_BASE,
+            io_pages: 2,
+        }
+    }
+
+    pub fn o3() -> Self {
+        CpuParams {
+            kind: PipelineKind::O3,
+            lsq_size: 12,
+            width: 4,
+            ifetch_every: 16,
+            io_every: 0,
+            io_base: crate::xbar::IO_BASE,
+            io_pages: 2,
+        }
+    }
+}
+
+const IFETCH_BIT: u64 = 1;
+
+pub struct TimingCpu {
+    name: String,
+    core: u16,
+    clock: Clock,
+    params: CpuParams,
+    seq: CompId,
+    trace: Arc<CoreTrace>,
+    barrier_every: usize,
+    /// Private code region for ifetches.
+    code_base: u64,
+    code_size: u64,
+
+    idx: usize,
+    outstanding: usize,
+    gap_left: u64,
+    next_txn: u64,
+    /// In-flight data ops: txn -> trace index (for expected-value checks).
+    inflight_idx: rustc_hash::FxHashMap<u64, usize>,
+    fetches: u64,
+    waiting_barrier: bool,
+    last_barrier_idx: usize,
+    tick_pending: bool,
+    done: bool,
+
+    // stats
+    committed_ops: u64,
+    loads: u64,
+    stores: u64,
+    lsq_stalls: u64,
+    barriers_hit: u64,
+    pub load_checksum: u64,
+    /// Loads whose observed value differed from `trace.expected`.
+    pub value_mismatches: u64,
+    finish_tick: Tick,
+}
+
+impl TimingCpu {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: String,
+        core: u16,
+        clock: Clock,
+        params: CpuParams,
+        seq: CompId,
+        trace: Arc<CoreTrace>,
+        barrier_every: usize,
+        code_base: u64,
+        code_size: u64,
+    ) -> Self {
+        let gap0 = trace.gap.first().copied().unwrap_or(0) as u64;
+        TimingCpu {
+            name,
+            core,
+            clock,
+            params,
+            seq,
+            trace,
+            barrier_every,
+            code_base,
+            code_size,
+            idx: 0,
+            outstanding: 0,
+            gap_left: gap0,
+            next_txn: 0,
+            inflight_idx: rustc_hash::FxHashMap::default(),
+            fetches: 0,
+            waiting_barrier: false,
+            last_barrier_idx: usize::MAX,
+            tick_pending: false,
+            done: false,
+            committed_ops: 0,
+            loads: 0,
+            stores: 0,
+            lsq_stalls: 0,
+            barriers_hit: 0,
+            load_checksum: 0,
+            value_mismatches: 0,
+            finish_tick: 0,
+        }
+    }
+
+    fn alloc_txn(&mut self, ifetch: bool) -> u64 {
+        let id = ((self.core as u64) << 48)
+            | (self.next_txn << 1)
+            | if ifetch { IFETCH_BIT } else { 0 };
+        self.next_txn += 1;
+        id
+    }
+
+    fn schedule_tick(&mut self, ctx: &mut Ctx, delay_cycles: u64) {
+        if !self.tick_pending {
+            self.tick_pending = true;
+            ctx.schedule_abs_prio(
+                ctx.now() + self.clock.cycles(delay_cycles),
+                ctx.self_id(),
+                EventKind::CpuTick,
+                prio::CPU,
+            );
+        }
+    }
+
+    fn send_mem(&mut self, ctx: &mut Ctx, addr: u64, store: bool, value: u64, ifetch: bool) {
+        let txn = self.alloc_txn(ifetch);
+        let pkt = Packet::request(
+            txn,
+            if store { Cmd::WriteReq } else { Cmd::ReadReq },
+            addr,
+            if ifetch { IFETCH_SIZE } else { 64 },
+            value,
+            ctx.self_id(),
+            self.core,
+            ctx.now(),
+        );
+        self.outstanding += 1;
+        ctx.schedule(0, self.seq, EventKind::MemReq { pkt });
+    }
+
+    fn finish(&mut self, ctx: &mut Ctx) {
+        if !self.done {
+            self.done = true;
+            self.finish_tick = ctx.now();
+            ctx.core_done();
+        }
+    }
+
+    fn tick(&mut self, ctx: &mut Ctx) {
+        self.tick_pending = false;
+        if self.done || self.waiting_barrier {
+            return;
+        }
+        let mut issued = 0usize;
+        loop {
+            // Retired everything and trace exhausted?
+            if self.idx >= self.trace.len() {
+                if self.outstanding == 0 {
+                    self.finish(ctx);
+                }
+                return;
+            }
+            if self.outstanding >= self.params.lsq_size {
+                self.lsq_stalls += 1;
+                return; // resume on MemResp
+            }
+            if self.gap_left > 0 {
+                let d = self.gap_left;
+                self.gap_left = 0;
+                self.schedule_tick(ctx, d);
+                return;
+            }
+            // Software barrier boundary?
+            if self.barrier_every > 0
+                && self.idx > 0
+                && self.idx % self.barrier_every == 0
+                && self.last_barrier_idx != self.idx
+            {
+                // In-order semantics: barriers drain the LSQ first.
+                if self.outstanding > 0 {
+                    return; // resume on MemResp
+                }
+                self.last_barrier_idx = self.idx;
+                self.barriers_hit += 1;
+                match ctx.shared().wl_barrier.arrive(ctx.self_id(), ctx.now())
+                {
+                    BarrierOutcome::Wait => {
+                        self.waiting_barrier = true;
+                        return;
+                    }
+                    BarrierOutcome::Release { waiters, release_at } => {
+                        let at = release_at.max(ctx.now());
+                        for w in waiters {
+                            ctx.schedule_abs(
+                                at,
+                                w,
+                                EventKind::WlBarrierRelease,
+                            );
+                        }
+                        // Last arriver proceeds immediately.
+                    }
+                }
+            }
+            // Periodic instruction fetch (before the op).
+            if self.params.ifetch_every > 0
+                && self.idx % self.params.ifetch_every == 0
+                && self.fetches <= (self.idx / self.params.ifetch_every) as u64
+            {
+                // The fetch line advances every 4 fetches (~64 ops/line) and
+                // wraps around the loop body, giving realistic I-locality.
+                let line = (self.fetches / 4 * 64) % self.code_size.max(64);
+                let addr = self.code_base + line;
+                self.fetches += 1;
+                self.send_mem(ctx, addr, false, 0, true);
+                if self.params.kind == PipelineKind::Minor {
+                    // In-order frontend: the fetch blocks issue.
+                    return; // resume on MemResp
+                }
+                continue;
+            }
+            // Issue the memory op.
+            let i = self.idx;
+            let (mut addr, mut store, value) = (
+                self.trace.addr[i],
+                self.trace.is_store[i],
+                self.trace.value[i],
+            );
+            // Periodic IO access through the crossbar (§4.3 traffic).
+            if self.params.io_every > 0
+                && i > 0
+                && i % self.params.io_every == 0
+            {
+                let page = (self.core as u64
+                    + i as u64 / self.params.io_every as u64)
+                    % self.params.io_pages;
+                addr = self.params.io_base + page * crate::xbar::IO_PAGE;
+                store = i % (2 * self.params.io_every) == 0;
+            }
+            if store {
+                self.stores += 1;
+            } else {
+                self.loads += 1;
+            }
+            let txn_serial = self.next_txn; // id allocated inside send_mem
+            self.send_mem(ctx, addr, store, value, false);
+            if !store && !self.trace.expected.is_empty() {
+                let id = ((self.core as u64) << 48) | (txn_serial << 1);
+                self.inflight_idx.insert(id, i);
+            }
+            self.idx += 1;
+            self.gap_left =
+                self.trace.gap.get(self.idx).copied().unwrap_or(0) as u64;
+            issued += 1;
+            if issued >= self.params.width {
+                self.schedule_tick(ctx, 1);
+                return;
+            }
+        }
+    }
+
+    fn on_resp(&mut self, pkt: Packet, ctx: &mut Ctx) {
+        debug_assert!(self.outstanding > 0);
+        self.outstanding -= 1;
+        let is_ifetch = pkt.id & IFETCH_BIT != 0;
+        if !is_ifetch {
+            self.committed_ops += 1;
+            if pkt.cmd == Cmd::ReadResp {
+                // Commutative fold: O3 responses arrive out of order, and
+                // serial/parallel runs may reorder same-tick completions.
+                let tag = ((pkt.id >> 1) & 63) as u32;
+                self.load_checksum = self
+                    .load_checksum
+                    .wrapping_add(pkt.value.rotate_left(tag));
+                if let Some(op_idx) = self.inflight_idx.remove(&pkt.id) {
+                    let want = self.trace.expected[op_idx];
+                    if want != crate::workload::trace::NO_EXPECT
+                        && pkt.value != want
+                    {
+                        self.value_mismatches += 1;
+                    }
+                }
+            }
+        }
+        if self.done {
+            return;
+        }
+        self.schedule_tick(ctx, 0);
+    }
+}
+
+impl Component for TimingCpu {
+    fn handle(&mut self, kind: EventKind, ctx: &mut Ctx) {
+        match kind {
+            EventKind::CpuTick => self.tick(ctx),
+            EventKind::MemResp { pkt } => self.on_resp(pkt, ctx),
+            EventKind::WlBarrierRelease => {
+                self.waiting_barrier = false;
+                self.schedule_tick(ctx, 0);
+            }
+            other => panic!("{}: unexpected event {other:?}", self.name),
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn init(&mut self, ctx: &mut Ctx) {
+        if self.trace.is_empty() {
+            self.finish(ctx);
+        } else {
+            self.schedule_tick(ctx, 0);
+        }
+    }
+
+    fn stats(&self, out: &mut StatSink) {
+        out.add_u64("committed_ops", self.committed_ops);
+        out.add_u64("loads", self.loads);
+        out.add_u64("stores", self.stores);
+        out.add_u64("ifetches", self.fetches);
+        out.add_u64("lsq_stalls", self.lsq_stalls);
+        out.add_u64("barriers", self.barriers_hit);
+        out.add_u64("finish_tick", self.finish_tick);
+        out.add_u64("load_checksum", self.load_checksum);
+        out.add_u64("value_mismatches", self.value_mismatches);
+    }
+}

@@ -1,0 +1,166 @@
+//! Figure regeneration: Fig. 7 (core & quantum sweep), Fig. 8 (PARSEC +
+//! STREAM @ 32 cores), Fig. 9 (cache miss-rate errors), plus the §3.3
+//! atomic-vs-timing comparison.
+
+use anyhow::Result;
+
+use crate::config::{Mode, RunConfig};
+use crate::cpu::CpuModel;
+use crate::pdes::HostModel;
+use crate::sim::time::NS;
+use crate::workload::FIG8_APPS;
+
+use super::{compare_modes, run_once, ComparisonRow};
+
+/// Default quantum sweep (ns). The paper's max quantum is the L3-hit
+/// latency (~16 ns, §5.1).
+pub const QUANTA_NS: &[u64] = &[2, 4, 8, 16];
+
+pub struct FigureOpts {
+    pub ops_per_core: usize,
+    pub seed: u64,
+    /// Modeled host cores for the virtual speedup (paper: 64).
+    pub host_cores: usize,
+    /// Use the threaded kernel instead of the virtual one (meaningful only
+    /// on a many-core host).
+    pub threaded: bool,
+    /// Scale factor for core counts (keeps CI fast).
+    pub max_cores: usize,
+}
+
+impl Default for FigureOpts {
+    fn default() -> Self {
+        FigureOpts {
+            ops_per_core: 2048,
+            seed: 42,
+            host_cores: 64,
+            threaded: false,
+            max_cores: 120,
+        }
+    }
+}
+
+fn cfg_pair(
+    app: &str,
+    cores: usize,
+    quantum_ns: u64,
+    opts: &FigureOpts,
+) -> (RunConfig, RunConfig) {
+    let mut serial = RunConfig {
+        app: app.to_string(),
+        ops_per_core: opts.ops_per_core,
+        seed: opts.seed,
+        cpu_model: CpuModel::O3,
+        mode: Mode::Serial,
+        host_cores: opts.host_cores,
+        ..Default::default()
+    };
+    serial.system.cores = cores;
+    let mut par = serial.clone();
+    par.mode = if opts.threaded { Mode::Parallel } else { Mode::Virtual };
+    par.quantum = quantum_ns * NS;
+    (serial, par)
+}
+
+fn run_pair(
+    app: &str,
+    cores: usize,
+    quantum_ns: u64,
+    opts: &FigureOpts,
+) -> Result<ComparisonRow> {
+    let (serial, par) = cfg_pair(app, cores, quantum_ns, opts);
+    let mut host = HostModel { h_cores: opts.host_cores, ..Default::default() };
+    compare_modes(&serial, &par, &mut host)
+}
+
+/// Fig. 7: speedup + simulated-time error as a function of core count and
+/// quantum, for the synthetic benchmark and blackscholes.
+pub fn fig7(opts: &FigureOpts) -> Result<Vec<(String, ComparisonRow)>> {
+    let mut rows = Vec::new();
+    // Paper: cores in multiples of two, stopping at 120.
+    let mut core_counts = vec![2usize, 4, 8, 16, 32, 64, 120];
+    core_counts.retain(|&c| c <= opts.max_cores);
+    for app in ["synthetic", "blackscholes"] {
+        for &cores in &core_counts {
+            for &q in QUANTA_NS {
+                let row = run_pair(app, cores, q, opts)?;
+                rows.push((app.to_string(), row));
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// Fig. 8: speedup + simulated-time error for the PARSEC subset + STREAM on
+/// a 32-core target, per quantum.
+pub fn fig8(opts: &FigureOpts) -> Result<Vec<(String, ComparisonRow)>> {
+    let cores = 32.min(opts.max_cores);
+    let mut rows = Vec::new();
+    for app in FIG8_APPS {
+        for &q in QUANTA_NS {
+            let row = run_pair(app, cores, q, opts)?;
+            rows.push((app.to_string(), row));
+        }
+    }
+    Ok(rows)
+}
+
+/// Fig. 9 uses the same runs as Fig. 8 but reports the per-level absolute
+/// cache-miss-rate errors.
+pub fn fig9(opts: &FigureOpts) -> Result<Vec<(String, ComparisonRow)>> {
+    fig8(opts)
+}
+
+/// §3.3: "simulations using the timing protocol and the detailed O3CPU
+/// yield only 20% of the performance obtained with the atomic protocol".
+pub struct ProtocolComparison {
+    pub atomic_mips: f64,
+    pub timing_mips: f64,
+    pub ratio: f64,
+}
+
+pub fn atomic_vs_timing(cores: usize, ops: usize) -> Result<ProtocolComparison> {
+    let mut atomic_cfg = RunConfig {
+        cpu_model: CpuModel::Atomic,
+        app: "synthetic".to_string(),
+        ops_per_core: ops,
+        ..Default::default()
+    };
+    atomic_cfg.system.cores = cores;
+    let mut timing_cfg = atomic_cfg.clone();
+    timing_cfg.cpu_model = CpuModel::O3;
+
+    let a = run_once(&atomic_cfg)?;
+    let t = run_once(&timing_cfg)?;
+    let (am, tm) = (a.mips(), t.mips());
+    Ok(ProtocolComparison {
+        atomic_mips: am,
+        timing_mips: tm,
+        ratio: if am > 0.0 { tm / am } else { 0.0 },
+    })
+}
+
+/// Render comparison rows as an aligned text table.
+pub fn render_rows(rows: &[(String, ComparisonRow)]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<14} {:>6} {:>8} {:>9} {:>10} {:>8} {:>8} {:>8} {:>8} {:>6}\n",
+        "app", "cores", "q(ns)", "speedup", "terr(%)", "l1i(pp)", "l1d(pp)", "l2(pp)", "l3(pp)", "csum"
+    ));
+    for (app, r) in rows {
+        s.push_str(&format!(
+            "{:<14} {:>6} {:>8} {:>9.2} {:>10.2} {:>8.3} {:>8.3} {:>8.3} {:>8.3} {:>6}\n",
+            app,
+            r.cores,
+            r.quantum_ns,
+            r.speedup,
+            r.sim_time_error * 100.0,
+            r.miss_rate_err_pp[0],
+            r.miss_rate_err_pp[1],
+            r.miss_rate_err_pp[2],
+            r.miss_rate_err_pp[3],
+            if r.checksum_match { "ok" } else { "DIFF" },
+        ));
+    }
+    s
+}

@@ -1,0 +1,112 @@
+//! The experiment harness: run driver, sweeps and figure/table
+//! regeneration (one entry per paper table/figure, DESIGN.md §5).
+
+pub mod figures;
+pub mod tables;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{Mode, RunConfig};
+use crate::cpu::CpuModel;
+use crate::pdes::{run_parallel, run_serial, run_virtual, HostModel, RunResult};
+use crate::ruby::{build_atomic_system, build_system};
+use crate::runtime::Runtime;
+use crate::workload::{app_by_name, Workload};
+
+/// Produce the workload for a run: artifact path when available, bit-exact
+/// procedural fallback otherwise.
+pub fn make_workload(cfg: &RunConfig) -> Result<Workload> {
+    let app = app_by_name(&cfg.app)
+        .ok_or_else(|| anyhow!("unknown app '{}'", cfg.app))?;
+    let dir = Runtime::default_dir();
+    if Runtime::artifacts_available(&dir)
+        && cfg.ops_per_core <= crate::runtime::TRACE_N
+    {
+        let rt = Runtime::new(dir)?;
+        return crate::runtime::artifact_workload(
+            &rt,
+            app,
+            cfg.system.cores,
+            cfg.ops_per_core,
+            cfg.seed,
+        );
+    }
+    Ok(app.generate(cfg.system.cores, cfg.ops_per_core, cfg.seed))
+}
+
+/// Execute one run end to end.
+pub fn run_once(cfg: &RunConfig) -> Result<RunResult> {
+    let workload = make_workload(cfg)?;
+    run_with_workload(cfg, &workload)
+}
+
+/// Execute one run with a pre-built workload (so sweeps reuse traces).
+pub fn run_with_workload(cfg: &RunConfig, workload: &Workload) -> Result<RunResult> {
+    if !cfg.cpu_model.is_timing() {
+        anyhow::ensure!(
+            cfg.mode == Mode::Serial,
+            "atomic/kvm CPU models run on the serial kernel only (Table 1)"
+        );
+        let (machine, _mem) = build_atomic_system(
+            cfg,
+            workload,
+            cfg.cpu_model == CpuModel::Kvm,
+        );
+        return Ok(run_serial(machine, cfg.max_ticks));
+    }
+    let built = build_system(cfg, workload);
+    Ok(match cfg.mode {
+        Mode::Serial => run_serial(built.machine, cfg.max_ticks),
+        Mode::Parallel => run_parallel(built.machine, cfg.max_ticks),
+        Mode::Virtual => run_virtual(built.machine, cfg.max_ticks),
+    })
+}
+
+/// Serial reference + virtual-parallel run + host-model speedup — the
+/// measurement kernel behind every figure (DESIGN.md §3 substitution).
+pub struct ComparisonRow {
+    pub cores: usize,
+    pub quantum_ns: u64,
+    pub speedup: f64,
+    pub sim_time_error: f64,
+    pub miss_rate_err_pp: [f64; 4],
+    pub checksum_match: bool,
+    pub serial: RunResult,
+    pub run: RunResult,
+}
+
+/// Run serial reference vs PDES (virtual by default; threaded if asked)
+/// and compute speedup + accuracy.
+pub fn compare_modes(
+    cfg_serial: &RunConfig,
+    cfg_par: &RunConfig,
+    host: &mut HostModel,
+) -> Result<ComparisonRow> {
+    let workload = make_workload(cfg_serial)?;
+    let serial = run_with_workload(cfg_serial, &workload)?;
+    let run = run_with_workload(cfg_par, &workload)?;
+
+    host.calibrate_cost(&serial);
+    // Barrier cost scales with participating threads (N cores + 1).
+    host.barrier_cost_ns = 500.0 + 25.0 * (cfg_par.system.cores + 1) as f64;
+    let speedup = match cfg_par.mode {
+        Mode::Parallel => {
+            serial.host_ns as f64 / run.host_ns.max(1) as f64
+        }
+        _ => {
+            let work = run.work.as_ref().expect("virtual run records work");
+            host.speedup(serial.events, work)
+        }
+    };
+    let acc = crate::stats::compare(&serial, &run);
+    Ok(ComparisonRow {
+        cores: cfg_par.system.cores,
+        quantum_ns: cfg_par.quantum / crate::sim::time::NS,
+        speedup,
+        sim_time_error: acc.sim_time_error,
+        miss_rate_err_pp: [acc.l1i_pp, acc.l1d_pp, acc.l2_pp, acc.l3_pp],
+        checksum_match: acc.checksum_match,
+        serial,
+        run,
+    })
+}

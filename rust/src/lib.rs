@@ -1,0 +1,32 @@
+//! # parti-sim
+//!
+//! A reproduction of *parti-gem5: gem5's Timing Mode Parallelised*
+//! (Cubero-Cascante et al., SAMOS 2023) as a three-layer Rust + JAX/Pallas
+//! system:
+//!
+//! * **L3 (this crate)** — a full MPSoC timing simulator: gem5-style DES
+//!   kernel, detailed CPU models (Atomic/Minor/O3), a Ruby-like coherent
+//!   memory subsystem (CHI-lite protocol, message buffers, routers,
+//!   throttles), an IO crossbar, a DRAM model — plus the paper's
+//!   contribution: quantum-based PDES with per-core time domains,
+//!   thread-safe Ruby message passing and thread-safe crossbar layers.
+//! * **L2/L1 (python/, build-time only)** — JAX workload-trace synthesis
+//!   with Pallas kernels, AOT-lowered to HLO and executed from Rust via
+//!   PJRT ([`runtime`]).
+//!
+//! Start with [`config::SystemConfig`] + [`ruby::topology::build_system`],
+//! then run one of the kernels in [`pdes`].
+
+pub mod config;
+pub mod cpu;
+pub mod harness;
+pub mod mem;
+pub mod pdes;
+pub mod proto;
+pub mod ruby;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod util;
+pub mod workload;
+pub mod xbar;

@@ -1,0 +1,214 @@
+//! parti-sim — CLI launcher for the parti-gem5 reproduction.
+//!
+//! ```text
+//! parti-sim run      --app blackscholes --cores 8 --mode virtual --quantum-ns 8
+//! parti-sim compare  --app canneal --cores 32           # serial vs PDES
+//! parti-sim fig7|fig8|fig9|tables|protocols             # paper artefacts
+//! parti-sim ffwd     --app dedup --cores 4              # KVM fast-forward
+//! parti-sim help
+//! ```
+
+use anyhow::Result;
+
+use parti_sim::config::{Mode, RunConfig};
+use parti_sim::cpu::CpuModel;
+use parti_sim::harness::figures::{
+    atomic_vs_timing, fig7, fig8, fig9, render_rows, FigureOpts,
+};
+use parti_sim::harness::{compare_modes, run_once, tables};
+use parti_sim::pdes::HostModel;
+use parti_sim::sim::time::NS;
+use parti_sim::stats::Summary;
+use parti_sim::util::cli::Args;
+
+const HELP: &str = "\
+parti-sim — parti-gem5 reproduction: parallelised timing-mode MPSoC simulation
+
+USAGE: parti-sim <command> [--flag value]...
+
+COMMANDS
+  run        one simulation run
+  compare    serial reference vs PDES: speedup + accuracy
+  fig7       core & quantum sweep (synthetic + blackscholes)
+  fig8       PARSEC subset + STREAM @ 32 cores
+  fig9       cache miss-rate accuracy (same runs as fig8)
+  tables     paper tables 1-3 (--which 0|1|2|3)
+  protocols  §3.3 atomic-vs-timing throughput comparison
+  ffwd       KVM fast-forward (functional warm-up)
+  help       this text
+
+RUN/COMPARE/FFWD FLAGS
+  --app NAME        synthetic|blackscholes|canneal|dedup|ferret|
+                    fluidanimate|swaptions|stream     [synthetic]
+  --cores N         simulated cores                   [4]
+  --cpu MODEL       o3|minor|atomic|kvm               [o3]
+  --mode MODE       serial|parallel|virtual           [serial]
+  --quantum-ns N    quantum t_qΔ in ns                [16]
+  --ops N           trace ops per core                [4096]
+  --seed N                                            [42]
+  --host-cores N    modeled host cores (virtual mode) [64]
+  --io-milli N      IO accesses per 1000 ops (§4.3)   [0]
+  --json            emit the summary as JSON
+
+FIGURE FLAGS
+  --ops N           trace ops per core                [2048]
+  --max-cores N     cap swept core counts             [120 / 32]
+  --host-cores N    modeled host cores                [64]
+  --threaded        use the threaded kernel (needs a many-core host)
+";
+
+fn run_config(a: &Args) -> Result<RunConfig> {
+    let mut cfg = RunConfig {
+        app: a.get_str("app", "synthetic"),
+        ops_per_core: a.get_usize("ops", 4096),
+        seed: a.get_u64("seed", 42),
+        ..Default::default()
+    };
+    cfg.system.cores = a.get_usize("cores", 4);
+    cfg.system.io_milli = a.get_u64("io-milli", 0);
+    let cpu = a.get_str("cpu", "o3");
+    cfg.cpu_model = CpuModel::parse(&cpu)
+        .ok_or_else(|| anyhow::anyhow!("bad --cpu {cpu}"))?;
+    let mode = a.get_str("mode", "serial");
+    cfg.mode = Mode::parse(&mode)
+        .ok_or_else(|| anyhow::anyhow!("bad --mode {mode}"))?;
+    cfg.quantum = a.get_u64("quantum-ns", 16) * NS;
+    cfg.host_cores = a.get_usize("host-cores", 64);
+    Ok(cfg)
+}
+
+fn figure_opts(a: &Args, default_max_cores: usize) -> FigureOpts {
+    FigureOpts {
+        ops_per_core: a.get_usize("ops", 2048),
+        seed: a.get_u64("seed", 42),
+        host_cores: a.get_usize("host-cores", 64),
+        threaded: a.has("threaded"),
+        max_cores: a.get_usize("max-cores", default_max_cores),
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    match args.command.as_deref() {
+        Some("run") => {
+            let cfg = run_config(&args)?;
+            let result = run_once(&cfg)?;
+            let s = Summary::from_result(&result);
+            if args.has("json") {
+                println!("{}", s.to_json());
+            } else {
+                print_summary(&cfg, &s);
+            }
+        }
+        Some("compare") => {
+            let mut serial_cfg = run_config(&args)?;
+            serial_cfg.mode = Mode::Serial;
+            let mut par_cfg = run_config(&args)?;
+            if par_cfg.mode == Mode::Serial {
+                par_cfg.mode = Mode::Virtual;
+            }
+            let mut host = HostModel {
+                h_cores: par_cfg.host_cores,
+                ..Default::default()
+            };
+            let row = compare_modes(&serial_cfg, &par_cfg, &mut host)?;
+            println!(
+                "app={} cores={} quantum={}ns\n  speedup(H={}): {:.2}x\n  sim-time error: {:.2}%\n  miss-rate err (pp) l1i/l1d/l2/l3: {:.3}/{:.3}/{:.3}/{:.3}\n  checksums: {}",
+                par_cfg.app,
+                row.cores,
+                row.quantum_ns,
+                par_cfg.host_cores,
+                row.speedup,
+                row.sim_time_error * 100.0,
+                row.miss_rate_err_pp[0],
+                row.miss_rate_err_pp[1],
+                row.miss_rate_err_pp[2],
+                row.miss_rate_err_pp[3],
+                if row.checksum_match { "match" } else { "MISMATCH" }
+            );
+        }
+        Some("fig7") => {
+            let opts = figure_opts(&args, 120);
+            println!("Fig. 7 — speedup & simulated-time error vs cores × quantum\n");
+            println!("{}", render_rows(&fig7(&opts)?));
+        }
+        Some("fig8") => {
+            let opts = figure_opts(&args, 32);
+            println!("Fig. 8 — PARSEC + STREAM @ {} cores\n", 32.min(opts.max_cores));
+            println!("{}", render_rows(&fig8(&opts)?));
+        }
+        Some("fig9") => {
+            let opts = figure_opts(&args, 32);
+            println!("Fig. 9 — cache miss-rate absolute errors (pp)\n");
+            println!("{}", render_rows(&fig9(&opts)?));
+        }
+        Some("tables") => {
+            let which = args.get_usize("which", 0);
+            let cfg = parti_sim::config::SystemConfig::default();
+            if which == 0 || which == 1 {
+                println!("{}", tables::table1());
+            }
+            if which == 0 || which == 2 {
+                println!("{}", tables::table2(&cfg));
+            }
+            if which == 0 || which == 3 {
+                println!("{}", tables::table3());
+            }
+        }
+        Some("protocols") => {
+            let p = atomic_vs_timing(
+                args.get_usize("cores", 4),
+                args.get_usize("ops", 8192),
+            )?;
+            println!(
+                "atomic: {:.3} MIPS\ntiming(O3+Ruby): {:.3} MIPS\nratio: {:.1}% (paper §3.3: ~20%)",
+                p.atomic_mips,
+                p.timing_mips,
+                p.ratio * 100.0
+            );
+        }
+        Some("ffwd") => {
+            let mut cfg = run_config(&args)?;
+            cfg.cpu_model = CpuModel::Kvm;
+            cfg.mode = Mode::Serial;
+            let result = run_once(&cfg)?;
+            println!(
+                "fast-forwarded {} ops in {:.1} ms host time (functional warm-up)",
+                result.stats.sum_suffix(".committed_ops"),
+                result.host_ns as f64 / 1e6
+            );
+        }
+        _ => print!("{HELP}"),
+    }
+    Ok(())
+}
+
+fn print_summary(cfg: &RunConfig, s: &Summary) {
+    println!(
+        "app={} cores={} cpu={:?} mode={:?}",
+        cfg.app, cfg.system.cores, cfg.cpu_model, cfg.mode
+    );
+    println!(
+        "  simulated: {:.6} ms  ({} ticks)",
+        s.sim_seconds * 1e3,
+        s.sim_ticks
+    );
+    println!(
+        "  host: {:.1} ms   {:.0} events/s   {:.4} MIPS",
+        s.host_ns as f64 / 1e6,
+        s.events_per_sec,
+        s.mips
+    );
+    println!(
+        "  ops={}  events={}  domains={}",
+        s.committed_ops, s.events, s.n_domains
+    );
+    println!(
+        "  pdes: cross={} postponed={} tpp_mean={:.2}ns barriers={}",
+        s.cross_events, s.postponed, s.tpp_mean_ns, s.barriers
+    );
+    println!(
+        "  miss rates: l1i={:.4} l1d={:.4} l2={:.4} l3={:.4}",
+        s.l1i_miss_rate, s.l1d_miss_rate, s.l2_miss_rate, s.l3_miss_rate
+    );
+}

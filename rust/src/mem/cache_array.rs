@@ -1,0 +1,274 @@
+//! Set-associative cache array with LRU replacement.
+//!
+//! This is the *storage* half of a cache: tag lookup, allocation, LRU
+//! victimisation and per-line coherence state + functional data. The
+//! *protocol* half lives in the Ruby controllers ([`crate::ruby`]).
+
+/// Per-line coherence state (CHI-lite MESI; see `ruby::msg`).
+#[derive(Copy, Clone, PartialEq, Eq, Debug, Default)]
+pub enum LineState {
+    #[default]
+    Invalid,
+    Shared,
+    Exclusive,
+    Modified,
+}
+
+impl LineState {
+    #[inline]
+    pub fn is_valid(self) -> bool {
+        self != LineState::Invalid
+    }
+
+    /// May this copy be written without upgrading?
+    #[inline]
+    pub fn is_writable(self) -> bool {
+        matches!(self, LineState::Exclusive | LineState::Modified)
+    }
+}
+
+#[derive(Copy, Clone, Debug)]
+pub struct Line {
+    pub tag: u64,
+    pub state: LineState,
+    /// Functional payload (line-granular value).
+    pub data: u64,
+    /// LRU timestamp (monotonic counter).
+    lru: u64,
+}
+
+/// A victim evicted to make room for an allocation.
+#[derive(Copy, Clone, Debug)]
+pub struct Victim {
+    pub addr: u64,
+    pub state: LineState,
+    pub data: u64,
+}
+
+pub struct CacheArray {
+    sets: Vec<Vec<Line>>,
+    assoc: usize,
+    line_bytes: u64,
+    set_shift: u32,
+    set_mask: u64,
+    tick: u64,
+    // stats
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheArray {
+    /// `size_bytes` / `assoc` / `line_bytes` must give a power-of-two set
+    /// count (Table 2 configs all do).
+    pub fn new(size_bytes: u64, assoc: usize, line_bytes: u64) -> Self {
+        assert!(line_bytes.is_power_of_two(), "line size must be 2^k");
+        let n_sets = (size_bytes / (assoc as u64 * line_bytes)).max(1);
+        assert!(
+            n_sets.is_power_of_two(),
+            "set count must be a power of two (size={size_bytes}, assoc={assoc})"
+        );
+        CacheArray {
+            sets: vec![Vec::with_capacity(assoc); n_sets as usize],
+            assoc,
+            line_bytes,
+            set_shift: line_bytes.trailing_zeros(),
+            set_mask: n_sets - 1,
+            tick: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    #[inline]
+    pub fn line_addr(&self, addr: u64) -> u64 {
+        addr & !(self.line_bytes - 1)
+    }
+
+    #[inline]
+    fn set_of(&self, addr: u64) -> usize {
+        ((addr >> self.set_shift) & self.set_mask) as usize
+    }
+
+    #[inline]
+    fn tag_of(&self, addr: u64) -> u64 {
+        addr >> self.set_shift >> self.set_mask.count_ones()
+    }
+
+    /// Look up a line; bumps LRU and the hit/miss counters.
+    pub fn access(&mut self, addr: u64) -> Option<&mut Line> {
+        self.tick += 1;
+        let tick = self.tick;
+        let (set, tag) = (self.set_of(addr), self.tag_of(addr));
+        match self.sets[set].iter_mut().find(|l| l.tag == tag) {
+            Some(line) => {
+                line.lru = tick;
+                self.hits += 1;
+                Some(line)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Look up without touching LRU or stats (snoops, probes).
+    pub fn peek(&self, addr: u64) -> Option<&Line> {
+        let (set, tag) = (self.set_of(addr), self.tag_of(addr));
+        self.sets[set].iter().find(|l| l.tag == tag)
+    }
+
+    pub fn peek_mut(&mut self, addr: u64) -> Option<&mut Line> {
+        let (set, tag) = (self.set_of(addr), self.tag_of(addr));
+        self.sets[set].iter_mut().find(|l| l.tag == tag)
+    }
+
+    /// Allocate `addr` with `state`/`data`; returns the evicted victim (only
+    /// valid victims are reported — Invalid ways are reused silently).
+    pub fn allocate(
+        &mut self,
+        addr: u64,
+        state: LineState,
+        data: u64,
+    ) -> Option<Victim> {
+        self.tick += 1;
+        let tick = self.tick;
+        let (set_idx, tag) = (self.set_of(addr), self.tag_of(addr));
+        let assoc = self.assoc;
+        let set = &mut self.sets[set_idx];
+
+        if let Some(line) = set.iter_mut().find(|l| l.tag == tag) {
+            line.state = state;
+            line.data = data;
+            line.lru = tick;
+            return None;
+        }
+        if set.len() < assoc {
+            set.push(Line { tag, state, data, lru: tick });
+            return None;
+        }
+        // evict LRU way
+        let (vi, _) = set
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, l)| l.lru)
+            .expect("nonempty set");
+        let victim = set[vi];
+        set[vi] = Line { tag, state, data, lru: tick };
+        let victim_addr = self.addr_of(set_idx, victim.tag);
+        victim.state.is_valid().then_some(Victim {
+            addr: victim_addr,
+            state: victim.state,
+            data: victim.data,
+        })
+    }
+
+    /// Remove a line (invalidation); returns its previous content.
+    pub fn invalidate(&mut self, addr: u64) -> Option<Line> {
+        let (set, tag) = (self.set_of(addr), self.tag_of(addr));
+        let s = &mut self.sets[set];
+        let idx = s.iter().position(|l| l.tag == tag)?;
+        Some(s.swap_remove(idx))
+    }
+
+    fn addr_of(&self, set: usize, tag: u64) -> u64 {
+        ((tag << self.set_mask.count_ones()) | set as u64) << self.set_shift
+    }
+
+    pub fn accesses(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn miss_rate(&self) -> f64 {
+        if self.accesses() == 0 {
+            0.0
+        } else {
+            self.misses as f64 / self.accesses() as f64
+        }
+    }
+
+    /// All valid lines (checkpointing / functional comparison).
+    pub fn valid_lines(&self) -> impl Iterator<Item = (u64, &Line)> + '_ {
+        self.sets.iter().enumerate().flat_map(move |(si, set)| {
+            set.iter()
+                .filter(|l| l.state.is_valid())
+                .map(move |l| (self.addr_of(si, l.tag), l))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> CacheArray {
+        // 2 sets x 2 ways x 64B = 256B
+        CacheArray::new(256, 2, 64)
+    }
+
+    #[test]
+    fn miss_then_hit() {
+        let mut c = small();
+        assert!(c.access(0x1000).is_none());
+        c.allocate(0x1000, LineState::Shared, 7);
+        let l = c.access(0x1000).expect("hit");
+        assert_eq!(l.data, 7);
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+    }
+
+    #[test]
+    fn same_set_eviction_is_lru() {
+        let mut c = small();
+        // set 0 lines: addresses with bit6 clear
+        c.allocate(0x0000, LineState::Shared, 1);
+        c.allocate(0x0080, LineState::Shared, 2);
+        c.access(0x0000); // make 0x0080 LRU
+        let v = c.allocate(0x0100, LineState::Shared, 3).expect("evict");
+        assert_eq!(v.addr, 0x0080);
+        assert!(c.peek(0x0000).is_some());
+        assert!(c.peek(0x0080).is_none());
+    }
+
+    #[test]
+    fn invalidate_removes() {
+        let mut c = small();
+        c.allocate(0x40, LineState::Modified, 9);
+        let l = c.invalidate(0x40).expect("line");
+        assert_eq!(l.state, LineState::Modified);
+        assert!(c.peek(0x40).is_none());
+    }
+
+    #[test]
+    fn line_addr_masks_offset() {
+        let c = small();
+        assert_eq!(c.line_addr(0x1234), 0x1200);
+    }
+
+    #[test]
+    fn victim_addr_roundtrip() {
+        let mut c = small();
+        for i in 0..3u64 {
+            c.allocate(0x1000 + i * 128, LineState::Shared, i);
+        }
+        // third allocation in set 0 evicts the first
+        assert!(c.peek(0x1000).is_none() || c.peek(0x1100).is_some());
+    }
+
+    #[test]
+    fn peek_does_not_count() {
+        let mut c = small();
+        c.allocate(0x0, LineState::Shared, 0);
+        let (h, m) = (c.hits, c.misses);
+        c.peek(0x0);
+        c.peek(0x40);
+        assert_eq!((c.hits, c.misses), (h, m));
+    }
+
+    #[test]
+    fn invalid_allocation_reuses_way_without_victim() {
+        let mut c = small();
+        assert!(c.allocate(0x0, LineState::Shared, 0).is_none());
+        assert!(c.allocate(0x80, LineState::Shared, 0).is_none());
+    }
+}

@@ -1,0 +1,247 @@
+//! DRAM controller timing model (the SN-F / main-memory node of Fig. 4).
+//!
+//! Open-page policy over banks: requests queue per controller, are serviced
+//! FCFS at the controller clock, and pay row-activation (tRCD+tRP) on a row
+//! miss, plus CAS and burst time. The functional backing store is a sparse
+//! line→value map, which also serves as the ground truth for end-to-end
+//! functional comparison between serial and parallel runs.
+//!
+//! The controller lives in the shared domain and speaks the classic timing
+//! protocol (`MemReq`/`MemResp` events); the HNF (its only requester in the
+//! CHI system) and the atomic-mode CPUs both use it.
+
+use std::collections::VecDeque;
+
+use rustc_hash::FxHashMap;
+
+use crate::proto::Packet;
+use crate::sim::component::{Component, Ctx};
+use crate::sim::event::EventKind;
+use crate::sim::stats::StatSink;
+use crate::sim::time::{Tick, NS};
+
+#[derive(Clone, Copy, Debug)]
+pub struct DramTiming {
+    /// Controller clock period.
+    pub clk_period: Tick,
+    /// Row activate + precharge penalty on row miss.
+    pub t_row: Tick,
+    /// Column access latency.
+    pub t_cas: Tick,
+    /// Data burst duration per access.
+    pub t_burst: Tick,
+    pub n_banks: usize,
+    /// Bytes per row (per bank).
+    pub row_bytes: u64,
+}
+
+impl Default for DramTiming {
+    /// ~DDR4-like figures at the paper's 1 GHz DRAM clock (Table 2).
+    fn default() -> Self {
+        DramTiming {
+            clk_period: NS,
+            t_row: 28 * NS,
+            t_cas: 14 * NS,
+            t_burst: 4 * NS,
+            n_banks: 16,
+            row_bytes: 2048,
+        }
+    }
+}
+
+struct Bank {
+    open_row: Option<u64>,
+    busy_until: Tick,
+}
+
+pub struct DramCtrl {
+    name: String,
+    timing: DramTiming,
+    banks: Vec<Bank>,
+    queue: VecDeque<Packet>,
+    /// Functional backing store, line-granular.
+    pub store: FxHashMap<u64, u64>,
+    line_bytes: u64,
+    ticking: bool,
+    // stats
+    reads: u64,
+    writes: u64,
+    row_hits: u64,
+    row_misses: u64,
+    queue_delay_sum: Tick,
+    max_queue: usize,
+}
+
+impl DramCtrl {
+    pub fn new(name: String, timing: DramTiming, line_bytes: u64) -> Self {
+        let banks = (0..timing.n_banks)
+            .map(|_| Bank { open_row: None, busy_until: 0 })
+            .collect();
+        DramCtrl {
+            name,
+            timing,
+            banks,
+            queue: VecDeque::new(),
+            store: FxHashMap::default(),
+            line_bytes,
+            ticking: false,
+            reads: 0,
+            writes: 0,
+            row_hits: 0,
+            row_misses: 0,
+            queue_delay_sum: 0,
+            max_queue: 0,
+        }
+    }
+
+    #[inline]
+    fn bank_of(&self, addr: u64) -> usize {
+        // line-interleaved banks
+        ((addr / self.line_bytes) as usize) % self.timing.n_banks
+    }
+
+    #[inline]
+    fn row_of(&self, addr: u64) -> u64 {
+        addr / (self.timing.row_bytes * self.timing.n_banks as u64)
+    }
+
+    /// Functional + timing service of one packet; returns completion tick.
+    fn service(&mut self, pkt: &mut Packet, now: Tick) -> Tick {
+        let bank_idx = self.bank_of(pkt.addr);
+        let row = self.row_of(pkt.addr);
+        let t = self.timing;
+        let bank = &mut self.banks[bank_idx];
+
+        let start = now.max(bank.busy_until);
+        let row_lat = if bank.open_row == Some(row) {
+            self.row_hits += 1;
+            0
+        } else {
+            self.row_misses += 1;
+            bank.open_row = Some(row);
+            t.t_row
+        };
+        let done = start + row_lat + t.t_cas + t.t_burst;
+        bank.busy_until = done;
+
+        let line = pkt.addr & !(self.line_bytes - 1);
+        if pkt.cmd.is_read() {
+            self.reads += 1;
+            pkt.value = *self.store.get(&line).unwrap_or(&0);
+        } else {
+            self.writes += 1;
+            self.store.insert(line, pkt.value);
+        }
+        self.queue_delay_sum += start - now.min(start);
+        done
+    }
+
+    /// Atomic-protocol access: functional effect + latency estimate in one
+    /// synchronous call (used by the Atomic/KVM CPU models, §3.3).
+    pub fn atomic_access(&mut self, pkt: &mut Packet, now: Tick) -> Tick {
+        let done = self.service(pkt, now);
+        done - now
+    }
+}
+
+impl Component for DramCtrl {
+    fn handle(&mut self, kind: EventKind, ctx: &mut Ctx) {
+        match kind {
+            EventKind::MemReq { pkt } => {
+                self.queue.push_back(pkt);
+                self.max_queue = self.max_queue.max(self.queue.len());
+                if !self.ticking {
+                    self.ticking = true;
+                    ctx.schedule_self(0, EventKind::DramTick);
+                }
+            }
+            EventKind::DramTick => {
+                // Service one request per tick event; respond when data is
+                // back on the bus.
+                if let Some(mut pkt) = self.queue.pop_front() {
+                    let done = self.service(&mut pkt, ctx.now());
+                    let resp = pkt.make_response(pkt.value);
+                    ctx.schedule_abs(
+                        done,
+                        resp.requester,
+                        EventKind::MemResp { pkt: resp },
+                    );
+                }
+                if self.queue.is_empty() {
+                    self.ticking = false;
+                } else {
+                    ctx.schedule_self(
+                        self.timing.clk_period,
+                        EventKind::DramTick,
+                    );
+                }
+            }
+            other => panic!("dram: unexpected event {other:?}"),
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn stats(&self, out: &mut StatSink) {
+        out.add_u64("reads", self.reads);
+        out.add_u64("writes", self.writes);
+        out.add_u64("row_hits", self.row_hits);
+        out.add_u64("row_misses", self.row_misses);
+        out.add_u64("queue_delay_ticks", self.queue_delay_sum);
+        out.add_u64("max_queue", self.max_queue as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::Cmd;
+    use crate::sim::ids::CompId;
+
+    fn pkt(addr: u64, cmd: Cmd, value: u64) -> Packet {
+        Packet::request(0, cmd, addr, 64, value, CompId(0), 0, 0)
+    }
+
+    #[test]
+    fn write_then_read_roundtrip() {
+        let mut d = DramCtrl::new("dram".into(), DramTiming::default(), 64);
+        let mut w = pkt(0x1000, Cmd::WriteReq, 0xabc);
+        d.service(&mut w, 0);
+        let mut r = pkt(0x1000, Cmd::ReadReq, 0);
+        d.service(&mut r, 100 * NS);
+        assert_eq!(r.value, 0xabc);
+    }
+
+    #[test]
+    fn row_hit_is_faster() {
+        let mut d = DramCtrl::new("dram".into(), DramTiming::default(), 64);
+        let mut a = pkt(0x0, Cmd::ReadReq, 0);
+        let t0 = d.atomic_access(&mut a, 0);
+        // same row, bank free again
+        let mut b = pkt(0x40 * 16, Cmd::ReadReq, 0); // next line in bank 0
+        let t1 = d.atomic_access(&mut b, 1_000 * NS);
+        assert!(t1 < t0, "row hit {t1} must beat row miss {t0}");
+        assert_eq!(d.row_hits, 1);
+        assert_eq!(d.row_misses, 1);
+    }
+
+    #[test]
+    fn bank_conflict_serialises() {
+        let mut d = DramCtrl::new("dram".into(), DramTiming::default(), 64);
+        let mut a = pkt(0x0, Cmd::ReadReq, 0);
+        let mut b = pkt(0x0, Cmd::ReadReq, 0);
+        let done_a = d.service(&mut a, 0);
+        let done_b = d.service(&mut b, 0);
+        assert!(done_b > done_a, "same-bank requests must serialise");
+    }
+
+    #[test]
+    fn unwritten_reads_zero() {
+        let mut d = DramCtrl::new("dram".into(), DramTiming::default(), 64);
+        let mut r = pkt(0xdead00, Cmd::ReadReq, 5);
+        d.service(&mut r, 0);
+        assert_eq!(r.value, 0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Memory-system substrates: cache storage arrays, the DRAM controller and
+//! the non-coherent peripherals.
+
+pub mod cache_array;
+pub mod dram;
+pub mod peripherals;
+
+pub use cache_array::{CacheArray, Line, LineState, Victim};
+pub use dram::{DramCtrl, DramTiming};
+pub use peripherals::{Timer, Uart};

@@ -1,0 +1,108 @@
+//! Non-coherent peripherals behind the IO crossbar (Fig. 4: UART, timer).
+//!
+//! These answer classic timing-protocol packets with a fixed device latency.
+//! They are deliberately simple — their role in the paper (and here) is to
+//! generate *non-coherent* cross-domain traffic through the thread-safe
+//! IO-XBAR layers of §4.3.
+
+use crate::sim::component::{Component, Ctx};
+use crate::sim::event::EventKind;
+use crate::sim::stats::StatSink;
+use crate::sim::time::{Tick, NS};
+
+/// A UART-like device: writes append to an internal buffer, reads return the
+/// running status word (bytes written so far).
+pub struct Uart {
+    name: String,
+    latency: Tick,
+    bytes_written: u64,
+    reads: u64,
+    writes: u64,
+}
+
+impl Uart {
+    pub fn new(name: String) -> Self {
+        Uart { name, latency: 100 * NS, bytes_written: 0, reads: 0, writes: 0 }
+    }
+}
+
+impl Component for Uart {
+    fn handle(&mut self, kind: EventKind, ctx: &mut Ctx) {
+        match kind {
+            EventKind::MemReq { pkt } => {
+                let value = if pkt.cmd.is_read() {
+                    self.reads += 1;
+                    self.bytes_written
+                } else {
+                    self.writes += 1;
+                    self.bytes_written += pkt.size as u64;
+                    0
+                };
+                let resp = pkt.make_response(value);
+                ctx.schedule(
+                    self.latency,
+                    resp.requester,
+                    EventKind::MemResp { pkt: resp },
+                );
+            }
+            other => panic!("uart: unexpected event {other:?}"),
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn stats(&self, out: &mut StatSink) {
+        out.add_u64("reads", self.reads);
+        out.add_u64("writes", self.writes);
+        out.add_u64("bytes_written", self.bytes_written);
+    }
+}
+
+/// A timer device: reads return the current simulated time in ns; writes are
+/// acknowledged and ignored.
+pub struct Timer {
+    name: String,
+    latency: Tick,
+    reads: u64,
+    writes: u64,
+}
+
+impl Timer {
+    pub fn new(name: String) -> Self {
+        Timer { name, latency: 50 * NS, reads: 0, writes: 0 }
+    }
+}
+
+impl Component for Timer {
+    fn handle(&mut self, kind: EventKind, ctx: &mut Ctx) {
+        match kind {
+            EventKind::MemReq { pkt } => {
+                let value = if pkt.cmd.is_read() {
+                    self.reads += 1;
+                    ctx.now() / NS
+                } else {
+                    self.writes += 1;
+                    0
+                };
+                let resp = pkt.make_response(value);
+                ctx.schedule(
+                    self.latency,
+                    resp.requester,
+                    EventKind::MemResp { pkt: resp },
+                );
+            }
+            other => panic!("timer: unexpected event {other:?}"),
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn stats(&self, out: &mut StatSink) {
+        out.add_u64("reads", self.reads);
+        out.add_u64("writes", self.writes);
+    }
+}

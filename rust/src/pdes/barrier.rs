@@ -1,0 +1,116 @@
+//! Sense-reversing quantum barrier with abort support.
+//!
+//! The threaded kernel synchronises all domain threads at every quantum
+//! border (Fig. 1b). `std::sync::Barrier` would deadlock the remaining
+//! threads if one domain thread panics (poisoned waits), so this barrier
+//! adds an abort path: a panicking thread calls [`QuantumBarrier::abort`]
+//! and every current and future waiter returns `Outcome::Aborted`
+//! immediately.
+
+use std::sync::atomic::{AtomicBool, Ordering::SeqCst};
+use std::sync::{Condvar, Mutex};
+
+pub struct QuantumBarrier {
+    n: usize,
+    state: Mutex<State>,
+    cv: Condvar,
+    aborted: AtomicBool,
+}
+
+struct State {
+    count: usize,
+    generation: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Last thread to arrive in this generation.
+    Leader,
+    Follower,
+    /// A peer aborted (panicked); stop immediately.
+    Aborted,
+}
+
+impl QuantumBarrier {
+    pub fn new(n: usize) -> Self {
+        QuantumBarrier {
+            n,
+            state: Mutex::new(State { count: 0, generation: 0 }),
+            cv: Condvar::new(),
+            aborted: AtomicBool::new(false),
+        }
+    }
+
+    pub fn wait(&self) -> Outcome {
+        if self.aborted.load(SeqCst) {
+            return Outcome::Aborted;
+        }
+        let mut st = self.state.lock().unwrap();
+        st.count += 1;
+        if st.count == self.n {
+            st.count = 0;
+            st.generation += 1;
+            self.cv.notify_all();
+            return Outcome::Leader;
+        }
+        let gen = st.generation;
+        loop {
+            st = self.cv.wait(st).unwrap();
+            if self.aborted.load(SeqCst) {
+                return Outcome::Aborted;
+            }
+            if st.generation != gen {
+                return Outcome::Follower;
+            }
+        }
+    }
+
+    /// Release every waiter with `Aborted`; all future waits abort too.
+    pub fn abort(&self) {
+        self.aborted.store(true, SeqCst);
+        let _guard = self.state.lock().unwrap();
+        self.cv.notify_all();
+    }
+
+    pub fn is_aborted(&self) -> bool {
+        self.aborted.load(SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn all_threads_pass_each_generation() {
+        let b = QuantumBarrier::new(4);
+        let leaders = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..100 {
+                        if b.wait() == Outcome::Leader {
+                            leaders.fetch_add(1, SeqCst);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(leaders.load(SeqCst), 100, "exactly one leader per round");
+    }
+
+    #[test]
+    fn abort_releases_waiters() {
+        let b = QuantumBarrier::new(3);
+        std::thread::scope(|s| {
+            let h1 = s.spawn(|| b.wait());
+            let h2 = s.spawn(|| b.wait());
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            b.abort();
+            assert_eq!(h1.join().unwrap(), Outcome::Aborted);
+            assert_eq!(h2.join().unwrap(), Outcome::Aborted);
+        });
+        assert_eq!(b.wait(), Outcome::Aborted, "future waits abort too");
+    }
+}

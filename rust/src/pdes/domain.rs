@@ -1,0 +1,87 @@
+//! A time domain: one event queue plus the components it owns.
+//!
+//! All three kernels (serial, threaded-parallel, virtual-parallel) drive
+//! domains through the same [`Domain::run_window`] loop, so the model code
+//! paths are identical — only synchronisation differs.
+
+use crate::sim::component::{Component, Ctx};
+use crate::sim::ids::{CompId, DomainId};
+use crate::sim::queue::EventQueue;
+use crate::sim::shared::SharedState;
+use crate::sim::stats::StatSink;
+use crate::sim::time::Tick;
+
+pub struct Domain {
+    pub id: DomainId,
+    pub eq: EventQueue,
+    /// Components owned by this domain, dense local index.
+    pub comps: Vec<Box<dyn Component>>,
+    /// Global ids matching `comps` (for dispatch assertions / stats).
+    pub comp_ids: Vec<CompId>,
+    /// Local simulated time: tick of the last executed event.
+    pub now: Tick,
+}
+
+impl Domain {
+    pub fn new(id: DomainId) -> Self {
+        Domain {
+            id,
+            eq: EventQueue::new(),
+            comps: Vec::new(),
+            comp_ids: Vec::new(),
+            now: 0,
+        }
+    }
+
+    /// Call `init` on every component (schedules the initial events).
+    pub fn init_components(&mut self, shared: &SharedState, window_end: Tick) {
+        let Domain { eq, comps, comp_ids, id, .. } = self;
+        for (local, comp) in comps.iter_mut().enumerate() {
+            let cid = comp_ids[local];
+            let mut ctx = Ctx::new(0, *id, window_end, eq, shared, cid);
+            comp.init(&mut ctx);
+        }
+    }
+
+    /// Execute all events strictly before `window_end`.
+    ///
+    /// Returns the number of events executed (the per-quantum host-work
+    /// proxy used by the virtual host model).
+    pub fn run_window(&mut self, shared: &SharedState, window_end: Tick) -> u64 {
+        let mut executed = 0u64;
+        let Domain { eq, comps, comp_ids, id, now } = self;
+        while let Some(ev) = eq.pop_before(window_end) {
+            debug_assert!(ev.tick >= *now, "time must not go backwards");
+            *now = ev.tick;
+            let (dom, local) = shared.locate[ev.target.index()];
+            debug_assert_eq!(dom, *id, "event routed to wrong domain");
+            debug_assert_eq!(comp_ids[local as usize], ev.target);
+            let comp = &mut comps[local as usize];
+            let mut ctx =
+                Ctx::new(ev.tick, *id, window_end, eq, shared, ev.target);
+            comp.handle(ev.kind, &mut ctx);
+            executed += 1;
+        }
+        executed
+    }
+
+    /// Merge events other domains injected for us (done at quantum borders).
+    pub fn drain_injections(&mut self, shared: &SharedState) {
+        for ev in shared.injectors[self.id.index()].drain() {
+            self.eq.insert(ev);
+        }
+    }
+
+    /// Next pending event tick (`Tick::MAX` if idle).
+    pub fn next_tick(&mut self) -> Tick {
+        self.eq.next_tick().unwrap_or(Tick::MAX)
+    }
+
+    /// Collect statistics from all owned components.
+    pub fn collect_stats(&self, sink: &mut StatSink) {
+        for comp in &self.comps {
+            sink.with_prefix(comp.name());
+            comp.stats(sink);
+        }
+    }
+}

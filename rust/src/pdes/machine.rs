@@ -1,0 +1,103 @@
+//! The machine: all time domains plus the shared state of one run.
+//!
+//! Built by [`MachineBuilder`]; consumed by one of the kernels in
+//! [`crate::pdes`]. Partitioning follows §4.1 of the paper: domain `i` holds
+//! core `i` and its private resources, domain `N` holds everything shared.
+
+use std::sync::Arc;
+
+use crate::sim::component::Component;
+use crate::sim::ids::{CompId, DomainId};
+use crate::sim::shared::SharedState;
+use crate::sim::stats::StatSink;
+use crate::sim::time::Tick;
+
+use super::domain::Domain;
+
+pub struct Machine {
+    pub domains: Vec<Domain>,
+    pub shared: Arc<SharedState>,
+}
+
+impl Machine {
+    pub fn n_domains(&self) -> usize {
+        self.domains.len()
+    }
+
+    /// Final simulated time: the maximum local time over all domains.
+    pub fn sim_ticks(&self) -> Tick {
+        self.domains.iter().map(|d| d.now).max().unwrap_or(0)
+    }
+
+    /// Total events executed across all domains.
+    pub fn events_executed(&self) -> u64 {
+        self.domains.iter().map(|d| d.eq.executed).sum()
+    }
+
+    pub fn collect_stats(&self) -> StatSink {
+        let mut sink = StatSink::new();
+        for d in &self.domains {
+            d.collect_stats(&mut sink);
+        }
+        sink
+    }
+}
+
+/// Incrementally builds the component arena and domain partition.
+pub struct MachineBuilder {
+    domains: Vec<Domain>,
+    locate: Vec<(DomainId, u32)>,
+    n_cores: u32,
+    quantum: Tick,
+}
+
+impl MachineBuilder {
+    /// `n_domains` event queues; `quantum == Tick::MAX` disables windowing
+    /// (the serial reference configuration uses exactly one domain).
+    pub fn new(n_domains: usize, quantum: Tick) -> Self {
+        MachineBuilder {
+            domains: (0..n_domains)
+                .map(|i| Domain::new(DomainId(i as u32)))
+                .collect(),
+            locate: Vec::new(),
+            n_cores: 0,
+            quantum,
+        }
+    }
+
+    /// Reserve the id a component will get when added next.
+    pub fn next_id(&self) -> CompId {
+        CompId(self.locate.len() as u32)
+    }
+
+    /// Add a component to `domain`, returning its global id.
+    pub fn add(&mut self, domain: DomainId, comp: Box<dyn Component>) -> CompId {
+        let id = self.next_id();
+        let d = &mut self.domains[domain.index()];
+        d.comps.push(comp);
+        d.comp_ids.push(id);
+        self.locate.push((domain, (d.comps.len() - 1) as u32));
+        id
+    }
+
+    /// Declare the number of simulated cores (for run-termination counting
+    /// and the workload barrier).
+    pub fn set_cores(&mut self, n: u32) {
+        self.n_cores = n;
+    }
+
+    pub fn quantum(&self) -> Tick {
+        self.quantum
+    }
+
+    pub fn finish(self) -> Machine {
+        let shared = Arc::new(SharedState::new(
+            self.locate,
+            self.domains.len(),
+            self.quantum,
+            self.n_cores,
+        ));
+        shared.wl_barrier.state.lock().unwrap().participants = self.n_cores;
+        Machine { domains: self.domains, shared }
+    }
+}

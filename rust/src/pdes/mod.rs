@@ -1,0 +1,25 @@
+//! Parallel discrete-event simulation (the paper's contribution, §3.1/§4).
+//!
+//! Three interchangeable kernels drive the same [`domain::Domain`] loop:
+//!
+//! * [`serial::run_serial`] — gem5's reference single-thread DES.
+//! * [`parallel::run_parallel`] — parti-gem5: one thread per time domain,
+//!   quantum barriers, postponed cross-domain events.
+//! * [`virtual_host::run_virtual`] — identical PDES semantics executed
+//!   deterministically on one thread, recording a per-quantum work profile
+//!   for the [`virtual_host::HostModel`] speedup estimator (the 64-core-host
+//!   substitution, DESIGN.md §3).
+
+pub mod barrier;
+pub mod domain;
+pub mod machine;
+pub mod parallel;
+pub mod result;
+pub mod serial;
+pub mod virtual_host;
+
+pub use machine::{Machine, MachineBuilder};
+pub use parallel::run_parallel;
+pub use result::{PdesSnapshot, RunResult, WorkProfile};
+pub use serial::run_serial;
+pub use virtual_host::{run_virtual, HostModel};

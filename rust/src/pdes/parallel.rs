@@ -1,0 +1,125 @@
+//! The threaded PDES kernel (parti-gem5 proper, Fig. 1b).
+//!
+//! One host thread per time domain; a global quantum barrier at every
+//! border. Within a window, domains execute their local event queues
+//! freely; cross-domain schedules go through the injectors with the
+//! postpone-to-border rule (see [`crate::sim::component::Ctx`]).
+//!
+//! Termination uses a two-phase verdict so that every thread exits at the
+//! same border (a single-phase check races: a fast thread could drain its
+//! injector before a slow thread scans it, making the "all quiescent"
+//! verdict non-unanimous and deadlocking the barrier):
+//!
+//! 1. barrier — every thread has finished its window and published its
+//!    `next_tick`; nobody mutates queues.
+//! 2. the leader computes the verdict (stop flag / global quiescence /
+//!    max-ticks) while the others wait.
+//! 3. barrier — everyone reads the same verdict, then drains and either
+//!    continues or breaks.
+//!
+//! A panic inside a domain (a model bug) aborts the barrier so the
+//! remaining threads exit instead of deadlocking; the panic is re-thrown
+//! on the caller thread.
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering::SeqCst};
+use std::time::Instant;
+
+use crate::sim::time::Tick;
+
+use super::barrier::{Outcome, QuantumBarrier};
+use super::machine::Machine;
+use super::result::{PdesSnapshot, RunResult};
+
+const VERDICT_CONTINUE: u8 = 0;
+const VERDICT_STOP: u8 = 1;
+
+pub fn run_parallel(mut machine: Machine, max_ticks: Tick) -> RunResult {
+    let n = machine.n_domains();
+    assert!(n >= 2, "parallel kernel requires >= 2 domains");
+    let shared = machine.shared.clone();
+    let quantum = shared.quantum;
+    assert!(quantum > 0 && quantum < Tick::MAX, "parallel requires a quantum");
+
+    let barrier = QuantumBarrier::new(n);
+    let next_ticks: Vec<AtomicU64> =
+        (0..n).map(|_| AtomicU64::new(0)).collect();
+    let verdict = AtomicU8::new(VERDICT_CONTINUE);
+
+    let start = Instant::now();
+
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (di, dom) in machine.domains.iter_mut().enumerate() {
+            let shared = &shared;
+            let barrier = &barrier;
+            let next_ticks = &next_ticks;
+            let verdict = &verdict;
+            handles.push(scope.spawn(move || {
+                let body = std::panic::AssertUnwindSafe(|| {
+                    let mut window_end = quantum;
+                    dom.init_components(shared, window_end);
+                    loop {
+                        dom.run_window(shared, window_end.min(max_ticks));
+                        next_ticks[di].store(dom.next_tick(), SeqCst);
+
+                        // Phase 1: all windows finished, state frozen.
+                        match barrier.wait() {
+                            Outcome::Aborted => return,
+                            Outcome::Leader => {
+                                shared.pdes.barriers.fetch_add(1, SeqCst);
+                                let quiescent = next_ticks
+                                    .iter()
+                                    .all(|t| t.load(SeqCst) == Tick::MAX)
+                                    && shared
+                                        .injectors
+                                        .iter()
+                                        .all(|i| i.is_empty());
+                                let stop = shared.should_stop()
+                                    || quiescent
+                                    || window_end >= max_ticks;
+                                verdict.store(
+                                    if stop { VERDICT_STOP } else { VERDICT_CONTINUE },
+                                    SeqCst,
+                                );
+                            }
+                            Outcome::Follower => {}
+                        }
+                        // Phase 2: everyone adopts the leader's verdict.
+                        if barrier.wait() == Outcome::Aborted {
+                            return;
+                        }
+                        dom.drain_injections(shared);
+                        if verdict.load(SeqCst) == VERDICT_STOP {
+                            break;
+                        }
+                        window_end += quantum;
+                    }
+                });
+                if let Err(payload) = std::panic::catch_unwind(body) {
+                    barrier.abort();
+                    std::panic::resume_unwind(payload);
+                }
+            }));
+        }
+        let mut panic_payload = None;
+        for h in handles {
+            if let Err(p) = h.join() {
+                panic_payload = Some(p);
+            }
+        }
+        if let Some(p) = panic_payload {
+            std::panic::resume_unwind(p);
+        }
+    });
+
+    let host_ns = start.elapsed().as_nanos() as u64;
+    RunResult {
+        sim_ticks: machine.sim_ticks(),
+        events: machine.events_executed(),
+        host_ns,
+        stats: machine.collect_stats(),
+        pdes: PdesSnapshot::from_shared(&machine.shared),
+        work: None,
+        n_domains: n,
+    }
+}

@@ -1,0 +1,95 @@
+//! Outcome of one simulation run, independent of the kernel that produced it.
+
+use std::sync::atomic::Ordering::Relaxed;
+
+use crate::sim::shared::SharedState;
+use crate::sim::stats::StatSink;
+use crate::sim::time::{ticks_to_seconds, Tick};
+
+/// Per-quantum, per-domain host-work profile (events executed). Only filled
+/// by the virtual kernel; feeds the host model (DESIGN.md §3 substitution).
+#[derive(Default, Clone)]
+pub struct WorkProfile {
+    /// `work[q][d]` = events domain `d` executed in quantum `q`.
+    pub per_quantum: Vec<Vec<u32>>,
+}
+
+impl WorkProfile {
+    pub fn total(&self) -> u64 {
+        self.per_quantum
+            .iter()
+            .flat_map(|q| q.iter().map(|&w| w as u64))
+            .sum()
+    }
+}
+
+/// Snapshot of the PDES artefact counters.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PdesSnapshot {
+    pub cross_events: u64,
+    pub postponed: u64,
+    pub tpp_sum: Tick,
+    pub barriers: u64,
+}
+
+impl PdesSnapshot {
+    pub fn from_shared(s: &SharedState) -> Self {
+        PdesSnapshot {
+            cross_events: s.pdes.cross_events.load(Relaxed),
+            postponed: s.pdes.postponed.load(Relaxed),
+            tpp_sum: s.pdes.tpp_sum.load(Relaxed),
+            barriers: s.pdes.barriers.load(Relaxed),
+        }
+    }
+
+    /// Mean postponement delay in ticks.
+    pub fn tpp_mean(&self) -> f64 {
+        if self.postponed == 0 {
+            0.0
+        } else {
+            self.tpp_sum as f64 / self.postponed as f64
+        }
+    }
+}
+
+/// Result of one run.
+pub struct RunResult {
+    /// Total simulated time.
+    pub sim_ticks: Tick,
+    /// Events executed across all domains.
+    pub events: u64,
+    /// Host wall-clock of the run (ns).
+    pub host_ns: u64,
+    /// All component statistics.
+    pub stats: StatSink,
+    pub pdes: PdesSnapshot,
+    /// Work profile (virtual kernel only).
+    pub work: Option<WorkProfile>,
+    /// Number of time domains used.
+    pub n_domains: usize,
+}
+
+impl RunResult {
+    pub fn sim_seconds(&self) -> f64 {
+        ticks_to_seconds(self.sim_ticks)
+    }
+
+    /// Simulated instructions (ops) per second of host time, in MIPS.
+    pub fn mips(&self) -> f64 {
+        let insts = self.stats.sum_suffix(".committed_ops");
+        if self.host_ns == 0 {
+            0.0
+        } else {
+            insts / (self.host_ns as f64 / 1e9) / 1e6
+        }
+    }
+
+    /// Host events per second.
+    pub fn events_per_sec(&self) -> f64 {
+        if self.host_ns == 0 {
+            0.0
+        } else {
+            self.events as f64 / (self.host_ns as f64 / 1e9)
+        }
+    }
+}

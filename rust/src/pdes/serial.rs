@@ -1,0 +1,49 @@
+//! The reference single-thread DES kernel (gem5's default, Fig. 1a).
+//!
+//! The machine must have been built with exactly one domain; all events run
+//! in strict `(tick, prio, seq)` order, so results are fully deterministic.
+//! Speedups in the paper (and in our figures) are measured against this
+//! kernel.
+
+use std::time::Instant;
+
+use crate::sim::time::Tick;
+
+use super::machine::Machine;
+use super::result::{PdesSnapshot, RunResult};
+
+pub fn run_serial(mut machine: Machine, max_ticks: Tick) -> RunResult {
+    assert_eq!(
+        machine.n_domains(),
+        1,
+        "serial kernel requires a single-domain machine"
+    );
+    let shared = machine.shared.clone();
+    let start = Instant::now();
+
+    let d = &mut machine.domains[0];
+    d.init_components(&shared, Tick::MAX);
+
+    // Run in bounded windows so the stop flag (set by core_done) is observed
+    // without checking it on every event.
+    const CHECK_EVERY: Tick = 1_000_000; // 1 us of simulated time
+    let mut horizon = CHECK_EVERY;
+    loop {
+        d.run_window(&shared, horizon.min(max_ticks));
+        if shared.should_stop() || horizon >= max_ticks || d.eq.is_empty() {
+            break;
+        }
+        horizon += CHECK_EVERY;
+    }
+
+    let host_ns = start.elapsed().as_nanos() as u64;
+    RunResult {
+        sim_ticks: machine.sim_ticks(),
+        events: machine.events_executed(),
+        host_ns,
+        stats: machine.collect_stats(),
+        pdes: PdesSnapshot::from_shared(&machine.shared),
+        work: None,
+        n_domains: 1,
+    }
+}

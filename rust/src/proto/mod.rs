@@ -1,0 +1,13 @@
+//! Communication protocols (§3.3 of the paper).
+//!
+//! The *timing* protocol splits a transaction into request and response
+//! events ([`packet::Packet`] delivered via
+//! [`crate::sim::event::EventKind::MemReq`] /
+//! [`crate::sim::event::EventKind::MemResp`]); rejection and retry are
+//! modelled with explicit retry events. The *atomic* protocol completes a
+//! transaction in a single synchronous call chain — see
+//! [`crate::cpu::atomic`].
+
+pub mod packet;
+
+pub use packet::{Cmd, Packet};

@@ -1,0 +1,133 @@
+//! gem5-style packets for the (classic) timing protocol.
+//!
+//! Packets carry a command, target address, a functional payload value and
+//! the delays accumulated in flight (`header_delay`, `payload_delay` — the
+//! Δt_h and Δt_p of §3.3 in the paper). The Ruby side converts packets to
+//! [`crate::ruby::RubyMsg`]s at the sequencer, exactly like gem5 (§3.4).
+
+use crate::sim::ids::CompId;
+use crate::sim::time::Tick;
+
+/// Packet command. Request commands expect a matching response.
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub enum Cmd {
+    ReadReq,
+    WriteReq,
+    ReadResp,
+    WriteResp,
+}
+
+impl Cmd {
+    #[inline]
+    pub fn is_request(self) -> bool {
+        matches!(self, Cmd::ReadReq | Cmd::WriteReq)
+    }
+
+    #[inline]
+    pub fn is_read(self) -> bool {
+        matches!(self, Cmd::ReadReq | Cmd::ReadResp)
+    }
+
+    /// The response command matching a request.
+    pub fn response(self) -> Cmd {
+        match self {
+            Cmd::ReadReq => Cmd::ReadResp,
+            Cmd::WriteReq => Cmd::WriteResp,
+            other => panic!("{other:?} is not a request"),
+        }
+    }
+}
+
+/// A memory transaction packet.
+#[derive(Copy, Clone, Debug)]
+pub struct Packet {
+    /// Unique transaction id (allocated by the issuing CPU/sequencer).
+    pub id: u64,
+    pub cmd: Cmd,
+    /// Byte address of the access.
+    pub addr: u64,
+    /// Access size in bytes.
+    pub size: u32,
+    /// Functional payload (line-granular value; writes carry the new value,
+    /// read responses carry the observed value).
+    pub value: u64,
+    /// Component to which the response must be routed.
+    pub requester: CompId,
+    /// Simulated core that issued the transaction (for stats).
+    pub core: u16,
+    /// Tick at which the original request was issued (latency stats).
+    pub issued: Tick,
+    /// Accumulated header delay (Δt_h).
+    pub header_delay: Tick,
+    /// Accumulated payload delay (Δt_p).
+    pub payload_delay: Tick,
+}
+
+impl Packet {
+    pub fn request(
+        id: u64,
+        cmd: Cmd,
+        addr: u64,
+        size: u32,
+        value: u64,
+        requester: CompId,
+        core: u16,
+        issued: Tick,
+    ) -> Self {
+        debug_assert!(cmd.is_request());
+        Packet {
+            id,
+            cmd,
+            addr,
+            size,
+            value,
+            requester,
+            core,
+            issued,
+            header_delay: 0,
+            payload_delay: 0,
+        }
+    }
+
+    /// Turn this packet into its response in place (gem5's `makeResponse`).
+    pub fn make_response(mut self, value: u64) -> Self {
+        self.cmd = self.cmd.response();
+        self.value = value;
+        self
+    }
+
+    /// Total accumulated in-flight delay.
+    #[inline]
+    pub fn flight_delay(&self) -> Tick {
+        self.header_delay + self.payload_delay
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_roundtrip() {
+        let p = Packet::request(1, Cmd::ReadReq, 0x40, 64, 0, CompId(3), 0, 100);
+        let r = p.make_response(0xdead);
+        assert_eq!(r.cmd, Cmd::ReadResp);
+        assert_eq!(r.value, 0xdead);
+        assert_eq!(r.requester, CompId(3));
+        assert!(!r.cmd.is_request());
+    }
+
+    #[test]
+    #[should_panic]
+    fn response_of_response_panics() {
+        Cmd::ReadResp.response();
+    }
+
+    #[test]
+    fn flight_delay_sums() {
+        let mut p = Packet::request(1, Cmd::WriteReq, 0, 8, 7, CompId(0), 1, 0);
+        p.header_delay = 500;
+        p.payload_delay = 1500;
+        assert_eq!(p.flight_delay(), 2000);
+    }
+}

@@ -1,0 +1,450 @@
+//! HN-F: the home node — shared L3, full-map directory, per-line
+//! transaction serialisation, and the DRAM gateway.
+//!
+//! Every line has at most one transaction in flight; requests for a busy
+//! line queue at the HN-F and are replayed on completion. This per-line
+//! serialisation is what makes the L2-side race handling sound (see
+//! [`super::l2`]).
+//!
+//! The directory is a precise full map (owner + sharers per line); the L3
+//! array has finite capacity and writes dirty victims back to DRAM. DRAM is
+//! reached with the classic timing protocol (`MemReq`/`MemResp` events) —
+//! both HN-F and DRAM live in the shared domain, so this link never crosses
+//! domains.
+
+use std::collections::VecDeque;
+
+use rustc_hash::FxHashMap;
+
+use crate::mem::{CacheArray, LineState};
+use crate::proto::{Cmd, Packet};
+use crate::sim::component::{Component, Ctx};
+use crate::sim::event::EventKind;
+use crate::sim::ids::CompId;
+use crate::sim::stats::StatSink;
+use crate::sim::time::Tick;
+
+use super::inbox::{OutLink, SharedInbox};
+use super::msg::{MsgKind, RubyMsg};
+
+pub const HNF_BUF_FROM_NOC: usize = 0;
+
+#[derive(Default, Clone, Debug)]
+struct DirEntry {
+    /// L2 holding the line Exclusive/Modified.
+    owner: Option<CompId>,
+    /// L2s holding the line Shared.
+    sharers: Vec<CompId>,
+}
+
+impl DirEntry {
+    fn is_empty(&self) -> bool {
+        self.owner.is_none() && self.sharers.is_empty()
+    }
+
+    fn remove(&mut self, who: CompId) {
+        if self.owner == Some(who) {
+            self.owner = None;
+        }
+        self.sharers.retain(|&s| s != who);
+    }
+}
+
+struct Txn {
+    req: RubyMsg,
+    pending_acks: u32,
+    data: Option<u64>,
+    data_dirty: bool,
+    mem_pending: bool,
+}
+
+pub struct HnfCtrl {
+    name: String,
+    l3: CacheArray,
+    dir: FxHashMap<u64, DirEntry>,
+    inbox: SharedInbox,
+    to_noc: OutLink,
+    dram: CompId,
+    latency: Tick,
+    busy: FxHashMap<u64, Txn>,
+    waiting: FxHashMap<u64, VecDeque<RubyMsg>>,
+    // stats
+    read_shared: u64,
+    read_unique: u64,
+    snoops_sent: u64,
+    writebacks: u64,
+    stale_writebacks: u64,
+    dram_reads: u64,
+    dram_wbs: u64,
+    requeued: u64,
+    self_owner_refetch: u64,
+    /// Reusable wakeup drain buffer (perf: no alloc per wakeup).
+    scratch: Vec<RubyMsg>,
+}
+
+impl HnfCtrl {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: String,
+        size_bytes: u64,
+        assoc: usize,
+        line_bytes: u64,
+        latency: Tick,
+        inbox: SharedInbox,
+        to_noc: OutLink,
+        dram: CompId,
+    ) -> Self {
+        HnfCtrl {
+            name,
+            l3: CacheArray::new(size_bytes, assoc, line_bytes),
+            dir: FxHashMap::default(),
+            inbox,
+            to_noc,
+            dram,
+            latency,
+            busy: FxHashMap::default(),
+            waiting: FxHashMap::default(),
+            read_shared: 0,
+            read_unique: 0,
+            snoops_sent: 0,
+            writebacks: 0,
+            stale_writebacks: 0,
+            dram_reads: 0,
+            dram_wbs: 0,
+            requeued: 0,
+            self_owner_refetch: 0,
+            scratch: Vec::new(),
+        }
+    }
+
+    fn send_noc(&self, ctx: &mut Ctx, msg: RubyMsg, extra: Tick) {
+        let ok = self.to_noc.send(ctx, msg, extra);
+        debug_assert!(ok, "HNF->router buffer is unbounded");
+    }
+
+    /// Allocate in L3, writing dirty victims back to DRAM.
+    fn l3_fill(&mut self, ctx: &mut Ctx, line: u64, state: LineState, data: u64) {
+        if let Some(v) = self.l3.allocate(line, state, data) {
+            if v.state == LineState::Modified {
+                self.dram_wbs += 1;
+                let pkt = Packet::request(
+                    v.addr,
+                    Cmd::WriteReq,
+                    v.addr,
+                    64,
+                    v.data,
+                    ctx.self_id(),
+                    u16::MAX,
+                    ctx.now(),
+                );
+                ctx.schedule(0, self.dram, EventKind::MemReq { pkt });
+            }
+        }
+    }
+
+    /// Get data for a txn from L3 or start a DRAM read.
+    fn l3_or_mem(&mut self, ctx: &mut Ctx, line: u64) {
+        let hit = self.l3.access(line).map(|l| l.data);
+        let txn = self.busy.get_mut(&line).expect("txn exists");
+        match hit {
+            Some(data) => {
+                txn.data = Some(data);
+                self.try_complete(ctx, line);
+            }
+            None => {
+                txn.mem_pending = true;
+                self.dram_reads += 1;
+                let pkt = Packet::request(
+                    line,
+                    Cmd::ReadReq,
+                    line,
+                    64,
+                    0,
+                    ctx.self_id(),
+                    txn.req.core,
+                    txn.req.issued,
+                );
+                ctx.schedule(0, self.dram, EventKind::MemReq { pkt });
+            }
+        }
+    }
+
+    /// Begin (or queue) a coherent request.
+    fn start_request(&mut self, msg: RubyMsg, ctx: &mut Ctx) {
+        let line = msg.addr;
+        if self.busy.contains_key(&line) {
+            self.requeued += 1;
+            self.waiting.entry(line).or_default().push_back(msg);
+            return;
+        }
+        let requester = msg.src;
+        let entry = self.dir.entry(line).or_default().clone();
+
+        match msg.kind {
+            MsgKind::ReadShared => {
+                self.read_shared += 1;
+                let txn = Txn {
+                    req: msg,
+                    pending_acks: 0,
+                    data: None,
+                    data_dirty: false,
+                    mem_pending: false,
+                };
+                self.busy.insert(line, txn);
+                match entry.owner {
+                    Some(owner) if owner != requester => {
+                        self.snoops_sent += 1;
+                        self.busy.get_mut(&line).unwrap().pending_acks = 1;
+                        let snp = RubyMsg {
+                            kind: MsgKind::SnpShared,
+                            addr: line,
+                            value: 0,
+                            src: ctx.self_id(),
+                            dst: owner,
+                            txn: msg.txn,
+                            core: msg.core,
+                            issued: msg.issued,
+                        };
+                        self.send_noc(ctx, snp, self.latency);
+                    }
+                    Some(_) => {
+                        // Requester believes it misses while we track it as
+                        // owner: a stale-directory refetch race; clear and
+                        // serve from L3/DRAM.
+                        self.self_owner_refetch += 1;
+                        self.dir.get_mut(&line).unwrap().owner = None;
+                        self.l3_or_mem(ctx, line);
+                    }
+                    None => self.l3_or_mem(ctx, line),
+                }
+            }
+            MsgKind::ReadUnique => {
+                self.read_unique += 1;
+                let mut to_snoop: Vec<CompId> = Vec::new();
+                if let Some(owner) = entry.owner {
+                    if owner != requester {
+                        to_snoop.push(owner);
+                    }
+                }
+                for &s in &entry.sharers {
+                    if s != requester {
+                        to_snoop.push(s);
+                    }
+                }
+                // The requester's own stale copy is invalidated implicitly
+                // by the grant; drop it from the directory now.
+                self.dir.entry(line).or_default().remove(requester);
+
+                let txn = Txn {
+                    req: msg,
+                    pending_acks: to_snoop.len() as u32,
+                    data: None,
+                    data_dirty: false,
+                    mem_pending: false,
+                };
+                self.busy.insert(line, txn);
+                for target in to_snoop {
+                    self.snoops_sent += 1;
+                    let snp = RubyMsg {
+                        kind: MsgKind::SnpUnique,
+                        addr: line,
+                        value: 0,
+                        src: ctx.self_id(),
+                        dst: target,
+                        txn: msg.txn,
+                        core: msg.core,
+                        issued: msg.issued,
+                    };
+                    self.send_noc(ctx, snp, self.latency);
+                }
+                if self.busy[&line].pending_acks == 0 {
+                    self.l3_or_mem(ctx, line);
+                }
+            }
+            other => panic!("start_request: {other:?}"),
+        }
+    }
+
+    /// Instant (non-transactional) handlers: write-backs and evict notices.
+    fn on_writeback(&mut self, msg: RubyMsg, full: bool, ctx: &mut Ctx) {
+        let line = msg.addr;
+        if self.busy.contains_key(&line) {
+            self.requeued += 1;
+            self.waiting.entry(line).or_default().push_back(msg);
+            return;
+        }
+        let entry = self.dir.entry(line).or_default();
+        if full {
+            if entry.owner == Some(msg.src) {
+                self.writebacks += 1;
+                entry.owner = None;
+                self.l3_fill(ctx, line, LineState::Modified, msg.value);
+            } else {
+                // Stale WB: a snoop already collected newer data.
+                self.stale_writebacks += 1;
+            }
+            let ack = msg.respond(MsgKind::Comp, ctx.self_id(), 0);
+            self.send_noc(ctx, ack, self.latency);
+        } else {
+            // Clean evict notice, fire-and-forget.
+            entry.remove(msg.src);
+        }
+    }
+
+    fn on_snoop_resp(
+        &mut self,
+        msg: RubyMsg,
+        dirty: bool,
+        had_copy: bool,
+        ctx: &mut Ctx,
+    ) {
+        let line = msg.addr;
+        let Some(txn) = self.busy.get_mut(&line) else {
+            return; // response to a cancelled txn (cannot happen; defensive)
+        };
+        let entry = self.dir.entry(line).or_default();
+        let was_shared_snoop = txn.req.kind == MsgKind::ReadShared;
+        if was_shared_snoop {
+            // SnpShared: old owner downgrades to sharer (if it had a copy).
+            if entry.owner == Some(msg.src) {
+                entry.owner = None;
+                if had_copy {
+                    entry.sharers.push(msg.src);
+                }
+            }
+        } else {
+            entry.remove(msg.src);
+        }
+        let txn = self.busy.get_mut(&line).unwrap();
+        txn.pending_acks -= 1;
+        if dirty {
+            txn.data = Some(msg.value);
+            txn.data_dirty = true;
+        }
+        if txn.pending_acks == 0 {
+            if txn.data.is_some() {
+                self.try_complete(ctx, line);
+            } else {
+                self.l3_or_mem(ctx, line);
+            }
+        }
+    }
+
+    fn on_mem_resp(&mut self, pkt: Packet, ctx: &mut Ctx) {
+        if pkt.cmd == Cmd::WriteResp {
+            return; // dirty-victim write-back acknowledged
+        }
+        let line = pkt.id;
+        // Fill L3 with clean data from memory.
+        self.l3_fill(ctx, line, LineState::Shared, pkt.value);
+        if let Some(txn) = self.busy.get_mut(&line) {
+            txn.mem_pending = false;
+            txn.data = Some(pkt.value);
+            self.try_complete(ctx, line);
+        }
+    }
+
+    /// Complete the transaction for `line` if data is ready and acks are in.
+    fn try_complete(&mut self, ctx: &mut Ctx, line: u64) {
+        let Some(txn) = self.busy.get(&line) else { return };
+        if txn.pending_acks > 0 || txn.mem_pending || txn.data.is_none() {
+            return;
+        }
+        let txn = self.busy.remove(&line).unwrap();
+        let requester = txn.req.src;
+        let data = txn.data.unwrap();
+        let entry = self.dir.entry(line).or_default();
+
+        let grant = match txn.req.kind {
+            MsgKind::ReadShared => {
+                if txn.data_dirty {
+                    // Absorb dirty data into the L3.
+                    self.l3_fill(ctx, line, LineState::Modified, data);
+                }
+                let entry = self.dir.entry(line).or_default();
+                if entry.is_empty() {
+                    entry.owner = Some(requester);
+                    LineState::Exclusive
+                } else {
+                    entry.sharers.push(requester);
+                    LineState::Shared
+                }
+            }
+            MsgKind::ReadUnique => {
+                entry.sharers.clear();
+                entry.owner = Some(requester);
+                LineState::Modified
+            }
+            other => panic!("try_complete: {other:?}"),
+        };
+
+        let resp = txn.req.respond(
+            MsgKind::CompData { state: grant },
+            ctx.self_id(),
+            data,
+        );
+        self.send_noc(ctx, resp, self.latency);
+
+        // Replay the next queued message for this line.
+        if let Some(q) = self.waiting.get_mut(&line) {
+            if let Some(next) = q.pop_front() {
+                if q.is_empty() {
+                    self.waiting.remove(&line);
+                }
+                self.dispatch(next, ctx);
+            } else {
+                self.waiting.remove(&line);
+            }
+        }
+    }
+
+    fn dispatch(&mut self, msg: RubyMsg, ctx: &mut Ctx) {
+        match msg.kind {
+            MsgKind::ReadShared | MsgKind::ReadUnique => {
+                self.start_request(msg, ctx)
+            }
+            MsgKind::WriteBackFull => self.on_writeback(msg, true, ctx),
+            MsgKind::Evict => self.on_writeback(msg, false, ctx),
+            MsgKind::SnpResp { dirty, had_copy } => {
+                self.on_snoop_resp(msg, dirty, had_copy, ctx)
+            }
+            other => panic!("{}: unexpected msg {other:?}", self.name),
+        }
+    }
+}
+
+impl Component for HnfCtrl {
+    fn handle(&mut self, kind: EventKind, ctx: &mut Ctx) {
+        match kind {
+            EventKind::ConsumerWakeup => {
+                let mut ready = std::mem::take(&mut self.scratch);
+                super::inbox::drain_for_wakeup_into(&self.inbox, ctx, &mut ready);
+                for msg in ready.drain(..) {
+                    self.dispatch(msg, ctx);
+                }
+                self.scratch = ready;
+            }
+            EventKind::MemResp { pkt } => self.on_mem_resp(pkt, ctx),
+            other => panic!("{}: unexpected event {other:?}", self.name),
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn stats(&self, out: &mut StatSink) {
+        out.add_u64("hits", self.l3.hits);
+        out.add_u64("misses", self.l3.misses);
+        out.add("miss_rate", self.l3.miss_rate());
+        out.add_u64("read_shared", self.read_shared);
+        out.add_u64("read_unique", self.read_unique);
+        out.add_u64("snoops_sent", self.snoops_sent);
+        out.add_u64("writebacks", self.writebacks);
+        out.add_u64("stale_writebacks", self.stale_writebacks);
+        out.add_u64("dram_reads", self.dram_reads);
+        out.add_u64("dram_writebacks", self.dram_wbs);
+        out.add_u64("requeued", self.requeued);
+        out.add_u64("self_owner_refetch", self.self_owner_refetch);
+    }
+}

@@ -1,0 +1,366 @@
+//! Thread-safe Ruby message passing — the heart of the paper's §4.2.
+//!
+//! Every Consumer owns ONE [`SharedInbox`]: a single mutex protecting *all*
+//! of its input [`MessageBuffer`]s. This is exactly the paper's *shared
+//! wakeup mutex* (Fig. 5a): senders from any domain serialise against each
+//! other and against the consumer's wakeup drain on the same lock.
+//!
+//! Two deliberate refinements over gem5's C++ structure (documented in
+//! DESIGN.md §6):
+//!
+//! * The consumer holds the lock only while draining ready messages, never
+//!   while *processing* them — so no lock is ever held while acquiring
+//!   another consumer's inbox, and the cross-thread lock graph has no
+//!   cycles by construction.
+//! * Bi-directional router links still go through [`super::throttle`]
+//!   objects (Fig. 5c): the throttle is the bandwidth model, and it keeps
+//!   every domain-crossing link uni-directional exactly as in the paper.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::{Arc, Mutex};
+
+use crate::sim::component::Ctx;
+use crate::sim::event::{prio, EventKind};
+use crate::sim::ids::CompId;
+use crate::sim::time::Tick;
+
+use super::msg::RubyMsg;
+
+/// Heap entry ordered by (arrival, seq).
+struct Entry {
+    arrival: Tick,
+    seq: u64,
+    msg: RubyMsg,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        (self.arrival, self.seq) == (other.arrival, other.seq)
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.arrival, self.seq).cmp(&(other.arrival, other.seq))
+    }
+}
+
+/// One buffered link end: a priority queue of in-transit messages ordered by
+/// arrival time (gem5 Ruby's MessageBuffer, §3.4).
+pub struct MessageBuffer {
+    heap: BinaryHeap<Reverse<Entry>>,
+    /// Slot limit; `usize::MAX` = unbounded (gem5 default).
+    capacity: usize,
+    next_seq: u64,
+    // stats (read via Inbox::stats_sum)
+    pub enqueued: u64,
+    pub peak: usize,
+}
+
+impl MessageBuffer {
+    pub fn new(capacity: usize) -> Self {
+        MessageBuffer {
+            heap: BinaryHeap::new(),
+            capacity,
+            next_seq: 0,
+            enqueued: 0,
+            peak: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn has_slot(&self) -> bool {
+        self.heap.len() < self.capacity
+    }
+
+    fn push(&mut self, arrival: Tick, msg: RubyMsg) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Reverse(Entry { arrival, seq, msg }));
+        self.enqueued += 1;
+        self.peak = self.peak.max(self.heap.len());
+    }
+
+    /// Direct enqueue at an absolute arrival time. Test/inspection hook —
+    /// production senders go through [`OutLink::send`], which also handles
+    /// capacity and consumer wakeup.
+    pub fn push_for_test(&mut self, arrival: Tick, msg: RubyMsg) {
+        self.push(arrival, msg);
+    }
+
+    fn pop_ready(&mut self, now: Tick) -> Option<RubyMsg> {
+        match self.heap.peek() {
+            Some(Reverse(e)) if e.arrival <= now => {
+                Some(self.heap.pop().unwrap().0.msg)
+            }
+            _ => None,
+        }
+    }
+
+    fn next_arrival(&self) -> Option<Tick> {
+        self.heap.peek().map(|Reverse(e)| e.arrival)
+    }
+}
+
+/// All input buffers of one consumer, behind its shared wakeup mutex.
+pub struct Inbox {
+    pub bufs: Vec<MessageBuffer>,
+    /// Earliest tick a ConsumerWakeup event is already scheduled for
+    /// (`Tick::MAX` = none). Senders skip scheduling when an
+    /// earlier-or-equal wakeup is pending — a large event-count reduction
+    /// on bursty consumers (§Perf L3.1).
+    pending_wakeup: Tick,
+}
+
+impl Inbox {
+    /// Sender-side dedup: record a message arriving at `arrival`; returns
+    /// true iff the caller must schedule a wakeup event.
+    pub fn note_send(&mut self, arrival: Tick) -> bool {
+        if arrival < self.pending_wakeup {
+            self.pending_wakeup = arrival;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Consumer-side: call at the start of a wakeup event firing at `now`.
+    /// Consumes the pending slot this event occupied (later-scheduled
+    /// wakeups stay tracked).
+    pub fn begin_wakeup(&mut self, now: Tick) {
+        if self.pending_wakeup <= now {
+            self.pending_wakeup = Tick::MAX;
+        }
+    }
+
+    /// Consumer-side: call after processing; if messages remain whose
+    /// arrival precedes any tracked wakeup, returns the tick the consumer
+    /// must self-schedule a wakeup for (and tracks it).
+    pub fn arm(&mut self) -> Option<Tick> {
+        match self.next_arrival() {
+            Some(t) if t < self.pending_wakeup => {
+                self.pending_wakeup = t;
+                Some(t)
+            }
+            _ => None,
+        }
+    }
+    /// Earliest ready message across all buffers.
+    pub fn pop_ready(&mut self, now: Tick) -> Option<RubyMsg> {
+        let (bi, _) = self
+            .bufs
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| b.next_arrival().map(|a| (i, a)))
+            .min_by_key(|&(_, a)| a)?;
+        self.bufs[bi].pop_ready(now)
+    }
+
+    /// Drain every message with `arrival <= now`, in global arrival order.
+    pub fn drain_ready(&mut self, now: Tick) -> Vec<RubyMsg> {
+        let mut out = Vec::new();
+        while let Some(m) = self.pop_ready(now) {
+            out.push(m);
+        }
+        out
+    }
+
+    /// Earliest pending arrival (ready or not).
+    pub fn next_arrival(&self) -> Option<Tick> {
+        self.bufs.iter().filter_map(|b| b.next_arrival()).min()
+    }
+
+    pub fn total_pending(&self) -> usize {
+        self.bufs.iter().map(|b| b.len()).sum()
+    }
+}
+
+/// The consumer's inbox handle: ONE mutex for all input buffers = the
+/// paper's shared wakeup mutex.
+pub type SharedInbox = Arc<Mutex<Inbox>>;
+
+pub fn new_inbox(buffer_capacities: &[usize]) -> SharedInbox {
+    Arc::new(Mutex::new(Inbox {
+        bufs: buffer_capacities
+            .iter()
+            .map(|&c| MessageBuffer::new(c))
+            .collect(),
+        pending_wakeup: Tick::MAX,
+    }))
+}
+
+/// Standard consumer wakeup bracket: drain all ready messages into the
+/// caller's reusable scratch buffer (§Perf L3.2 — no per-wakeup
+/// allocation), re-arm for the next future arrival, and schedule that
+/// wakeup via `ctx`.
+pub fn drain_for_wakeup_into(
+    inbox: &SharedInbox,
+    ctx: &mut Ctx,
+    scratch: &mut Vec<RubyMsg>,
+) {
+    scratch.clear();
+    let rearm = {
+        let mut ib = inbox.lock().unwrap();
+        ib.begin_wakeup(ctx.now());
+        while let Some(m) = ib.pop_ready(ctx.now()) {
+            scratch.push(m);
+        }
+        ib.arm()
+    };
+    if let Some(t) = rearm {
+        ctx.schedule_abs_prio(
+            t,
+            ctx.self_id(),
+            EventKind::ConsumerWakeup,
+            prio::DEFAULT,
+        );
+    }
+}
+
+/// Allocating variant of [`drain_for_wakeup_into`].
+pub fn drain_for_wakeup(inbox: &SharedInbox, ctx: &mut Ctx) -> Vec<RubyMsg> {
+    let mut v = Vec::new();
+    drain_for_wakeup_into(inbox, ctx, &mut v);
+    v
+}
+
+/// Sender-side handle to one input buffer of a (possibly foreign-domain)
+/// consumer.
+#[derive(Clone)]
+pub struct OutLink {
+    pub inbox: SharedInbox,
+    /// Index of our buffer within the consumer's inbox.
+    pub buf: usize,
+    /// The consumer to wake.
+    pub consumer: CompId,
+    /// Link latency added to every message (`delta` in Fig. 3).
+    pub latency: Tick,
+}
+
+impl OutLink {
+    /// Enqueue `msg` arriving at `now + latency + extra_delay` and schedule
+    /// the consumer's wakeup (postponed at domain borders by `ctx`).
+    ///
+    /// Returns `false` without enqueueing when the target buffer is full —
+    /// the caller must retry later (router stall).
+    #[must_use]
+    pub fn send(&self, ctx: &mut Ctx, msg: RubyMsg, extra_delay: Tick) -> bool {
+        let arrival = ctx.now() + self.latency + extra_delay;
+        let need_wakeup = {
+            let mut inbox = self.inbox.lock().unwrap();
+            let buf = &mut inbox.bufs[self.buf];
+            if !buf.has_slot() {
+                return false;
+            }
+            buf.push(arrival, msg);
+            inbox.note_send(arrival)
+        }; // lock released before scheduling
+        if need_wakeup {
+            ctx.schedule_abs_prio(
+                arrival,
+                self.consumer,
+                EventKind::ConsumerWakeup,
+                prio::DEFAULT,
+            );
+        }
+        true
+    }
+
+    /// Slots currently free in the target buffer.
+    pub fn free_slots(&self) -> usize {
+        let inbox = self.inbox.lock().unwrap();
+        let b = &inbox.bufs[self.buf];
+        if b.capacity == usize::MAX {
+            usize::MAX
+        } else {
+            b.capacity - b.len()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ruby::msg::MsgKind;
+
+    fn msg(addr: u64) -> RubyMsg {
+        RubyMsg {
+            kind: MsgKind::ReadShared,
+            addr,
+            value: 0,
+            src: CompId(0),
+            dst: CompId(1),
+            txn: addr,
+            core: 0,
+            issued: 0,
+        }
+    }
+
+    #[test]
+    fn arrival_order_across_buffers() {
+        let inbox = new_inbox(&[usize::MAX, usize::MAX]);
+        {
+            let mut ib = inbox.lock().unwrap();
+            ib.bufs[0].push(30, msg(0xa));
+            ib.bufs[1].push(10, msg(0xb));
+            ib.bufs[0].push(20, msg(0xc));
+        }
+        let mut ib = inbox.lock().unwrap();
+        let order: Vec<u64> =
+            ib.drain_ready(100).iter().map(|m| m.addr).collect();
+        assert_eq!(order, vec![0xb, 0xc, 0xa]);
+    }
+
+    #[test]
+    fn not_ready_messages_stay() {
+        let inbox = new_inbox(&[usize::MAX]);
+        {
+            let mut ib = inbox.lock().unwrap();
+            ib.bufs[0].push(50, msg(1));
+            ib.bufs[0].push(150, msg(2));
+        }
+        let mut ib = inbox.lock().unwrap();
+        assert_eq!(ib.drain_ready(100).len(), 1);
+        assert_eq!(ib.next_arrival(), Some(150));
+        assert_eq!(ib.total_pending(), 1);
+    }
+
+    #[test]
+    fn capacity_blocks() {
+        let inbox = new_inbox(&[2]);
+        {
+            let mut ib = inbox.lock().unwrap();
+            ib.bufs[0].push(1, msg(1));
+            ib.bufs[0].push(2, msg(2));
+            assert!(!ib.bufs[0].has_slot());
+        }
+    }
+
+    #[test]
+    fn same_arrival_fifo() {
+        let inbox = new_inbox(&[usize::MAX]);
+        {
+            let mut ib = inbox.lock().unwrap();
+            for i in 0..5 {
+                ib.bufs[0].push(10, msg(i));
+            }
+        }
+        let mut ib = inbox.lock().unwrap();
+        let order: Vec<u64> =
+            ib.drain_ready(10).iter().map(|m| m.addr).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,229 @@
+//! Private L1 cache controller (RN-F leaf; one instance each for I and D).
+//!
+//! Policy (DESIGN.md §6 simplifications, kept identical in serial and
+//! parallel runs so accuracy comparisons are apples-to-apples):
+//!
+//! * Loads allocate; fills install in `Shared` state — the L2 below is the
+//!   per-core coherence point, so L1 lines are never dirty.
+//! * Stores are write-through-invalidate: the local copy is invalidated and
+//!   the store forwarded to the L2, which obtains write permission. This
+//!   removes all L1 transient states while preserving per-core program
+//!   order (later loads miss to the L2, which has the new data).
+//! * Back-invalidations/downgrades from the L2 (`SnpUnique`/`SnpShared`)
+//!   are fire-and-forget: nothing here is ever dirty.
+
+use rustc_hash::FxHashMap;
+
+use crate::mem::{CacheArray, LineState};
+use crate::sim::component::{Component, Ctx};
+use crate::sim::event::EventKind;
+use crate::sim::stats::StatSink;
+use crate::sim::time::Tick;
+
+use super::inbox::{OutLink, SharedInbox};
+use super::msg::{MsgKind, RubyMsg};
+
+/// An outstanding fill request for one line.
+struct LineMshr {
+    /// Transaction id of the ReadShared sent to the L2.
+    req_txn: u64,
+    /// Loads waiting for the fill.
+    waiters: Vec<RubyMsg>,
+}
+
+/// Inbox buffer indices (fixed by the topology builder).
+pub const L1_BUF_FROM_SEQ: usize = 0;
+pub const L1_BUF_FROM_L2: usize = 1;
+
+pub struct L1Ctrl {
+    name: String,
+    array: CacheArray,
+    inbox: SharedInbox,
+    to_l2: OutLink,
+    to_seq: OutLink,
+    /// Tag/data access latency charged on hit responses.
+    latency: Tick,
+    /// Pending load misses: line -> active fill request.
+    mshr: FxHashMap<u64, LineMshr>,
+    /// Requests superseded by a later store to the same line, keyed by the
+    /// fill's transaction id: their waiters are answered with the fill data
+    /// but the line is NOT installed (the store made it stale), and later
+    /// loads issue a fresh request ordered after the store at the L2.
+    stale: FxHashMap<u64, Vec<RubyMsg>>,
+    // stats
+    load_hits: u64,
+    load_misses: u64,
+    store_lookups: u64,
+    mshr_merges: u64,
+    /// Reusable wakeup drain buffer (perf: no alloc per wakeup).
+    scratch: Vec<RubyMsg>,
+}
+
+impl L1Ctrl {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: String,
+        size_bytes: u64,
+        assoc: usize,
+        line_bytes: u64,
+        latency: Tick,
+        inbox: SharedInbox,
+        to_l2: OutLink,
+        to_seq: OutLink,
+    ) -> Self {
+        L1Ctrl {
+            name,
+            array: CacheArray::new(size_bytes, assoc, line_bytes),
+            inbox,
+            to_l2,
+            to_seq,
+            latency,
+            mshr: FxHashMap::default(),
+            stale: FxHashMap::default(),
+            load_hits: 0,
+            load_misses: 0,
+            store_lookups: 0,
+            mshr_merges: 0,
+            scratch: Vec::new(),
+        }
+    }
+
+    fn on_seq_req(&mut self, msg: RubyMsg, is_store: bool, ctx: &mut Ctx) {
+        let line = self.array.line_addr(msg.addr);
+        if is_store {
+            // Write-through-update: refresh a present copy in place
+            // (no-write-allocate on miss), always defer ordering to the L2.
+            // A pending fill for the same line must not install stale data
+            // over the store -> squash it.
+            self.store_lookups += 1;
+            if let Some(l) = self.array.access(line) {
+                l.data = msg.value;
+            }
+            // A pending fill is now stale: retire it to the stale table so
+            // its waiters (issued before this store) still complete, while
+            // loads issued after the store request fresh data.
+            if let Some(m) = self.mshr.remove(&line) {
+                self.stale.insert(m.req_txn, m.waiters);
+            }
+            let fwd = RubyMsg {
+                src: ctx.self_id(),
+                dst: self.to_l2.consumer,
+                ..msg
+            };
+            let ok = self.to_l2.send(ctx, fwd, 0);
+            debug_assert!(ok, "L1->L2 buffers are unbounded");
+            return;
+        }
+        // Load path.
+        if let Some(l) = self.array.access(line) {
+            self.load_hits += 1;
+            let value = l.data;
+            let resp = msg.respond(MsgKind::SeqResp, ctx.self_id(), value);
+            let ok = self.to_seq.send(ctx, resp, self.latency);
+            debug_assert!(ok);
+            return;
+        }
+        self.load_misses += 1;
+        if let Some(m) = self.mshr.get_mut(&line) {
+            self.mshr_merges += 1;
+            m.waiters.push(msg);
+            return;
+        }
+        self.mshr
+            .insert(line, LineMshr { req_txn: msg.txn, waiters: vec![msg] });
+        let req = RubyMsg {
+            kind: MsgKind::ReadShared,
+            addr: line,
+            value: 0,
+            src: ctx.self_id(),
+            dst: self.to_l2.consumer,
+            txn: msg.txn,
+            core: msg.core,
+            issued: msg.issued,
+        };
+        let ok = self.to_l2.send(ctx, req, 0);
+        debug_assert!(ok);
+    }
+
+    fn on_comp_data(&mut self, msg: RubyMsg, ctx: &mut Ctx) {
+        let line = msg.addr;
+        // Fill for a store-superseded request: answer its waiters, but do
+        // not install the (stale) line.
+        if let Some(waiters) = self.stale.remove(&msg.txn) {
+            for w in waiters {
+                let resp = w.respond(MsgKind::SeqResp, ctx.self_id(), msg.value);
+                let ok = self.to_seq.send(ctx, resp, self.latency);
+                debug_assert!(ok);
+            }
+            return;
+        }
+        // L1 copies are always Shared (never writable) — the L2 holds the
+        // real coherence state.
+        self.array.allocate(line, LineState::Shared, msg.value);
+        if let Some(m) = self.mshr.remove(&line) {
+            debug_assert_eq!(m.req_txn, msg.txn, "fill/request mismatch");
+            for w in m.waiters {
+                let resp = w.respond(MsgKind::SeqResp, ctx.self_id(), msg.value);
+                let ok = self.to_seq.send(ctx, resp, self.latency);
+                debug_assert!(ok);
+            }
+        }
+    }
+
+    fn on_snoop(&mut self, msg: RubyMsg, invalidate: bool) {
+        let line = self.array.line_addr(msg.addr);
+        if invalidate {
+            self.array.invalidate(line);
+        } else if let Some(l) = self.array.peek_mut(line) {
+            l.state = LineState::Shared;
+        }
+    }
+}
+
+impl Component for L1Ctrl {
+    fn handle(&mut self, kind: EventKind, ctx: &mut Ctx) {
+        match kind {
+            EventKind::ConsumerWakeup => {
+                let mut ready = std::mem::take(&mut self.scratch);
+                super::inbox::drain_for_wakeup_into(&self.inbox, ctx, &mut ready);
+                for msg in ready.drain(..) {
+                    match msg.kind {
+                        MsgKind::SeqReq { is_store } => {
+                            self.on_seq_req(msg, is_store, ctx)
+                        }
+                        MsgKind::CompData { .. } => self.on_comp_data(msg, ctx),
+                        // Store ack from L2 -> forward to sequencer.
+                        MsgKind::Comp => {
+                            let resp = RubyMsg {
+                                src: ctx.self_id(),
+                                dst: self.to_seq.consumer,
+                                ..msg
+                            };
+                            let ok = self.to_seq.send(ctx, resp, 0);
+                            debug_assert!(ok);
+                        }
+                        MsgKind::SnpUnique => self.on_snoop(msg, true),
+                        MsgKind::SnpShared => self.on_snoop(msg, false),
+                        other => panic!("{}: unexpected msg {other:?}", self.name),
+                    }
+                }
+                self.scratch = ready;
+            }
+            other => panic!("{}: unexpected event {other:?}", self.name),
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn stats(&self, out: &mut StatSink) {
+        out.add_u64("hits", self.array.hits);
+        out.add_u64("misses", self.array.misses);
+        out.add("miss_rate", self.array.miss_rate());
+        out.add_u64("load_hits", self.load_hits);
+        out.add_u64("load_misses", self.load_misses);
+        out.add_u64("store_lookups", self.store_lookups);
+        out.add_u64("mshr_merges", self.mshr_merges);
+    }
+}

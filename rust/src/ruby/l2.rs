@@ -1,0 +1,388 @@
+//! Private L2 cache controller — the per-core RN-F coherence point.
+//!
+//! Holds the MESI state for all lines the core caches (inclusive of its
+//! L1s). Misses and upgrades go to the HN-F over the NoC; snoops from the
+//! HN-F are answered here and back-propagated to the L1s as fire-and-forget
+//! invalidations/downgrades.
+//!
+//! Races handled (all observable in the parallel runs):
+//! * late write-back: a `WriteBackFull` in flight when a snoop arrives is
+//!   answered from the local write-back buffer; the HN-F drops stale WBs
+//!   whose directory owner has already changed.
+//! * snoop-while-pending: a snoop for a line with an outstanding fill
+//!   answers from the current (usually Invalid) state; the pending fill
+//!   installs fresh permission granted *after* the snooping transaction by
+//!   the HN-F's per-line serialisation.
+//! * shared-fill-then-store: a store waiting on a `ReadShared` fill
+//!   re-issues as `ReadUnique` when the granted state is not writable.
+
+use rustc_hash::FxHashMap;
+
+use crate::mem::{CacheArray, LineState};
+use crate::sim::component::{Component, Ctx};
+use crate::sim::event::EventKind;
+use crate::sim::ids::CompId;
+use crate::sim::stats::StatSink;
+use crate::sim::time::Tick;
+
+use super::inbox::{OutLink, SharedInbox};
+use super::msg::{MsgKind, RubyMsg};
+
+pub const L2_BUF_FROM_L1I: usize = 0;
+pub const L2_BUF_FROM_L1D: usize = 1;
+pub const L2_BUF_FROM_NOC: usize = 2;
+
+struct Mshr {
+    /// Waiting original requests (SeqReq stores / ReadShared loads).
+    waiters: Vec<RubyMsg>,
+    /// The request in flight asks for unique (write) permission (kept for
+    /// asserts/debugging; replay re-derives the need from the grant).
+    #[allow(dead_code)]
+    want_unique: bool,
+}
+
+pub struct L2Ctrl {
+    name: String,
+    array: CacheArray,
+    inbox: SharedInbox,
+    to_l1i: OutLink,
+    to_l1d: OutLink,
+    to_noc: OutLink,
+    /// Protocol destination of NoC requests (the HN-F).
+    hnf: CompId,
+    latency: Tick,
+    mshr: FxHashMap<u64, Mshr>,
+    /// Dirty evictions awaiting the HN-F's Comp ack: line -> data.
+    wb_buffer: FxHashMap<u64, u64>,
+    // stats
+    stores: u64,
+    store_hits_writable: u64,
+    upgrades: u64,
+    writebacks: u64,
+    snoops: u64,
+    snoop_hits: u64,
+    replays: u64,
+    /// Reusable wakeup drain buffer (perf: no alloc per wakeup).
+    scratch: Vec<RubyMsg>,
+}
+
+impl L2Ctrl {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: String,
+        size_bytes: u64,
+        assoc: usize,
+        line_bytes: u64,
+        latency: Tick,
+        inbox: SharedInbox,
+        to_l1i: OutLink,
+        to_l1d: OutLink,
+        to_noc: OutLink,
+        hnf: CompId,
+    ) -> Self {
+        L2Ctrl {
+            name,
+            array: CacheArray::new(size_bytes, assoc, line_bytes),
+            inbox,
+            to_l1i,
+            to_l1d,
+            to_noc,
+            hnf,
+            latency,
+            mshr: FxHashMap::default(),
+            wb_buffer: FxHashMap::default(),
+            stores: 0,
+            store_hits_writable: 0,
+            upgrades: 0,
+            writebacks: 0,
+            snoops: 0,
+            snoop_hits: 0,
+            replays: 0,
+            scratch: Vec::new(),
+        }
+    }
+
+    fn l1_link(&self, l1: CompId) -> &OutLink {
+        if l1 == self.to_l1i.consumer {
+            &self.to_l1i
+        } else {
+            &self.to_l1d
+        }
+    }
+
+    /// Send a request to the HN-F over the NoC.
+    fn request_noc(&mut self, ctx: &mut Ctx, kind: MsgKind, template: &RubyMsg) {
+        let req = RubyMsg {
+            kind,
+            addr: template.addr,
+            value: template.value,
+            src: ctx.self_id(),
+            dst: self.hnf,
+            txn: template.txn,
+            core: template.core,
+            issued: template.issued,
+        };
+        let ok = self.to_noc.send(ctx, req, 0);
+        debug_assert!(ok, "L2->router request buffer is unbounded");
+    }
+
+    /// Evict a victim produced by an allocation: write back dirty data,
+    /// notify clean evictions, back-invalidate the L1s (inclusivity).
+    fn evict_victim(&mut self, ctx: &mut Ctx, victim: crate::mem::Victim) {
+        let inval = RubyMsg {
+            kind: MsgKind::SnpUnique,
+            addr: victim.addr,
+            value: 0,
+            src: ctx.self_id(),
+            dst: CompId::NONE,
+            txn: 0,
+            core: 0,
+            issued: ctx.now(),
+        };
+        let ok = self
+            .to_l1i
+            .send(ctx, RubyMsg { dst: self.to_l1i.consumer, ..inval }, 0);
+        debug_assert!(ok);
+        let ok = self
+            .to_l1d
+            .send(ctx, RubyMsg { dst: self.to_l1d.consumer, ..inval }, 0);
+        debug_assert!(ok);
+
+        let template = RubyMsg {
+            kind: MsgKind::Evict,
+            addr: victim.addr,
+            value: victim.data,
+            src: ctx.self_id(),
+            dst: self.hnf,
+            txn: 0,
+            core: 0,
+            issued: ctx.now(),
+        };
+        if victim.state == LineState::Modified {
+            self.writebacks += 1;
+            self.wb_buffer.insert(victim.addr, victim.data);
+            self.request_noc(ctx, MsgKind::WriteBackFull, &template);
+        } else {
+            self.request_noc(ctx, MsgKind::Evict, &template);
+        }
+    }
+
+    /// A load request from an L1 (ReadShared) or a store (SeqReq).
+    fn on_l1_request(&mut self, msg: RubyMsg, ctx: &mut Ctx) {
+        let line = self.array.line_addr(msg.addr);
+        let is_store = matches!(msg.kind, MsgKind::SeqReq { is_store: true });
+        if is_store {
+            self.stores += 1;
+        }
+
+        if let Some(pending) = self.mshr.get_mut(&line) {
+            pending.waiters.push(msg);
+            return;
+        }
+
+        if let Some(l) = self.array.access(line) {
+            if !is_store {
+                // Load hit at any valid state.
+                let value = l.data;
+                let resp = msg.respond(
+                    MsgKind::CompData { state: LineState::Shared },
+                    ctx.self_id(),
+                    value,
+                );
+                let link = self.l1_link(msg.src);
+                let ok = link.send(ctx, resp, self.latency);
+                debug_assert!(ok);
+                return;
+            }
+            if l.state.is_writable() {
+                // Store hit with permission.
+                l.data = msg.value;
+                l.state = LineState::Modified;
+                self.store_hits_writable += 1;
+                let resp = msg.respond(MsgKind::Comp, ctx.self_id(), 0);
+                let link = self.l1_link(msg.src);
+                let ok = link.send(ctx, resp, self.latency);
+                debug_assert!(ok);
+                return;
+            }
+            // Store hit on Shared: upgrade.
+            self.upgrades += 1;
+            self.mshr
+                .insert(line, Mshr { waiters: vec![msg], want_unique: true });
+            let template = RubyMsg { addr: line, ..msg };
+            self.request_noc(ctx, MsgKind::ReadUnique, &template);
+            return;
+        }
+
+        // Miss.
+        let want_unique = is_store;
+        self.mshr
+            .insert(line, Mshr { waiters: vec![msg], want_unique });
+        let template = RubyMsg { addr: line, ..msg };
+        self.request_noc(
+            ctx,
+            if want_unique { MsgKind::ReadUnique } else { MsgKind::ReadShared },
+            &template,
+        );
+    }
+
+    /// Fill from the HN-F: install, then replay waiters.
+    fn on_comp_data(&mut self, msg: RubyMsg, granted: LineState, ctx: &mut Ctx) {
+        let line = msg.addr;
+        if let Some(v) = self.array.allocate(line, granted, msg.value) {
+            self.evict_victim(ctx, v);
+        }
+        let Some(pending) = self.mshr.remove(&line) else {
+            return; // spurious (e.g. upgrade raced with invalidation)
+        };
+        let mut unsatisfied_stores: Vec<RubyMsg> = Vec::new();
+        for w in pending.waiters {
+            self.replays += 1;
+            let is_store =
+                matches!(w.kind, MsgKind::SeqReq { is_store: true });
+            if !is_store {
+                let l = self.array.peek(line).expect("just installed");
+                let resp = w.respond(
+                    MsgKind::CompData { state: LineState::Shared },
+                    ctx.self_id(),
+                    l.data,
+                );
+                let link = self.l1_link(w.src);
+                let ok = link.send(ctx, resp, self.latency);
+                debug_assert!(ok);
+                continue;
+            }
+            let l = self.array.peek_mut(line).expect("just installed");
+            if l.state.is_writable() {
+                l.data = w.value;
+                l.state = LineState::Modified;
+                let resp = w.respond(MsgKind::Comp, ctx.self_id(), 0);
+                let link = self.l1_link(w.src);
+                let ok = link.send(ctx, resp, self.latency);
+                debug_assert!(ok);
+            } else {
+                unsatisfied_stores.push(w);
+            }
+        }
+        if let Some(first) = unsatisfied_stores.first().copied() {
+            // Granted Shared but stores still waiting: re-issue as unique.
+            self.upgrades += 1;
+            let template = RubyMsg { addr: line, ..first };
+            self.mshr.insert(
+                line,
+                Mshr { waiters: unsatisfied_stores, want_unique: true },
+            );
+            self.request_noc(ctx, MsgKind::ReadUnique, &template);
+        }
+    }
+
+    /// Snoop from the HN-F.
+    fn on_snoop(&mut self, msg: RubyMsg, ctx: &mut Ctx) {
+        self.snoops += 1;
+        let line = msg.addr;
+        let invalidate = msg.kind == MsgKind::SnpUnique;
+
+        // Late-WB race: answer from the write-back buffer.
+        if let Some(&data) = self.wb_buffer.get(&line) {
+            let resp = msg.respond(
+                MsgKind::SnpResp { dirty: true, had_copy: true },
+                ctx.self_id(),
+                data,
+            );
+            let ok = self.to_noc.send(ctx, resp, 0);
+            debug_assert!(ok);
+            return;
+        }
+
+        let (dirty, had_copy, data) = match self.array.peek(line) {
+            None => (false, false, 0),
+            Some(l) => (l.state == LineState::Modified, true, l.data),
+        };
+        if had_copy {
+            self.snoop_hits += 1;
+            if invalidate {
+                self.array.invalidate(line);
+            } else if let Some(l) = self.array.peek_mut(line) {
+                l.state = LineState::Shared;
+            }
+            // Back-propagate to the L1s (inclusive hierarchy).
+            let snp = RubyMsg {
+                kind: if invalidate { MsgKind::SnpUnique } else { MsgKind::SnpShared },
+                addr: line,
+                value: 0,
+                src: ctx.self_id(),
+                dst: CompId::NONE,
+                txn: 0,
+                core: 0,
+                issued: ctx.now(),
+            };
+            if invalidate {
+                let ok = self
+                    .to_l1i
+                    .send(ctx, RubyMsg { dst: self.to_l1i.consumer, ..snp }, 0);
+                debug_assert!(ok);
+                let ok = self
+                    .to_l1d
+                    .send(ctx, RubyMsg { dst: self.to_l1d.consumer, ..snp }, 0);
+                debug_assert!(ok);
+            }
+        }
+        let resp = msg.respond(
+            MsgKind::SnpResp { dirty, had_copy },
+            ctx.self_id(),
+            data,
+        );
+        let ok = self.to_noc.send(ctx, resp, self.latency);
+        debug_assert!(ok);
+    }
+}
+
+impl Component for L2Ctrl {
+    fn handle(&mut self, kind: EventKind, ctx: &mut Ctx) {
+        match kind {
+            EventKind::ConsumerWakeup => {
+                let mut ready = std::mem::take(&mut self.scratch);
+                super::inbox::drain_for_wakeup_into(&self.inbox, ctx, &mut ready);
+                for msg in ready.drain(..) {
+                    match msg.kind {
+                        MsgKind::ReadShared | MsgKind::SeqReq { .. } => {
+                            self.on_l1_request(msg, ctx)
+                        }
+                        MsgKind::CompData { state } => {
+                            self.on_comp_data(msg, state, ctx)
+                        }
+                        MsgKind::SnpShared | MsgKind::SnpUnique => {
+                            self.on_snoop(msg, ctx)
+                        }
+                        // HN-F acknowledged our write-back.
+                        MsgKind::Comp => {
+                            self.wb_buffer.remove(&msg.addr);
+                        }
+                        other => {
+                            panic!("{}: unexpected msg {other:?}", self.name)
+                        }
+                    }
+                }
+                self.scratch = ready;
+            }
+            other => panic!("{}: unexpected event {other:?}", self.name),
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn stats(&self, out: &mut StatSink) {
+        out.add_u64("hits", self.array.hits);
+        out.add_u64("misses", self.array.misses);
+        out.add("miss_rate", self.array.miss_rate());
+        out.add_u64("stores", self.stores);
+        out.add_u64("store_hits_writable", self.store_hits_writable);
+        out.add_u64("upgrades", self.upgrades);
+        out.add_u64("writebacks", self.writebacks);
+        out.add_u64("snoops", self.snoops);
+        out.add_u64("snoop_hits", self.snoop_hits);
+        out.add_u64("replays", self.replays);
+    }
+}

@@ -1,0 +1,23 @@
+//! The Ruby-like coherent memory subsystem (§3.4) plus the paper's
+//! thread-safe message passing (§4.2).
+//!
+//! * [`msg`] — the CHI-lite protocol vocabulary.
+//! * [`inbox`] — MessageBuffers behind per-consumer shared wakeup mutexes.
+//! * [`l1`], [`l2`], [`hnf`] — the cache-controller state machines.
+//! * [`router`], [`throttle`] — the NoC (Fig. 5c deadlock-free links).
+//! * [`sequencer`] — packet ↔ message conversion + the IO-crossbar path.
+//! * [`topology`] — Fig. 4 system construction and domain partitioning.
+
+pub mod hnf;
+pub mod inbox;
+pub mod l1;
+pub mod l2;
+pub mod msg;
+pub mod router;
+pub mod sequencer;
+pub mod throttle;
+pub mod topology;
+
+pub use inbox::{new_inbox, Inbox, MessageBuffer, OutLink, SharedInbox};
+pub use msg::{MsgKind, RubyMsg};
+pub use topology::{build_atomic_system, build_system, BuiltSystem, Layout};

@@ -1,0 +1,136 @@
+//! Ruby messages: the CHI-lite coherence protocol vocabulary.
+//!
+//! A trimmed-down ARM AMBA CHI dialect (DESIGN.md §3 maps it to the paper's
+//! full CHI-via-SLICC configuration): requests flow RN(L2) → HN-F, snoops
+//! HN-F → RN, data/ack responses complete the transaction. The sequencer
+//! speaks `SeqReq`/`SeqResp` to the L1s, mirroring gem5's packet↔message
+//! conversion (§3.4).
+
+use crate::mem::LineState;
+use crate::sim::ids::CompId;
+use crate::sim::time::Tick;
+
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub enum MsgKind {
+    // ---- sequencer <-> L1 --------------------------------------------
+    /// CPU access (load if `!is_store`), line-granular.
+    SeqReq { is_store: bool },
+    /// Completion back to the sequencer; `value` holds load data.
+    SeqResp,
+
+    // ---- RN requests (L1->L2, L2->HNF) --------------------------------
+    /// Read with shared permission (CHI ReadShared).
+    ReadShared,
+    /// Read with unique/write permission (CHI ReadUnique / CleanUnique).
+    ReadUnique,
+    /// Dirty eviction carrying data (CHI WriteBackFull).
+    WriteBackFull,
+    /// Clean-eviction notice keeping the directory precise (CHI Evict).
+    Evict,
+
+    // ---- snoops (HNF->L2, L2->L1 back-invalidation) --------------------
+    /// Downgrade to Shared, return data if dirty (CHI SnpShared).
+    SnpShared,
+    /// Invalidate, return data if dirty (CHI SnpUnique).
+    SnpUnique,
+
+    // ---- responses -----------------------------------------------------
+    /// Data grant with the state the receiver may install (CHI CompData).
+    CompData { state: LineState },
+    /// Snoop response; `dirty` means `value` carries modified data.
+    SnpResp { dirty: bool, had_copy: bool },
+    /// Write-back / evict acknowledgement (CHI Comp).
+    Comp,
+}
+
+impl MsgKind {
+    /// Control messages (no payload) vs data-carrying messages — used by
+    /// the throttle to charge link occupancy.
+    pub fn carries_data(self) -> bool {
+        matches!(
+            self,
+            MsgKind::WriteBackFull
+                | MsgKind::CompData { .. }
+                | MsgKind::SnpResp { dirty: true, .. }
+        )
+    }
+}
+
+/// A message travelling between Ruby nodes.
+#[derive(Copy, Clone, Debug)]
+pub struct RubyMsg {
+    pub kind: MsgKind,
+    /// Line-aligned address.
+    pub addr: u64,
+    /// Functional payload.
+    pub value: u64,
+    /// Protocol-level sender (where responses should go back to).
+    pub src: CompId,
+    /// Final destination consumer — routers forward until it is reached.
+    pub dst: CompId,
+    /// Transaction id allocated by the issuing CPU (matching).
+    pub txn: u64,
+    /// Issuing core (stats / functional checks).
+    pub core: u16,
+    /// Tick the original CPU op was issued (latency stats).
+    pub issued: Tick,
+}
+
+impl RubyMsg {
+    /// A response to this message, swapping src/dst.
+    pub fn respond(&self, kind: MsgKind, from: CompId, value: u64) -> RubyMsg {
+        RubyMsg {
+            kind,
+            addr: self.addr,
+            value,
+            src: from,
+            dst: self.src,
+            txn: self.txn,
+            core: self.core,
+            issued: self.issued,
+        }
+    }
+
+    /// Forward this message to a new destination, updating the
+    /// protocol-level sender.
+    pub fn forward(&self, kind: MsgKind, from: CompId, to: CompId) -> RubyMsg {
+        RubyMsg { kind, src: from, dst: to, ..*self }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn respond_swaps_endpoints() {
+        let m = RubyMsg {
+            kind: MsgKind::ReadShared,
+            addr: 0x40,
+            value: 0,
+            src: CompId(1),
+            dst: CompId(2),
+            txn: 9,
+            core: 0,
+            issued: 5,
+        };
+        let r = m.respond(
+            MsgKind::CompData { state: LineState::Shared },
+            CompId(2),
+            77,
+        );
+        assert_eq!(r.dst, CompId(1));
+        assert_eq!(r.src, CompId(2));
+        assert_eq!(r.txn, 9);
+        assert_eq!(r.value, 77);
+    }
+
+    #[test]
+    fn data_classification() {
+        assert!(MsgKind::WriteBackFull.carries_data());
+        assert!(MsgKind::CompData { state: LineState::Shared }.carries_data());
+        assert!(!MsgKind::ReadShared.carries_data());
+        assert!(!MsgKind::SnpResp { dirty: false, had_copy: true }.carries_data());
+        assert!(MsgKind::SnpResp { dirty: true, had_copy: true }.carries_data());
+    }
+}

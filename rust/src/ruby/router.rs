@@ -1,0 +1,137 @@
+//! NoC router: routes Ruby messages to output links by final destination.
+//!
+//! Head-of-line semantics: one message is routed per wakeup pass; if the
+//! output buffer is full the message stalls in the router and a retry
+//! wakeup is scheduled one router cycle later (gem5 Garnet-like behaviour,
+//! coarse-grained).
+//!
+//! Routers never link directly to a foreign-domain router: every
+//! domain-crossing output goes through a [`super::throttle::Throttle`],
+//! keeping cross-domain links uni-directional and the inbox lock graph
+//! acyclic (paper Fig. 5b/5c).
+
+use std::collections::VecDeque;
+
+use rustc_hash::FxHashMap;
+
+use crate::sim::component::{Component, Ctx};
+use crate::sim::event::EventKind;
+use crate::sim::ids::CompId;
+use crate::sim::stats::StatSink;
+use crate::sim::time::Tick;
+
+use super::inbox::{OutLink, SharedInbox};
+use super::msg::RubyMsg;
+
+pub struct Router {
+    name: String,
+    inbox: SharedInbox,
+    outs: Vec<OutLink>,
+    /// Final-destination component -> output link index.
+    routes: FxHashMap<CompId, usize>,
+    /// Fallback output (e.g. "towards the central router") when the
+    /// destination is not in `routes`.
+    default_out: Option<usize>,
+    cycle: Tick,
+    /// Messages that could not be forwarded (full output buffer).
+    stalled: VecDeque<RubyMsg>,
+    // stats
+    routed: u64,
+    stalls: u64,
+}
+
+impl Router {
+    pub fn new(
+        name: String,
+        inbox: SharedInbox,
+        outs: Vec<OutLink>,
+        routes: FxHashMap<CompId, usize>,
+        default_out: Option<usize>,
+        cycle: Tick,
+    ) -> Self {
+        Router {
+            name,
+            inbox,
+            outs,
+            routes,
+            default_out,
+            cycle,
+            stalled: VecDeque::new(),
+            routed: 0,
+            stalls: 0,
+        }
+    }
+
+    fn out_for(&self, dst: CompId) -> usize {
+        match self.routes.get(&dst) {
+            Some(&i) => i,
+            None => self
+                .default_out
+                .unwrap_or_else(|| panic!("{}: no route to {dst}", self.name)),
+        }
+    }
+
+    /// Try to forward one message; true on success.
+    fn forward(&mut self, msg: RubyMsg, ctx: &mut Ctx) -> bool {
+        let out = self.out_for(msg.dst);
+        if self.outs[out].send(ctx, msg, 0) {
+            self.routed += 1;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+impl Component for Router {
+    fn handle(&mut self, kind: EventKind, ctx: &mut Ctx) {
+        match kind {
+            EventKind::ConsumerWakeup => {
+                {
+                    let mut ib = self.inbox.lock().unwrap();
+                    ib.begin_wakeup(ctx.now());
+                }
+                // First retry stalled messages (in order), then new ones.
+                while let Some(msg) = self.stalled.pop_front() {
+                    if !self.forward(msg, ctx) {
+                        self.stalled.push_front(msg);
+                        self.stalls += 1;
+                        ctx.schedule_self(self.cycle, EventKind::ConsumerWakeup);
+                        return;
+                    }
+                }
+                loop {
+                    let msg = {
+                        let mut ib = self.inbox.lock().unwrap();
+                        ib.pop_ready(ctx.now())
+                    };
+                    let Some(msg) = msg else { break };
+                    if !self.forward(msg, ctx) {
+                        self.stalled.push_back(msg);
+                        self.stalls += 1;
+                        ctx.schedule_self(self.cycle, EventKind::ConsumerWakeup);
+                        return;
+                    }
+                }
+                // Wakeup-dedup: re-arm for messages still in transit.
+                let rearm = {
+                    let mut ib = self.inbox.lock().unwrap();
+                    ib.arm()
+                };
+                if let Some(t) = rearm {
+                    ctx.schedule_abs(t, ctx.self_id(), EventKind::ConsumerWakeup);
+                }
+            }
+            other => panic!("{}: unexpected event {other:?}", self.name),
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn stats(&self, out: &mut StatSink) {
+        out.add_u64("routed", self.routed);
+        out.add_u64("stalls", self.stalls);
+    }
+}

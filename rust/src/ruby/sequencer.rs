@@ -1,0 +1,213 @@
+//! Sequencer: converts classic timing-protocol packets from the CPU into
+//! Ruby messages for the L1s, and routes IO-range packets to the crossbar
+//! (§3.4, Fig. 4 — the black↔blue protocol boundary).
+
+use rustc_hash::FxHashMap;
+
+use crate::proto::{Cmd, Packet};
+use crate::sim::component::{Component, Ctx};
+use crate::sim::event::EventKind;
+use crate::sim::ids::CompId;
+use crate::sim::stats::StatSink;
+use crate::sim::time::Tick;
+use crate::xbar::{Occupy, XbarState};
+
+use super::inbox::{OutLink, SharedInbox};
+use super::msg::{MsgKind, RubyMsg};
+
+pub const SEQ_BUF_FROM_L1D: usize = 0;
+pub const SEQ_BUF_FROM_L1I: usize = 1;
+
+/// Marks instruction-fetch packets (routed to the L1I instead of the L1D):
+/// the CPU sets `Packet::size` to this sentinel on ifetches.
+pub const IFETCH_SIZE: u32 = 0xFFFF_FFFF;
+
+pub struct Sequencer {
+    name: String,
+    inbox: SharedInbox,
+    to_l1d: OutLink,
+    to_l1i: OutLink,
+    cpu: CompId,
+    xbar: std::sync::Arc<XbarState>,
+    io_base: u64,
+    /// Outstanding coherent transactions: txn -> original packet.
+    outstanding: FxHashMap<u64, Packet>,
+    /// IO packets waiting for a layer retry.
+    io_waiting: Vec<Packet>,
+    /// IO packets in flight (for layer release on response).
+    io_outstanding: FxHashMap<u64, Packet>,
+    // stats
+    coherent_reqs: u64,
+    io_reqs: u64,
+    io_retries: u64,
+    latency_sum: Tick,
+    responses: u64,
+    /// Reusable wakeup drain buffer (perf: no alloc per wakeup).
+    scratch: Vec<RubyMsg>,
+}
+
+impl Sequencer {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: String,
+        inbox: SharedInbox,
+        to_l1d: OutLink,
+        to_l1i: OutLink,
+        cpu: CompId,
+        xbar: std::sync::Arc<XbarState>,
+        io_base: u64,
+    ) -> Self {
+        Sequencer {
+            name,
+            inbox,
+            to_l1d,
+            to_l1i,
+            cpu,
+            xbar,
+            io_base,
+            outstanding: FxHashMap::default(),
+            io_waiting: Vec::new(),
+            io_outstanding: FxHashMap::default(),
+            coherent_reqs: 0,
+            io_reqs: 0,
+            io_retries: 0,
+            latency_sum: 0,
+            responses: 0,
+            scratch: Vec::new(),
+        }
+    }
+
+    fn issue_coherent(&mut self, pkt: Packet, ctx: &mut Ctx) {
+        self.coherent_reqs += 1;
+        let is_ifetch = pkt.size == IFETCH_SIZE;
+        let link = if is_ifetch { &self.to_l1i } else { &self.to_l1d };
+        let msg = RubyMsg {
+            kind: MsgKind::SeqReq { is_store: pkt.cmd == Cmd::WriteReq },
+            addr: pkt.addr,
+            value: pkt.value,
+            src: ctx.self_id(),
+            dst: link.consumer,
+            txn: pkt.id,
+            core: pkt.core,
+            issued: pkt.issued,
+        };
+        self.outstanding.insert(pkt.id, pkt);
+        let ok = link.send(ctx, msg, 0);
+        debug_assert!(ok, "seq->L1 buffers are unbounded");
+    }
+
+    fn issue_io(&mut self, pkt: Packet, ctx: &mut Ctx) {
+        self.io_reqs += 1;
+        match self.xbar.try_occupy(pkt.addr, ctx.self_id()) {
+            Occupy::Granted { target } => {
+                self.io_outstanding.insert(pkt.id, pkt);
+                ctx.schedule(
+                    self.xbar.latency,
+                    target,
+                    EventKind::MemReq { pkt },
+                );
+            }
+            Occupy::Busy => {
+                // A retry event will arrive when the layer frees up.
+                self.io_waiting.push(pkt);
+            }
+            Occupy::Contended => {
+                // Host-time mutex collision (§4.3): transient, retry soon.
+                self.io_retries += 1;
+                self.io_waiting.push(pkt);
+                ctx.schedule_self(self.xbar.retry_delay, EventKind::RetryReq);
+            }
+            Occupy::NoTarget => panic!(
+                "{}: IO address {:#x} matches no crossbar target",
+                self.name, pkt.addr
+            ),
+        }
+    }
+
+    fn retry_io(&mut self, ctx: &mut Ctx) {
+        let waiting = std::mem::take(&mut self.io_waiting);
+        for pkt in waiting {
+            self.issue_io(pkt, ctx);
+        }
+    }
+
+    fn complete(&mut self, pkt: Packet, ctx: &mut Ctx) {
+        self.responses += 1;
+        self.latency_sum += ctx.now().saturating_sub(pkt.issued);
+        ctx.schedule(0, self.cpu, EventKind::MemResp { pkt });
+    }
+}
+
+impl Component for Sequencer {
+    fn handle(&mut self, kind: EventKind, ctx: &mut Ctx) {
+        match kind {
+            // CPU request (classic protocol in).
+            EventKind::MemReq { pkt } => {
+                if pkt.addr >= self.io_base {
+                    self.issue_io(pkt, ctx);
+                } else {
+                    self.issue_coherent(pkt, ctx);
+                }
+            }
+            // Ruby side completed a coherent access.
+            EventKind::ConsumerWakeup => {
+                let mut ready = std::mem::take(&mut self.scratch);
+                super::inbox::drain_for_wakeup_into(&self.inbox, ctx, &mut ready);
+                for msg in ready.drain(..) {
+                    match msg.kind {
+                        MsgKind::SeqResp | MsgKind::Comp => {
+                            let Some(pkt) =
+                                self.outstanding.remove(&msg.txn)
+                            else {
+                                panic!(
+                                    "{}: response for unknown txn {}",
+                                    self.name, msg.txn
+                                );
+                            };
+                            let resp = pkt.make_response(msg.value);
+                            self.complete(resp, ctx);
+                        }
+                        other => {
+                            panic!("{}: unexpected msg {other:?}", self.name)
+                        }
+                    }
+                }
+                self.scratch = ready;
+            }
+            // IO target responded: release the layer, wake one waiter.
+            EventKind::MemResp { pkt } => {
+                let orig = self
+                    .io_outstanding
+                    .remove(&pkt.id)
+                    .expect("io response matches an outstanding request");
+                if let Some(waiter) =
+                    self.xbar.release(orig.addr, ctx.self_id())
+                {
+                    ctx.schedule(0, waiter, EventKind::RetryReq);
+                }
+                self.complete(pkt, ctx);
+            }
+            // Layer freed (or local backoff expired): retry waiting IO.
+            EventKind::RetryReq => self.retry_io(ctx),
+            other => panic!("{}: unexpected event {other:?}", self.name),
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn stats(&self, out: &mut StatSink) {
+        out.add_u64("coherent_reqs", self.coherent_reqs);
+        out.add_u64("io_reqs", self.io_reqs);
+        out.add_u64("io_lock_retries", self.io_retries);
+        out.add_u64("responses", self.responses);
+        out.add_u64("latency_sum_ticks", self.latency_sum);
+        if self.responses > 0 {
+            out.add(
+                "avg_latency_ns",
+                self.latency_sum as f64 / self.responses as f64 / 1000.0,
+            );
+        }
+    }
+}

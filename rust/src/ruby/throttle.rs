@@ -1,0 +1,140 @@
+//! Throttle: the link-bandwidth model — and the key to deadlock-free
+//! bi-directional router links (paper Fig. 5c).
+//!
+//! Placed at each router output that crosses a domain border, the throttle
+//! (a) rate-limits the link (control messages take one link cycle, data
+//! messages one cycle per flit) and (b) splits every bi-directional
+//! router↔router connection into two independent uni-directional links, so
+//! the circular wait of Fig. 5b cannot form: a consumer's inbox mutex is
+//! only ever taken while holding *no* other inbox mutex (see
+//! [`super::inbox`]).
+
+use crate::sim::component::{Component, Ctx};
+use crate::sim::event::EventKind;
+use crate::sim::stats::StatSink;
+use crate::sim::time::Tick;
+
+use super::inbox::{OutLink, SharedInbox};
+use super::msg::RubyMsg;
+
+pub struct Throttle {
+    name: String,
+    inbox: SharedInbox,
+    out: OutLink,
+    /// One link cycle (0.5 ns in Table 2).
+    cycle: Tick,
+    /// Link cycles charged for a data-carrying message (flits).
+    data_flits: u64,
+    /// The link is busy until this tick (bandwidth accounting).
+    busy_until: Tick,
+    /// Head-of-line message that found the target buffer full.
+    stalled_msg: Option<RubyMsg>,
+    // stats
+    forwarded: u64,
+    data_msgs: u64,
+    stalls: u64,
+}
+
+impl Throttle {
+    pub fn new(
+        name: String,
+        inbox: SharedInbox,
+        out: OutLink,
+        cycle: Tick,
+        data_flits: u64,
+    ) -> Self {
+        Throttle {
+            name,
+            inbox,
+            out,
+            cycle,
+            data_flits,
+            busy_until: 0,
+            stalled_msg: None,
+            forwarded: 0,
+            data_msgs: 0,
+            stalls: 0,
+        }
+    }
+
+    fn occupancy(&self, msg: &RubyMsg) -> Tick {
+        if msg.kind.carries_data() {
+            self.cycle * self.data_flits
+        } else {
+            self.cycle
+        }
+    }
+}
+
+impl Component for Throttle {
+    fn handle(&mut self, kind: EventKind, ctx: &mut Ctx) {
+        match kind {
+            EventKind::ConsumerWakeup => {
+                let now = ctx.now();
+                {
+                    let mut ib = self.inbox.lock().unwrap();
+                    ib.begin_wakeup(now);
+                }
+                if now < self.busy_until {
+                    // Link busy: look again when it frees up.
+                    ctx.schedule_abs(
+                        self.busy_until,
+                        ctx.self_id(),
+                        EventKind::ConsumerWakeup,
+                    );
+                    return;
+                }
+                // Head-of-line stalled message retries first.
+                let msg = match self.stalled_msg.take() {
+                    Some(m) => m,
+                    None => {
+                        let m = {
+                            let mut ib = self.inbox.lock().unwrap();
+                            ib.pop_ready(now)
+                        };
+                        let Some(m) = m else { return };
+                        m
+                    }
+                };
+                let occ = self.occupancy(&msg);
+                if !self.out.send(ctx, msg, occ) {
+                    // Target buffer full: keep the message, retry shortly.
+                    self.stalls += 1;
+                    self.stalled_msg = Some(msg);
+                    ctx.schedule_self(self.cycle, EventKind::ConsumerWakeup);
+                    return;
+                }
+                self.forwarded += 1;
+                if msg.kind.carries_data() {
+                    self.data_msgs += 1;
+                }
+                self.busy_until = now + occ;
+                // More traffic pending? Come back when the link frees.
+                // (Always re-schedule here: the busy window, not the
+                // message arrival, gates the next forward.)
+                let next = {
+                    let mut ib = self.inbox.lock().unwrap();
+                    ib.arm()
+                };
+                if let Some(next) = next {
+                    ctx.schedule_abs(
+                        self.busy_until.max(next),
+                        ctx.self_id(),
+                        EventKind::ConsumerWakeup,
+                    );
+                }
+            }
+            other => panic!("{}: unexpected event {other:?}", self.name),
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn stats(&self, out: &mut StatSink) {
+        out.add_u64("forwarded", self.forwarded);
+        out.add_u64("data_msgs", self.data_msgs);
+        out.add_u64("stalls", self.stalls);
+    }
+}

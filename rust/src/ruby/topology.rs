@@ -1,0 +1,474 @@
+//! System construction: Fig. 4's hierarchical star topology, partitioned
+//! into time domains per §4.1.
+//!
+//! Per core `i` (domain `i` when parallel, else domain 0):
+//! `cpu_i, seq_i, l1i_i, l1d_i, l2_i, router r_i, throttle t_i`.
+//! Shared domain (`N` when parallel): central router `rc`, per-core central
+//! throttles `tc_i`, the HN-F, the DRAM controller, UART + timer behind the
+//! IO crossbar.
+//!
+//! The only domain-crossing links are `t_i → rc` and `tc_i → r_i` (Ruby
+//! protocol, both uni-directional through throttles — Fig. 5c) plus the
+//! sequencer↔crossbar path (classic timing protocol, §4.3).
+
+use std::sync::Arc;
+
+use rustc_hash::FxHashMap;
+
+use crate::config::{Mode, RunConfig};
+use crate::cpu::{AtomicCpu, AtomicLatencies, AtomicMem, CpuModel, CpuParams, KvmCpu, TimingCpu};
+use crate::mem::{DramCtrl, DramTiming, Timer, Uart};
+use crate::pdes::{Machine, MachineBuilder};
+use crate::sim::ids::{CompId, DomainId};
+use crate::sim::time::{Clock, Tick, NS};
+use crate::workload::Workload;
+use crate::xbar::{default_xbar, XbarState, IO_BASE};
+
+use super::hnf::HnfCtrl;
+use super::inbox::{new_inbox, OutLink};
+use super::l1::L1Ctrl;
+use super::l2::L2Ctrl;
+use super::router::Router;
+use super::sequencer::Sequencer;
+use super::throttle::Throttle;
+
+const UNB: usize = usize::MAX;
+
+/// Component-id layout (must match the `add` order in `build_system`).
+#[derive(Clone, Copy, Debug)]
+pub struct Layout {
+    pub cores: usize,
+}
+
+impl Layout {
+    const PER_CORE: u32 = 7;
+
+    pub fn cpu(&self, i: usize) -> CompId {
+        CompId(i as u32 * Self::PER_CORE)
+    }
+    pub fn seq(&self, i: usize) -> CompId {
+        CompId(i as u32 * Self::PER_CORE + 1)
+    }
+    pub fn l1i(&self, i: usize) -> CompId {
+        CompId(i as u32 * Self::PER_CORE + 2)
+    }
+    pub fn l1d(&self, i: usize) -> CompId {
+        CompId(i as u32 * Self::PER_CORE + 3)
+    }
+    pub fn l2(&self, i: usize) -> CompId {
+        CompId(i as u32 * Self::PER_CORE + 4)
+    }
+    pub fn router(&self, i: usize) -> CompId {
+        CompId(i as u32 * Self::PER_CORE + 5)
+    }
+    pub fn throttle(&self, i: usize) -> CompId {
+        CompId(i as u32 * Self::PER_CORE + 6)
+    }
+    fn shared_base(&self) -> u32 {
+        self.cores as u32 * Self::PER_CORE
+    }
+    pub fn rc(&self) -> CompId {
+        CompId(self.shared_base())
+    }
+    pub fn hnf(&self) -> CompId {
+        CompId(self.shared_base() + 1)
+    }
+    pub fn dram(&self) -> CompId {
+        CompId(self.shared_base() + 2)
+    }
+    pub fn uart(&self) -> CompId {
+        CompId(self.shared_base() + 3)
+    }
+    pub fn timer(&self) -> CompId {
+        CompId(self.shared_base() + 4)
+    }
+    pub fn tc(&self, i: usize) -> CompId {
+        CompId(self.shared_base() + 5 + i as u32)
+    }
+}
+
+/// A constructed machine plus the handles the harness needs.
+pub struct BuiltSystem {
+    pub machine: Machine,
+    pub xbar: Arc<XbarState>,
+    pub layout: Layout,
+}
+
+/// Build the timing-mode system (Minor/O3 + Ruby CHI-lite).
+pub fn build_system(cfg: &RunConfig, workload: &Workload) -> BuiltSystem {
+    assert!(
+        cfg.cpu_model.is_timing(),
+        "build_system is for timing models; use build_atomic_system"
+    );
+    assert_eq!(workload.n_cores(), cfg.system.cores, "workload/core mismatch");
+    let n = cfg.system.cores;
+    let sys = &cfg.system;
+    let lay = Layout { cores: n };
+
+    let (n_domains, quantum) = match cfg.mode {
+        Mode::Serial => (1, Tick::MAX),
+        Mode::Parallel | Mode::Virtual => (n + 1, cfg.quantum),
+    };
+    let dom = |i: usize| match cfg.mode {
+        Mode::Serial => DomainId(0),
+        _ => DomainId(i as u32),
+    };
+    let shared_dom = match cfg.mode {
+        Mode::Serial => DomainId(0),
+        _ => DomainId(n as u32),
+    };
+
+    let mut b = MachineBuilder::new(n_domains, quantum);
+    b.set_cores(n as u32);
+
+    let noc = sys.noc_latency();
+    let rbuf = sys.router_buffer;
+    let clock = Clock::from_mhz(sys.cpu_mhz);
+    let xbar = default_xbar(&[lay.uart(), lay.timer()]);
+
+    // ---- create all inboxes up front (ids are known from the layout) ----
+    let seq_inbox: Vec<_> = (0..n).map(|_| new_inbox(&[UNB, UNB])).collect();
+    let l1i_inbox: Vec<_> = (0..n).map(|_| new_inbox(&[UNB, UNB])).collect();
+    let l1d_inbox: Vec<_> = (0..n).map(|_| new_inbox(&[UNB, UNB])).collect();
+    let l2_inbox: Vec<_> =
+        (0..n).map(|_| new_inbox(&[UNB, UNB, UNB])).collect();
+    // r_i: [0] from L2 (unbounded), [1] from tc_i (finite).
+    let r_inbox: Vec<_> = (0..n).map(|_| new_inbox(&[UNB, rbuf])).collect();
+    // t_i: [0] from r_i (finite).
+    let t_inbox: Vec<_> = (0..n).map(|_| new_inbox(&[rbuf])).collect();
+    // rc: [0..n] from t_i (finite), [n] from HNF (unbounded).
+    let rc_caps: Vec<usize> =
+        (0..n).map(|_| rbuf).chain(std::iter::once(UNB)).collect();
+    let rc_inbox = new_inbox(&rc_caps);
+    // tc_i: [0] from rc (finite).
+    let tc_inbox: Vec<_> = (0..n).map(|_| new_inbox(&[rbuf])).collect();
+    let hnf_inbox = new_inbox(&[UNB]);
+
+    // ---- per-core components ----
+    for i in 0..n {
+        let d = dom(i);
+
+        // CPU
+        let mut params = match cfg.cpu_model {
+            CpuModel::Minor => CpuParams::minor(),
+            CpuModel::O3 => CpuParams::o3(),
+            _ => unreachable!(),
+        };
+        if sys.io_milli > 0 {
+            params.io_every = (1000 / sys.io_milli).max(1) as usize;
+        }
+        let code_base =
+            crate::workload::apps::PRIVATE_BASE + i as u64 * crate::workload::apps::PRIVATE_SPAN
+                + 32 * 1024 * 1024; // code region in the upper private half
+        let cpu = TimingCpu::new(
+            format!("cpu{i}"),
+            i as u16,
+            clock,
+            params,
+            lay.seq(i),
+            workload.cores[i].clone(),
+            workload.barrier_every,
+            code_base,
+            4 * 1024, // loop body: 64 I-lines, fits any L1I (Table 2)
+        );
+        let id = b.add(d, Box::new(cpu));
+        debug_assert_eq!(id, lay.cpu(i));
+
+        // Sequencer
+        let seq = Sequencer::new(
+            format!("seq{i}"),
+            seq_inbox[i].clone(),
+            OutLink {
+                inbox: l1d_inbox[i].clone(),
+                buf: 0,
+                consumer: lay.l1d(i),
+                latency: 0,
+            },
+            OutLink {
+                inbox: l1i_inbox[i].clone(),
+                buf: 0,
+                consumer: lay.l1i(i),
+                latency: 0,
+            },
+            lay.cpu(i),
+            xbar.clone(),
+            IO_BASE,
+        );
+        let id = b.add(d, Box::new(seq));
+        debug_assert_eq!(id, lay.seq(i));
+
+        // L1I / L1D
+        for (is_d, name, inbox, cache) in [
+            (false, format!("cpu{i}.l1i"), &l1i_inbox[i], &sys.l1i),
+            (true, format!("cpu{i}.l1d"), &l1d_inbox[i], &sys.l1d),
+        ] {
+            let l1 = L1Ctrl::new(
+                name,
+                cache.size_bytes,
+                cache.assoc,
+                sys.line_bytes,
+                cache.latency_ns * NS,
+                inbox.clone(),
+                OutLink {
+                    inbox: l2_inbox[i].clone(),
+                    buf: if is_d { 1 } else { 0 },
+                    consumer: lay.l2(i),
+                    latency: 0,
+                },
+                OutLink {
+                    inbox: seq_inbox[i].clone(),
+                    buf: if is_d { 0 } else { 1 },
+                    consumer: lay.seq(i),
+                    latency: 0,
+                },
+            );
+            let id = b.add(d, Box::new(l1));
+            debug_assert_eq!(id, if is_d { lay.l1d(i) } else { lay.l1i(i) });
+        }
+
+        // L2
+        let l2 = L2Ctrl::new(
+            format!("cpu{i}.l2"),
+            sys.l2.size_bytes,
+            sys.l2.assoc,
+            sys.line_bytes,
+            sys.l2.latency_ns * NS,
+            l2_inbox[i].clone(),
+            OutLink {
+                inbox: l1i_inbox[i].clone(),
+                buf: 1,
+                consumer: lay.l1i(i),
+                latency: 0,
+            },
+            OutLink {
+                inbox: l1d_inbox[i].clone(),
+                buf: 1,
+                consumer: lay.l1d(i),
+                latency: 0,
+            },
+            OutLink {
+                inbox: r_inbox[i].clone(),
+                buf: 0,
+                consumer: lay.router(i),
+                latency: noc,
+            },
+            lay.hnf(),
+        );
+        let id = b.add(d, Box::new(l2));
+        debug_assert_eq!(id, lay.l2(i));
+
+        // Local router r_i: out[0] -> t_i (default), out[1] -> l2_i.
+        let mut routes = FxHashMap::default();
+        routes.insert(lay.l2(i), 1usize);
+        let r = Router::new(
+            format!("r{i}"),
+            r_inbox[i].clone(),
+            vec![
+                OutLink {
+                    inbox: t_inbox[i].clone(),
+                    buf: 0,
+                    consumer: lay.throttle(i),
+                    latency: noc,
+                },
+                OutLink {
+                    inbox: l2_inbox[i].clone(),
+                    buf: 2,
+                    consumer: lay.l2(i),
+                    latency: noc,
+                },
+            ],
+            routes,
+            Some(0),
+            noc,
+        );
+        let id = b.add(d, Box::new(r));
+        debug_assert_eq!(id, lay.router(i));
+
+        // Local throttle t_i -> central router (DOMAIN-CROSSING link).
+        let t = Throttle::new(
+            format!("t{i}"),
+            t_inbox[i].clone(),
+            OutLink {
+                inbox: rc_inbox.clone(),
+                buf: i,
+                consumer: lay.rc(),
+                latency: noc,
+            },
+            noc,
+            sys.data_flits,
+        );
+        let id = b.add(d, Box::new(t));
+        debug_assert_eq!(id, lay.throttle(i));
+    }
+
+    // ---- shared-domain components ----
+    // Central router: out[j] -> tc_j, out[n] -> HNF.
+    let mut rc_routes = FxHashMap::default();
+    let mut rc_outs = Vec::new();
+    for j in 0..n {
+        rc_routes.insert(lay.l2(j), j);
+        rc_outs.push(OutLink {
+            inbox: tc_inbox[j].clone(),
+            buf: 0,
+            consumer: lay.tc(j),
+            latency: noc,
+        });
+    }
+    rc_routes.insert(lay.hnf(), n);
+    rc_outs.push(OutLink {
+        inbox: hnf_inbox.clone(),
+        buf: 0,
+        consumer: lay.hnf(),
+        latency: noc,
+    });
+    let rc = Router::new(
+        "rc".to_string(),
+        rc_inbox.clone(),
+        rc_outs,
+        rc_routes,
+        None,
+        noc,
+    );
+    let id = b.add(shared_dom, Box::new(rc));
+    debug_assert_eq!(id, lay.rc());
+
+    // HN-F
+    let hnf = HnfCtrl::new(
+        "hnf".to_string(),
+        sys.l3.size_bytes,
+        sys.l3.assoc,
+        sys.line_bytes,
+        sys.l3.latency_ns * NS,
+        hnf_inbox.clone(),
+        OutLink {
+            inbox: rc_inbox.clone(),
+            buf: n,
+            consumer: lay.rc(),
+            latency: noc,
+        },
+        lay.dram(),
+    );
+    let id = b.add(shared_dom, Box::new(hnf));
+    debug_assert_eq!(id, lay.hnf());
+
+    // DRAM
+    let dram_timing = DramTiming {
+        clk_period: 1_000_000 / sys.dram_mhz,
+        ..DramTiming::default()
+    };
+    let dram =
+        DramCtrl::new("dram".to_string(), dram_timing, sys.line_bytes);
+    let id = b.add(shared_dom, Box::new(dram));
+    debug_assert_eq!(id, lay.dram());
+
+    // Peripherals behind the IO crossbar.
+    let id = b.add(shared_dom, Box::new(Uart::new("uart".to_string())));
+    debug_assert_eq!(id, lay.uart());
+    let id = b.add(shared_dom, Box::new(Timer::new("timer".to_string())));
+    debug_assert_eq!(id, lay.timer());
+
+    // Central throttles tc_i -> r_i (DOMAIN-CROSSING links).
+    for i in 0..n {
+        let t = Throttle::new(
+            format!("tc{i}"),
+            tc_inbox[i].clone(),
+            OutLink {
+                inbox: r_inbox[i].clone(),
+                buf: 1,
+                consumer: lay.router(i),
+                latency: noc,
+            },
+            noc,
+            sys.data_flits,
+        );
+        let id = b.add(shared_dom, Box::new(t));
+        debug_assert_eq!(id, lay.tc(i));
+    }
+
+    BuiltSystem { machine: b.finish(), xbar, layout: lay }
+}
+
+/// Build the atomic-protocol system (AtomicCPU / KVMCPU; serial only).
+pub fn build_atomic_system(
+    cfg: &RunConfig,
+    workload: &Workload,
+    kvm: bool,
+) -> (Machine, std::sync::Arc<std::sync::Mutex<AtomicMem>>) {
+    let n = cfg.system.cores;
+    let sys = &cfg.system;
+    assert_eq!(workload.n_cores(), n);
+    let clock = Clock::from_mhz(sys.cpu_mhz);
+
+    let mem = AtomicMem::new(
+        n,
+        sys.l1d.size_bytes,
+        sys.l1d.assoc,
+        sys.l2.size_bytes,
+        sys.l2.assoc,
+        sys.l3.size_bytes,
+        sys.l3.assoc,
+        sys.line_bytes,
+        AtomicLatencies {
+            l1: sys.l1d.latency_ns * NS,
+            l2: sys.l2.latency_ns * NS,
+            l3: sys.l3.latency_ns * NS,
+            dram: 50 * NS,
+        },
+    );
+
+    let mut b = MachineBuilder::new(1, Tick::MAX);
+    b.set_cores(n as u32);
+    for i in 0..n {
+        if kvm {
+            b.add(
+                DomainId(0),
+                Box::new(KvmCpu::new(
+                    format!("kvm{i}"),
+                    i as u16,
+                    mem.clone(),
+                    workload.cores[i].clone(),
+                )),
+            );
+        } else {
+            b.add(
+                DomainId(0),
+                Box::new(AtomicCpu::new(
+                    format!("atomic{i}"),
+                    i as u16,
+                    clock,
+                    mem.clone(),
+                    workload.cores[i].clone(),
+                )),
+            );
+        }
+    }
+    (b.finish(), mem)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_ids_disjoint() {
+        let lay = Layout { cores: 3 };
+        let mut all = vec![];
+        for i in 0..3 {
+            all.extend([
+                lay.cpu(i),
+                lay.seq(i),
+                lay.l1i(i),
+                lay.l1d(i),
+                lay.l2(i),
+                lay.router(i),
+                lay.throttle(i),
+                lay.tc(i),
+            ]);
+        }
+        all.extend([lay.rc(), lay.hnf(), lay.dram(), lay.uart(), lay.timer()]);
+        let n = all.len();
+        all.sort();
+        all.dedup();
+        assert_eq!(all.len(), n);
+    }
+}

@@ -1,0 +1,177 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts (built once by
+//! `make artifacts` from the JAX/Pallas layer) and execute them from Rust.
+//!
+//! Interchange is HLO *text* (see python/compile/aot.py and DESIGN.md): the
+//! text parser reassigns instruction ids, avoiding the 64-bit-id proto
+//! incompatibility between jax ≥ 0.5 and xla_extension 0.5.1.
+//!
+//! Python never runs here — this module only loads and executes the
+//! artifacts. The procedural generator in [`crate::workload::gen`] is the
+//! bit-exact fallback when no artifacts directory is available.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::workload::{AddrGenParams, CoreTrace, Workload};
+
+/// Trace length produced per `workload.hlo.txt` execution (must match
+/// python/compile/model.py TRACE_N).
+pub const TRACE_N: usize = 16384;
+/// Payload batch size (model.py PAYLOAD_B).
+pub const PAYLOAD_B: usize = 4096;
+
+/// A compiled artifact ready to execute.
+pub struct LoadedExe {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT client plus the compiled artifacts of this repo.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at `artifacts_dir`.
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { client, dir: artifacts_dir.into() })
+    }
+
+    /// Default artifacts location: `$PARTI_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("PARTI_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn artifacts_available(dir: &Path) -> bool {
+        dir.join("workload.hlo.txt").exists()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, name: &str) -> Result<LoadedExe> {
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        Ok(LoadedExe { exe })
+    }
+}
+
+impl LoadedExe {
+    /// Execute with literal inputs; returns the flattened tuple elements.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let mut lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True.
+        let parts =
+            lit.decompose_tuple().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        Ok(parts)
+    }
+}
+
+/// Generate one core's trace via the `workload.hlo.txt` artifact.
+pub fn artifact_trace(
+    exe: &LoadedExe,
+    params: &AddrGenParams,
+    n: usize,
+) -> Result<CoreTrace> {
+    assert!(n <= TRACE_N, "artifact emits TRACE_N ops per call");
+    let vec = params.to_vec();
+    let input = xla::Literal::vec1(&vec);
+    let parts = exe.run(&[input])?;
+    anyhow::ensure!(parts.len() == 3, "expected 3 outputs, got {}", parts.len());
+    let addr: Vec<u64> =
+        parts[0].to_vec().map_err(|e| anyhow!("addr: {e:?}"))?;
+    let is_store: Vec<u32> =
+        parts[1].to_vec().map_err(|e| anyhow!("store: {e:?}"))?;
+    let gap: Vec<u32> = parts[2].to_vec().map_err(|e| anyhow!("gap: {e:?}"))?;
+    Ok(CoreTrace::from_arrays(
+        params.core_id as u16,
+        addr[..n].to_vec(),
+        is_store[..n].to_vec(),
+        gap[..n].to_vec(),
+    ))
+}
+
+/// Build a whole workload from the AOT artifact (the production path).
+pub fn artifact_workload(
+    rt: &Runtime,
+    app: &crate::workload::App,
+    n_cores: usize,
+    ops_per_core: usize,
+    seed: u64,
+) -> Result<Workload> {
+    anyhow::ensure!(
+        ops_per_core <= TRACE_N,
+        "ops_per_core {ops_per_core} exceeds artifact TRACE_N {TRACE_N}"
+    );
+    let exe = rt.load("workload").context("loading workload artifact")?;
+    let cores = (0..n_cores as u64)
+        .map(|c| {
+            let p = app.params_for_core(c, seed);
+            artifact_trace(&exe, &p, ops_per_core).map(Arc::new)
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(Workload {
+        cores,
+        barrier_every: app.barrier_every,
+        name: app.traits_.name.to_string(),
+    })
+}
+
+/// Execute the Black-Scholes payload artifact (example/functional checks).
+pub fn blackscholes_payload(
+    rt: &Runtime,
+    spot: &[f32],
+    strike: &[f32],
+    rate: &[f32],
+    vol: &[f32],
+    time: &[f32],
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    anyhow::ensure!(spot.len() == PAYLOAD_B, "payload batch must be {PAYLOAD_B}");
+    let exe = rt.load("blackscholes")?;
+    let lits: Vec<xla::Literal> = [spot, strike, rate, vol, time]
+        .iter()
+        .map(|v| xla::Literal::vec1(v))
+        .collect();
+    let parts = exe.run(&lits)?;
+    anyhow::ensure!(parts.len() == 2, "expected (call, put)");
+    Ok((
+        parts[0].to_vec().map_err(|e| anyhow!("call: {e:?}"))?,
+        parts[1].to_vec().map_err(|e| anyhow!("put: {e:?}"))?,
+    ))
+}
+
+/// Execute the STREAM triad payload artifact.
+pub fn stream_payload(
+    rt: &Runtime,
+    b: &[f32],
+    c: &[f32],
+    scalar: f32,
+) -> Result<Vec<f32>> {
+    anyhow::ensure!(b.len() == PAYLOAD_B, "payload batch must be {PAYLOAD_B}");
+    let exe = rt.load("stream")?;
+    let lits = vec![
+        xla::Literal::vec1(b),
+        xla::Literal::vec1(c),
+        xla::Literal::vec1(&[scalar]),
+    ];
+    let parts = exe.run(&lits)?;
+    Ok(parts[0].to_vec().map_err(|e| anyhow!("a: {e:?}"))?)
+}

@@ -1,0 +1,220 @@
+//! The SimObject abstraction and the scheduling context handed to event
+//! handlers.
+//!
+//! Every event targets exactly one [`Component`]; intra-tick interactions
+//! between components are expressed as same-tick events with a later
+//! sub-priority — semantically identical to gem5's synchronous call chains,
+//! but free of aliased mutable borrows.
+
+use crate::sim::event::{prio, EventKind};
+use crate::sim::ids::{CompId, DomainId};
+use crate::sim::queue::{EventHandle, EventQueue};
+use crate::sim::shared::SharedState;
+use crate::sim::stats::StatSink;
+use crate::sim::time::Tick;
+
+/// A hardware model living in exactly one time domain.
+pub trait Component: Send {
+    /// Handle one event. `ctx.now()` is the event's tick.
+    fn handle(&mut self, kind: EventKind, ctx: &mut Ctx);
+
+    /// Hierarchical instance name (e.g. `"cpu3.l1d"`).
+    fn name(&self) -> &str;
+
+    /// Schedule initial events. Called once before the simulation starts.
+    fn init(&mut self, _ctx: &mut Ctx) {}
+
+    /// Dump statistics.
+    fn stats(&self, _out: &mut StatSink) {}
+}
+
+/// Scheduling context for one event execution.
+///
+/// Routing rule (paper §3.1): events for the local domain go straight into
+/// the local event queue; events for a foreign domain are pushed into that
+/// domain's injector, postponed to the next quantum border when their target
+/// time falls inside the current window (accounted as `t_pp`).
+pub struct Ctx<'a> {
+    now: Tick,
+    domain: DomainId,
+    /// End of the current quantum window (`Tick::MAX` when not windowed).
+    window_end: Tick,
+    eq: &'a mut EventQueue,
+    shared: &'a SharedState,
+    self_id: CompId,
+}
+
+impl<'a> Ctx<'a> {
+    pub fn new(
+        now: Tick,
+        domain: DomainId,
+        window_end: Tick,
+        eq: &'a mut EventQueue,
+        shared: &'a SharedState,
+        self_id: CompId,
+    ) -> Self {
+        Ctx { now, domain, window_end, eq, shared, self_id }
+    }
+
+    #[inline]
+    pub fn now(&self) -> Tick {
+        self.now
+    }
+
+    #[inline]
+    pub fn self_id(&self) -> CompId {
+        self.self_id
+    }
+
+    #[inline]
+    pub fn domain(&self) -> DomainId {
+        self.domain
+    }
+
+    #[inline]
+    pub fn shared(&self) -> &SharedState {
+        self.shared
+    }
+
+    /// Schedule at an absolute tick with an explicit priority.
+    pub fn schedule_abs_prio(
+        &mut self,
+        tick: Tick,
+        target: CompId,
+        kind: EventKind,
+        prio: u8,
+    ) -> Option<EventHandle> {
+        let tick = tick.max(self.now);
+        let tdom = self.shared.domain_of(target);
+        if tdom == self.domain {
+            return Some(self.eq.schedule(tick, prio, target, kind));
+        }
+        // Inter-domain scheduling (§3.1): exact target time is unknown to
+        // us; times inside the current window are postponed to the border.
+        use std::sync::atomic::Ordering::Relaxed;
+        self.shared.pdes.cross_events.fetch_add(1, Relaxed);
+        let eff = if tick < self.window_end {
+            self.shared.pdes.postponed.fetch_add(1, Relaxed);
+            self.shared
+                .pdes
+                .tpp_sum
+                .fetch_add(self.window_end - tick, Relaxed);
+            self.window_end
+        } else {
+            tick
+        };
+        self.shared.injectors[tdom.index()].push(crate::sim::event::Event {
+            tick: eff,
+            prio,
+            seq: 0, // re-sequenced at drain
+            target,
+            kind,
+        });
+        None
+    }
+
+    /// Schedule at an absolute tick (default priority).
+    pub fn schedule_abs(
+        &mut self,
+        tick: Tick,
+        target: CompId,
+        kind: EventKind,
+    ) -> Option<EventHandle> {
+        self.schedule_abs_prio(tick, target, kind, prio::DEFAULT)
+    }
+
+    /// Schedule after a relative delay (default priority).
+    pub fn schedule(
+        &mut self,
+        delay: Tick,
+        target: CompId,
+        kind: EventKind,
+    ) -> Option<EventHandle> {
+        self.schedule_abs(self.now + delay, target, kind)
+    }
+
+    /// Schedule on self after a delay.
+    pub fn schedule_self(
+        &mut self,
+        delay: Tick,
+        kind: EventKind,
+    ) -> Option<EventHandle> {
+        self.schedule(delay, self.self_id, kind)
+    }
+
+    /// Cancel a previously scheduled local event.
+    pub fn deschedule(&mut self, h: EventHandle) {
+        self.eq.deschedule(h);
+    }
+
+    /// Report this core's workload as finished.
+    pub fn core_done(&self) {
+        self.shared.core_done();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::ids::DomainId;
+
+    fn shared_two_domains() -> SharedState {
+        // comp0 -> domain0, comp1 -> domain1
+        SharedState::new(
+            vec![(DomainId(0), 0), (DomainId(1), 0)],
+            2,
+            16_000,
+            1,
+        )
+    }
+
+    #[test]
+    fn local_schedule_goes_to_eq() {
+        let shared = shared_two_domains();
+        let mut eq = EventQueue::new();
+        let mut ctx =
+            Ctx::new(100, DomainId(0), 16_000, &mut eq, &shared, CompId(0));
+        let h = ctx.schedule(50, CompId(0), EventKind::CpuTick);
+        assert!(h.is_some());
+        assert_eq!(eq.pop().unwrap().tick, 150);
+    }
+
+    #[test]
+    fn cross_domain_postpones_to_border() {
+        let shared = shared_two_domains();
+        let mut eq = EventQueue::new();
+        let mut ctx =
+            Ctx::new(100, DomainId(0), 16_000, &mut eq, &shared, CompId(0));
+        ctx.schedule(50, CompId(1), EventKind::CpuTick);
+        assert!(eq.pop().is_none(), "must not land in local queue");
+        let drained = shared.injectors[1].drain();
+        assert_eq!(drained.len(), 1);
+        assert_eq!(drained[0].tick, 16_000, "postponed to quantum border");
+        use std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(shared.pdes.postponed.load(Relaxed), 1);
+        assert_eq!(shared.pdes.tpp_sum.load(Relaxed), 16_000 - 150);
+    }
+
+    #[test]
+    fn cross_domain_beyond_border_keeps_time() {
+        let shared = shared_two_domains();
+        let mut eq = EventQueue::new();
+        let mut ctx =
+            Ctx::new(100, DomainId(0), 16_000, &mut eq, &shared, CompId(0));
+        ctx.schedule(20_000, CompId(1), EventKind::CpuTick);
+        let drained = shared.injectors[1].drain();
+        assert_eq!(drained[0].tick, 20_100, "beyond border: exact time kept");
+        use std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(shared.pdes.postponed.load(Relaxed), 0);
+    }
+
+    #[test]
+    fn past_schedule_clamps_to_now() {
+        let shared = shared_two_domains();
+        let mut eq = EventQueue::new();
+        let mut ctx =
+            Ctx::new(100, DomainId(0), 16_000, &mut eq, &shared, CompId(0));
+        ctx.schedule_abs(10, CompId(0), EventKind::CpuTick);
+        assert_eq!(eq.pop().unwrap().tick, 100);
+    }
+}

@@ -1,0 +1,110 @@
+//! Events and their total order.
+//!
+//! An event is executed at `(tick, prio, seq)` order against a single target
+//! component. `seq` is a per-queue monotonic counter, so the serial kernel is
+//! fully deterministic; `prio` mirrors gem5's event priorities (lower runs
+//! first at equal tick).
+
+use crate::proto::Packet;
+use crate::sim::ids::CompId;
+use crate::sim::time::Tick;
+
+/// gem5-like priorities (subset). Lower value runs first within a tick.
+pub mod prio {
+    /// Quantum-barrier bookkeeping (must run before models at the border).
+    pub const BARRIER: u8 = 0;
+    /// Default model priority.
+    pub const DEFAULT: u8 = 50;
+    /// CPU ticks run after message deliveries at the same tick.
+    pub const CPU: u8 = 60;
+    /// Statistic/teardown events run last.
+    pub const STAT: u8 = 200;
+}
+
+/// What the target component should do.
+///
+/// Ruby messages do NOT travel in events: they sit in
+/// [`crate::ruby::inbox::Inbox`]es and only the `ConsumerWakeup` is
+/// scheduled, exactly like gem5's Consumer model (§3.4).
+#[derive(Clone, Debug)]
+pub enum EventKind {
+    /// Advance a CPU model's state machine.
+    CpuTick,
+    /// Timing-protocol request delivery (classic protocol, §3.3).
+    MemReq { pkt: Packet },
+    /// Timing-protocol response delivery.
+    MemResp { pkt: Packet },
+    /// A responder that previously rejected a request signals readiness.
+    RetryReq,
+    /// Ruby consumer wakeup: drain ready messages from the inbox.
+    ConsumerWakeup,
+    /// IO-crossbar layer release (paper §4.3).
+    XbarRelease { layer: usize },
+    /// DRAM controller internal tick (queue service).
+    DramTick,
+    /// Workload barrier released: all cores arrived, resume execution.
+    WlBarrierRelease,
+    /// Component-private event with a small payload.
+    Generic { code: u32, arg: u64 },
+}
+
+/// A scheduled event.
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub tick: Tick,
+    pub prio: u8,
+    /// Per-queue monotonic sequence number; tie-breaker making execution
+    /// order total and deterministic.
+    pub seq: u64,
+    pub target: CompId,
+    pub kind: EventKind,
+}
+
+impl Event {
+    #[inline]
+    pub fn key(&self) -> (Tick, u8, u64) {
+        (self.tick, self.prio, self.seq)
+    }
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.key() == other.key()
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.key().cmp(&other.key())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(tick: Tick, prio: u8, seq: u64) -> Event {
+        Event { tick, prio, seq, target: CompId(0), kind: EventKind::CpuTick }
+    }
+
+    #[test]
+    fn order_by_tick_then_prio_then_seq() {
+        assert!(ev(1, 0, 9) < ev(2, 0, 0));
+        assert!(ev(5, prio::BARRIER, 9) < ev(5, prio::DEFAULT, 0));
+        assert!(ev(5, 10, 1) < ev(5, 10, 2));
+    }
+
+    #[test]
+    fn eq_is_key_based() {
+        assert_eq!(ev(3, 1, 7), ev(3, 1, 7));
+        assert_ne!(ev(3, 1, 7), ev(3, 1, 8));
+    }
+}

@@ -1,0 +1,55 @@
+//! Identifiers for simulation objects and time domains.
+
+use std::fmt;
+
+/// Dense id of a component (SimObject) in the machine arena.
+#[derive(Copy, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct CompId(pub u32);
+
+/// Dense id of a time domain (event queue + thread).
+///
+/// Following the paper's partitioning (§4.1): domain `i` of an N-core system
+/// holds core `i` plus its private resources for `i < N`; domain `N` is the
+/// shared domain (L3/HNF, central router, DRAM, IO crossbar, peripherals).
+#[derive(Copy, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct DomainId(pub u32);
+
+impl CompId {
+    pub const NONE: CompId = CompId(u32::MAX);
+
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl DomainId {
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl fmt::Debug for CompId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "c{}", self.0)
+    }
+}
+
+impl fmt::Display for CompId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "c{}", self.0)
+    }
+}
+
+impl fmt::Debug for DomainId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "d{}", self.0)
+    }
+}
+
+impl fmt::Display for DomainId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "d{}", self.0)
+    }
+}

@@ -1,0 +1,204 @@
+//! The event queue: a min-heap over `(tick, prio, seq)` with gem5's
+//! schedule / deschedule / reschedule interface.
+//!
+//! Descheduling is implemented with lazy tombstones (`cancelled` set), which
+//! keeps `schedule` O(log n) and avoids heap surgery; cancelled entries are
+//! dropped when they surface.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use rustc_hash::FxHashSet;
+
+use crate::sim::event::{Event, EventKind};
+use crate::sim::ids::CompId;
+use crate::sim::time::Tick;
+
+/// Handle identifying a scheduled event (its sequence number).
+#[derive(Copy, Clone, PartialEq, Eq, Hash, Debug)]
+pub struct EventHandle(pub u64);
+
+#[derive(Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<Event>>,
+    cancelled: FxHashSet<u64>,
+    next_seq: u64,
+    /// Number of events popped (executed) from this queue.
+    pub executed: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of live (non-cancelled) events.
+    pub fn len(&self) -> usize {
+        self.heap.len() - self.cancelled.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Schedule `kind` on `target` at absolute `tick`.
+    pub fn schedule(
+        &mut self,
+        tick: Tick,
+        prio: u8,
+        target: CompId,
+        kind: EventKind,
+    ) -> EventHandle {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Reverse(Event { tick, prio, seq, target, kind }));
+        EventHandle(seq)
+    }
+
+    /// Insert a fully formed event (used when draining cross-domain
+    /// injectors); re-sequences it into this queue's order.
+    pub fn insert(&mut self, mut ev: Event) -> EventHandle {
+        ev.seq = self.next_seq;
+        self.next_seq += 1;
+        let h = EventHandle(ev.seq);
+        self.heap.push(Reverse(ev));
+        h
+    }
+
+    /// Cancel a scheduled event. Cancelling an already-executed or unknown
+    /// handle is a no-op (mirrors gem5's squash semantics).
+    pub fn deschedule(&mut self, h: EventHandle) {
+        self.cancelled.insert(h.0);
+    }
+
+    /// gem5 reschedule = deschedule + schedule.
+    pub fn reschedule(
+        &mut self,
+        h: EventHandle,
+        tick: Tick,
+        prio: u8,
+        target: CompId,
+        kind: EventKind,
+    ) -> EventHandle {
+        self.deschedule(h);
+        self.schedule(tick, prio, target, kind)
+    }
+
+    /// Tick of the next live event.
+    pub fn next_tick(&mut self) -> Option<Tick> {
+        self.skim();
+        self.heap.peek().map(|Reverse(e)| e.tick)
+    }
+
+    /// Pop the next live event.
+    pub fn pop(&mut self) -> Option<Event> {
+        self.skim();
+        let ev = self.heap.pop().map(|Reverse(e)| e);
+        if ev.is_some() {
+            self.executed += 1;
+        }
+        ev
+    }
+
+    /// Pop the next live event only if it is strictly before `limit`.
+    pub fn pop_before(&mut self, limit: Tick) -> Option<Event> {
+        match self.next_tick() {
+            Some(t) if t < limit => self.pop(),
+            _ => None,
+        }
+    }
+
+    /// Drop cancelled events sitting at the head.
+    #[inline]
+    fn skim(&mut self) {
+        // Fast path: descheduling is rare (§Perf L3.3) — skip the per-pop
+        // tombstone lookup entirely when no event is cancelled.
+        if self.cancelled.is_empty() {
+            return;
+        }
+        while let Some(Reverse(e)) = self.heap.peek() {
+            if self.cancelled.remove(&e.seq) {
+                self.heap.pop();
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k() -> EventKind {
+        EventKind::CpuTick
+    }
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(30, 50, CompId(0), k());
+        q.schedule(10, 50, CompId(1), k());
+        q.schedule(20, 50, CompId(2), k());
+        let order: Vec<Tick> = std::iter::from_fn(|| q.pop().map(|e| e.tick)).collect();
+        assert_eq!(order, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn same_tick_fifo_by_seq() {
+        let mut q = EventQueue::new();
+        q.schedule(5, 50, CompId(0), k());
+        q.schedule(5, 50, CompId(1), k());
+        q.schedule(5, 50, CompId(2), k());
+        let order: Vec<u32> =
+            std::iter::from_fn(|| q.pop().map(|e| e.target.0)).collect();
+        assert_eq!(order, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn priority_beats_seq() {
+        let mut q = EventQueue::new();
+        q.schedule(5, 60, CompId(0), k());
+        q.schedule(5, 0, CompId(1), k());
+        assert_eq!(q.pop().unwrap().target, CompId(1));
+    }
+
+    #[test]
+    fn deschedule_skips_event() {
+        let mut q = EventQueue::new();
+        let h = q.schedule(1, 50, CompId(0), k());
+        q.schedule(2, 50, CompId(1), k());
+        q.deschedule(h);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop().unwrap().target, CompId(1));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn reschedule_moves_event() {
+        let mut q = EventQueue::new();
+        let h = q.schedule(10, 50, CompId(0), k());
+        q.reschedule(h, 1, 50, CompId(0), k());
+        assert_eq!(q.pop().unwrap().tick, 1);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn pop_before_respects_limit() {
+        let mut q = EventQueue::new();
+        q.schedule(10, 50, CompId(0), k());
+        assert!(q.pop_before(10).is_none());
+        assert!(q.pop_before(11).is_some());
+    }
+
+    #[test]
+    fn insert_resequences() {
+        let mut q = EventQueue::new();
+        q.schedule(5, 50, CompId(0), k());
+        let ev = Event { tick: 5, prio: 50, seq: 0, target: CompId(9), kind: k() };
+        q.insert(ev);
+        // inserted event got a later seq -> pops second
+        assert_eq!(q.pop().unwrap().target, CompId(0));
+        assert_eq!(q.pop().unwrap().target, CompId(9));
+    }
+}

@@ -1,0 +1,193 @@
+//! State shared between time domains.
+//!
+//! Everything a model may touch from *any* domain thread lives here:
+//! the component→domain map, the per-domain event injectors (the
+//! inter-domain scheduling mechanism of §3.1), parallelisation-artefact
+//! counters (t_pp), the workload barrier device and the global stop flag.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::sim::event::Event;
+use crate::sim::ids::{CompId, DomainId};
+use crate::sim::time::Tick;
+
+/// Lock-protected mailbox for events scheduled *into* a domain from another
+/// domain. Drained at quantum barriers (paper Fig. 1b).
+#[derive(Default)]
+pub struct Injector {
+    queue: Mutex<Vec<Event>>,
+}
+
+impl Injector {
+    pub fn push(&self, ev: Event) {
+        self.queue.lock().unwrap().push(ev);
+    }
+
+    /// Drain all pending events, sorted deterministically.
+    pub fn drain(&self) -> Vec<Event> {
+        let mut v = std::mem::take(&mut *self.queue.lock().unwrap());
+        v.sort_by_key(|e| (e.tick, e.prio, e.target.0, e.seq));
+        v
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.lock().unwrap().is_empty()
+    }
+}
+
+/// Software barrier executed by the simulated cores (`Op::Barrier`).
+///
+/// The last arriving core releases all waiters; releases scheduled into
+/// foreign domains are postponed to the next quantum border like any other
+/// cross-domain event.
+#[derive(Default)]
+pub struct WlBarrier {
+    pub state: Mutex<WlBarrierState>,
+}
+
+#[derive(Default)]
+pub struct WlBarrierState {
+    pub participants: u32,
+    pub waiting: Vec<CompId>,
+    /// Latest local arrival tick in the current generation.
+    pub max_arrival: Tick,
+    pub generation: u64,
+}
+
+pub enum BarrierOutcome {
+    /// Caller must wait for a `WlBarrierRelease` event.
+    Wait,
+    /// Caller was last: release these waiters at `release_at`.
+    Release { waiters: Vec<CompId>, release_at: Tick },
+}
+
+impl WlBarrier {
+    pub fn arrive(&self, who: CompId, now: Tick) -> BarrierOutcome {
+        let mut st = self.state.lock().unwrap();
+        st.max_arrival = st.max_arrival.max(now);
+        if st.waiting.len() as u32 + 1 == st.participants {
+            let waiters = std::mem::take(&mut st.waiting);
+            let at = st.max_arrival;
+            st.max_arrival = 0;
+            st.generation += 1;
+            BarrierOutcome::Release { waiters, release_at: at }
+        } else {
+            st.waiting.push(who);
+            BarrierOutcome::Wait
+        }
+    }
+}
+
+/// Counters for the parallelisation timing artefacts.
+#[derive(Default)]
+pub struct PdesStats {
+    /// Number of cross-domain scheduled events.
+    pub cross_events: AtomicU64,
+    /// Number of cross-domain events postponed to the quantum border.
+    pub postponed: AtomicU64,
+    /// Sum of postponement delays t_pp (ticks).
+    pub tpp_sum: AtomicU64,
+    /// Quantum barriers executed.
+    pub barriers: AtomicU64,
+}
+
+/// State shared by all domains of one simulation run.
+pub struct SharedState {
+    /// Component -> (owning domain, dense local index).
+    pub locate: Vec<(DomainId, u32)>,
+    /// Per-domain cross-scheduling mailboxes.
+    pub injectors: Vec<Injector>,
+    /// Quantum length in ticks; `Tick::MAX` disables windowing (serial).
+    pub quantum: Tick,
+    pub pdes: PdesStats,
+    pub stop: AtomicBool,
+    pub cores_total: u32,
+    pub cores_done: AtomicU32,
+    pub wl_barrier: WlBarrier,
+}
+
+impl SharedState {
+    pub fn new(
+        locate: Vec<(DomainId, u32)>,
+        n_domains: usize,
+        quantum: Tick,
+        cores_total: u32,
+    ) -> Self {
+        let injectors = (0..n_domains).map(|_| Injector::default()).collect();
+        SharedState {
+            locate,
+            injectors,
+            quantum,
+            pdes: PdesStats::default(),
+            stop: AtomicBool::new(false),
+            cores_total,
+            cores_done: AtomicU32::new(0),
+            wl_barrier: WlBarrier::default(),
+        }
+    }
+
+    pub fn domain_of(&self, c: CompId) -> DomainId {
+        self.locate[c.index()].0
+    }
+
+    /// Called by a CPU model when its workload is exhausted.
+    pub fn core_done(&self) {
+        let done = self.cores_done.fetch_add(1, Ordering::SeqCst) + 1;
+        if done >= self.cores_total {
+            self.stop.store(true, Ordering::SeqCst);
+        }
+    }
+
+    pub fn should_stop(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::event::EventKind;
+
+    #[test]
+    fn injector_drain_is_sorted() {
+        let inj = Injector::default();
+        for (t, c) in [(30u64, 1u32), (10, 2), (10, 0), (20, 3)] {
+            inj.push(Event {
+                tick: t,
+                prio: 50,
+                seq: 0,
+                target: CompId(c),
+                kind: EventKind::CpuTick,
+            });
+        }
+        let v = inj.drain();
+        let keys: Vec<(Tick, u32)> = v.iter().map(|e| (e.tick, e.target.0)).collect();
+        assert_eq!(keys, vec![(10, 0), (10, 2), (20, 3), (30, 1)]);
+        assert!(inj.is_empty());
+    }
+
+    #[test]
+    fn wl_barrier_releases_on_last() {
+        let b = WlBarrier::default();
+        b.state.lock().unwrap().participants = 3;
+        assert!(matches!(b.arrive(CompId(0), 100), BarrierOutcome::Wait));
+        assert!(matches!(b.arrive(CompId(1), 200), BarrierOutcome::Wait));
+        match b.arrive(CompId(2), 150) {
+            BarrierOutcome::Release { waiters, release_at } => {
+                assert_eq!(waiters.len(), 2);
+                assert_eq!(release_at, 200);
+            }
+            _ => panic!("expected release"),
+        }
+    }
+
+    #[test]
+    fn core_done_sets_stop_at_total() {
+        let s = SharedState::new(vec![], 1, Tick::MAX, 2);
+        s.core_done();
+        assert!(!s.should_stop());
+        s.core_done();
+        assert!(s.should_stop());
+    }
+}

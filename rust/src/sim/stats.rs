@@ -1,0 +1,65 @@
+//! Per-component statistic collection.
+//!
+//! Components expose their counters through [`StatSink`]; the harness
+//! aggregates them into a [`crate::stats::StatDump`] at the end of a run.
+
+/// Collects `(name, value)` pairs, prefixed with the owning component name.
+#[derive(Default, Debug, Clone)]
+pub struct StatSink {
+    prefix: String,
+    pub entries: Vec<(String, f64)>,
+}
+
+impl StatSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Set the prefix used for subsequent `add` calls.
+    pub fn with_prefix(&mut self, prefix: &str) {
+        self.prefix = prefix.to_string();
+    }
+
+    pub fn add(&mut self, name: &str, value: f64) {
+        let full = if self.prefix.is_empty() {
+            name.to_string()
+        } else {
+            format!("{}.{}", self.prefix, name)
+        };
+        self.entries.push((full, value));
+    }
+
+    pub fn add_u64(&mut self, name: &str, value: u64) {
+        self.add(name, value as f64);
+    }
+
+    /// Sum of all entries whose full name ends with `suffix`.
+    pub fn sum_suffix(&self, suffix: &str) -> f64 {
+        self.entries
+            .iter()
+            .filter(|(n, _)| n.ends_with(suffix))
+            .map(|(_, v)| v)
+            .sum()
+    }
+
+    /// First entry with exactly this name.
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.entries.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefixing_and_lookup() {
+        let mut s = StatSink::new();
+        s.with_prefix("cpu0");
+        s.add_u64("insts", 10);
+        s.with_prefix("cpu1");
+        s.add_u64("insts", 32);
+        assert_eq!(s.get("cpu0.insts"), Some(10.0));
+        assert_eq!(s.sum_suffix(".insts"), 42.0);
+    }
+}

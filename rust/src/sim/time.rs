@@ -1,0 +1,101 @@
+//! Simulation time base.
+//!
+//! Like gem5, the simulator counts *ticks*; one tick is one picosecond.
+//! All model latencies (Table 2 of the paper) are expressed in ns and
+//! converted with the constants below.
+
+/// Simulated time in picoseconds.
+pub type Tick = u64;
+
+/// One picosecond.
+pub const PS: Tick = 1;
+/// One nanosecond.
+pub const NS: Tick = 1_000;
+/// One microsecond.
+pub const US: Tick = 1_000_000;
+/// One millisecond.
+pub const MS: Tick = 1_000_000_000;
+
+/// A clock with a fixed period, converting cycles to ticks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Clock {
+    period: Tick,
+}
+
+impl Clock {
+    /// Clock from a frequency in MHz (2 GHz CPU -> `Clock::from_mhz(2000)`).
+    pub fn from_mhz(mhz: u64) -> Self {
+        assert!(mhz > 0, "clock frequency must be positive");
+        Clock { period: 1_000_000 / mhz }
+    }
+
+    /// Clock period in ticks.
+    #[inline]
+    pub fn period(&self) -> Tick {
+        self.period
+    }
+
+    /// Convert a cycle count to ticks.
+    #[inline]
+    pub fn cycles(&self, n: u64) -> Tick {
+        n * self.period
+    }
+
+    /// Cycles elapsed at time `t` (rounded down).
+    #[inline]
+    pub fn ticks_to_cycles(&self, t: Tick) -> u64 {
+        t / self.period
+    }
+
+    /// Next edge at or after `t`.
+    #[inline]
+    pub fn next_edge(&self, t: Tick) -> Tick {
+        t.div_ceil(self.period) * self.period
+    }
+}
+
+/// Convert ticks to (fractional) nanoseconds for reporting.
+pub fn ticks_to_ns(t: Tick) -> f64 {
+    t as f64 / NS as f64
+}
+
+/// Convert ticks to seconds for reporting.
+pub fn ticks_to_seconds(t: Tick) -> f64 {
+    t as f64 / 1e12
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_2ghz_period_is_500ps() {
+        let c = Clock::from_mhz(2000);
+        assert_eq!(c.period(), 500);
+        assert_eq!(c.cycles(4), 2 * NS);
+    }
+
+    #[test]
+    fn next_edge_rounds_up() {
+        let c = Clock::from_mhz(1000); // 1ns period
+        assert_eq!(c.next_edge(0), 0);
+        assert_eq!(c.next_edge(1), NS);
+        assert_eq!(c.next_edge(NS), NS);
+        assert_eq!(c.next_edge(NS + 1), 2 * NS);
+    }
+
+    #[test]
+    fn unit_ratios() {
+        assert_eq!(NS, 1000 * PS);
+        assert_eq!(US, 1000 * NS);
+        assert_eq!(MS, 1000 * US);
+    }
+
+    #[test]
+    fn ticks_to_cycles_floor() {
+        let c = Clock::from_mhz(2000);
+        assert_eq!(c.ticks_to_cycles(499), 0);
+        assert_eq!(c.ticks_to_cycles(500), 1);
+        assert_eq!(c.ticks_to_cycles(1999), 3);
+    }
+}

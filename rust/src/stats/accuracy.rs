@@ -1,0 +1,117 @@
+//! Accuracy metrics: the paper's two error indicators (§5).
+//!
+//! * **Simulated-time error** — percentual deviation of total simulated
+//!   time between the parallel run and the serial reference ("a good
+//!   indicator of the overall accuracy since individual timing deviations
+//!   ... will ultimately be reflected there").
+//! * **Cache miss-rate error** — absolute (percentage-point) deviation of
+//!   the miss rate per cache level, averaged over cores for private levels
+//!   (Fig. 9).
+
+use crate::pdes::RunResult;
+
+use super::avg_miss_rate;
+
+/// Accuracy of a parallel/virtual run vs the serial reference.
+#[derive(Debug, Clone, Copy)]
+pub struct Accuracy {
+    /// Signed relative error of total simulated time (fraction; ×100 = %).
+    pub sim_time_error: f64,
+    /// Absolute miss-rate errors in percentage points per level.
+    pub l1i_pp: f64,
+    pub l1d_pp: f64,
+    pub l2_pp: f64,
+    pub l3_pp: f64,
+    /// Functional check: do the load checksums match (XOR over cores)?
+    pub checksum_match: bool,
+}
+
+/// Per-level absolute miss-rate deviations (percentage points).
+pub fn cache_miss_rate_errors(reference: &RunResult, run: &RunResult) -> [f64; 4] {
+    let lvls = [".l1i.miss_rate", ".l1d.miss_rate", ".l2.miss_rate", "hnf.miss_rate"];
+    let mut out = [0.0; 4];
+    for (k, lvl) in lvls.iter().enumerate() {
+        let a = avg_miss_rate(reference, lvl);
+        let b = avg_miss_rate(run, lvl);
+        out[k] = (b - a).abs() * 100.0;
+    }
+    out
+}
+
+/// Commutative fold of all per-core load checksums.
+fn checksum(result: &RunResult) -> u64 {
+    result
+        .stats
+        .entries
+        .iter()
+        .filter(|(n, _)| n.ends_with(".load_checksum"))
+        .map(|(_, v)| *v as u64)
+        .fold(0u64, |acc, v| acc.wrapping_add(v))
+}
+
+/// Compare a run against the serial reference.
+pub fn compare(reference: &RunResult, run: &RunResult) -> Accuracy {
+    let sim_time_error = if reference.sim_ticks == 0 {
+        0.0
+    } else {
+        (run.sim_ticks as f64 - reference.sim_ticks as f64)
+            / reference.sim_ticks as f64
+    };
+    let [l1i_pp, l1d_pp, l2_pp, l3_pp] = cache_miss_rate_errors(reference, run);
+    Accuracy {
+        sim_time_error,
+        l1i_pp,
+        l1d_pp,
+        l2_pp,
+        l3_pp,
+        checksum_match: checksum(reference) == checksum(run),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pdes::result::PdesSnapshot;
+    use crate::sim::stats::StatSink;
+
+    fn result(ticks: u64, l1d: f64, csum: u64) -> RunResult {
+        let mut stats = StatSink::new();
+        stats.with_prefix("cpu0.l1d");
+        stats.add("miss_rate", l1d);
+        stats.with_prefix("cpu0");
+        stats.add_u64("load_checksum", csum);
+        RunResult {
+            sim_ticks: ticks,
+            events: 0,
+            host_ns: 1,
+            stats,
+            pdes: PdesSnapshot::default(),
+            work: None,
+            n_domains: 1,
+        }
+    }
+
+    #[test]
+    fn sim_time_error_signed() {
+        let a = result(1000, 0.1, 7);
+        let b = result(1100, 0.1, 7);
+        let acc = compare(&a, &b);
+        assert!((acc.sim_time_error - 0.1).abs() < 1e-12);
+        assert!(acc.checksum_match);
+    }
+
+    #[test]
+    fn miss_rate_error_absolute_pp() {
+        let a = result(1000, 0.10, 7);
+        let b = result(1000, 0.12, 7);
+        let acc = compare(&a, &b);
+        assert!((acc.l1d_pp - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn checksum_mismatch_detected() {
+        let a = result(1000, 0.1, 7);
+        let b = result(1000, 0.1, 8);
+        assert!(!compare(&a, &b).checksum_match);
+    }
+}

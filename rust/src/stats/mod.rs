@@ -1,0 +1,119 @@
+//! Run-level statistics: aggregation over component stats, accuracy
+//! comparison between runs (the paper's error metrics), and JSON export.
+
+pub mod accuracy;
+
+use crate::pdes::RunResult;
+use crate::util::json::JsonObj;
+
+pub use accuracy::{cache_miss_rate_errors, compare, Accuracy};
+
+/// Flat, serialisable summary of one run.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub sim_seconds: f64,
+    pub sim_ticks: u64,
+    pub events: u64,
+    pub host_ns: u64,
+    pub mips: f64,
+    pub events_per_sec: f64,
+    pub n_domains: usize,
+    pub committed_ops: f64,
+    pub cross_events: u64,
+    pub postponed: u64,
+    pub tpp_mean_ns: f64,
+    pub barriers: u64,
+    pub l1i_miss_rate: f64,
+    pub l1d_miss_rate: f64,
+    pub l2_miss_rate: f64,
+    pub l3_miss_rate: f64,
+}
+
+/// Average of the per-component `miss_rate` stats whose names end with
+/// `suffix` (e.g. ".l1d.miss_rate"), weighted equally per cache (the paper
+/// averages private caches over all cores).
+pub fn avg_miss_rate(result: &RunResult, suffix: &str) -> f64 {
+    let vals: Vec<f64> = result
+        .stats
+        .entries
+        .iter()
+        .filter(|(n, _)| n.ends_with(suffix))
+        .map(|(_, v)| *v)
+        .collect();
+    if vals.is_empty() {
+        0.0
+    } else {
+        vals.iter().sum::<f64>() / vals.len() as f64
+    }
+}
+
+impl Summary {
+    pub fn from_result(r: &RunResult) -> Self {
+        Summary {
+            sim_seconds: r.sim_seconds(),
+            sim_ticks: r.sim_ticks,
+            events: r.events,
+            host_ns: r.host_ns,
+            mips: r.mips(),
+            events_per_sec: r.events_per_sec(),
+            n_domains: r.n_domains,
+            committed_ops: r.stats.sum_suffix(".committed_ops"),
+            cross_events: r.pdes.cross_events,
+            postponed: r.pdes.postponed,
+            tpp_mean_ns: r.pdes.tpp_mean() / 1000.0,
+            barriers: r.pdes.barriers,
+            l1i_miss_rate: avg_miss_rate(r, ".l1i.miss_rate"),
+            l1d_miss_rate: avg_miss_rate(r, ".l1d.miss_rate"),
+            l2_miss_rate: avg_miss_rate(r, ".l2.miss_rate"),
+            l3_miss_rate: avg_miss_rate(r, "hnf.miss_rate"),
+        }
+    }
+
+    pub fn to_json(&self) -> String {
+        JsonObj::new()
+            .f64("sim_seconds", self.sim_seconds)
+            .u64("sim_ticks", self.sim_ticks)
+            .u64("events", self.events)
+            .u64("host_ns", self.host_ns)
+            .f64("mips", self.mips)
+            .f64("events_per_sec", self.events_per_sec)
+            .u64("n_domains", self.n_domains as u64)
+            .f64("committed_ops", self.committed_ops)
+            .u64("cross_events", self.cross_events)
+            .u64("postponed", self.postponed)
+            .f64("tpp_mean_ns", self.tpp_mean_ns)
+            .u64("barriers", self.barriers)
+            .f64("l1i_miss_rate", self.l1i_miss_rate)
+            .f64("l1d_miss_rate", self.l1d_miss_rate)
+            .f64("l2_miss_rate", self.l2_miss_rate)
+            .f64("l3_miss_rate", self.l3_miss_rate)
+            .build()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pdes::result::PdesSnapshot;
+    use crate::sim::stats::StatSink;
+
+    #[test]
+    fn summary_json_is_parsable_shape() {
+        let mut stats = StatSink::new();
+        stats.with_prefix("cpu0");
+        stats.add_u64("committed_ops", 10);
+        let r = RunResult {
+            sim_ticks: 1000,
+            events: 50,
+            host_ns: 2000,
+            stats,
+            pdes: PdesSnapshot::default(),
+            work: None,
+            n_domains: 1,
+        };
+        let s = Summary::from_result(&r);
+        let j = s.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"committed_ops\": 10"));
+    }
+}

@@ -1,0 +1,105 @@
+//! Tiny JSON object emitter (flat and nested objects of numbers/strings).
+
+/// Incremental JSON object builder.
+#[derive(Default)]
+pub struct JsonObj {
+    fields: Vec<(String, String)>,
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Format a float the way JSON expects (no NaN/inf).
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+impl JsonObj {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn str(mut self, k: &str, v: &str) -> Self {
+        self.fields.push((k.to_string(), format!("\"{}\"", escape(v))));
+        self
+    }
+
+    pub fn u64(mut self, k: &str, v: u64) -> Self {
+        self.fields.push((k.to_string(), v.to_string()));
+        self
+    }
+
+    pub fn f64(mut self, k: &str, v: f64) -> Self {
+        self.fields.push((k.to_string(), fmt_f64(v)));
+        self
+    }
+
+    pub fn bool(mut self, k: &str, v: bool) -> Self {
+        self.fields.push((k.to_string(), v.to_string()));
+        self
+    }
+
+    pub fn raw(mut self, k: &str, v: String) -> Self {
+        self.fields.push((k.to_string(), v));
+        self
+    }
+
+    pub fn obj(self, k: &str, v: JsonObj) -> Self {
+        let s = v.build();
+        self.raw(k, s)
+    }
+
+    pub fn build(&self) -> String {
+        let inner: Vec<String> = self
+            .fields
+            .iter()
+            .map(|(k, v)| format!("\"{}\": {}", escape(k), v))
+            .collect();
+        format!("{{{}}}", inner.join(", "))
+    }
+}
+
+/// Render a list of raw JSON values.
+pub fn json_array<I: IntoIterator<Item = String>>(items: I) -> String {
+    let v: Vec<String> = items.into_iter().collect();
+    format!("[{}]", v.join(", "))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_flat_object() {
+        let j = JsonObj::new().str("a", "x\"y").u64("b", 7).f64("c", 1.5).build();
+        assert_eq!(j, "{\"a\": \"x\\\"y\", \"b\": 7, \"c\": 1.5}");
+    }
+
+    #[test]
+    fn nested_and_array() {
+        let j = JsonObj::new().obj("o", JsonObj::new().bool("k", true)).build();
+        assert_eq!(j, "{\"o\": {\"k\": true}}");
+        assert_eq!(json_array(["1".into(), "2".into()]), "[1, 2]");
+    }
+
+    #[test]
+    fn non_finite_is_null() {
+        let j = JsonObj::new().f64("x", f64::NAN).build();
+        assert_eq!(j, "{\"x\": null}");
+    }
+}

@@ -1,0 +1,6 @@
+//! Small self-contained utilities (the build environment is offline, so
+//! CLI parsing, JSON emission and the property-test driver are in-tree).
+
+pub mod cli;
+pub mod json;
+pub mod prop;

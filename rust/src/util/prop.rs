@@ -1,0 +1,90 @@
+//! Minimal property-test driver (offline stand-in for proptest).
+//!
+//! Deterministic pseudo-random case generation from the same squares32
+//! CBRNG the workload generator uses; failures report the case index so
+//! they reproduce exactly.
+
+use crate::workload::gen::{squares32, SQUARES_KEY};
+
+/// Deterministic case generator.
+pub struct Gen {
+    ctr: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { ctr: seed.wrapping_mul(0x9E3779B97F4A7C15) }
+    }
+
+    pub fn u32(&mut self) -> u32 {
+        self.ctr = self.ctr.wrapping_add(1);
+        squares32(self.ctr, SQUARES_KEY)
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        ((self.u32() as u64) << 32) | self.u32() as u64
+    }
+
+    /// Uniform in `[lo, hi]` (inclusive).
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(lo <= hi);
+        lo + self.u64() % (hi - lo + 1)
+    }
+
+    pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.range_u64(lo as u64, hi as u64) as usize
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.u32() & 1 == 1
+    }
+
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.range_usize(0, items.len() - 1)]
+    }
+}
+
+/// Run `cases` deterministic property cases; panics with the case index on
+/// the first failure.
+pub fn check<F: FnMut(&mut Gen, usize)>(name: &str, cases: usize, mut f: F) {
+    for i in 0..cases {
+        let mut g = Gen::new(0xC0FFEE ^ (i as u64));
+        // A panic inside f is the failure signal; annotate with the index.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || f(&mut g, i),
+        ));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at case {i}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_is_deterministic() {
+        let mut a = Gen::new(7);
+        let mut b = Gen::new(7);
+        for _ in 0..16 {
+            assert_eq!(a.u64(), b.u64());
+        }
+    }
+
+    #[test]
+    fn range_respects_bounds() {
+        let mut g = Gen::new(1);
+        for _ in 0..1000 {
+            let v = g.range_u64(10, 20);
+            assert!((10..=20).contains(&v));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn check_propagates_failures() {
+        check("always-fails", 3, |_, _| panic!("boom"));
+    }
+}

@@ -1,0 +1,288 @@
+//! Workload registry: the paper's applications as trace parameterisations.
+//!
+//! Table 3 of the paper characterises the PARSEC subset by parallelisation
+//! model, granularity, data sharing and data exchange; those axes (plus
+//! STREAM's bandwidth-bound behaviour and the synthetic benchmark's
+//! cache-resident behaviour) map onto the `addrgen` knobs below. The
+//! *numeric payloads* (Black-Scholes prices, triad results) come from the
+//! corresponding Pallas kernels via the AOT artifacts.
+
+use super::gen::AddrGenParams;
+use super::trace::Workload;
+
+/// Table 3 characterisation (printed by `parti-sim tables --which 3`).
+#[derive(Clone, Copy, Debug)]
+pub struct AppTraits {
+    pub name: &'static str,
+    pub model: &'static str,
+    pub granularity: &'static str,
+    pub sharing: &'static str,
+    pub exchange: &'static str,
+}
+
+/// A runnable application: traits + trace parameterisation.
+#[derive(Clone, Copy, Debug)]
+pub struct App {
+    pub traits_: AppTraits,
+    /// Fraction of accesses to the global shared region (milli).
+    pub share_milli: u64,
+    /// Fraction of private accesses that are random (milli).
+    pub random_milli: u64,
+    /// Store fraction (milli).
+    pub store_milli: u64,
+    /// Private working-set bytes per core.
+    pub private_size: u64,
+    /// Shared region bytes.
+    pub shared_size: u64,
+    pub stride: u64,
+    /// Compute cycles between memory ops: base + U[0,spread).
+    pub compute_base: u64,
+    pub compute_spread: u64,
+    /// Software barrier every N ops (0 = none).
+    pub barrier_every: usize,
+}
+
+const KB: u64 = 1024;
+const MB: u64 = 1024 * 1024;
+
+/// Per-core private regions are spaced 64 MiB apart.
+pub const PRIVATE_BASE: u64 = 0x1000_0000;
+pub const PRIVATE_SPAN: u64 = 64 * MB;
+pub const SHARED_BASE: u64 = 0x8000_0000;
+
+pub const APPS: &[App] = &[
+    // The custom bare-metal benchmark (§5.1): per-core sort, everything in
+    // the private caches, no sharing, no barriers.
+    App {
+        traits_: AppTraits {
+            name: "synthetic",
+            model: "bare-metal",
+            granularity: "coarse",
+            sharing: "none",
+            exchange: "none",
+        },
+        share_milli: 0,
+        random_milli: 150,
+        store_milli: 300,
+        private_size: 16 * KB,
+        shared_size: 4 * MB,
+        stride: 1,
+        compute_base: 3,
+        compute_spread: 4,
+        barrier_every: 0,
+    },
+    App {
+        traits_: AppTraits {
+            name: "blackscholes",
+            model: "data-parallel",
+            granularity: "coarse",
+            sharing: "low",
+            exchange: "low",
+        },
+        share_milli: 40,
+        random_milli: 100,
+        store_milli: 250,
+        private_size: 24 * KB,
+        shared_size: 8 * MB,
+        stride: 1,
+        compute_base: 8,
+        compute_spread: 8,
+        barrier_every: 4096,
+    },
+    App {
+        traits_: AppTraits {
+            name: "canneal",
+            model: "unstructured",
+            granularity: "fine",
+            sharing: "high",
+            exchange: "high",
+        },
+        share_milli: 400,
+        random_milli: 800,
+        store_milli: 300,
+        private_size: 256 * KB,
+        shared_size: 32 * MB,
+        stride: 7,
+        compute_base: 2,
+        compute_spread: 3,
+        barrier_every: 0,
+    },
+    App {
+        traits_: AppTraits {
+            name: "dedup",
+            model: "pipeline",
+            granularity: "medium",
+            sharing: "high",
+            exchange: "high",
+        },
+        share_milli: 350,
+        random_milli: 400,
+        store_milli: 400,
+        private_size: 128 * KB,
+        shared_size: 16 * MB,
+        stride: 3,
+        compute_base: 3,
+        compute_spread: 4,
+        barrier_every: 512,
+    },
+    App {
+        traits_: AppTraits {
+            name: "ferret",
+            model: "pipeline",
+            granularity: "medium",
+            sharing: "high",
+            exchange: "high",
+        },
+        share_milli: 300,
+        random_milli: 500,
+        store_milli: 300,
+        private_size: 160 * KB,
+        shared_size: 16 * MB,
+        stride: 5,
+        compute_base: 4,
+        compute_spread: 6,
+        barrier_every: 1024,
+    },
+    App {
+        traits_: AppTraits {
+            name: "fluidanimate",
+            model: "data-parallel",
+            granularity: "fine",
+            sharing: "low",
+            exchange: "medium",
+        },
+        share_milli: 120,
+        random_milli: 300,
+        store_milli: 350,
+        private_size: 64 * KB,
+        shared_size: 8 * MB,
+        stride: 2,
+        compute_base: 4,
+        compute_spread: 4,
+        barrier_every: 1024,
+    },
+    App {
+        traits_: AppTraits {
+            name: "swaptions",
+            model: "data-parallel",
+            granularity: "coarse",
+            sharing: "low",
+            exchange: "low",
+        },
+        share_milli: 25,
+        random_milli: 150,
+        store_milli: 250,
+        private_size: 16 * KB,
+        shared_size: 4 * MB,
+        stride: 1,
+        compute_base: 10,
+        compute_spread: 10,
+        barrier_every: 8192,
+    },
+    // STREAM: maximise DRAM traffic — huge per-core streaming working set,
+    // zero reuse, triad-like 1-store-per-2-loads mix (§5.1).
+    App {
+        traits_: AppTraits {
+            name: "stream",
+            model: "data-parallel",
+            granularity: "coarse",
+            sharing: "low",
+            exchange: "high",
+        },
+        share_milli: 0,
+        random_milli: 0,
+        store_milli: 333,
+        private_size: 48 * MB,
+        shared_size: 4 * MB,
+        stride: 1,
+        compute_base: 0,
+        compute_spread: 1,
+        barrier_every: 0,
+    },
+];
+
+pub fn app_by_name(name: &str) -> Option<&'static App> {
+    APPS.iter().find(|a| a.traits_.name == name)
+}
+
+/// Names of the PARSEC subset + STREAM evaluated at 32 cores (Fig. 8/9).
+pub const FIG8_APPS: &[&str] = &[
+    "blackscholes",
+    "canneal",
+    "dedup",
+    "ferret",
+    "fluidanimate",
+    "swaptions",
+    "stream",
+];
+
+impl App {
+    /// `addrgen` parameter block for one core.
+    pub fn params_for_core(&self, core: u64, seed: u64) -> AddrGenParams {
+        AddrGenParams {
+            seed,
+            core_id: core,
+            offset: 0,
+            private_base: PRIVATE_BASE + core * PRIVATE_SPAN,
+            private_size: self.private_size,
+            shared_base: SHARED_BASE,
+            shared_size: self.shared_size,
+            stride: self.stride,
+            share_milli: self.share_milli,
+            random_milli: self.random_milli,
+            line_bytes: 64,
+            compute_base: self.compute_base,
+            compute_spread: self.compute_spread,
+            store_milli: self.store_milli,
+        }
+    }
+
+    /// Procedurally generate the workload (fallback path; see
+    /// [`crate::runtime::trace_source`] for the artifact path).
+    pub fn generate(&self, n_cores: usize, ops_per_core: usize, seed: u64) -> Workload {
+        let params: Vec<AddrGenParams> = (0..n_cores as u64)
+            .map(|c| self.params_for_core(c, seed))
+            .collect();
+        Workload::generate(
+            self.traits_.name,
+            &params,
+            ops_per_core,
+            self.barrier_every,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_contains_paper_apps() {
+        for name in FIG8_APPS {
+            assert!(app_by_name(name).is_some(), "{name} missing");
+        }
+        assert!(app_by_name("synthetic").is_some());
+    }
+
+    #[test]
+    fn private_regions_disjoint() {
+        let app = app_by_name("stream").unwrap();
+        let a = app.params_for_core(0, 1);
+        let b = app.params_for_core(1, 1);
+        assert!(a.private_base + a.private_size <= b.private_base);
+    }
+
+    #[test]
+    fn high_sharing_apps_share_more() {
+        let canneal = app_by_name("canneal").unwrap();
+        let swaptions = app_by_name("swaptions").unwrap();
+        assert!(canneal.share_milli > 5 * swaptions.share_milli);
+    }
+
+    #[test]
+    fn synthetic_fits_l1() {
+        let s = app_by_name("synthetic").unwrap();
+        assert!(s.private_size <= 64 * KB, "must fit the L1D (Table 2)");
+        assert_eq!(s.share_milli, 0);
+    }
+}

@@ -1,0 +1,214 @@
+//! Procedural trace generator — a bit-exact Rust port of the Pallas
+//! `addrgen` kernel (python/compile/kernels/addrgen.py).
+//!
+//! The canonical trace source is the AOT artifact executed via
+//! [`crate::runtime`]; this port exists so that (a) the simulator can run
+//! without artifacts (CI, unit tests), and (b) the artifact path can be
+//! *verified* against an independent implementation
+//! (rust/tests/artifact_parity.rs). Keep all three implementations in sync:
+//! addrgen.py, ref.py, and this file.
+
+/// squares32 key (Widynski) — must match `ref.SQUARES_KEY`.
+pub const SQUARES_KEY: u64 = 0xC58EFD154CE32F6D;
+
+/// 32-bit counter-based RNG (squares32).
+#[inline]
+pub fn squares32(ctr: u64, key: u64) -> u32 {
+    let mut x = ctr.wrapping_mul(key);
+    let y = x;
+    let z = y.wrapping_add(key);
+    x = x.wrapping_mul(x).wrapping_add(y);
+    x = (x >> 32) | (x << 32);
+    x = x.wrapping_mul(x).wrapping_add(z);
+    x = (x >> 32) | (x << 32);
+    x = x.wrapping_mul(x).wrapping_add(y);
+    x = (x >> 32) | (x << 32);
+    x = x.wrapping_mul(x).wrapping_add(z);
+    (x >> 32) as u32
+}
+
+/// Parameter block — layout mirrors addrgen.py's `params` vector.
+#[derive(Clone, Copy, Debug)]
+pub struct AddrGenParams {
+    pub seed: u64,
+    pub core_id: u64,
+    pub offset: u64,
+    pub private_base: u64,
+    pub private_size: u64,
+    pub shared_base: u64,
+    pub shared_size: u64,
+    pub stride: u64,
+    pub share_milli: u64,
+    pub random_milli: u64,
+    pub line_bytes: u64,
+    pub compute_base: u64,
+    pub compute_spread: u64,
+    pub store_milli: u64,
+}
+
+impl Default for AddrGenParams {
+    fn default() -> Self {
+        AddrGenParams {
+            seed: 42,
+            core_id: 0,
+            offset: 0,
+            private_base: 0x1000_0000,
+            private_size: 64 * 1024,
+            shared_base: 0x8000_0000,
+            shared_size: 8 * 1024 * 1024,
+            stride: 1,
+            share_milli: 100,
+            random_milli: 200,
+            line_bytes: 64,
+            compute_base: 2,
+            compute_spread: 8,
+            store_milli: 300,
+        }
+    }
+}
+
+impl AddrGenParams {
+    /// Serialise to the uint64[16] vector the AOT artifact expects.
+    pub fn to_vec(&self) -> Vec<u64> {
+        let mut v = vec![0u64; 16];
+        v[0] = self.seed;
+        v[1] = self.core_id;
+        v[2] = self.offset;
+        v[3] = self.private_base;
+        v[4] = self.private_size;
+        v[5] = self.shared_base;
+        v[6] = self.shared_size;
+        v[7] = self.stride;
+        v[8] = self.share_milli;
+        v[9] = self.random_milli;
+        v[10] = self.line_bytes;
+        v[11] = self.compute_base;
+        v[12] = self.compute_spread;
+        v[13] = self.store_milli;
+        v
+    }
+}
+
+/// One generated trace element.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GenOp {
+    pub addr: u64,
+    pub is_store: bool,
+    /// Compute-cycle gap before this op.
+    pub gap: u32,
+}
+
+/// Generate `n` ops (mirror of the Pallas kernel body).
+pub fn addrgen(p: &AddrGenParams, n: usize) -> Vec<GenOp> {
+    let key = SQUARES_KEY;
+    let line_bytes = p.line_bytes.max(1);
+    let private_lines = (p.private_size / line_bytes).max(1);
+    let shared_lines = (p.shared_size / line_bytes).max(1);
+    let base_ctr = p.seed ^ (p.core_id << 40);
+    let spread = (p.compute_spread as u32).max(1);
+
+    (0..n as u64)
+        .map(|k| {
+            let i = p.offset.wrapping_add(k);
+            let ctr = base_ctr.wrapping_add(i.wrapping_mul(4));
+            let r0 = squares32(ctr, key);
+            let r1 = squares32(ctr.wrapping_add(1), key);
+            let r2 = squares32(ctr.wrapping_add(2), key);
+            let r3 = squares32(ctr.wrapping_add(3), key);
+
+            // One line per 8 sequential ops (spatial locality within a
+            // 64B line) — mirror of addrgen.py.
+            let seq_line = (i >> 3).wrapping_mul(p.stride) % private_lines;
+            let rnd_line = (r1 as u64) % private_lines;
+            let use_rnd = (r1 % 1000) < p.random_milli as u32;
+            let priv_line = if use_rnd { rnd_line } else { seq_line };
+            let priv_addr = p.private_base + priv_line * line_bytes;
+
+            let shared_line = (r1 as u64) % shared_lines;
+            let shared_addr = p.shared_base + shared_line * line_bytes;
+
+            let use_shared = (r0 % 1000) < p.share_milli as u32;
+            GenOp {
+                addr: if use_shared { shared_addr } else { priv_addr },
+                is_store: (r2 % 1000) < p.store_milli as u32,
+                gap: p.compute_base as u32 + r3 % spread,
+            }
+        })
+        .collect()
+}
+
+/// Deterministic functional store value for core/op-index (independent of
+/// the trace source, shared by tests and the CPU models).
+#[inline]
+pub fn store_value(core: u16, idx: u64) -> u64 {
+    let ctr = (core as u64) << 48 | idx;
+    ((squares32(ctr, SQUARES_KEY) as u64) << 32)
+        | squares32(ctr.wrapping_add(1), SQUARES_KEY) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let p = AddrGenParams::default();
+        assert_eq!(addrgen(&p, 64), addrgen(&p, 64));
+    }
+
+    #[test]
+    fn offset_continuation() {
+        let p = AddrGenParams::default();
+        let full = addrgen(&p, 128);
+        let a = addrgen(&p, 64);
+        let b = addrgen(&AddrGenParams { offset: 64, ..p }, 64);
+        assert_eq!(&full[..64], &a[..]);
+        assert_eq!(&full[64..], &b[..]);
+    }
+
+    #[test]
+    fn share_milli_bounds_regions() {
+        let p = AddrGenParams { share_milli: 0, ..Default::default() };
+        assert!(addrgen(&p, 512)
+            .iter()
+            .all(|o| o.addr >= p.private_base
+                && o.addr < p.private_base + p.private_size));
+        let p = AddrGenParams { share_milli: 1000, ..Default::default() };
+        assert!(addrgen(&p, 512).iter().all(|o| o.addr >= p.shared_base));
+    }
+
+    #[test]
+    fn line_aligned() {
+        let p = AddrGenParams::default();
+        assert!(addrgen(&p, 256).iter().all(|o| o.addr % 64 == 0));
+    }
+
+    #[test]
+    fn gap_bounds() {
+        let p = AddrGenParams {
+            compute_base: 5,
+            compute_spread: 10,
+            ..Default::default()
+        };
+        assert!(addrgen(&p, 256).iter().all(|o| o.gap >= 5 && o.gap < 15));
+    }
+
+    #[test]
+    fn cores_differ() {
+        let a = addrgen(&AddrGenParams::default(), 64);
+        let b = addrgen(
+            &AddrGenParams { core_id: 1, ..Default::default() },
+            64,
+        );
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn store_fraction_rough() {
+        let p = AddrGenParams { store_milli: 300, ..Default::default() };
+        let ops = addrgen(&p, 8192);
+        let frac =
+            ops.iter().filter(|o| o.is_store).count() as f64 / 8192.0;
+        assert!(frac > 0.25 && frac < 0.35, "store fraction {frac}");
+    }
+}

@@ -1,0 +1,10 @@
+//! Workloads: op traces, the procedural generator (bit-exact port of the
+//! Pallas kernel) and the application registry (Table 3).
+
+pub mod apps;
+pub mod gen;
+pub mod trace;
+
+pub use apps::{app_by_name, App, AppTraits, APPS, FIG8_APPS};
+pub use gen::{addrgen, squares32, store_value, AddrGenParams, GenOp};
+pub use trace::{CoreTrace, Workload};

@@ -1,0 +1,136 @@
+//! Trace containers: the op streams the simulated cores execute.
+
+use std::sync::Arc;
+
+use super::gen::{addrgen, store_value, AddrGenParams, GenOp};
+
+/// The op stream for one core.
+#[derive(Clone, Debug, Default)]
+pub struct CoreTrace {
+    pub addr: Vec<u64>,
+    pub is_store: Vec<bool>,
+    /// Compute-cycle gap before each op.
+    pub gap: Vec<u32>,
+    /// Functional store payloads (same length; ignored for loads).
+    pub value: Vec<u64>,
+    /// Optional expected load values (empty = unchecked; `u64::MAX` entry =
+    /// skip). Lets coherence tests assert exact data visibility.
+    pub expected: Vec<u64>,
+}
+
+/// Sentinel in [`CoreTrace::expected`]: don't check this op.
+pub const NO_EXPECT: u64 = u64::MAX;
+
+impl CoreTrace {
+    pub fn len(&self) -> usize {
+        self.addr.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.addr.is_empty()
+    }
+
+    pub fn from_ops(core: u16, ops: &[GenOp]) -> Self {
+        CoreTrace {
+            addr: ops.iter().map(|o| o.addr).collect(),
+            is_store: ops.iter().map(|o| o.is_store).collect(),
+            gap: ops.iter().map(|o| o.gap).collect(),
+            value: ops
+                .iter()
+                .enumerate()
+                .map(|(i, _)| store_value(core, i as u64))
+                .collect(),
+            expected: Vec::new(),
+        }
+    }
+
+    /// Build from raw artifact outputs (`workload.hlo.txt` execution).
+    pub fn from_arrays(
+        core: u16,
+        addr: Vec<u64>,
+        is_store_u32: Vec<u32>,
+        gap: Vec<u32>,
+    ) -> Self {
+        let n = addr.len();
+        CoreTrace {
+            addr,
+            is_store: is_store_u32.iter().map(|&s| s != 0).collect(),
+            gap,
+            value: (0..n as u64).map(|i| store_value(core, i)).collect(),
+            expected: Vec::new(),
+        }
+    }
+}
+
+/// The full workload: one trace per core plus synchronisation structure.
+#[derive(Clone, Debug, Default)]
+pub struct Workload {
+    pub cores: Vec<Arc<CoreTrace>>,
+    /// Software barrier every N ops (0 = none).
+    pub barrier_every: usize,
+    /// Human-readable name ("blackscholes", ...).
+    pub name: String,
+}
+
+impl Workload {
+    /// Procedural construction (the Rust fallback path; the artifact path
+    /// in [`crate::runtime`] must produce bit-identical traces).
+    pub fn generate(
+        name: &str,
+        params: &[AddrGenParams],
+        ops_per_core: usize,
+        barrier_every: usize,
+    ) -> Self {
+        let cores = params
+            .iter()
+            .map(|p| {
+                Arc::new(CoreTrace::from_ops(
+                    p.core_id as u16,
+                    &addrgen(p, ops_per_core),
+                ))
+            })
+            .collect();
+        Workload { cores, barrier_every, name: name.to_string() }
+    }
+
+    pub fn n_cores(&self) -> usize {
+        self.cores.len()
+    }
+
+    pub fn total_ops(&self) -> usize {
+        self.cores.iter().map(|c| c.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_shapes() {
+        let params: Vec<AddrGenParams> = (0..4)
+            .map(|i| AddrGenParams { core_id: i, ..Default::default() })
+            .collect();
+        let w = Workload::generate("t", &params, 256, 64);
+        assert_eq!(w.n_cores(), 4);
+        assert_eq!(w.total_ops(), 1024);
+        assert_eq!(w.cores[0].len(), 256);
+        assert_eq!(w.cores[0].value.len(), 256);
+    }
+
+    #[test]
+    fn from_arrays_matches_from_ops() {
+        let p = AddrGenParams::default();
+        let ops = addrgen(&p, 128);
+        let a = CoreTrace::from_ops(0, &ops);
+        let b = CoreTrace::from_arrays(
+            0,
+            ops.iter().map(|o| o.addr).collect(),
+            ops.iter().map(|o| o.is_store as u32).collect(),
+            ops.iter().map(|o| o.gap).collect(),
+        );
+        assert_eq!(a.addr, b.addr);
+        assert_eq!(a.is_store, b.is_store);
+        assert_eq!(a.value, b.value);
+    }
+}

@@ -1,0 +1,151 @@
+//! Cross-language parity: the AOT artifact (JAX/Pallas via PJRT) and the
+//! Rust procedural generator must produce bit-identical traces, and the
+//! payload artifacts must match independent Rust math.
+//!
+//! Tests that need `artifacts/` skip gracefully when it is missing (run
+//! `make artifacts` first); the golden-vector tests always run.
+
+use parti_sim::runtime::{artifact_trace, Runtime, PAYLOAD_B};
+use parti_sim::workload::{addrgen, squares32, AddrGenParams};
+use parti_sim::workload::gen::SQUARES_KEY;
+
+/// Golden vectors pinned from the Python reference implementation
+/// (python/compile/kernels/ref.py) — keep in sync with
+/// python/tests/test_kernel.py::test_known_vector_stability.
+#[test]
+fn squares32_matches_python_goldens() {
+    let cases: [(u64, u32); 5] = [
+        (0, 0x8352d815),
+        (1, 0x4d645c71),
+        (2, 0x5f664b34),
+        (12345678901234, 0x837df4da),
+        (1 << 63, 0x0bb1ab45),
+    ];
+    for (ctr, want) in cases {
+        assert_eq!(
+            squares32(ctr, SQUARES_KEY),
+            want,
+            "squares32({ctr:#x}) diverged from the Python reference"
+        );
+    }
+}
+
+#[test]
+fn addrgen_matches_python_goldens() {
+    let p = AddrGenParams {
+        seed: 42,
+        core_id: 3,
+        offset: 0,
+        private_base: 0x1000_0000,
+        private_size: 65536,
+        shared_base: 0x8000_0000,
+        shared_size: 8 * 1024 * 1024,
+        stride: 1,
+        share_milli: 100,
+        random_milli: 200,
+        line_bytes: 64,
+        compute_base: 2,
+        compute_spread: 8,
+        store_milli: 300,
+    };
+    let ops = addrgen(&p, 8);
+    let want_addr: [u64; 8] = [
+        0x1000_0000,
+        0x1000_0000,
+        0x1000_8800,
+        0x8058_c480,
+        0x1000_0000,
+        0x1000_0000,
+        0x1000_0000,
+        0x1000_0000,
+    ];
+    let want_gap: [u32; 8] = [2, 4, 5, 5, 4, 6, 7, 9];
+    for i in 0..8 {
+        assert_eq!(ops[i].addr, want_addr[i], "addr[{i}]");
+        assert_eq!(ops[i].gap, want_gap[i], "gap[{i}]");
+        assert!(!ops[i].is_store, "store[{i}] (python golden: all loads)");
+    }
+}
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    if !Runtime::artifacts_available(&dir) {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new(dir).expect("PJRT client"))
+}
+
+#[test]
+fn artifact_trace_is_bit_identical_to_rust_port() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let exe = rt.load("workload").expect("workload artifact");
+    for (core, share, stride, store) in
+        [(0u64, 0u64, 1u64, 300u64), (5, 400, 7, 500), (119, 1000, 3, 0)]
+    {
+        let p = AddrGenParams {
+            core_id: core,
+            share_milli: share,
+            stride,
+            store_milli: store,
+            ..Default::default()
+        };
+        let a = artifact_trace(&exe, &p, 2048).expect("artifact exec");
+        let b = addrgen(&p, 2048);
+        for i in 0..2048 {
+            assert_eq!(a.addr[i], b[i].addr, "core {core} addr[{i}]");
+            assert_eq!(a.is_store[i], b[i].is_store, "core {core} store[{i}]");
+            assert_eq!(a.gap[i], b[i].gap, "core {core} gap[{i}]");
+        }
+    }
+}
+
+#[test]
+fn stream_artifact_matches_rust_triad() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let b: Vec<f32> = (0..PAYLOAD_B).map(|i| i as f32 * 0.5 - 100.0).collect();
+    let c: Vec<f32> = (0..PAYLOAD_B).map(|i| (i % 97) as f32).collect();
+    let scalar = 3.0f32;
+    let a = parti_sim::runtime::stream_payload(&rt, &b, &c, scalar).unwrap();
+    for i in 0..PAYLOAD_B {
+        let want = b[i] + scalar * c[i];
+        assert!(
+            (a[i] - want).abs() <= 1e-4 * want.abs().max(1.0),
+            "triad[{i}]: {} vs {}",
+            a[i],
+            want
+        );
+    }
+}
+
+#[test]
+fn blackscholes_artifact_satisfies_parity_and_bounds() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let n = PAYLOAD_B;
+    // Deterministic in-range inputs (independent of Python's streams).
+    let u = |i: usize, k: u64| {
+        squares32(i as u64 * 5 + k, SQUARES_KEY) as f32 / u32::MAX as f32
+    };
+    let spot: Vec<f32> = (0..n).map(|i| 5.0 + 95.0 * u(i, 0)).collect();
+    let strike: Vec<f32> = (0..n).map(|i| 5.0 + 95.0 * u(i, 1)).collect();
+    let rate: Vec<f32> = (0..n).map(|i| 0.01 + 0.09 * u(i, 2)).collect();
+    let vol: Vec<f32> = (0..n).map(|i| 0.05 + 0.55 * u(i, 3)).collect();
+    let time: Vec<f32> = (0..n).map(|i| 0.1 + 2.9 * u(i, 4)).collect();
+    let (call, put) = parti_sim::runtime::blackscholes_payload(
+        &rt, &spot, &strike, &rate, &vol, &time,
+    )
+    .unwrap();
+    for i in 0..n {
+        // Model-independent put-call parity: C - P = S - K e^{-rT}.
+        let lhs = call[i] - put[i];
+        let rhs = spot[i] - strike[i] * (-rate[i] * time[i]).exp();
+        assert!(
+            (lhs - rhs).abs() < 5e-3 * rhs.abs().max(1.0),
+            "parity[{i}]: {lhs} vs {rhs}"
+        );
+        assert!(call[i] >= -1e-3 && put[i] >= -1e-3, "prices nonneg [{i}]");
+        // C <= S and P <= K e^{-rT} (no-arbitrage bounds).
+        assert!(call[i] <= spot[i] + 1e-3);
+        assert!(put[i] <= strike[i] + 1e-3);
+    }
+}

@@ -1,0 +1,233 @@
+//! Coherence correctness: data written by one core must be visible to
+//! others through the CHI-lite protocol, across barriers, in all kernels.
+//!
+//! These tests construct hand-written traces with `expected` load values,
+//! so any stale data served by the hierarchy shows up as a
+//! `value_mismatches` stat.
+
+use std::sync::Arc;
+
+use parti_sim::config::{Mode, RunConfig};
+use parti_sim::harness::run_with_workload;
+use parti_sim::sim::time::NS;
+use parti_sim::workload::trace::NO_EXPECT;
+use parti_sim::workload::{CoreTrace, Workload};
+
+const SHARED: u64 = 0x8000_0000;
+
+fn trace(ops: Vec<(u64, bool, u64, u64)>) -> CoreTrace {
+    // (addr, is_store, value, expected)
+    CoreTrace {
+        addr: ops.iter().map(|o| o.0).collect(),
+        is_store: ops.iter().map(|o| o.1).collect(),
+        gap: vec![2; ops.len()],
+        value: ops.iter().map(|o| o.2).collect(),
+        expected: ops.iter().map(|o| o.3).collect(),
+    }
+}
+
+fn cfg(cores: usize, mode: Mode) -> RunConfig {
+    let mut c = RunConfig { mode, quantum: 8 * NS, ..Default::default() };
+    c.system.cores = cores;
+    c
+}
+
+fn run(workload: Workload, mode: Mode) -> parti_sim::pdes::RunResult {
+    let c = cfg(workload.n_cores(), mode);
+    run_with_workload(&c, &workload).unwrap()
+}
+
+fn assert_no_mismatch(r: &parti_sim::pdes::RunResult, what: &str) {
+    assert_eq!(
+        r.stats.sum_suffix(".value_mismatches"),
+        0.0,
+        "{what}: wrong data returned by the coherent hierarchy"
+    );
+}
+
+/// Producer stores N lines before the barrier; consumer loads them after.
+fn producer_consumer_workload(n_lines: u64) -> Workload {
+    let mut prod = Vec::new();
+    for i in 0..n_lines {
+        prod.push((SHARED + i * 64, true, 1000 + i, NO_EXPECT));
+    }
+    let mut cons = Vec::new();
+    // consumer: private warm-up ops so both sides reach the barrier
+    for i in 0..n_lines {
+        cons.push((0x1000_0000 + i * 64, false, 0, NO_EXPECT));
+    }
+    // after barrier: loads must observe the producer's values
+    let mut prod2 = Vec::new();
+    let mut cons2 = Vec::new();
+    for i in 0..n_lines {
+        prod2.push((0x2000_0000 + i * 64, false, 0, NO_EXPECT));
+        cons2.push((SHARED + i * 64, false, 0, 1000 + i));
+    }
+    prod.extend(prod2);
+    cons.extend(cons2);
+    Workload {
+        cores: vec![Arc::new(trace(prod)), Arc::new(trace(cons))],
+        barrier_every: n_lines as usize,
+        name: "producer-consumer".into(),
+    }
+}
+
+#[test]
+fn producer_consumer_serial() {
+    let r = run(producer_consumer_workload(32), Mode::Serial);
+    assert_no_mismatch(&r, "serial");
+    assert_eq!(r.stats.sum_suffix(".committed_ops") as u64, 4 * 32);
+}
+
+#[test]
+fn producer_consumer_virtual_pdes() {
+    let r = run(producer_consumer_workload(32), Mode::Virtual);
+    assert_no_mismatch(&r, "virtual");
+}
+
+#[test]
+fn producer_consumer_threaded_pdes() {
+    let r = run(producer_consumer_workload(32), Mode::Parallel);
+    assert_no_mismatch(&r, "parallel");
+}
+
+/// Read-own-write: a core must observe its own stores (same line, repeated).
+#[test]
+fn read_own_write() {
+    let line = SHARED;
+    let mut ops = Vec::new();
+    for v in 0..64u64 {
+        ops.push((line, true, v, NO_EXPECT));
+        ops.push((line, false, 0, v));
+    }
+    let w = Workload {
+        cores: vec![Arc::new(trace(ops))],
+        barrier_every: 0,
+        name: "row".into(),
+    };
+    let r = run(w, Mode::Serial);
+    assert_no_mismatch(&r, "read-own-write");
+}
+
+/// Migratory sharing: the same line is written by core0, read+written by
+/// core1, read by core0 — with barriers between the phases. Exercises
+/// SnpUnique / ownership migration.
+#[test]
+fn migratory_ownership() {
+    let line = SHARED;
+    let pad = |v: &mut Vec<(u64, bool, u64, u64)>, base: u64| {
+        for i in 0..8 {
+            v.push((base + i * 64, false, 0, NO_EXPECT));
+        }
+    };
+    // phase length 9 ops (8 pad + 1 line op), barrier_every = 9
+    let mut c0 = Vec::new();
+    let mut c1 = Vec::new();
+    // phase 1: c0 writes 7 ; c1 pads
+    pad(&mut c0, 0x1000_0000);
+    c0.push((line, true, 7, NO_EXPECT));
+    pad(&mut c1, 0x1100_0000);
+    c1.push((0x1100_1000, false, 0, NO_EXPECT));
+    // phase 2: c1 reads 7 then... (read must be its own phase)
+    pad(&mut c0, 0x1200_0000);
+    c0.push((0x1200_1000, false, 0, NO_EXPECT));
+    pad(&mut c1, 0x1300_0000);
+    c1.push((line, false, 0, 7));
+    // phase 3: c1 writes 9
+    pad(&mut c0, 0x1400_0000);
+    c0.push((0x1400_1000, false, 0, NO_EXPECT));
+    pad(&mut c1, 0x1500_0000);
+    c1.push((line, true, 9, NO_EXPECT));
+    // phase 4: c0 reads 9 (ownership migrated back via snoop)
+    pad(&mut c0, 0x1600_0000);
+    c0.push((line, false, 0, 9));
+    pad(&mut c1, 0x1700_0000);
+    c1.push((0x1700_1000, false, 0, NO_EXPECT));
+
+    let w = Workload {
+        cores: vec![Arc::new(trace(c0)), Arc::new(trace(c1))],
+        barrier_every: 9,
+        name: "migratory".into(),
+    };
+    for mode in [Mode::Serial, Mode::Virtual, Mode::Parallel] {
+        let r = run(w.clone(), mode);
+        assert_no_mismatch(&r, &format!("{mode:?}"));
+    }
+}
+
+/// Heavy shared-line contention: all cores hammer a small set of shared
+/// lines with stores and loads. No expected values (racy), but the run must
+/// terminate (no protocol deadlock) and commit everything.
+#[test]
+fn contention_torture_completes() {
+    let n_cores = 4;
+    let mut cores = Vec::new();
+    for c in 0..n_cores as u64 {
+        let mut ops = Vec::new();
+        for i in 0..256u64 {
+            let line = SHARED + (i % 8) * 64;
+            let store = (i + c) % 3 == 0;
+            ops.push((line, store, c * 10_000 + i, NO_EXPECT));
+        }
+        cores.push(Arc::new(trace(ops)));
+    }
+    let w = Workload { cores, barrier_every: 0, name: "torture".into() };
+    for mode in [Mode::Serial, Mode::Virtual, Mode::Parallel] {
+        let r = run(w.clone(), mode);
+        assert_eq!(
+            r.stats.sum_suffix(".committed_ops") as u64,
+            n_cores as u64 * 256,
+            "{mode:?}: contention must not deadlock"
+        );
+        assert_no_mismatch(&r, &format!("{mode:?}"));
+        // snoops must actually have happened
+        let snoops = r.stats.get("hnf.snoops_sent").unwrap_or(0.0);
+        assert!(snoops > 0.0, "{mode:?}: contention must trigger snoops");
+    }
+}
+
+/// Same-line load after store from the SAME core with no barrier — store
+/// buffer forwarding through L1 write-through-update.
+#[test]
+fn same_core_store_load_ordering() {
+    let mut ops = Vec::new();
+    for i in 0..32u64 {
+        let line = SHARED + i * 64;
+        ops.push((line, true, 0xAB00 + i, NO_EXPECT));
+        ops.push((line, false, 0, 0xAB00 + i));
+    }
+    let w = Workload {
+        cores: vec![Arc::new(trace(ops.clone())), Arc::new(trace(vec![
+            (0x1000_0000, false, 0, NO_EXPECT);
+            4
+        ]))],
+        barrier_every: 0,
+        name: "st-ld".into(),
+    };
+    for mode in [Mode::Serial, Mode::Virtual] {
+        let r = run(w.clone(), mode);
+        assert_no_mismatch(&r, &format!("{mode:?}"));
+    }
+}
+
+/// Capacity evictions: working set far beyond L2 forces write-backs; data
+/// must survive the round trip through L3/DRAM.
+#[test]
+fn writeback_roundtrip_preserves_data() {
+    // 8 MiB working set >> 2 MiB L2: write everything, barrier, read back.
+    let lines = 4096u64; // 256 KiB... enough to overflow L1D (64 KiB)
+    let mut ops = Vec::new();
+    for i in 0..lines {
+        ops.push((SHARED + i * 64, true, 0xC0DE_0000 + i, NO_EXPECT));
+    }
+    for i in 0..lines {
+        ops.push((SHARED + i * 64, false, 0, 0xC0DE_0000 + i));
+    }
+    let w = Workload {
+        cores: vec![Arc::new(trace(ops))],
+        barrier_every: 0,
+        name: "wb".into(),
+    };
+    let r = run(w, Mode::Serial);
+    assert_no_mismatch(&r, "writeback roundtrip");
+}

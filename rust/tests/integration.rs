@@ -1,0 +1,160 @@
+//! End-to-end integration: every app × every CPU model runs to completion
+//! on the serial kernel with sane statistics.
+
+use parti_sim::config::{Mode, RunConfig};
+use parti_sim::cpu::CpuModel;
+use parti_sim::harness::figures::atomic_vs_timing;
+use parti_sim::harness::{make_workload, run_once, run_with_workload};
+use parti_sim::sim::time::NS;
+use parti_sim::stats::Summary;
+use parti_sim::workload::APPS;
+
+fn cfg(app: &str, cores: usize, ops: usize) -> RunConfig {
+    let mut c = RunConfig {
+        app: app.into(),
+        ops_per_core: ops,
+        ..Default::default()
+    };
+    c.system.cores = cores;
+    c
+}
+
+#[test]
+fn every_app_completes_serially() {
+    for app in APPS {
+        let c = cfg(app.traits_.name, 2, 256);
+        let r = run_once(&c).expect(app.traits_.name);
+        let committed = r.stats.sum_suffix(".committed_ops");
+        assert_eq!(
+            committed as u64,
+            2 * 256,
+            "{}: all trace ops must commit",
+            app.traits_.name
+        );
+        assert!(r.sim_ticks > 0);
+        assert!(r.events > 0);
+    }
+}
+
+#[test]
+fn timing_mips_in_paper_ballpark() {
+    // §1: timing mode achieves 0.01-0.1 MIPS on a workstation. Allow a
+    // generous envelope (different host, small run).
+    let r = run_once(&cfg("synthetic", 2, 2048)).unwrap();
+    let mips = r.mips();
+    assert!(mips > 0.001 && mips < 10.0, "MIPS {mips} out of envelope");
+}
+
+#[test]
+fn barrier_apps_hit_barriers() {
+    let c = cfg("blackscholes", 4, 2048); // harness: ops < barrier_every -> 0
+    let r = run_once(&c).unwrap();
+    let _ = r;
+    // dedup has barrier_every=512 -> 2048 ops hit 3 boundaries per core.
+    let c = cfg("dedup", 4, 2048);
+    let r = run_once(&c).unwrap();
+    let barriers = r.stats.sum_suffix(".barriers");
+    assert!(barriers > 0.0, "dedup must synchronise at barriers");
+    assert_eq!(
+        r.stats.sum_suffix(".committed_ops") as u64,
+        4 * 2048,
+        "barriers must not deadlock"
+    );
+}
+
+#[test]
+fn io_traffic_goes_through_crossbar() {
+    let mut c = cfg("synthetic", 2, 512);
+    c.system.io_milli = 20; // one IO access per 50 ops
+    let r = run_once(&c).unwrap();
+    let io = r.stats.sum_suffix(".io_reqs");
+    assert!(io > 0.0, "io_milli must generate crossbar traffic");
+    let uart = r.stats.get("uart.reads").unwrap_or(0.0)
+        + r.stats.get("uart.writes").unwrap_or(0.0);
+    let timer = r.stats.get("timer.reads").unwrap_or(0.0)
+        + r.stats.get("timer.writes").unwrap_or(0.0);
+    assert!(uart + timer > 0.0, "peripherals must see requests");
+}
+
+#[test]
+fn atomic_mode_runs_and_is_faster_per_op() {
+    let p = atomic_vs_timing(2, 2048).unwrap();
+    assert!(p.atomic_mips > 0.0 && p.timing_mips > 0.0);
+    assert!(
+        p.ratio < 0.8,
+        "timing mode must be substantially slower than atomic (got ratio {})",
+        p.ratio
+    );
+}
+
+#[test]
+fn kvm_fast_forward_completes_instantly() {
+    let mut c = cfg("synthetic", 2, 2048);
+    c.cpu_model = CpuModel::Kvm;
+    let r = run_once(&c).unwrap();
+    assert_eq!(r.stats.sum_suffix(".committed_ops") as u64, 2 * 2048);
+    // Fast-forward advances virtually no simulated time.
+    assert!(r.sim_ticks < 100 * NS * 2048);
+}
+
+#[test]
+fn minor_is_slower_than_o3_in_sim_time() {
+    let workload = make_workload(&cfg("blackscholes", 2, 1024)).unwrap();
+    let mut c_o3 = cfg("blackscholes", 2, 1024);
+    c_o3.cpu_model = CpuModel::O3;
+    let mut c_minor = c_o3.clone();
+    c_minor.cpu_model = CpuModel::Minor;
+    let r_o3 = run_with_workload(&c_o3, &workload).unwrap();
+    let r_minor = run_with_workload(&c_minor, &workload).unwrap();
+    assert!(
+        r_minor.sim_ticks > r_o3.sim_ticks,
+        "in-order Minor ({}) must take longer than O3 ({})",
+        r_minor.sim_ticks,
+        r_o3.sim_ticks
+    );
+}
+
+#[test]
+fn summary_serialises() {
+    let r = run_once(&cfg("synthetic", 2, 256)).unwrap();
+    let s = Summary::from_result(&r);
+    let j = s.to_json();
+    assert!(j.contains("\"sim_ticks\""));
+    assert!(j.contains("\"l1d_miss_rate\""));
+}
+
+#[test]
+fn serial_runs_are_deterministic() {
+    let c = cfg("canneal", 3, 512);
+    let w = make_workload(&c).unwrap();
+    let a = run_with_workload(&c, &w).unwrap();
+    let b = run_with_workload(&c, &w).unwrap();
+    assert_eq!(a.sim_ticks, b.sim_ticks);
+    assert_eq!(a.events, b.events);
+    let ca = a.stats.sum_suffix(".load_checksum");
+    let cb = b.stats.sum_suffix(".load_checksum");
+    assert_eq!(ca, cb);
+}
+
+#[test]
+fn no_value_mismatches_in_normal_runs() {
+    for app in ["synthetic", "canneal", "stream"] {
+        let r = run_once(&cfg(app, 2, 512)).unwrap();
+        assert_eq!(
+            r.stats.sum_suffix(".value_mismatches"),
+            0.0,
+            "{app}: coherent memory must never return wrong data"
+        );
+    }
+}
+
+#[test]
+fn virtual_mode_rejects_single_domain_configs() {
+    // guard: virtual/parallel need >= 2 domains, i.e. >= 1 core + shared.
+    let mut c = cfg("synthetic", 1, 128);
+    c.mode = Mode::Virtual;
+    c.quantum = 8 * NS;
+    // 1 core => 2 domains; this must still work.
+    let r = run_once(&c).unwrap();
+    assert_eq!(r.n_domains, 2);
+}

@@ -1,0 +1,305 @@
+//! Property-based tests on the coordinator invariants (event ordering,
+//! cache replacement, message-buffer ordering, crossbar layer exclusivity,
+//! host-model monotonicity), driven by the in-tree deterministic
+//! property-test harness ([`parti_sim::util::prop`]).
+
+use std::collections::BTreeMap;
+
+use parti_sim::mem::{CacheArray, LineState};
+use parti_sim::pdes::{HostModel, WorkProfile};
+use parti_sim::ruby::new_inbox;
+use parti_sim::ruby::{MsgKind, RubyMsg};
+use parti_sim::sim::event::{prio, EventKind};
+use parti_sim::sim::ids::CompId;
+use parti_sim::sim::queue::EventQueue;
+use parti_sim::util::prop::check;
+use parti_sim::workload::{addrgen, AddrGenParams};
+use parti_sim::xbar::{default_xbar, Occupy};
+
+// ---------------------------------------------------------------------
+// Event queue: pops are totally ordered by (tick, prio, seq); deschedule
+// removes exactly the chosen events.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_event_queue_total_order() {
+    check("eq-total-order", 50, |g, _| {
+        let mut q = EventQueue::new();
+        let n = g.range_usize(1, 200);
+        for _ in 0..n {
+            let tick = g.range_u64(0, 50);
+            let p = *g.pick(&[prio::BARRIER, prio::DEFAULT, prio::CPU]);
+            q.schedule(tick, p, CompId(0), EventKind::CpuTick);
+        }
+        let mut last = (0u64, 0u8, 0u64);
+        let mut popped = 0;
+        while let Some(e) = q.pop() {
+            let key = (e.tick, e.prio, e.seq);
+            assert!(key >= last, "events out of order: {key:?} < {last:?}");
+            last = key;
+            popped += 1;
+        }
+        assert_eq!(popped, n);
+    });
+}
+
+#[test]
+fn prop_event_queue_deschedule_is_precise() {
+    check("eq-deschedule", 50, |g, _| {
+        let mut q = EventQueue::new();
+        let n = g.range_usize(1, 100);
+        let mut keep = 0usize;
+        let mut handles = Vec::new();
+        for i in 0..n {
+            let h = q.schedule(
+                g.range_u64(0, 20),
+                prio::DEFAULT,
+                CompId(i as u32),
+                EventKind::CpuTick,
+            );
+            handles.push(h);
+        }
+        let mut cancelled = Vec::new();
+        for h in handles {
+            if g.bool() {
+                q.deschedule(h);
+                cancelled.push(h.0);
+            } else {
+                keep += 1;
+            }
+        }
+        let mut seen = 0;
+        while let Some(e) = q.pop() {
+            assert!(!cancelled.contains(&e.seq), "cancelled event popped");
+            seen += 1;
+        }
+        assert_eq!(seen, keep);
+    });
+}
+
+// ---------------------------------------------------------------------
+// Cache array vs a naive model: same hit/miss classification and same
+// final content for random access/allocate/invalidate sequences.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_cache_array_matches_naive_lru_model() {
+    check("cache-lru-model", 30, |g, _| {
+        let assoc = g.range_usize(1, 4);
+        let sets = 1usize << g.range_usize(0, 3);
+        let mut c = CacheArray::new((sets * assoc * 64) as u64, assoc, 64);
+        // naive model: per set, Vec<(addr)> in LRU order (front = LRU)
+        let mut model: BTreeMap<usize, Vec<u64>> = BTreeMap::new();
+        let addr_pool: Vec<u64> =
+            (0..32).map(|i| i * 64).collect();
+        for _ in 0..g.range_usize(10, 300) {
+            let addr = *g.pick(&addr_pool);
+            let set = ((addr / 64) as usize) % sets;
+            let ways = model.entry(set).or_default();
+            match g.range_usize(0, 2) {
+                0 => {
+                    // access
+                    let want_hit = ways.contains(&addr);
+                    let got = c.access(addr).is_some();
+                    assert_eq!(got, want_hit, "access({addr:#x})");
+                    if want_hit {
+                        ways.retain(|&a| a != addr);
+                        ways.push(addr);
+                    }
+                }
+                1 => {
+                    // allocate
+                    c.allocate(addr, LineState::Shared, addr);
+                    if ways.contains(&addr) {
+                        ways.retain(|&a| a != addr);
+                    } else if ways.len() == assoc {
+                        ways.remove(0); // evict LRU
+                    }
+                    ways.push(addr);
+                }
+                _ => {
+                    // invalidate
+                    let had = ways.contains(&addr);
+                    let got = c.invalidate(addr).is_some();
+                    assert_eq!(got, had, "invalidate({addr:#x})");
+                    ways.retain(|&a| a != addr);
+                }
+            }
+        }
+        // final content agrees
+        for (set, ways) in &model {
+            for &a in ways {
+                assert!(
+                    c.peek(a).is_some(),
+                    "model has {a:#x} (set {set}), cache does not"
+                );
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// MessageBuffer/Inbox: drained messages come out in global arrival order;
+// capacity is never exceeded.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_inbox_global_arrival_order() {
+    check("inbox-order", 50, |g, _| {
+        let nbufs = g.range_usize(1, 4);
+        let caps: Vec<usize> = (0..nbufs).map(|_| usize::MAX).collect();
+        let inbox = new_inbox(&caps);
+        let mut ib = inbox.lock().unwrap();
+        let n = g.range_usize(1, 100);
+        // Feed via the public force-less path: bufs are pub within Inbox.
+        for _ in 0..n {
+            let b = g.range_usize(0, nbufs - 1);
+            let arrival = g.range_u64(0, 50);
+            let msg = RubyMsg {
+                kind: MsgKind::ReadShared,
+                addr: arrival, // encode arrival in addr for checking
+                value: 0,
+                src: CompId(0),
+                dst: CompId(1),
+                txn: 0,
+                core: 0,
+                issued: 0,
+            };
+            ib.bufs[b].push_for_test(arrival, msg);
+        }
+        let drained = ib.drain_ready(25);
+        let mut last = 0u64;
+        for m in &drained {
+            assert!(m.addr >= last, "arrival order violated");
+            assert!(m.addr <= 25, "not-ready message drained");
+            last = m.addr;
+        }
+        assert_eq!(ib.total_pending() + drained.len(), n);
+    });
+}
+
+// ---------------------------------------------------------------------
+// Crossbar: at most one holder per layer at any time; every waiter
+// eventually gets the layer.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_xbar_layer_exclusive_and_fair() {
+    check("xbar-exclusive", 40, |g, _| {
+        use parti_sim::xbar::IO_BASE;
+        let x = default_xbar(&[CompId(100), CompId(101)]);
+        let initiators: Vec<CompId> = (0..6).map(CompId).collect();
+        let mut holder: Option<CompId> = None;
+        let mut granted_total = 0usize;
+        for _ in 0..g.range_usize(10, 200) {
+            let who = *g.pick(&initiators);
+            if holder == Some(who) {
+                // holder releases
+                let next = x.release(IO_BASE, who);
+                holder = None;
+                if let Some(w) = next {
+                    // the woken waiter must be able to take the layer
+                    match x.try_occupy(IO_BASE, w) {
+                        Occupy::Granted { .. } => {
+                            holder = Some(w);
+                            granted_total += 1;
+                        }
+                        other => panic!("woken waiter rejected: {other:?}"),
+                    }
+                }
+            } else {
+                match x.try_occupy(IO_BASE, who) {
+                    Occupy::Granted { .. } => {
+                        assert!(holder.is_none(), "two holders at once");
+                        holder = Some(who);
+                        granted_total += 1;
+                    }
+                    Occupy::Busy => assert!(holder.is_some()),
+                    Occupy::Contended => {} // single-threaded: cannot happen
+                    Occupy::NoTarget => panic!("mapped address"),
+                }
+            }
+        }
+        assert!(granted_total > 0);
+    });
+}
+
+// ---------------------------------------------------------------------
+// Host model: speedup is monotone in host cores; makespan >= max work and
+// >= total/H (standard scheduling lower bounds).
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_host_model_bounds_and_monotonicity() {
+    check("host-model", 50, |g, _| {
+        let quanta = g.range_usize(1, 20);
+        let domains = g.range_usize(1, 16);
+        let work = WorkProfile {
+            per_quantum: (0..quanta)
+                .map(|_| {
+                    (0..domains).map(|_| g.range_u64(0, 500) as u32).collect()
+                })
+                .collect(),
+        };
+        let cost = 10.0;
+        let mk = |h: usize| HostModel {
+            h_cores: h,
+            event_cost_ns: cost,
+            barrier_cost_ns: 0.0,
+        };
+        for q in &work.per_quantum {
+            let h = g.range_usize(1, 8);
+            let m = mk(h).quantum_makespan(q);
+            let total: f64 = q.iter().map(|&w| w as f64 * cost).sum();
+            let maxw = q.iter().map(|&w| w as f64 * cost).fold(0.0, f64::max);
+            assert!(m >= maxw - 1e-9, "makespan below max work");
+            assert!(m >= total / h as f64 - 1e-9, "makespan below total/H");
+            assert!(m <= total + 1e-9, "makespan above serial total");
+        }
+        let serial_events: u64 = work.total();
+        let s2 = mk(2).speedup(serial_events, &work);
+        let s8 = mk(8).speedup(serial_events, &work);
+        assert!(s8 >= s2 - 1e-9, "more host cores must not hurt");
+    });
+}
+
+// ---------------------------------------------------------------------
+// addrgen: structural invariants for arbitrary parameters.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_addrgen_structural_invariants() {
+    check("addrgen-invariants", 40, |g, _| {
+        let p = AddrGenParams {
+            seed: g.u64(),
+            core_id: g.range_u64(0, 127),
+            offset: g.range_u64(0, 1 << 20),
+            private_size: 1 << g.range_usize(10, 22),
+            shared_size: 1 << g.range_usize(16, 25),
+            stride: g.range_u64(1, 64),
+            share_milli: g.range_u64(0, 1000),
+            random_milli: g.range_u64(0, 1000),
+            store_milli: g.range_u64(0, 1000),
+            compute_base: g.range_u64(0, 16),
+            compute_spread: g.range_u64(1, 16),
+            ..Default::default()
+        };
+        let ops = addrgen(&p, 512);
+        for o in &ops {
+            assert_eq!(o.addr % 64, 0, "line alignment");
+            let in_priv = o.addr >= p.private_base
+                && o.addr < p.private_base + p.private_size;
+            let in_shared = o.addr >= p.shared_base
+                && o.addr < p.shared_base + p.shared_size;
+            assert!(in_priv || in_shared, "address outside both regions");
+            assert!(o.gap as u64 >= p.compute_base);
+            assert!((o.gap as u64) < p.compute_base + p.compute_spread.max(1));
+        }
+        if p.share_milli == 0 {
+            assert!(ops.iter().all(|o| o.addr < p.shared_base));
+        }
+        if p.share_milli == 1000 {
+            assert!(ops.iter().all(|o| o.addr >= p.shared_base));
+        }
+    });
+}
