@@ -2,6 +2,9 @@
 //! criterion is unavailable; these benches measure with `std::time::Instant`
 //! and print median-of-N results in a criterion-like format).
 
+// Included per-bench via #[path]; not every bench uses every helper.
+#![allow(dead_code)]
+
 use std::time::Instant;
 
 /// Measure `f` `runs` times; returns (median_ns, min_ns, max_ns).

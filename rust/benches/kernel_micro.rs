@@ -1,36 +1,133 @@
 //! Micro-benchmarks of the simulation kernel hot paths (the §Perf targets
-//! for L3): event-queue throughput, message-buffer ops, cache-array
-//! lookups, and end-to-end serial events/s.
+//! for L3): event-queue throughput (heap vs bucketed), cross-domain
+//! injector throughput (mutex baseline vs lock-free mailbox), message
+//! buffers, cache arrays, and end-to-end kernel events/s on the paper's
+//! 16-domain configuration.
+//!
+//! Writes the scheduler-path numbers to `BENCH_sched.json` (override the
+//! path with `BENCH_SCHED_JSON`) so the perf trajectory of the `sched/`
+//! layer is recorded per run.
 
 #[path = "bench_util.rs"]
 mod bench_util;
-use bench_util::bench;
+use bench_util::{bench, measure};
+
+use std::sync::Mutex;
 
 use parti_sim::config::RunConfig;
 use parti_sim::harness::{make_workload, run_with_workload};
 use parti_sim::mem::{CacheArray, LineState};
 use parti_sim::ruby::new_inbox;
 use parti_sim::ruby::{MsgKind, RubyMsg};
-use parti_sim::sim::event::{prio, EventKind};
+use parti_sim::sched::{Mailbox, QueueKind, SchedQueue, Scheduler};
+use parti_sim::sim::event::{prio, Event, EventKind};
 use parti_sim::sim::ids::CompId;
-use parti_sim::sim::queue::EventQueue;
+use parti_sim::util::json::JsonObj;
+
+/// The old `Injector` (pre-`sched/` baseline), kept here as the reference
+/// point for the lock-free mailbox numbers.
+#[derive(Default)]
+struct MutexInjector {
+    queue: Mutex<Vec<Event>>,
+}
+
+impl MutexInjector {
+    fn push(&self, ev: Event) {
+        self.queue.lock().unwrap().push(ev);
+    }
+
+    fn drain(&self) -> Vec<Event> {
+        let mut v = std::mem::take(&mut *self.queue.lock().unwrap());
+        v.sort_by_key(|e| (e.tick, e.prio, e.target.0, e.seq));
+        v
+    }
+}
+
+fn queue_workload(q: &mut SchedQueue, n: u64) {
+    for i in 0..n {
+        q.schedule(
+            (i.wrapping_mul(2654435761)) % 1_000_000,
+            prio::DEFAULT,
+            CompId(0),
+            EventKind::CpuTick,
+        );
+    }
+    while q.pop().is_some() {}
+}
+
+fn ev(tick: u64, target: u32) -> Event {
+    Event {
+        tick,
+        prio: prio::DEFAULT,
+        seq: 0,
+        target: CompId(target),
+        kind: EventKind::CpuTick,
+    }
+}
+
+/// 4 producer threads × `per` events each, then a border drain — the
+/// mailbox's real access pattern (producers quiesce before the drain).
+fn injector_round<P: Fn(Event) + Sync, D: FnOnce() -> usize>(
+    per: u64,
+    push: P,
+    drain: D,
+) {
+    std::thread::scope(|s| {
+        for p in 0..4u64 {
+            let push = &push;
+            s.spawn(move || {
+                for i in 0..per {
+                    push(ev(p * per + i, p as u32));
+                }
+            });
+        }
+    });
+    assert_eq!(drain(), 4 * per as usize);
+}
 
 fn main() {
     println!("== kernel_micro ==");
+    let mut json = JsonObj::new();
 
-    // Event queue: schedule+pop 100k events with mixed ticks.
-    bench("event_queue schedule+pop 100k", 11, || {
-        let mut q = EventQueue::new();
-        for i in 0..100_000u64 {
-            q.schedule(
-                (i.wrapping_mul(2654435761)) % 1_000_000,
-                prio::DEFAULT,
-                CompId(0),
-                EventKind::CpuTick,
-            );
-        }
-        while q.pop().is_some() {}
+    // Event queue: schedule+pop 100k events with mixed ticks, both kinds.
+    let mut queue_ns = Vec::new();
+    for kind in [QueueKind::Heap, QueueKind::Bucket] {
+        let (m, lo, hi) = measure(11, || {
+            let mut q = SchedQueue::new(kind);
+            queue_workload(&mut q, 100_000);
+        });
+        bench_util::report(
+            &format!("event_queue[{kind:?}] schedule+pop 100k"),
+            m,
+            lo,
+            hi,
+        );
+        queue_ns.push((kind, m));
+    }
+    json = json.obj(
+        "event_queue_100k",
+        JsonObj::new()
+            .u64("heap_median_ns", queue_ns[0].1 as u64)
+            .u64("bucket_median_ns", queue_ns[1].1 as u64),
+    );
+
+    // Cross-domain injector: 4 producers × 25k, then one border drain.
+    let (mutex_m, lo, hi) = measure(11, || {
+        let inj = MutexInjector::default();
+        injector_round(25_000, |e| inj.push(e), || inj.drain().len());
     });
+    bench_util::report("injector[mutex] 4x25k push+drain", mutex_m, lo, hi);
+    let (mb_m, lo, hi) = measure(11, || {
+        let mb = Mailbox::default();
+        injector_round(25_000, |e| mb.push(e), || mb.drain().len());
+    });
+    bench_util::report("injector[lockfree] 4x25k push+drain", mb_m, lo, hi);
+    json = json.obj(
+        "injector_100k",
+        JsonObj::new()
+            .u64("mutex_median_ns", mutex_m as u64)
+            .u64("lockfree_median_ns", mb_m as u64),
+    );
 
     // Message buffer: enqueue/drain 100k messages across 3 buffers.
     bench("inbox push+drain 100k", 11, || {
@@ -72,11 +169,47 @@ fn main() {
         std::hint::black_box(hits);
     });
 
+    // End-to-end: the acceptance configuration — 16 domains (15 cores +
+    // shared) on the deterministic PDES kernel, heap vs bucket.
+    let mut e2e = JsonObj::new();
+    for kind in [QueueKind::Heap, QueueKind::Bucket] {
+        let mut cfg = RunConfig {
+            app: "blackscholes".to_string(),
+            ops_per_core: 2048,
+            mode: parti_sim::config::Mode::Virtual,
+            queue: kind,
+            ..Default::default()
+        };
+        cfg.system.cores = 15; // + shared domain = 16 event queues
+        let w = make_workload(&cfg).expect("workload");
+        let mut events_per_sec = 0.0;
+        let (m, lo, hi) = measure(5, || {
+            let r = run_with_workload(&cfg, &w).unwrap();
+            events_per_sec = r.events_per_sec();
+        });
+        bench_util::report(
+            &format!("virtual 16-domain e2e [{kind:?}]"),
+            m,
+            lo,
+            hi,
+        );
+        println!("  {kind:?} kernel throughput: {events_per_sec:.0} events/s");
+        e2e = e2e.obj(
+            &format!("{kind:?}").to_lowercase(),
+            JsonObj::new()
+                .u64("median_ns", m as u64)
+                .f64("events_per_sec", events_per_sec),
+        );
+    }
+    json = json.obj("virtual_16_domain_e2e", e2e);
+
     // End-to-end serial kernel throughput (the L3 §Perf headline).
-    let mut cfg = RunConfig::default();
-    cfg.app = "blackscholes".to_string();
+    let mut cfg = RunConfig {
+        app: "blackscholes".to_string(),
+        ops_per_core: 4096,
+        ..Default::default()
+    };
     cfg.system.cores = 4;
-    cfg.ops_per_core = 4096;
     let w = make_workload(&cfg).expect("workload");
     let mut events_per_sec = 0.0;
     bench("serial end-to-end 4c x 4096 ops", 5, || {
@@ -84,4 +217,16 @@ fn main() {
         events_per_sec = r.events_per_sec();
     });
     println!("serial kernel throughput: {events_per_sec:.0} events/s");
+    json = json.f64("serial_events_per_sec", events_per_sec);
+
+    // Default to the tracked repo-root file regardless of cargo's CWD.
+    let path = std::env::var("BENCH_SCHED_JSON").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sched.json").to_string()
+    });
+    let body = json.str("status", "measured").build();
+    if let Err(e) = std::fs::write(&path, format!("{body}\n")) {
+        eprintln!("could not write {path}: {e}");
+    } else {
+        println!("wrote {path}");
+    }
 }

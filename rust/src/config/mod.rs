@@ -1,6 +1,7 @@
 //! System configuration (Table 2 of the paper) and run configuration.
 
 use crate::cpu::CpuModel;
+use crate::sched::QueueKind;
 use crate::sim::time::{Tick, NS};
 
 /// Cache geometry + latency.
@@ -119,6 +120,8 @@ pub struct RunConfig {
     pub max_ticks: Tick,
     /// Modeled host cores for virtual mode.
     pub host_cores: usize,
+    /// Event-queue implementation (see [`QueueKind`]).
+    pub queue: QueueKind,
 }
 
 impl Default for RunConfig {
@@ -133,6 +136,7 @@ impl Default for RunConfig {
             seed: 42,
             max_ticks: 10_000_000_000_000, // 10 s simulated
             host_cores: 64,
+            queue: QueueKind::default(),
         }
     }
 }

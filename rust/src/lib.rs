@@ -25,6 +25,7 @@ pub mod pdes;
 pub mod proto;
 pub mod ruby;
 pub mod runtime;
+pub mod sched;
 pub mod sim;
 pub mod stats;
 pub mod util;

@@ -17,6 +17,7 @@ use parti_sim::harness::figures::{
 };
 use parti_sim::harness::{compare_modes, run_once, tables};
 use parti_sim::pdes::HostModel;
+use parti_sim::sched::QueueKind;
 use parti_sim::sim::time::NS;
 use parti_sim::stats::Summary;
 use parti_sim::util::cli::Args;
@@ -43,6 +44,7 @@ RUN/COMPARE/FFWD FLAGS
   --cores N         simulated cores                   [4]
   --cpu MODEL       o3|minor|atomic|kvm               [o3]
   --mode MODE       serial|parallel|virtual           [serial]
+  --queue KIND      bucket|heap event queue           [bucket]
   --quantum-ns N    quantum t_qΔ in ns                [16]
   --ops N           trace ops per core                [4096]
   --seed N                                            [42]
@@ -72,6 +74,9 @@ fn run_config(a: &Args) -> Result<RunConfig> {
     let mode = a.get_str("mode", "serial");
     cfg.mode = Mode::parse(&mode)
         .ok_or_else(|| anyhow::anyhow!("bad --mode {mode}"))?;
+    let queue = a.get_str("queue", "bucket");
+    cfg.queue = QueueKind::parse(&queue)
+        .ok_or_else(|| anyhow::anyhow!("bad --queue {queue}"))?;
     cfg.quantum = a.get_u64("quantum-ns", 16) * NS;
     cfg.host_cores = a.get_usize("host-cores", 64);
     Ok(cfg)

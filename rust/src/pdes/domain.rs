@@ -1,19 +1,19 @@
-//! A time domain: one event queue plus the components it owns.
+//! A time domain: one scheduler queue plus the components it owns.
 //!
 //! All three kernels (serial, threaded-parallel, virtual-parallel) drive
 //! domains through the same [`Domain::run_window`] loop, so the model code
 //! paths are identical — only synchronisation differs.
 
+use crate::sched::{QueueKind, SchedQueue, Scheduler};
 use crate::sim::component::{Component, Ctx};
 use crate::sim::ids::{CompId, DomainId};
-use crate::sim::queue::EventQueue;
 use crate::sim::shared::SharedState;
 use crate::sim::stats::StatSink;
 use crate::sim::time::Tick;
 
 pub struct Domain {
     pub id: DomainId,
-    pub eq: EventQueue,
+    pub eq: SchedQueue,
     /// Components owned by this domain, dense local index.
     pub comps: Vec<Box<dyn Component>>,
     /// Global ids matching `comps` (for dispatch assertions / stats).
@@ -23,10 +23,10 @@ pub struct Domain {
 }
 
 impl Domain {
-    pub fn new(id: DomainId) -> Self {
+    pub fn new(id: DomainId, queue: QueueKind) -> Self {
         Domain {
             id,
-            eq: EventQueue::new(),
+            eq: SchedQueue::new(queue),
             comps: Vec::new(),
             comp_ids: Vec::new(),
             now: 0,
@@ -65,7 +65,9 @@ impl Domain {
         executed
     }
 
-    /// Merge events other domains injected for us (done at quantum borders).
+    /// Merge events other domains injected for us. Only called at quantum
+    /// borders while all producers are parked at the barrier (the
+    /// [`crate::sched::Mailbox`] single-consumer contract).
     pub fn drain_injections(&mut self, shared: &SharedState) {
         for ev in shared.injectors[self.id.index()].drain() {
             self.eq.insert(ev);

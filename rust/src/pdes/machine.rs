@@ -6,6 +6,7 @@
 
 use std::sync::Arc;
 
+use crate::sched::{QueueKind, SchedQueue, Scheduler};
 use crate::sim::component::Component;
 use crate::sim::ids::{CompId, DomainId};
 use crate::sim::shared::SharedState;
@@ -31,7 +32,7 @@ impl Machine {
 
     /// Total events executed across all domains.
     pub fn events_executed(&self) -> u64 {
-        self.domains.iter().map(|d| d.eq.executed).sum()
+        self.domains.iter().map(|d| d.eq.executed()).sum()
     }
 
     pub fn collect_stats(&self) -> StatSink {
@@ -49,20 +50,39 @@ pub struct MachineBuilder {
     locate: Vec<(DomainId, u32)>,
     n_cores: u32,
     quantum: Tick,
+    queue: QueueKind,
 }
 
 impl MachineBuilder {
-    /// `n_domains` event queues; `quantum == Tick::MAX` disables windowing
-    /// (the serial reference configuration uses exactly one domain).
+    /// `n_domains` scheduler queues; `quantum == Tick::MAX` disables
+    /// windowing (the serial reference configuration uses exactly one
+    /// domain). Queues default to [`QueueKind::default`]; override with
+    /// [`MachineBuilder::set_queue`] before components schedule anything.
     pub fn new(n_domains: usize, quantum: Tick) -> Self {
+        let queue = QueueKind::default();
         MachineBuilder {
             domains: (0..n_domains)
-                .map(|i| Domain::new(DomainId(i as u32)))
+                .map(|i| Domain::new(DomainId(i as u32), queue))
                 .collect(),
             locate: Vec::new(),
             n_cores: 0,
             quantum,
+            queue,
         }
+    }
+
+    /// Select the event-queue implementation for every domain. Must be
+    /// called before `finish` (queues are empty until component init).
+    pub fn set_queue(&mut self, kind: QueueKind) {
+        self.queue = kind;
+        for d in &mut self.domains {
+            debug_assert!(d.eq.is_empty(), "set_queue after events scheduled");
+            d.eq = SchedQueue::new(kind);
+        }
+    }
+
+    pub fn queue_kind(&self) -> QueueKind {
+        self.queue
     }
 
     /// Reserve the id a component will get when added next.

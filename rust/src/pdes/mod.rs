@@ -9,8 +9,10 @@
 //!   deterministically on one thread, recording a per-quantum work profile
 //!   for the [`virtual_host::HostModel`] speedup estimator (the 64-core-host
 //!   substitution, DESIGN.md §3).
+//!
+//! Event queues, cross-domain mailboxes and the quantum barrier live in
+//! [`crate::sched`]; every kernel schedules exclusively through that API.
 
-pub mod barrier;
 pub mod domain;
 pub mod machine;
 pub mod parallel;

@@ -1,32 +1,42 @@
 //! The threaded PDES kernel (parti-gem5 proper, Fig. 1b).
 //!
-//! One host thread per time domain; a global quantum barrier at every
-//! border. Within a window, domains execute their local event queues
-//! freely; cross-domain schedules go through the injectors with the
-//! postpone-to-border rule (see [`crate::sim::component::Ctx`]).
+//! One host thread per time domain; a global combining-tree barrier
+//! ([`crate::sched::TreeBarrier`]) at every border. Within a window,
+//! domains execute their local event queues freely; cross-domain schedules
+//! go through the lock-free mailboxes with the postpone-to-border rule
+//! (see [`crate::sim::component::Ctx`]).
 //!
-//! Termination uses a two-phase verdict so that every thread exits at the
-//! same border (a single-phase check races: a fast thread could drain its
-//! injector before a slow thread scans it, making the "all quiescent"
-//! verdict non-unanimous and deadlocking the barrier):
+//! Each border runs a **three-phase** protocol:
 //!
-//! 1. barrier — every thread has finished its window and published its
-//!    `next_tick`; nobody mutates queues.
-//! 2. the leader computes the verdict (stop flag / global quiescence /
-//!    max-ticks) while the others wait.
-//! 3. barrier — everyone reads the same verdict, then drains and either
-//!    continues or breaks.
+//! 1. **Freeze** barrier — every thread has finished its window; no queue
+//!    or mailbox mutates past this point. Draining before this barrier
+//!    would race with producers still inside the window (and made the old
+//!    kernel's drain *batching* host-timing-dependent: a fast thread could
+//!    start its next window and push while a slow thread was still
+//!    draining). With the freeze in place, every mailbox drain sees exactly
+//!    the events of the closed window — the drain-sort is deterministic and
+//!    the [`crate::sched::Mailbox`] can reclaim fully-consumed segments
+//!    with no epochs.
+//! 2. Every thread drains its own mailbox (single consumer) and publishes
+//!    its post-drain `next_tick`; the **publish** barrier then makes all of
+//!    them visible.
+//! 3. The leader of the publish barrier computes the verdict (stop flag /
+//!    global quiescence / max-ticks) while the others wait at the
+//!    **verdict** barrier; after it, everyone reads the same verdict and
+//!    either continues or breaks. (Quiescence is simply "all post-drain
+//!    next_ticks are `Tick::MAX`" — mailboxes are empty by construction.)
 //!
 //! A panic inside a domain (a model bug) aborts the barrier so the
 //! remaining threads exit instead of deadlocking; the panic is re-thrown
 //! on the caller thread.
 
-use std::sync::atomic::{AtomicU64, AtomicU8, Ordering::SeqCst};
+use std::sync::atomic::Ordering::{Acquire, Relaxed, Release};
+use std::sync::atomic::{AtomicU64, AtomicU8};
 use std::time::Instant;
 
+use crate::sched::{Outcome, TreeBarrier};
 use crate::sim::time::Tick;
 
-use super::barrier::{Outcome, QuantumBarrier};
 use super::machine::Machine;
 use super::result::{PdesSnapshot, RunResult};
 
@@ -40,7 +50,7 @@ pub fn run_parallel(mut machine: Machine, max_ticks: Tick) -> RunResult {
     let quantum = shared.quantum;
     assert!(quantum > 0 && quantum < Tick::MAX, "parallel requires a quantum");
 
-    let barrier = QuantumBarrier::new(n);
+    let barrier = TreeBarrier::new(n);
     let next_ticks: Vec<AtomicU64> =
         (0..n).map(|_| AtomicU64::new(0)).collect();
     let verdict = AtomicU8::new(VERDICT_CONTINUE);
@@ -56,40 +66,52 @@ pub fn run_parallel(mut machine: Machine, max_ticks: Tick) -> RunResult {
             let verdict = &verdict;
             handles.push(scope.spawn(move || {
                 let body = std::panic::AssertUnwindSafe(|| {
+                    let mut w = barrier.waiter(di);
                     let mut window_end = quantum;
                     dom.init_components(shared, window_end);
                     loop {
                         dom.run_window(shared, window_end.min(max_ticks));
-                        next_ticks[di].store(dom.next_tick(), SeqCst);
 
-                        // Phase 1: all windows finished, state frozen.
-                        match barrier.wait() {
+                        // Phase 1: freeze — all windows finished, no
+                        // producer touches any mailbox past this point.
+                        match barrier.wait(&mut w) {
                             Outcome::Aborted => return,
                             Outcome::Leader => {
-                                shared.pdes.barriers.fetch_add(1, SeqCst);
+                                shared.pdes.barriers.fetch_add(1, Relaxed);
+                            }
+                            Outcome::Follower => {}
+                        }
+
+                        // Quiescent span: single-consumer drain, then
+                        // publish the post-drain horizon.
+                        dom.drain_injections(shared);
+                        next_ticks[di].store(dom.next_tick(), Release);
+
+                        // Phase 2: publish — all post-drain next_ticks are
+                        // now visible; the leader computes the verdict
+                        // while the others park in phase 3.
+                        match barrier.wait(&mut w) {
+                            Outcome::Aborted => return,
+                            Outcome::Leader => {
                                 let quiescent = next_ticks
                                     .iter()
-                                    .all(|t| t.load(SeqCst) == Tick::MAX)
-                                    && shared
-                                        .injectors
-                                        .iter()
-                                        .all(|i| i.is_empty());
+                                    .all(|t| t.load(Acquire) == Tick::MAX);
                                 let stop = shared.should_stop()
                                     || quiescent
                                     || window_end >= max_ticks;
                                 verdict.store(
                                     if stop { VERDICT_STOP } else { VERDICT_CONTINUE },
-                                    SeqCst,
+                                    Release,
                                 );
                             }
                             Outcome::Follower => {}
                         }
-                        // Phase 2: everyone adopts the leader's verdict.
-                        if barrier.wait() == Outcome::Aborted {
+
+                        // Phase 3: verdict — everyone reads the same one.
+                        if barrier.wait(&mut w) == Outcome::Aborted {
                             return;
                         }
-                        dom.drain_injections(shared);
-                        if verdict.load(SeqCst) == VERDICT_STOP {
+                        if verdict.load(Acquire) == VERDICT_STOP {
                             break;
                         }
                         window_end += quantum;

@@ -7,6 +7,7 @@
 
 use std::time::Instant;
 
+use crate::sched::Scheduler;
 use crate::sim::time::Tick;
 
 use super::machine::Machine;

@@ -46,18 +46,17 @@ pub fn run_virtual(mut machine: Machine, max_ticks: Tick) -> RunResult {
             .barriers
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
 
+        // Same border verdict as the threaded kernel's three-phase
+        // protocol: drain first, then decide on the post-drain horizon
+        // (mailboxes are empty by construction after draining).
         let stop = shared.should_stop();
-        let quiescent = machine
-            .domains
-            .iter_mut()
-            .all(|d| d.next_tick() == Tick::MAX)
-            && shared.injectors.iter().all(|i| i.is_empty());
         for dom in machine.domains.iter_mut() {
             dom.drain_injections(&shared);
         }
-        // After draining, quiescence only holds if nothing was injected.
-        let quiescent = quiescent
-            && machine.domains.iter_mut().all(|d| d.next_tick() == Tick::MAX);
+        let quiescent = machine
+            .domains
+            .iter_mut()
+            .all(|d| d.next_tick() == Tick::MAX);
         if stop || quiescent || window_end >= max_ticks {
             break;
         }

@@ -119,6 +119,7 @@ pub fn build_system(cfg: &RunConfig, workload: &Workload) -> BuiltSystem {
     };
 
     let mut b = MachineBuilder::new(n_domains, quantum);
+    b.set_queue(cfg.queue);
     b.set_cores(n as u32);
 
     let noc = sys.noc_latency();
@@ -417,6 +418,7 @@ pub fn build_atomic_system(
     );
 
     let mut b = MachineBuilder::new(1, Tick::MAX);
+    b.set_queue(cfg.queue);
     b.set_cores(n as u32);
     for i in 0..n {
         if kvm {

@@ -8,13 +8,14 @@
 //! Python never runs here — this module only loads and executes the
 //! artifacts. The procedural generator in [`crate::workload::gen`] is the
 //! bit-exact fallback when no artifacts directory is available.
+//!
+//! The `xla` crate cannot be fetched in the offline build environment, so
+//! the real implementation is gated behind the `pjrt` feature; without it
+//! this module compiles as a stub with the same API that reports artifacts
+//! as unavailable, and every consumer falls back to the procedural
+//! generator (their artifact paths skip gracefully by design).
 
-use std::path::{Path, PathBuf};
-use std::sync::Arc;
-
-use anyhow::{anyhow, Context, Result};
-
-use crate::workload::{AddrGenParams, CoreTrace, Workload};
+use std::path::PathBuf;
 
 /// Trace length produced per `workload.hlo.txt` execution (must match
 /// python/compile/model.py TRACE_N).
@@ -22,156 +23,268 @@ pub const TRACE_N: usize = 16384;
 /// Payload batch size (model.py PAYLOAD_B).
 pub const PAYLOAD_B: usize = 4096;
 
-/// A compiled artifact ready to execute.
-pub struct LoadedExe {
-    exe: xla::PjRtLoadedExecutable,
+/// Default artifacts location: `$PARTI_ARTIFACTS` or `./artifacts`.
+fn default_artifact_dir() -> PathBuf {
+    std::env::var("PARTI_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
 }
 
-/// The PJRT client plus the compiled artifacts of this repo.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use std::path::{Path, PathBuf};
+    use std::sync::Arc;
 
-impl Runtime {
-    /// Create a CPU PJRT client rooted at `artifacts_dir`.
-    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
-        Ok(Runtime { client, dir: artifacts_dir.into() })
+    use anyhow::{anyhow, Context, Result};
+
+    use crate::workload::{AddrGenParams, CoreTrace, Workload};
+
+    use super::{PAYLOAD_B, TRACE_N};
+
+    /// A compiled artifact ready to execute.
+    pub struct LoadedExe {
+        exe: xla::PjRtLoadedExecutable,
     }
 
-    /// Default artifacts location: `$PARTI_ARTIFACTS` or `./artifacts`.
-    pub fn default_dir() -> PathBuf {
-        std::env::var("PARTI_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    /// The PJRT client plus the compiled artifacts of this repo.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
     }
 
-    pub fn artifacts_available(dir: &Path) -> bool {
-        dir.join("workload.hlo.txt").exists()
+    impl Runtime {
+        /// Create a CPU PJRT client rooted at `artifacts_dir`.
+        pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+            Ok(Runtime { client, dir: artifacts_dir.into() })
+        }
+
+        pub fn default_dir() -> PathBuf {
+            super::default_artifact_dir()
+        }
+
+        pub fn artifacts_available(dir: &Path) -> bool {
+            dir.join("workload.hlo.txt").exists()
+        }
+
+        /// Load + compile one HLO-text artifact.
+        pub fn load(&self, name: &str) -> Result<LoadedExe> {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            Ok(LoadedExe { exe })
+        }
     }
 
-    /// Load + compile one HLO-text artifact.
-    pub fn load(&self, name: &str) -> Result<LoadedExe> {
-        let path = self.dir.join(format!("{name}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-        Ok(LoadedExe { exe })
+    impl LoadedExe {
+        /// Execute with literal inputs; returns the flattened tuple elements.
+        pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+            let result = self
+                .exe
+                .execute::<xla::Literal>(inputs)
+                .map_err(|e| anyhow!("execute: {e:?}"))?;
+            let mut lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            // aot.py lowers with return_tuple=True.
+            let parts =
+                lit.decompose_tuple().map_err(|e| anyhow!("tuple: {e:?}"))?;
+            Ok(parts)
+        }
     }
-}
 
-impl LoadedExe {
-    /// Execute with literal inputs; returns the flattened tuple elements.
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let result = self
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow!("execute: {e:?}"))?;
-        let mut lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        // aot.py lowers with return_tuple=True.
-        let parts =
-            lit.decompose_tuple().map_err(|e| anyhow!("tuple: {e:?}"))?;
-        Ok(parts)
+    /// Generate one core's trace via the `workload.hlo.txt` artifact.
+    pub fn artifact_trace(
+        exe: &LoadedExe,
+        params: &AddrGenParams,
+        n: usize,
+    ) -> Result<CoreTrace> {
+        assert!(n <= TRACE_N, "artifact emits TRACE_N ops per call");
+        let vec = params.to_vec();
+        let input = xla::Literal::vec1(&vec);
+        let parts = exe.run(&[input])?;
+        anyhow::ensure!(parts.len() == 3, "expected 3 outputs, got {}", parts.len());
+        let addr: Vec<u64> =
+            parts[0].to_vec().map_err(|e| anyhow!("addr: {e:?}"))?;
+        let is_store: Vec<u32> =
+            parts[1].to_vec().map_err(|e| anyhow!("store: {e:?}"))?;
+        let gap: Vec<u32> =
+            parts[2].to_vec().map_err(|e| anyhow!("gap: {e:?}"))?;
+        Ok(CoreTrace::from_arrays(
+            params.core_id as u16,
+            addr[..n].to_vec(),
+            is_store[..n].to_vec(),
+            gap[..n].to_vec(),
+        ))
     }
-}
 
-/// Generate one core's trace via the `workload.hlo.txt` artifact.
-pub fn artifact_trace(
-    exe: &LoadedExe,
-    params: &AddrGenParams,
-    n: usize,
-) -> Result<CoreTrace> {
-    assert!(n <= TRACE_N, "artifact emits TRACE_N ops per call");
-    let vec = params.to_vec();
-    let input = xla::Literal::vec1(&vec);
-    let parts = exe.run(&[input])?;
-    anyhow::ensure!(parts.len() == 3, "expected 3 outputs, got {}", parts.len());
-    let addr: Vec<u64> =
-        parts[0].to_vec().map_err(|e| anyhow!("addr: {e:?}"))?;
-    let is_store: Vec<u32> =
-        parts[1].to_vec().map_err(|e| anyhow!("store: {e:?}"))?;
-    let gap: Vec<u32> = parts[2].to_vec().map_err(|e| anyhow!("gap: {e:?}"))?;
-    Ok(CoreTrace::from_arrays(
-        params.core_id as u16,
-        addr[..n].to_vec(),
-        is_store[..n].to_vec(),
-        gap[..n].to_vec(),
-    ))
-}
-
-/// Build a whole workload from the AOT artifact (the production path).
-pub fn artifact_workload(
-    rt: &Runtime,
-    app: &crate::workload::App,
-    n_cores: usize,
-    ops_per_core: usize,
-    seed: u64,
-) -> Result<Workload> {
-    anyhow::ensure!(
-        ops_per_core <= TRACE_N,
-        "ops_per_core {ops_per_core} exceeds artifact TRACE_N {TRACE_N}"
-    );
-    let exe = rt.load("workload").context("loading workload artifact")?;
-    let cores = (0..n_cores as u64)
-        .map(|c| {
-            let p = app.params_for_core(c, seed);
-            artifact_trace(&exe, &p, ops_per_core).map(Arc::new)
+    /// Build a whole workload from the AOT artifact (the production path).
+    pub fn artifact_workload(
+        rt: &Runtime,
+        app: &crate::workload::App,
+        n_cores: usize,
+        ops_per_core: usize,
+        seed: u64,
+    ) -> Result<Workload> {
+        anyhow::ensure!(
+            ops_per_core <= TRACE_N,
+            "ops_per_core {ops_per_core} exceeds artifact TRACE_N {TRACE_N}"
+        );
+        let exe = rt.load("workload").context("loading workload artifact")?;
+        let cores = (0..n_cores as u64)
+            .map(|c| {
+                let p = app.params_for_core(c, seed);
+                artifact_trace(&exe, &p, ops_per_core).map(Arc::new)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Workload {
+            cores,
+            barrier_every: app.barrier_every,
+            name: app.traits_.name.to_string(),
         })
-        .collect::<Result<Vec<_>>>()?;
-    Ok(Workload {
-        cores,
-        barrier_every: app.barrier_every,
-        name: app.traits_.name.to_string(),
-    })
+    }
+
+    /// Execute the Black-Scholes payload artifact (example/functional checks).
+    pub fn blackscholes_payload(
+        rt: &Runtime,
+        spot: &[f32],
+        strike: &[f32],
+        rate: &[f32],
+        vol: &[f32],
+        time: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        anyhow::ensure!(
+            spot.len() == PAYLOAD_B,
+            "payload batch must be {PAYLOAD_B}"
+        );
+        let exe = rt.load("blackscholes")?;
+        let lits: Vec<xla::Literal> = [spot, strike, rate, vol, time]
+            .iter()
+            .map(|v| xla::Literal::vec1(v))
+            .collect();
+        let parts = exe.run(&lits)?;
+        anyhow::ensure!(parts.len() == 2, "expected (call, put)");
+        Ok((
+            parts[0].to_vec().map_err(|e| anyhow!("call: {e:?}"))?,
+            parts[1].to_vec().map_err(|e| anyhow!("put: {e:?}"))?,
+        ))
+    }
+
+    /// Execute the STREAM triad payload artifact.
+    pub fn stream_payload(
+        rt: &Runtime,
+        b: &[f32],
+        c: &[f32],
+        scalar: f32,
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            b.len() == PAYLOAD_B,
+            "payload batch must be {PAYLOAD_B}"
+        );
+        let exe = rt.load("stream")?;
+        let lits = vec![
+            xla::Literal::vec1(b),
+            xla::Literal::vec1(c),
+            xla::Literal::vec1(&[scalar]),
+        ];
+        let parts = exe.run(&lits)?;
+        Ok(parts[0].to_vec().map_err(|e| anyhow!("a: {e:?}"))?)
+    }
 }
 
-/// Execute the Black-Scholes payload artifact (example/functional checks).
-pub fn blackscholes_payload(
-    rt: &Runtime,
-    spot: &[f32],
-    strike: &[f32],
-    rate: &[f32],
-    vol: &[f32],
-    time: &[f32],
-) -> Result<(Vec<f32>, Vec<f32>)> {
-    anyhow::ensure!(spot.len() == PAYLOAD_B, "payload batch must be {PAYLOAD_B}");
-    let exe = rt.load("blackscholes")?;
-    let lits: Vec<xla::Literal> = [spot, strike, rate, vol, time]
-        .iter()
-        .map(|v| xla::Literal::vec1(v))
-        .collect();
-    let parts = exe.run(&lits)?;
-    anyhow::ensure!(parts.len() == 2, "expected (call, put)");
-    Ok((
-        parts[0].to_vec().map_err(|e| anyhow!("call: {e:?}"))?,
-        parts[1].to_vec().map_err(|e| anyhow!("put: {e:?}"))?,
-    ))
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::*;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::path::{Path, PathBuf};
+
+    use anyhow::{bail, Result};
+
+    use crate::workload::{AddrGenParams, CoreTrace, Workload};
+
+    const DISABLED: &str =
+        "built without the `pjrt` feature: PJRT/XLA runtime unavailable \
+         (the procedural workload generator is the bit-exact fallback)";
+
+    /// Stub artifact handle; never constructible without `pjrt`.
+    pub struct LoadedExe {
+        _private: (),
+    }
+
+    /// Stub runtime: reports artifacts as unavailable so every consumer
+    /// takes its procedural-fallback path.
+    pub struct Runtime {
+        _dir: PathBuf,
+    }
+
+    impl Runtime {
+        pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+            let _dir: PathBuf = artifacts_dir.into();
+            bail!(DISABLED)
+        }
+
+        pub fn default_dir() -> PathBuf {
+            super::default_artifact_dir()
+        }
+
+        /// Always false without `pjrt`: artifacts cannot be executed, so
+        /// callers must use the procedural generator.
+        pub fn artifacts_available(_dir: &Path) -> bool {
+            false
+        }
+
+        pub fn load(&self, _name: &str) -> Result<LoadedExe> {
+            bail!(DISABLED)
+        }
+    }
+
+    pub fn artifact_trace(
+        _exe: &LoadedExe,
+        _params: &AddrGenParams,
+        _n: usize,
+    ) -> Result<CoreTrace> {
+        bail!(DISABLED)
+    }
+
+    pub fn artifact_workload(
+        _rt: &Runtime,
+        _app: &crate::workload::App,
+        _n_cores: usize,
+        _ops_per_core: usize,
+        _seed: u64,
+    ) -> Result<Workload> {
+        bail!(DISABLED)
+    }
+
+    pub fn blackscholes_payload(
+        _rt: &Runtime,
+        _spot: &[f32],
+        _strike: &[f32],
+        _rate: &[f32],
+        _vol: &[f32],
+        _time: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        bail!(DISABLED)
+    }
+
+    pub fn stream_payload(
+        _rt: &Runtime,
+        _b: &[f32],
+        _c: &[f32],
+        _scalar: f32,
+    ) -> Result<Vec<f32>> {
+        bail!(DISABLED)
+    }
 }
 
-/// Execute the STREAM triad payload artifact.
-pub fn stream_payload(
-    rt: &Runtime,
-    b: &[f32],
-    c: &[f32],
-    scalar: f32,
-) -> Result<Vec<f32>> {
-    anyhow::ensure!(b.len() == PAYLOAD_B, "payload batch must be {PAYLOAD_B}");
-    let exe = rt.load("stream")?;
-    let lits = vec![
-        xla::Literal::vec1(b),
-        xla::Literal::vec1(c),
-        xla::Literal::vec1(&[scalar]),
-    ];
-    let parts = exe.run(&lits)?;
-    Ok(parts[0].to_vec().map_err(|e| anyhow!("a: {e:?}"))?)
-}
+#[cfg(not(feature = "pjrt"))]
+pub use stub::*;

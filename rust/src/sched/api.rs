@@ -1,0 +1,114 @@
+//! The scheduling surface every kernel and model goes through.
+//!
+//! [`Scheduler`] mirrors gem5's `EventQueue` interface (schedule /
+//! deschedule / reschedule) over the total event order `(tick, prio, seq)`.
+//! Two implementations exist — [`crate::sched::HeapQueue`] and
+//! [`crate::sched::BucketQueue`] — selected per run via [`QueueKind`] and
+//! dispatched statically through [`crate::sched::SchedQueue`].
+
+use crate::sim::event::{Event, EventKind};
+use crate::sim::ids::CompId;
+use crate::sim::time::Tick;
+
+/// Handle identifying a scheduled event (its sequence number).
+#[derive(Copy, Clone, PartialEq, Eq, Hash, Debug)]
+pub struct EventHandle(pub u64);
+
+/// Which event-queue implementation a run uses.
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub enum QueueKind {
+    /// Binary min-heap with lazy tombstones (the reference implementation).
+    Heap,
+    /// Two-level bucketed (calendar-style) queue.
+    #[default]
+    Bucket,
+}
+
+impl QueueKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "heap" => QueueKind::Heap,
+            "bucket" | "calendar" => QueueKind::Bucket,
+            _ => return None,
+        })
+    }
+}
+
+/// gem5's event-queue interface over the `(tick, prio, seq)` total order.
+///
+/// Implementations must pop events in strictly ascending key order and be
+/// deterministic: the same sequence of calls yields the same sequence of
+/// pops regardless of the implementation chosen.
+pub trait Scheduler {
+    /// Schedule `kind` on `target` at absolute `tick`.
+    fn schedule(
+        &mut self,
+        tick: Tick,
+        prio: u8,
+        target: CompId,
+        kind: EventKind,
+    ) -> EventHandle;
+
+    /// Insert a fully formed event (used when draining cross-domain
+    /// mailboxes); re-sequences it into this queue's order.
+    fn insert(&mut self, ev: Event) -> EventHandle;
+
+    /// Cancel a scheduled event. Cancelling an already-executed or unknown
+    /// handle is a no-op (mirrors gem5's squash semantics).
+    fn deschedule(&mut self, h: EventHandle);
+
+    /// Tick of the next live event.
+    fn next_tick(&mut self) -> Option<Tick>;
+
+    /// Pop the next live event.
+    fn pop(&mut self) -> Option<Event>;
+
+    /// Number of live (non-cancelled, non-executed) events.
+    fn len(&self) -> usize;
+
+    /// Number of events popped (executed) from this queue.
+    fn executed(&self) -> u64;
+
+    /// gem5 reschedule = deschedule + schedule.
+    fn reschedule(
+        &mut self,
+        h: EventHandle,
+        tick: Tick,
+        prio: u8,
+        target: CompId,
+        kind: EventKind,
+    ) -> EventHandle {
+        self.deschedule(h);
+        self.schedule(tick, prio, target, kind)
+    }
+
+    /// Pop the next live event only if it is strictly before `limit`.
+    fn pop_before(&mut self, limit: Tick) -> Option<Event> {
+        match self.next_tick() {
+            Some(t) if t < limit => self.pop(),
+            _ => None,
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_kind_parses() {
+        assert_eq!(QueueKind::parse("heap"), Some(QueueKind::Heap));
+        assert_eq!(QueueKind::parse("Bucket"), Some(QueueKind::Bucket));
+        assert_eq!(QueueKind::parse("calendar"), Some(QueueKind::Bucket));
+        assert_eq!(QueueKind::parse("fifo"), None);
+    }
+
+    #[test]
+    fn default_is_bucket() {
+        assert_eq!(QueueKind::default(), QueueKind::Bucket);
+    }
+}

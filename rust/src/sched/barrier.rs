@@ -1,0 +1,254 @@
+//! Sense-reversing combining-tree quantum barrier with abort support.
+//!
+//! The threaded kernel synchronises all domain threads at every quantum
+//! border (Fig. 1b). The old centralised barrier funnelled every arrival
+//! through one mutex + condvar, an O(n) cache-line ping-pong per phase;
+//! here arrivals combine up a fan-in-[`FANIN`] tree of cache-line-padded
+//! counters, so contention per node is bounded by the fan-in, and release
+//! is a single global sense flip that waiters observe with one acquire
+//! load.
+//!
+//! Protocol per round:
+//! 1. Thread `t` increments its leaf node (`fetch_add`, AcqRel). The last
+//!    arriver at a node resets it for the next round and climbs to the
+//!    parent; everyone else waits on the sense word.
+//! 2. The thread that completes the root flips the global sense (Release)
+//!    and returns [`Outcome::Leader`] — exactly one leader per round.
+//! 3. Waiters spin (then yield, then sleep) until the sense matches their
+//!    per-[`Waiter`] expectation and return [`Outcome::Follower`].
+//!
+//! The AcqRel increments chain every pre-barrier write into the root flip,
+//! and the waiters' Acquire load extends the chain to them — so the
+//! barrier is a full happens-before frontier without any `SeqCst`.
+//!
+//! Node resets are safe without double-buffering: a thread can only arrive
+//! at a node for round `r+1` after observing the round-`r` sense flip,
+//! which the resetting thread performed (transitively) *after* the reset.
+//!
+//! A panic inside a domain thread calls [`TreeBarrier::abort`]; every
+//! current and future waiter then returns [`Outcome::Aborted`] instead of
+//! deadlocking.
+
+use std::sync::atomic::Ordering::{AcqRel, Acquire, Relaxed, Release};
+use std::sync::atomic::{AtomicBool, AtomicUsize};
+
+/// Tree fan-in: 4 keeps the tree shallow for realistic domain counts
+/// (≤ 129 threads in the paper's sweeps → 4 levels) while bounding
+/// per-node contention.
+const FANIN: usize = 4;
+
+const NO_PARENT: usize = usize::MAX;
+
+/// One combining node, padded to a cache line so arrivals at different
+/// nodes never false-share.
+#[repr(align(64))]
+struct Node {
+    count: AtomicUsize,
+    expected: usize,
+    parent: usize,
+}
+
+impl Node {
+    fn new(expected: usize) -> Self {
+        Node { count: AtomicUsize::new(0), expected, parent: NO_PARENT }
+    }
+}
+
+/// Per-thread barrier state: assigned leaf and local sense.
+pub struct Waiter {
+    leaf: usize,
+    sense: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Completed the root in this round (exactly one per round).
+    Leader,
+    Follower,
+    /// A peer aborted (panicked); stop immediately.
+    Aborted,
+}
+
+pub struct TreeBarrier {
+    nodes: Vec<Node>,
+    /// Leaf node index for each participant.
+    leaf_of: Vec<usize>,
+    sense: AtomicBool,
+    aborted: AtomicBool,
+}
+
+impl TreeBarrier {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0, "barrier needs at least one participant");
+        let mut nodes = Vec::new();
+        let mut leaf_of = vec![0usize; n];
+        // Level 0: group threads FANIN at a time.
+        let l0 = n.div_ceil(FANIN);
+        for g in 0..l0 {
+            let lo = g * FANIN;
+            let hi = ((g + 1) * FANIN).min(n);
+            for t in lo..hi {
+                leaf_of[t] = g;
+            }
+            nodes.push(Node::new(hi - lo));
+        }
+        // Upper levels: group nodes until a single root remains.
+        let mut level: Vec<usize> = (0..l0).collect();
+        while level.len() > 1 {
+            let mut next_level = Vec::new();
+            for group in level.chunks(FANIN) {
+                let parent = nodes.len();
+                nodes.push(Node::new(group.len()));
+                for &c in group {
+                    nodes[c].parent = parent;
+                }
+                next_level.push(parent);
+            }
+            level = next_level;
+        }
+        TreeBarrier {
+            nodes,
+            leaf_of,
+            sense: AtomicBool::new(false),
+            aborted: AtomicBool::new(false),
+        }
+    }
+
+    /// Per-thread state for participant `thread` (0-based, `< n`).
+    pub fn waiter(&self, thread: usize) -> Waiter {
+        Waiter { leaf: self.leaf_of[thread], sense: true }
+    }
+
+    pub fn wait(&self, w: &mut Waiter) -> Outcome {
+        if self.aborted.load(Acquire) {
+            return Outcome::Aborted;
+        }
+        let target = w.sense;
+        w.sense = !w.sense;
+        let mut node = w.leaf;
+        loop {
+            let nd = &self.nodes[node];
+            if nd.count.fetch_add(1, AcqRel) + 1 < nd.expected {
+                break; // not last here: wait for the sense flip below
+            }
+            // Last arrival at this node: reset it for the next round
+            // (safe — see module docs) and climb.
+            nd.count.store(0, Relaxed);
+            if nd.parent == NO_PARENT {
+                self.sense.store(target, Release);
+                return Outcome::Leader;
+            }
+            node = nd.parent;
+        }
+        let mut spins = 0u32;
+        while self.sense.load(Acquire) != target {
+            if self.aborted.load(Acquire) {
+                return Outcome::Aborted;
+            }
+            spins += 1;
+            if spins < 64 {
+                std::hint::spin_loop();
+            } else if spins < 4096 {
+                // Oversubscribed hosts (fewer cores than domains) must let
+                // peers run; pure spinning would deadlock a timeslice.
+                std::thread::yield_now();
+            } else {
+                std::thread::sleep(std::time::Duration::from_micros(100));
+            }
+        }
+        Outcome::Follower
+    }
+
+    /// Release every waiter with `Aborted`; all future waits abort too.
+    pub fn abort(&self) {
+        self.aborted.store(true, Release);
+    }
+
+    pub fn is_aborted(&self) -> bool {
+        self.aborted.load(Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering::SeqCst;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn all_threads_pass_each_generation() {
+        for n in [2usize, 4, 5, 9, 17] {
+            let b = TreeBarrier::new(n);
+            let leaders = AtomicUsize::new(0);
+            std::thread::scope(|s| {
+                for t in 0..n {
+                    let b = &b;
+                    let leaders = &leaders;
+                    s.spawn(move || {
+                        let mut w = b.waiter(t);
+                        for _ in 0..100 {
+                            if b.wait(&mut w) == Outcome::Leader {
+                                leaders.fetch_add(1, SeqCst);
+                            }
+                        }
+                    });
+                }
+            });
+            assert_eq!(
+                leaders.load(SeqCst),
+                100,
+                "exactly one leader per round (n={n})"
+            );
+        }
+    }
+
+    #[test]
+    fn single_participant_is_always_leader() {
+        let b = TreeBarrier::new(1);
+        let mut w = b.waiter(0);
+        for _ in 0..10 {
+            assert_eq!(b.wait(&mut w), Outcome::Leader);
+        }
+    }
+
+    #[test]
+    fn barrier_orders_memory() {
+        // Data written before round r must be visible after round r.
+        let n = 4usize;
+        let b = TreeBarrier::new(n);
+        let slots: Vec<AtomicUsize> =
+            (0..n).map(|_| AtomicUsize::new(0)).collect();
+        std::thread::scope(|s| {
+            for t in 0..n {
+                let b = &b;
+                let slots = &slots;
+                s.spawn(move || {
+                    let mut w = b.waiter(t);
+                    for round in 1..50usize {
+                        slots[t].store(round, Relaxed);
+                        b.wait(&mut w);
+                        for other in slots {
+                            assert!(other.load(Relaxed) >= round);
+                        }
+                        b.wait(&mut w); // keep rounds aligned
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn abort_releases_waiters() {
+        let b = TreeBarrier::new(3);
+        std::thread::scope(|s| {
+            let h1 = s.spawn(|| b.wait(&mut b.waiter(0)));
+            let h2 = s.spawn(|| b.wait(&mut b.waiter(1)));
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            b.abort();
+            assert_eq!(h1.join().unwrap(), Outcome::Aborted);
+            assert_eq!(h2.join().unwrap(), Outcome::Aborted);
+        });
+        let mut w = b.waiter(2);
+        assert_eq!(b.wait(&mut w), Outcome::Aborted, "future waits abort too");
+    }
+}

@@ -1,0 +1,367 @@
+//! Two-level bucketed (calendar-style) event queue.
+//!
+//! The near future is split into `NBUCKETS` fixed-width buckets arranged as
+//! a ring; the bucket currently containing the horizon is kept as a small
+//! binary heap (`cur`), the rest as unsorted vectors, and everything beyond
+//! the ring lives in an overflow heap. Scheduling into the current window is
+//! O(log b) for a bucket of size b (vs O(log n) of the whole-queue heap),
+//! and the common DES pattern — schedule a few ns ahead, pop, repeat —
+//! touches only the small `cur` heap.
+//!
+//! Invariants (checked in debug builds):
+//! * `horizon` is `WIDTH`-aligned and never decreases.
+//! * `cur` holds exactly the events with `tick < horizon + WIDTH` (late
+//!   cross-domain inserts below `horizon` also land here; the heap order
+//!   absorbs them).
+//! * ring slot `(tick / WIDTH) % NBUCKETS` holds events with
+//!   `horizon + WIDTH <= tick < horizon + WIDTH * NBUCKETS`; at any moment
+//!   a slot holds events of exactly one `WIDTH`-aligned range.
+//! * `overflow` holds everything at or beyond the ring.
+//!
+//! Pop order is identical to [`crate::sched::HeapQueue`]: the global
+//! minimum by `(tick, prio, seq)` is always in `cur` when `cur` is
+//! non-empty, because `advance` jumps the horizon to the earliest non-empty
+//! bucket before refilling `cur`.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use rustc_hash::FxHashSet;
+
+use crate::sched::api::{EventHandle, Scheduler};
+use crate::sim::event::{Event, EventKind};
+use crate::sim::ids::CompId;
+use crate::sim::time::Tick;
+
+/// Bucket width in ticks (2 ns at the 1 tick = 1 ps base). Most model
+/// latencies (NoC hops, cache accesses) fall within a few buckets.
+const WIDTH: Tick = 2048;
+/// Ring size; the ring spans `WIDTH * NBUCKETS` = 128 ns of near future.
+const NBUCKETS: usize = 64;
+
+pub struct BucketQueue {
+    /// Sorted current bucket: all events with `tick < horizon + WIDTH`.
+    cur: BinaryHeap<Reverse<Event>>,
+    /// Unsorted near-future buckets, indexed by `(tick / WIDTH) % NBUCKETS`.
+    ring: Vec<Vec<Event>>,
+    /// Total events stored across all ring buckets.
+    ring_count: usize,
+    /// Far future: events at or beyond `horizon + WIDTH * NBUCKETS`.
+    overflow: BinaryHeap<Reverse<Event>>,
+    /// `WIDTH`-aligned start of `cur`'s range.
+    horizon: Tick,
+    /// Seqs scheduled and not yet popped or cancelled (the live set).
+    pending: FxHashSet<u64>,
+    /// Tombstones still physically present in one of the levels.
+    cancelled: FxHashSet<u64>,
+    next_seq: u64,
+    executed: u64,
+}
+
+impl Default for BucketQueue {
+    fn default() -> Self {
+        BucketQueue {
+            cur: BinaryHeap::new(),
+            ring: (0..NBUCKETS).map(|_| Vec::new()).collect(),
+            ring_count: 0,
+            overflow: BinaryHeap::new(),
+            horizon: 0,
+            pending: FxHashSet::default(),
+            cancelled: FxHashSet::default(),
+            next_seq: 0,
+            executed: 0,
+        }
+    }
+}
+
+impl BucketQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    fn ring_end(&self) -> Tick {
+        self.horizon.saturating_add(WIDTH * NBUCKETS as Tick)
+    }
+
+    /// Place an event into the level its tick belongs to.
+    #[inline]
+    fn place(&mut self, ev: Event) {
+        let t = ev.tick;
+        if t < self.horizon.saturating_add(WIDTH) {
+            self.cur.push(Reverse(ev));
+        } else if t < self.ring_end() {
+            let slot = ((t / WIDTH) as usize) % NBUCKETS;
+            self.ring[slot].push(ev);
+            self.ring_count += 1;
+        } else {
+            self.overflow.push(Reverse(ev));
+        }
+    }
+
+    /// Drop cancelled events sitting at the head of `cur`.
+    #[inline]
+    fn skim_cur(&mut self) {
+        if self.cancelled.is_empty() {
+            return;
+        }
+        while let Some(Reverse(e)) = self.cur.peek() {
+            if self.cancelled.remove(&e.seq) {
+                self.cur.pop();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Jump the horizon to the earliest non-empty bucket and refill `cur`.
+    ///
+    /// Precondition: `cur` is empty and `ring_count + overflow.len() > 0`.
+    /// Guaranteed to move at least one stored event out of ring/overflow
+    /// (possibly dropping it as cancelled), so caller loops terminate.
+    fn advance(&mut self) {
+        // Ring slots at residues (horizon/WIDTH + 1), (horizon/WIDTH + 2),
+        // ... hold strictly increasing bucket starts (one WIDTH-aligned
+        // range per slot), so walking forward from the horizon residue and
+        // stopping at the first non-empty slot finds the ring minimum —
+        // amortised O(1) per bucket over a ring revolution, instead of a
+        // full 64-slot scan per advance. Every ring bucket start is below
+        // the overflow's (overflow holds ticks >= ring_end), so overflow
+        // is only consulted when the ring is empty.
+        let mut next_start = Tick::MAX;
+        if self.ring_count > 0 {
+            let base = (self.horizon / WIDTH) as usize;
+            for k in 1..NBUCKETS {
+                let slot = &self.ring[(base + k) % NBUCKETS];
+                if let Some(e) = slot.first() {
+                    next_start = e.tick / WIDTH * WIDTH;
+                    break;
+                }
+            }
+        } else if let Some(Reverse(e)) = self.overflow.peek() {
+            next_start = e.tick / WIDTH * WIDTH;
+        }
+        debug_assert_ne!(next_start, Tick::MAX, "advance on empty queue");
+        debug_assert!(next_start >= self.horizon, "horizon must not retreat");
+        self.horizon = next_start;
+
+        let slot = ((next_start / WIDTH) as usize) % NBUCKETS;
+        let moved = std::mem::take(&mut self.ring[slot]);
+        self.ring_count -= moved.len();
+        for ev in moved {
+            if self.cancelled.remove(&ev.seq) {
+                continue;
+            }
+            debug_assert!(ev.tick < self.horizon.saturating_add(WIDTH));
+            self.cur.push(Reverse(ev));
+        }
+
+        // The ring's span moved forward: migrate newly-near overflow events.
+        let ring_end = self.ring_end();
+        while let Some(Reverse(e)) = self.overflow.peek() {
+            if e.tick >= ring_end {
+                break;
+            }
+            let Reverse(ev) = self.overflow.pop().unwrap();
+            if self.cancelled.remove(&ev.seq) {
+                continue;
+            }
+            if ev.tick < self.horizon.saturating_add(WIDTH) {
+                self.cur.push(Reverse(ev));
+            } else {
+                let s = ((ev.tick / WIDTH) as usize) % NBUCKETS;
+                self.ring[s].push(ev);
+                self.ring_count += 1;
+            }
+        }
+
+        // Saturation fallback (ticks near u64::MAX can make the range
+        // arithmetic saturate): guarantee progress by draining overflow
+        // straight into the sorted heap.
+        if self.cur.is_empty() && self.ring_count == 0 {
+            while let Some(Reverse(ev)) = self.overflow.pop() {
+                if self.cancelled.remove(&ev.seq) {
+                    continue;
+                }
+                self.cur.push(Reverse(ev));
+            }
+        }
+    }
+}
+
+impl Scheduler for BucketQueue {
+    fn schedule(
+        &mut self,
+        tick: Tick,
+        prio: u8,
+        target: CompId,
+        kind: EventKind,
+    ) -> EventHandle {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.pending.insert(seq);
+        self.place(Event { tick, prio, seq, target, kind });
+        EventHandle(seq)
+    }
+
+    fn insert(&mut self, mut ev: Event) -> EventHandle {
+        ev.seq = self.next_seq;
+        self.next_seq += 1;
+        let h = EventHandle(ev.seq);
+        self.pending.insert(ev.seq);
+        self.place(ev);
+        h
+    }
+
+    fn deschedule(&mut self, h: EventHandle) {
+        if self.pending.remove(&h.0) {
+            self.cancelled.insert(h.0);
+        }
+    }
+
+    fn next_tick(&mut self) -> Option<Tick> {
+        loop {
+            self.skim_cur();
+            if let Some(Reverse(e)) = self.cur.peek() {
+                return Some(e.tick);
+            }
+            if self.ring_count == 0 && self.overflow.is_empty() {
+                return None;
+            }
+            self.advance();
+        }
+    }
+
+    fn pop(&mut self) -> Option<Event> {
+        loop {
+            self.skim_cur();
+            if let Some(Reverse(ev)) = self.cur.pop() {
+                self.pending.remove(&ev.seq);
+                self.executed += 1;
+                return Some(ev);
+            }
+            if self.ring_count == 0 && self.overflow.is_empty() {
+                return None;
+            }
+            self.advance();
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    fn executed(&self) -> u64 {
+        self.executed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k() -> EventKind {
+        EventKind::CpuTick
+    }
+
+    #[test]
+    fn pops_in_time_order_across_levels() {
+        let mut q = BucketQueue::new();
+        // cur, ring, and overflow ranges all populated, out of order.
+        q.schedule(WIDTH * NBUCKETS as Tick * 3, 50, CompId(0), k());
+        q.schedule(10, 50, CompId(1), k());
+        q.schedule(WIDTH * 5 + 7, 50, CompId(2), k());
+        q.schedule(WIDTH - 1, 50, CompId(3), k());
+        q.schedule(WIDTH * NBUCKETS as Tick + 1, 50, CompId(4), k());
+        let order: Vec<Tick> =
+            std::iter::from_fn(|| q.pop().map(|e| e.tick)).collect();
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(order, sorted);
+        assert_eq!(order.len(), 5);
+    }
+
+    #[test]
+    fn same_tick_fifo_by_seq_and_prio() {
+        let mut q = BucketQueue::new();
+        q.schedule(5, 50, CompId(0), k());
+        q.schedule(5, 50, CompId(1), k());
+        q.schedule(5, 0, CompId(2), k());
+        assert_eq!(q.pop().unwrap().target, CompId(2));
+        assert_eq!(q.pop().unwrap().target, CompId(0));
+        assert_eq!(q.pop().unwrap().target, CompId(1));
+    }
+
+    #[test]
+    fn deschedule_works_in_every_level() {
+        let mut q = BucketQueue::new();
+        let far = WIDTH * NBUCKETS as Tick * 2;
+        let h0 = q.schedule(1, 50, CompId(0), k());
+        let h1 = q.schedule(WIDTH * 3, 50, CompId(1), k());
+        let h2 = q.schedule(far, 50, CompId(2), k());
+        q.schedule(far + 1, 50, CompId(3), k());
+        q.deschedule(h0);
+        q.deschedule(h1);
+        q.deschedule(h2);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop().unwrap().target, CompId(3));
+        assert!(q.pop().is_none());
+        assert_eq!(q.executed(), 1);
+    }
+
+    #[test]
+    fn stale_deschedule_does_not_underflow_len() {
+        let mut q = BucketQueue::new();
+        let h = q.schedule(1, 50, CompId(0), k());
+        assert!(q.pop().is_some());
+        q.deschedule(h);
+        assert!(q.is_empty());
+        q.schedule(2, 50, CompId(1), k());
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn insert_below_horizon_still_pops() {
+        let mut q = BucketQueue::new();
+        // Drive the horizon forward.
+        q.schedule(WIDTH * 10, 50, CompId(0), k());
+        assert_eq!(q.pop().unwrap().target, CompId(0));
+        // A late cross-domain insert below the horizon must still surface
+        // (and before anything later).
+        q.insert(Event { tick: 3, prio: 50, seq: 0, target: CompId(1), kind: k() });
+        q.schedule(WIDTH * 20, 50, CompId(2), k());
+        assert_eq!(q.pop().unwrap().target, CompId(1));
+        assert_eq!(q.pop().unwrap().target, CompId(2));
+    }
+
+    #[test]
+    fn sparse_far_future_jumps() {
+        let mut q = BucketQueue::new();
+        // Events millions of ticks apart: advance must jump, not crawl.
+        for i in 0..10u64 {
+            q.schedule(i * 1_000_000_000, 50, CompId(i as u32), k());
+        }
+        for i in 0..10u64 {
+            assert_eq!(q.pop().unwrap().target, CompId(i as u32));
+        }
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn next_tick_matches_pop() {
+        let mut q = BucketQueue::new();
+        q.schedule(70_000, 50, CompId(0), k());
+        q.schedule(7, 50, CompId(1), k());
+        assert_eq!(q.next_tick(), Some(7));
+        assert_eq!(q.pop().unwrap().tick, 7);
+        assert_eq!(q.next_tick(), Some(70_000));
+    }
+
+    #[test]
+    fn pop_before_respects_limit() {
+        let mut q = BucketQueue::new();
+        q.schedule(WIDTH * 4, 50, CompId(0), k());
+        assert!(q.pop_before(WIDTH * 4).is_none());
+        assert!(q.pop_before(WIDTH * 4 + 1).is_some());
+    }
+}

@@ -1,0 +1,226 @@
+//! The reference event queue: a min-heap over `(tick, prio, seq)`.
+//!
+//! Descheduling is implemented with lazy tombstones (`cancelled` set), which
+//! keeps `schedule` O(log n) and avoids heap surgery; cancelled entries are
+//! dropped when they surface. A separate `pending` set tracks the live
+//! events, which both makes `len()` exact and makes descheduling an
+//! already-popped handle a true no-op (previously such a handle left a
+//! permanent tombstone and `len()` underflowed).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use rustc_hash::FxHashSet;
+
+use crate::sched::api::{EventHandle, Scheduler};
+use crate::sim::event::{Event, EventKind};
+use crate::sim::ids::CompId;
+use crate::sim::time::Tick;
+
+#[derive(Default)]
+pub struct HeapQueue {
+    heap: BinaryHeap<Reverse<Event>>,
+    /// Seqs scheduled and not yet popped or cancelled (the live set).
+    pending: FxHashSet<u64>,
+    /// Tombstones still physically present in the heap.
+    cancelled: FxHashSet<u64>,
+    next_seq: u64,
+    executed: u64,
+}
+
+impl HeapQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Drop cancelled events sitting at the head.
+    #[inline]
+    fn skim(&mut self) {
+        // Fast path: descheduling is rare (§Perf L3.3) — skip the per-pop
+        // tombstone lookup entirely when no event is cancelled.
+        if self.cancelled.is_empty() {
+            return;
+        }
+        while let Some(Reverse(e)) = self.heap.peek() {
+            if self.cancelled.remove(&e.seq) {
+                self.heap.pop();
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+impl Scheduler for HeapQueue {
+    fn schedule(
+        &mut self,
+        tick: Tick,
+        prio: u8,
+        target: CompId,
+        kind: EventKind,
+    ) -> EventHandle {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.pending.insert(seq);
+        self.heap.push(Reverse(Event { tick, prio, seq, target, kind }));
+        EventHandle(seq)
+    }
+
+    fn insert(&mut self, mut ev: Event) -> EventHandle {
+        ev.seq = self.next_seq;
+        self.next_seq += 1;
+        let h = EventHandle(ev.seq);
+        self.pending.insert(ev.seq);
+        self.heap.push(Reverse(ev));
+        h
+    }
+
+    fn deschedule(&mut self, h: EventHandle) {
+        // Only a live handle becomes a tombstone; descheduling an executed
+        // or unknown handle is a no-op (the len-underflow fix).
+        if self.pending.remove(&h.0) {
+            self.cancelled.insert(h.0);
+        }
+    }
+
+    fn next_tick(&mut self) -> Option<Tick> {
+        self.skim();
+        self.heap.peek().map(|Reverse(e)| e.tick)
+    }
+
+    fn pop(&mut self) -> Option<Event> {
+        self.skim();
+        let ev = self.heap.pop().map(|Reverse(e)| e);
+        if let Some(e) = &ev {
+            self.pending.remove(&e.seq);
+            self.executed += 1;
+        }
+        ev
+    }
+
+    fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    fn executed(&self) -> u64 {
+        self.executed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k() -> EventKind {
+        EventKind::CpuTick
+    }
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = HeapQueue::new();
+        q.schedule(30, 50, CompId(0), k());
+        q.schedule(10, 50, CompId(1), k());
+        q.schedule(20, 50, CompId(2), k());
+        let order: Vec<Tick> =
+            std::iter::from_fn(|| q.pop().map(|e| e.tick)).collect();
+        assert_eq!(order, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn same_tick_fifo_by_seq() {
+        let mut q = HeapQueue::new();
+        q.schedule(5, 50, CompId(0), k());
+        q.schedule(5, 50, CompId(1), k());
+        q.schedule(5, 50, CompId(2), k());
+        let order: Vec<u32> =
+            std::iter::from_fn(|| q.pop().map(|e| e.target.0)).collect();
+        assert_eq!(order, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn priority_beats_seq() {
+        let mut q = HeapQueue::new();
+        q.schedule(5, 60, CompId(0), k());
+        q.schedule(5, 0, CompId(1), k());
+        assert_eq!(q.pop().unwrap().target, CompId(1));
+    }
+
+    #[test]
+    fn deschedule_skips_event() {
+        let mut q = HeapQueue::new();
+        let h = q.schedule(1, 50, CompId(0), k());
+        q.schedule(2, 50, CompId(1), k());
+        q.deschedule(h);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop().unwrap().target, CompId(1));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn reschedule_moves_event() {
+        let mut q = HeapQueue::new();
+        let h = q.schedule(10, 50, CompId(0), k());
+        q.reschedule(h, 1, 50, CompId(0), k());
+        assert_eq!(q.pop().unwrap().tick, 1);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn pop_before_respects_limit() {
+        let mut q = HeapQueue::new();
+        q.schedule(10, 50, CompId(0), k());
+        assert!(q.pop_before(10).is_none());
+        assert!(q.pop_before(11).is_some());
+    }
+
+    #[test]
+    fn insert_resequences() {
+        let mut q = HeapQueue::new();
+        q.schedule(5, 50, CompId(0), k());
+        let ev = Event { tick: 5, prio: 50, seq: 0, target: CompId(9), kind: k() };
+        q.insert(ev);
+        // inserted event got a later seq -> pops second
+        assert_eq!(q.pop().unwrap().target, CompId(0));
+        assert_eq!(q.pop().unwrap().target, CompId(9));
+    }
+
+    /// Regression: descheduling an already-popped handle must neither make
+    /// `len()` wrap nor swallow a later event (the old tombstone-set
+    /// implementation kept a permanent `cancelled` entry, so
+    /// `heap.len() - cancelled.len()` underflowed).
+    #[test]
+    fn stale_deschedule_does_not_underflow_len() {
+        let mut q = HeapQueue::new();
+        let h = q.schedule(1, 50, CompId(0), k());
+        assert_eq!(q.pop().unwrap().target, CompId(0));
+        q.deschedule(h); // stale: already executed
+        assert_eq!(q.len(), 0);
+        assert!(q.is_empty());
+        q.schedule(2, 50, CompId(1), k());
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop().unwrap().target, CompId(1));
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn double_deschedule_is_noop() {
+        let mut q = HeapQueue::new();
+        let h = q.schedule(1, 50, CompId(0), k());
+        q.schedule(2, 50, CompId(1), k());
+        q.deschedule(h);
+        q.deschedule(h);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop().unwrap().target, CompId(1));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn executed_counts_only_live_pops() {
+        let mut q = HeapQueue::new();
+        let h = q.schedule(1, 50, CompId(0), k());
+        q.schedule(2, 50, CompId(1), k());
+        q.deschedule(h);
+        while q.pop().is_some() {}
+        assert_eq!(q.executed(), 1);
+    }
+}

@@ -1,0 +1,343 @@
+//! Lock-free MPSC mailbox for cross-domain event injection.
+//!
+//! Replaces the `Mutex<Vec<Event>>` injector of §3.1: any domain thread may
+//! `push` concurrently (multi-producer); only the owning domain `drain`s,
+//! and only at quantum borders (single consumer). The structure is a
+//! segment list: producers reserve a slot with one `fetch_add`, write the
+//! event, and publish it with one release store — no CAS on the fast path
+//! and no lock, so a burst of cross-domain schedules from many domains
+//! never serialises on a mutex.
+//!
+//! # Memory-ordering argument
+//!
+//! * A producer claims slot `i` with `reserve.fetch_add(1, Relaxed)` —
+//!   claiming needs atomicity, not ordering. It then writes the event and
+//!   publishes with `ready[i].store(true, Release)`.
+//! * The consumer reads `ready[i]` with `Acquire`; the release/acquire pair
+//!   makes the event write visible before the slot is consumed.
+//! * Segment growth: the full segment's `next` pointer is installed with a
+//!   `AcqRel` compare-exchange and read with `Acquire`, so a producer (or
+//!   the consumer) that follows `next` sees a fully initialised segment.
+//! * `pushed`/`drained` counters use Release/Acquire so `is_empty()` is
+//!   exact at quantum borders, where the barrier protocol guarantees all
+//!   producers have published (every count update happens-before the
+//!   barrier's own acquire/release chain).
+//!
+//! # Reclamation
+//!
+//! The kernel protocol drains mailboxes only between the freeze and verdict
+//! phases of the quantum barrier, when every producer thread is parked
+//! inside the barrier. A producer's transient reference to a segment
+//! therefore cannot outlive the window that created it, and any fully
+//! consumed segment with a successor can be freed immediately during
+//! `drain` — no epochs or hazard pointers needed. (`tail` cannot dangle
+//! either: a successor is only ever installed together with a tail
+//! advance, both completed before the producer reaches the barrier.)
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::ptr;
+use std::sync::atomic::Ordering::{AcqRel, Acquire, Relaxed, Release};
+use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU64, AtomicUsize};
+
+use crate::sim::event::Event;
+
+/// Events per segment; one segment is ~4 KiB, amortising allocation over
+/// bursts while keeping idle mailboxes small.
+const SEG_CAP: usize = 64;
+
+struct Slot {
+    ready: AtomicBool,
+    ev: UnsafeCell<MaybeUninit<Event>>,
+}
+
+struct Segment {
+    /// Slots claimed so far; may overshoot `SEG_CAP` (claims that lose the
+    /// race simply move to the next segment).
+    reserve: AtomicUsize,
+    next: AtomicPtr<Segment>,
+    slots: [Slot; SEG_CAP],
+}
+
+impl Segment {
+    fn new_boxed() -> *mut Segment {
+        Box::into_raw(Box::new(Segment {
+            reserve: AtomicUsize::new(0),
+            next: AtomicPtr::new(ptr::null_mut()),
+            slots: std::array::from_fn(|_| Slot {
+                ready: AtomicBool::new(false),
+                ev: UnsafeCell::new(MaybeUninit::uninit()),
+            }),
+        }))
+    }
+}
+
+pub struct Mailbox {
+    /// Producers append here.
+    tail: AtomicPtr<Segment>,
+    /// Consumer cursor: the oldest not-fully-consumed segment...
+    head: AtomicPtr<Segment>,
+    /// ...and the next slot to consume within it (consumer-only).
+    head_idx: AtomicUsize,
+    /// Events published (post-commit) / consumed, for `is_empty`.
+    pushed: AtomicU64,
+    drained: AtomicU64,
+    /// Guards the single-consumer / no-push-during-drain contract in tests.
+    #[cfg(debug_assertions)]
+    draining: AtomicBool,
+}
+
+// SAFETY: `Event` is Send (it already crossed threads inside the old
+// `Mutex<Vec<Event>>`); all shared mutation goes through atomics, and the
+// raw slot accesses are ordered by the ready flags as argued above.
+unsafe impl Send for Mailbox {}
+unsafe impl Sync for Mailbox {}
+
+impl Default for Mailbox {
+    fn default() -> Self {
+        let seg = Segment::new_boxed();
+        Mailbox {
+            tail: AtomicPtr::new(seg),
+            head: AtomicPtr::new(seg),
+            head_idx: AtomicUsize::new(0),
+            pushed: AtomicU64::new(0),
+            drained: AtomicU64::new(0),
+            #[cfg(debug_assertions)]
+            draining: AtomicBool::new(false),
+        }
+    }
+}
+
+impl Mailbox {
+    /// Push an event from any thread. Lock-free: one `fetch_add` plus one
+    /// release store on the fast path.
+    pub fn push(&self, ev: Event) {
+        #[cfg(debug_assertions)]
+        debug_assert!(
+            !self.draining.load(Relaxed),
+            "Mailbox::push during drain violates the border protocol"
+        );
+        let mut ev = Some(ev);
+        loop {
+            let seg = self.tail.load(Acquire);
+            // SAFETY: segments are only freed while producers are parked at
+            // the quantum barrier (see module docs), so `seg` is live.
+            let s = unsafe { &*seg };
+            let idx = s.reserve.fetch_add(1, Relaxed);
+            if idx < SEG_CAP {
+                // SAFETY: `fetch_add` hands out each index exactly once, so
+                // this thread exclusively owns slot `idx` until `ready` is
+                // published.
+                unsafe {
+                    (*s.slots[idx].ev.get()).write(ev.take().unwrap());
+                }
+                s.slots[idx].ready.store(true, Release);
+                self.pushed.fetch_add(1, Release);
+                return;
+            }
+            // Segment full: install (or discover) the successor, advance
+            // the shared tail, and retry there.
+            let next = s.next.load(Acquire);
+            let next = if next.is_null() {
+                let fresh = Segment::new_boxed();
+                match s.next.compare_exchange(
+                    ptr::null_mut(),
+                    fresh,
+                    AcqRel,
+                    Acquire,
+                ) {
+                    Ok(_) => fresh,
+                    Err(existing) => {
+                        // SAFETY: `fresh` was never shared.
+                        unsafe { drop(Box::from_raw(fresh)) };
+                        existing
+                    }
+                }
+            } else {
+                next
+            };
+            let _ = self.tail.compare_exchange(seg, next, AcqRel, Acquire);
+        }
+    }
+
+    /// Drain all published events, sorted deterministically by
+    /// `(tick, prio, target, seq)` — the same drain-sort guarantee as the
+    /// old mutex injector, so insertion order into the domain queue (and
+    /// therefore re-sequencing) is reproducible.
+    ///
+    /// Contract: single consumer (the owning domain), called only at
+    /// quantum borders while producers are parked at the barrier.
+    pub fn drain(&self) -> Vec<Event> {
+        #[cfg(debug_assertions)]
+        assert!(
+            !self.draining.swap(true, Acquire),
+            "concurrent Mailbox::drain (single-consumer contract violated)"
+        );
+        let mut out = Vec::new();
+        // SAFETY: single consumer; segments ahead of `head` are only freed
+        // here; producers are quiescent per the border protocol.
+        unsafe {
+            let mut seg = self.head.load(Acquire);
+            let mut idx = self.head_idx.load(Relaxed);
+            loop {
+                let s = &*seg;
+                let committed = s.reserve.load(Acquire).min(SEG_CAP);
+                while idx < committed {
+                    if !s.slots[idx].ready.load(Acquire) {
+                        // Claimed but unpublished: impossible at a border;
+                        // stop defensively rather than spin.
+                        break;
+                    }
+                    out.push((*s.slots[idx].ev.get()).assume_init_read());
+                    s.slots[idx].ready.store(false, Relaxed);
+                    idx += 1;
+                }
+                let next = s.next.load(Acquire);
+                if idx >= SEG_CAP && !next.is_null() {
+                    // Fully consumed and superseded: free it (safe per the
+                    // reclamation argument in the module docs).
+                    drop(Box::from_raw(seg));
+                    seg = next;
+                    idx = 0;
+                } else {
+                    break;
+                }
+            }
+            self.head.store(seg, Release);
+            self.head_idx.store(idx, Relaxed);
+        }
+        self.drained.fetch_add(out.len() as u64, Release);
+        #[cfg(debug_assertions)]
+        self.draining.store(false, Release);
+        out.sort_by_key(|e| (e.tick, e.prio, e.target.0, e.seq));
+        out
+    }
+
+    /// Exact at quantum borders (producers quiescent); a racy estimate
+    /// otherwise.
+    pub fn is_empty(&self) -> bool {
+        self.drained.load(Acquire) == self.pushed.load(Acquire)
+    }
+}
+
+impl Drop for Mailbox {
+    fn drop(&mut self) {
+        unsafe {
+            let mut seg = *self.head.get_mut();
+            let mut idx = *self.head_idx.get_mut();
+            while !seg.is_null() {
+                let next;
+                {
+                    let s = &mut *seg;
+                    let committed = (*s.reserve.get_mut()).min(SEG_CAP);
+                    for i in idx..committed {
+                        if *s.slots[i].ready.get_mut() {
+                            (*s.slots[i].ev.get()).assume_init_drop();
+                        }
+                    }
+                    next = *s.next.get_mut();
+                }
+                drop(Box::from_raw(seg));
+                seg = next;
+                idx = 0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::event::EventKind;
+    use crate::sim::ids::CompId;
+    use crate::sim::time::Tick;
+
+    fn ev(tick: Tick, target: u32) -> Event {
+        Event {
+            tick,
+            prio: 50,
+            seq: 0,
+            target: CompId(target),
+            kind: EventKind::CpuTick,
+        }
+    }
+
+    #[test]
+    fn drain_is_sorted() {
+        let m = Mailbox::default();
+        for (t, c) in [(30u64, 1u32), (10, 2), (10, 0), (20, 3)] {
+            m.push(ev(t, c));
+        }
+        let v = m.drain();
+        let keys: Vec<(Tick, u32)> =
+            v.iter().map(|e| (e.tick, e.target.0)).collect();
+        assert_eq!(keys, vec![(10, 0), (10, 2), (20, 3), (30, 1)]);
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn survives_segment_growth() {
+        let m = Mailbox::default();
+        let n = SEG_CAP as u64 * 5 + 3;
+        for i in 0..n {
+            m.push(ev(i, i as u32));
+        }
+        assert!(!m.is_empty());
+        let v = m.drain();
+        assert_eq!(v.len(), n as usize);
+        for (i, e) in v.iter().enumerate() {
+            assert_eq!(e.tick, i as u64);
+        }
+        assert!(m.is_empty());
+        // Reuse after full drain.
+        m.push(ev(7, 7));
+        assert_eq!(m.drain().len(), 1);
+    }
+
+    #[test]
+    fn concurrent_producers_lose_nothing() {
+        let m = Mailbox::default();
+        let per = 10_000u64;
+        let producers = 4u64;
+        std::thread::scope(|s| {
+            for p in 0..producers {
+                let m = &m;
+                s.spawn(move || {
+                    for i in 0..per {
+                        m.push(ev(p * per + i, p as u32));
+                    }
+                });
+            }
+        });
+        let v = m.drain();
+        assert_eq!(v.len(), (per * producers) as usize);
+        // All distinct ticks present exactly once (drain sorts by tick).
+        for (i, e) in v.iter().enumerate() {
+            assert_eq!(e.tick, i as u64, "lost or duplicated event");
+        }
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn undrained_events_are_dropped_cleanly() {
+        let m = Mailbox::default();
+        for i in 0..(SEG_CAP as u64 * 2) {
+            m.push(ev(i, 0));
+        }
+        drop(m); // must free all segments and the pending events
+    }
+
+    #[test]
+    fn alternating_push_drain_batches() {
+        let m = Mailbox::default();
+        let mut total = 0usize;
+        for round in 0..10u64 {
+            for i in 0..37u64 {
+                m.push(ev(round * 1000 + i, i as u32));
+            }
+            total += m.drain().len();
+            assert!(m.is_empty());
+        }
+        assert_eq!(total, 370);
+    }
+}

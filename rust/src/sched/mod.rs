@@ -1,0 +1,36 @@
+//! The scheduler layer: everything between "a component schedules an event"
+//! and "a domain thread executes it" (parti-gem5 §3.1, Fig. 1b).
+//!
+//! This subsystem owns the three hot-path mechanisms of the PDES kernel and
+//! hides their internals behind a small, object-free API:
+//!
+//! * [`api`] — the [`Scheduler`] trait (gem5's schedule / deschedule /
+//!   reschedule surface) plus [`EventHandle`] and the [`QueueKind`] selector.
+//! * [`heap`] — [`HeapQueue`], the reference binary-heap implementation.
+//! * [`bucket`] — [`BucketQueue`], a two-level bucketed (calendar-style)
+//!   queue keyed by `(tick, prio, seq)`.
+//! * [`queue`] — [`SchedQueue`], the enum that statically dispatches to one
+//!   of the two implementations (no trait objects on the hot path).
+//! * [`mailbox`] — [`Mailbox`], the lock-free MPSC segment-list injector
+//!   for cross-domain event scheduling.
+//! * [`barrier`] — [`TreeBarrier`], the sense-reversing combining-tree
+//!   quantum barrier with abort support.
+//!
+//! Nothing outside this module names a queue, injector or barrier
+//! implementation directly: kernels and models go through [`SchedQueue`],
+//! [`Mailbox`] and [`TreeBarrier`] only, so future scaling work (sharding,
+//! adaptive quantum, work stealing) stays local to `sched/`.
+
+pub mod api;
+pub mod barrier;
+pub mod bucket;
+pub mod heap;
+pub mod mailbox;
+pub mod queue;
+
+pub use api::{EventHandle, QueueKind, Scheduler};
+pub use barrier::{Outcome, TreeBarrier, Waiter};
+pub use bucket::BucketQueue;
+pub use heap::HeapQueue;
+pub use mailbox::Mailbox;
+pub use queue::SchedQueue;

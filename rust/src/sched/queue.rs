@@ -1,0 +1,106 @@
+//! [`SchedQueue`]: the concrete, object-free dispatch over the two
+//! [`Scheduler`] implementations.
+//!
+//! Kernels and the scheduling context hold a `SchedQueue` by value — enum
+//! dispatch compiles to a two-way branch, so there is no vtable on the
+//! per-event hot path and the implementations stay swappable per run via
+//! [`QueueKind`].
+
+use crate::sched::api::{EventHandle, QueueKind, Scheduler};
+use crate::sched::bucket::BucketQueue;
+use crate::sched::heap::HeapQueue;
+use crate::sim::event::{Event, EventKind};
+use crate::sim::ids::CompId;
+use crate::sim::time::Tick;
+
+pub enum SchedQueue {
+    Heap(HeapQueue),
+    Bucket(BucketQueue),
+}
+
+impl SchedQueue {
+    pub fn new(kind: QueueKind) -> Self {
+        match kind {
+            QueueKind::Heap => SchedQueue::Heap(HeapQueue::new()),
+            QueueKind::Bucket => SchedQueue::Bucket(BucketQueue::new()),
+        }
+    }
+
+    pub fn kind(&self) -> QueueKind {
+        match self {
+            SchedQueue::Heap(_) => QueueKind::Heap,
+            SchedQueue::Bucket(_) => QueueKind::Bucket,
+        }
+    }
+}
+
+impl Default for SchedQueue {
+    fn default() -> Self {
+        SchedQueue::new(QueueKind::default())
+    }
+}
+
+macro_rules! delegate {
+    ($self:ident, $q:ident => $body:expr) => {
+        match $self {
+            SchedQueue::Heap($q) => $body,
+            SchedQueue::Bucket($q) => $body,
+        }
+    };
+}
+
+impl Scheduler for SchedQueue {
+    fn schedule(
+        &mut self,
+        tick: Tick,
+        prio: u8,
+        target: CompId,
+        kind: EventKind,
+    ) -> EventHandle {
+        delegate!(self, q => q.schedule(tick, prio, target, kind))
+    }
+
+    fn insert(&mut self, ev: Event) -> EventHandle {
+        delegate!(self, q => q.insert(ev))
+    }
+
+    fn deschedule(&mut self, h: EventHandle) {
+        delegate!(self, q => q.deschedule(h))
+    }
+
+    fn next_tick(&mut self) -> Option<Tick> {
+        delegate!(self, q => q.next_tick())
+    }
+
+    fn pop(&mut self) -> Option<Event> {
+        delegate!(self, q => q.pop())
+    }
+
+    fn len(&self) -> usize {
+        delegate!(self, q => q.len())
+    }
+
+    fn executed(&self) -> u64 {
+        delegate!(self, q => q.executed())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn both_kinds_construct_and_schedule() {
+        for kind in [QueueKind::Heap, QueueKind::Bucket] {
+            let mut q = SchedQueue::new(kind);
+            assert_eq!(q.kind(), kind);
+            q.schedule(5, 50, CompId(0), EventKind::CpuTick);
+            q.schedule(1, 50, CompId(1), EventKind::CpuTick);
+            assert_eq!(q.len(), 2);
+            assert_eq!(q.pop().unwrap().target, CompId(1));
+            assert_eq!(q.pop().unwrap().target, CompId(0));
+            assert!(q.pop().is_none());
+            assert_eq!(q.executed(), 2);
+        }
+    }
+}

@@ -6,9 +6,9 @@
 //! sub-priority — semantically identical to gem5's synchronous call chains,
 //! but free of aliased mutable borrows.
 
+use crate::sched::{EventHandle, SchedQueue, Scheduler};
 use crate::sim::event::{prio, EventKind};
 use crate::sim::ids::{CompId, DomainId};
-use crate::sim::queue::{EventHandle, EventQueue};
 use crate::sim::shared::SharedState;
 use crate::sim::stats::StatSink;
 use crate::sim::time::Tick;
@@ -31,15 +31,15 @@ pub trait Component: Send {
 /// Scheduling context for one event execution.
 ///
 /// Routing rule (paper §3.1): events for the local domain go straight into
-/// the local event queue; events for a foreign domain are pushed into that
-/// domain's injector, postponed to the next quantum border when their target
-/// time falls inside the current window (accounted as `t_pp`).
+/// the local scheduler queue; events for a foreign domain are pushed into
+/// that domain's mailbox, postponed to the next quantum border when their
+/// target time falls inside the current window (accounted as `t_pp`).
 pub struct Ctx<'a> {
     now: Tick,
     domain: DomainId,
     /// End of the current quantum window (`Tick::MAX` when not windowed).
     window_end: Tick,
-    eq: &'a mut EventQueue,
+    eq: &'a mut SchedQueue,
     shared: &'a SharedState,
     self_id: CompId,
 }
@@ -49,7 +49,7 @@ impl<'a> Ctx<'a> {
         now: Tick,
         domain: DomainId,
         window_end: Tick,
-        eq: &'a mut EventQueue,
+        eq: &'a mut SchedQueue,
         shared: &'a SharedState,
         self_id: CompId,
     ) -> Self {
@@ -156,6 +156,7 @@ impl<'a> Ctx<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sched::QueueKind;
     use crate::sim::ids::DomainId;
 
     fn shared_two_domains() -> SharedState {
@@ -168,21 +169,27 @@ mod tests {
         )
     }
 
+    fn kinds() -> [QueueKind; 2] {
+        [QueueKind::Heap, QueueKind::Bucket]
+    }
+
     #[test]
     fn local_schedule_goes_to_eq() {
-        let shared = shared_two_domains();
-        let mut eq = EventQueue::new();
-        let mut ctx =
-            Ctx::new(100, DomainId(0), 16_000, &mut eq, &shared, CompId(0));
-        let h = ctx.schedule(50, CompId(0), EventKind::CpuTick);
-        assert!(h.is_some());
-        assert_eq!(eq.pop().unwrap().tick, 150);
+        for kind in kinds() {
+            let shared = shared_two_domains();
+            let mut eq = SchedQueue::new(kind);
+            let mut ctx =
+                Ctx::new(100, DomainId(0), 16_000, &mut eq, &shared, CompId(0));
+            let h = ctx.schedule(50, CompId(0), EventKind::CpuTick);
+            assert!(h.is_some());
+            assert_eq!(eq.pop().unwrap().tick, 150);
+        }
     }
 
     #[test]
     fn cross_domain_postpones_to_border() {
         let shared = shared_two_domains();
-        let mut eq = EventQueue::new();
+        let mut eq = SchedQueue::default();
         let mut ctx =
             Ctx::new(100, DomainId(0), 16_000, &mut eq, &shared, CompId(0));
         ctx.schedule(50, CompId(1), EventKind::CpuTick);
@@ -198,7 +205,7 @@ mod tests {
     #[test]
     fn cross_domain_beyond_border_keeps_time() {
         let shared = shared_two_domains();
-        let mut eq = EventQueue::new();
+        let mut eq = SchedQueue::default();
         let mut ctx =
             Ctx::new(100, DomainId(0), 16_000, &mut eq, &shared, CompId(0));
         ctx.schedule(20_000, CompId(1), EventKind::CpuTick);
@@ -210,11 +217,13 @@ mod tests {
 
     #[test]
     fn past_schedule_clamps_to_now() {
-        let shared = shared_two_domains();
-        let mut eq = EventQueue::new();
-        let mut ctx =
-            Ctx::new(100, DomainId(0), 16_000, &mut eq, &shared, CompId(0));
-        ctx.schedule_abs(10, CompId(0), EventKind::CpuTick);
-        assert_eq!(eq.pop().unwrap().tick, 100);
+        for kind in kinds() {
+            let shared = shared_two_domains();
+            let mut eq = SchedQueue::new(kind);
+            let mut ctx =
+                Ctx::new(100, DomainId(0), 16_000, &mut eq, &shared, CompId(0));
+            ctx.schedule_abs(10, CompId(0), EventKind::CpuTick);
+            assert_eq!(eq.pop().unwrap().tick, 100);
+        }
     }
 }

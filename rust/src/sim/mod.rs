@@ -3,16 +3,17 @@
 //! * [`time`] — tick base and clocks.
 //! * [`ids`] — component / domain identifiers.
 //! * [`event`] — events and their `(tick, prio, seq)` total order.
-//! * [`queue`] — the event queue (schedule / deschedule / reschedule).
 //! * [`component`] — the SimObject trait and the scheduling [`component::Ctx`].
-//! * [`shared`] — cross-domain shared state (injectors, t_pp accounting,
+//! * [`shared`] — cross-domain shared state (mailboxes, t_pp accounting,
 //!   workload barrier, stop flag).
 //! * [`stats`] — per-component statistic collection.
+//!
+//! The event queue itself (schedule / deschedule / reschedule), the
+//! cross-domain mailboxes and the quantum barrier live in [`crate::sched`].
 
 pub mod component;
 pub mod event;
 pub mod ids;
-pub mod queue;
 pub mod shared;
 pub mod stats;
 pub mod time;
@@ -20,7 +21,6 @@ pub mod time;
 pub use component::{Component, Ctx};
 pub use event::{Event, EventKind};
 pub use ids::{CompId, DomainId};
-pub use queue::{EventHandle, EventQueue};
 pub use shared::SharedState;
 pub use stats::StatSink;
 pub use time::{Clock, Tick, NS, PS, US};

@@ -1,40 +1,17 @@
 //! State shared between time domains.
 //!
 //! Everything a model may touch from *any* domain thread lives here:
-//! the component→domain map, the per-domain event injectors (the
-//! inter-domain scheduling mechanism of §3.1), parallelisation-artefact
-//! counters (t_pp), the workload barrier device and the global stop flag.
+//! the component→domain map, the per-domain event mailboxes (the
+//! inter-domain scheduling mechanism of §3.1, lock-free — see
+//! [`crate::sched::Mailbox`]), parallelisation-artefact counters (t_pp),
+//! the workload barrier device and the global stop flag.
 
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use crate::sim::event::Event;
+use crate::sched::Mailbox;
 use crate::sim::ids::{CompId, DomainId};
 use crate::sim::time::Tick;
-
-/// Lock-protected mailbox for events scheduled *into* a domain from another
-/// domain. Drained at quantum barriers (paper Fig. 1b).
-#[derive(Default)]
-pub struct Injector {
-    queue: Mutex<Vec<Event>>,
-}
-
-impl Injector {
-    pub fn push(&self, ev: Event) {
-        self.queue.lock().unwrap().push(ev);
-    }
-
-    /// Drain all pending events, sorted deterministically.
-    pub fn drain(&self) -> Vec<Event> {
-        let mut v = std::mem::take(&mut *self.queue.lock().unwrap());
-        v.sort_by_key(|e| (e.tick, e.prio, e.target.0, e.seq));
-        v
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.queue.lock().unwrap().is_empty()
-    }
-}
 
 /// Software barrier executed by the simulated cores (`Op::Barrier`).
 ///
@@ -96,8 +73,8 @@ pub struct PdesStats {
 pub struct SharedState {
     /// Component -> (owning domain, dense local index).
     pub locate: Vec<(DomainId, u32)>,
-    /// Per-domain cross-scheduling mailboxes.
-    pub injectors: Vec<Injector>,
+    /// Per-domain cross-scheduling mailboxes (drained at quantum borders).
+    pub injectors: Vec<Mailbox>,
     /// Quantum length in ticks; `Tick::MAX` disables windowing (serial).
     pub quantum: Tick,
     pub pdes: PdesStats,
@@ -114,7 +91,7 @@ impl SharedState {
         quantum: Tick,
         cores_total: u32,
     ) -> Self {
-        let injectors = (0..n_domains).map(|_| Injector::default()).collect();
+        let injectors = (0..n_domains).map(|_| Mailbox::default()).collect();
         SharedState {
             locate,
             injectors,
@@ -132,40 +109,25 @@ impl SharedState {
     }
 
     /// Called by a CPU model when its workload is exhausted.
+    ///
+    /// The count itself only needs atomicity (Relaxed); the stop flag is a
+    /// Release store so the thread that observes it (Acquire) also sees the
+    /// completed workload state.
     pub fn core_done(&self) {
-        let done = self.cores_done.fetch_add(1, Ordering::SeqCst) + 1;
+        let done = self.cores_done.fetch_add(1, Ordering::Relaxed) + 1;
         if done >= self.cores_total {
-            self.stop.store(true, Ordering::SeqCst);
+            self.stop.store(true, Ordering::Release);
         }
     }
 
     pub fn should_stop(&self) -> bool {
-        self.stop.load(Ordering::SeqCst)
+        self.stop.load(Ordering::Acquire)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::event::EventKind;
-
-    #[test]
-    fn injector_drain_is_sorted() {
-        let inj = Injector::default();
-        for (t, c) in [(30u64, 1u32), (10, 2), (10, 0), (20, 3)] {
-            inj.push(Event {
-                tick: t,
-                prio: 50,
-                seq: 0,
-                target: CompId(c),
-                kind: EventKind::CpuTick,
-            });
-        }
-        let v = inj.drain();
-        let keys: Vec<(Tick, u32)> = v.iter().map(|e| (e.tick, e.target.0)).collect();
-        assert_eq!(keys, vec![(10, 0), (10, 2), (20, 3), (30, 1)]);
-        assert!(inj.is_empty());
-    }
 
     #[test]
     fn wl_barrier_releases_on_last() {

@@ -9,71 +9,208 @@ use parti_sim::mem::{CacheArray, LineState};
 use parti_sim::pdes::{HostModel, WorkProfile};
 use parti_sim::ruby::new_inbox;
 use parti_sim::ruby::{MsgKind, RubyMsg};
+use parti_sim::sched::{QueueKind, SchedQueue, Scheduler};
 use parti_sim::sim::event::{prio, EventKind};
 use parti_sim::sim::ids::CompId;
-use parti_sim::sim::queue::EventQueue;
 use parti_sim::util::prop::check;
 use parti_sim::workload::{addrgen, AddrGenParams};
 use parti_sim::xbar::{default_xbar, Occupy};
 
 // ---------------------------------------------------------------------
-// Event queue: pops are totally ordered by (tick, prio, seq); deschedule
-// removes exactly the chosen events.
+// Event queue (both implementations): pops are totally ordered by
+// (tick, prio, seq); deschedule removes exactly the chosen events; the
+// bucketed queue's pop sequence is identical to the heap's.
 // ---------------------------------------------------------------------
+
+const KINDS: [QueueKind; 2] = [QueueKind::Heap, QueueKind::Bucket];
 
 #[test]
 fn prop_event_queue_total_order() {
     check("eq-total-order", 50, |g, _| {
-        let mut q = EventQueue::new();
         let n = g.range_usize(1, 200);
-        for _ in 0..n {
-            let tick = g.range_u64(0, 50);
-            let p = *g.pick(&[prio::BARRIER, prio::DEFAULT, prio::CPU]);
-            q.schedule(tick, p, CompId(0), EventKind::CpuTick);
+        // Mix of near ticks (intra-bucket) and far ticks (ring/overflow).
+        let ticks: Vec<u64> = (0..n)
+            .map(|_| {
+                if g.bool() {
+                    g.range_u64(0, 50)
+                } else {
+                    g.range_u64(0, 2_000_000)
+                }
+            })
+            .collect();
+        for kind in KINDS {
+            let mut q = SchedQueue::new(kind);
+            for &tick in &ticks {
+                let p = *g.pick(&[prio::BARRIER, prio::DEFAULT, prio::CPU]);
+                q.schedule(tick, p, CompId(0), EventKind::CpuTick);
+            }
+            let mut last = (0u64, 0u8, 0u64);
+            let mut popped = 0;
+            while let Some(e) = q.pop() {
+                let key = (e.tick, e.prio, e.seq);
+                assert!(
+                    key >= last,
+                    "{kind:?}: events out of order: {key:?} < {last:?}"
+                );
+                last = key;
+                popped += 1;
+            }
+            assert_eq!(popped, n, "{kind:?}");
         }
-        let mut last = (0u64, 0u8, 0u64);
-        let mut popped = 0;
-        while let Some(e) = q.pop() {
-            let key = (e.tick, e.prio, e.seq);
-            assert!(key >= last, "events out of order: {key:?} < {last:?}");
-            last = key;
-            popped += 1;
-        }
-        assert_eq!(popped, n);
     });
 }
 
 #[test]
 fn prop_event_queue_deschedule_is_precise() {
     check("eq-deschedule", 50, |g, _| {
-        let mut q = EventQueue::new();
-        let n = g.range_usize(1, 100);
-        let mut keep = 0usize;
-        let mut handles = Vec::new();
-        for i in 0..n {
-            let h = q.schedule(
-                g.range_u64(0, 20),
-                prio::DEFAULT,
-                CompId(i as u32),
-                EventKind::CpuTick,
-            );
-            handles.push(h);
+        for kind in KINDS {
+            let mut q = SchedQueue::new(kind);
+            let n = g.range_usize(1, 100);
+            let mut keep = 0usize;
+            let mut handles = Vec::new();
+            for i in 0..n {
+                let h = q.schedule(
+                    g.range_u64(0, 200_000),
+                    prio::DEFAULT,
+                    CompId(i as u32),
+                    EventKind::CpuTick,
+                );
+                handles.push(h);
+            }
+            let mut cancelled = Vec::new();
+            for h in handles {
+                if g.bool() {
+                    q.deschedule(h);
+                    cancelled.push(h.0);
+                } else {
+                    keep += 1;
+                }
+            }
+            assert_eq!(q.len(), keep, "{kind:?}: len after deschedules");
+            let mut seen = 0;
+            while let Some(e) = q.pop() {
+                assert!(
+                    !cancelled.contains(&e.seq),
+                    "{kind:?}: cancelled event popped"
+                );
+                seen += 1;
+            }
+            assert_eq!(seen, keep, "{kind:?}");
         }
-        let mut cancelled = Vec::new();
-        for h in handles {
-            if g.bool() {
-                q.deschedule(h);
-                cancelled.push(h.0);
-            } else {
-                keep += 1;
+    });
+}
+
+/// The tentpole equivalence property: drive the heap queue and the
+/// bucketed queue with the same random schedule / deschedule / reschedule
+/// / insert / pop interleaving and require bit-identical pop sequences
+/// (including handles, i.e. sequence numbers).
+#[test]
+fn prop_heap_and_bucket_pop_identically() {
+    use parti_sim::sim::event::Event;
+
+    check("eq-heap-vs-bucket", 60, |g, case| {
+        let mut heap = SchedQueue::new(QueueKind::Heap);
+        let mut bucket = SchedQueue::new(QueueKind::Bucket);
+        let mut live_handles = Vec::new();
+        let steps = g.range_usize(20, 400);
+        for _ in 0..steps {
+            match g.range_usize(0, 9) {
+                // schedule (weighted heaviest)
+                0..=4 => {
+                    let tick = match g.range_usize(0, 2) {
+                        0 => g.range_u64(0, 4000),       // current bucket
+                        1 => g.range_u64(0, 200_000),    // ring range
+                        _ => g.range_u64(0, 50_000_000), // overflow range
+                    };
+                    let p = *g.pick(&[prio::BARRIER, prio::DEFAULT, prio::CPU]);
+                    let t = CompId(g.range_u64(0, 30) as u32);
+                    let h1 = heap.schedule(tick, p, t, EventKind::CpuTick);
+                    let h2 = bucket.schedule(tick, p, t, EventKind::CpuTick);
+                    assert_eq!(h1, h2, "case {case}: handle divergence");
+                    live_handles.push(h1);
+                }
+                // insert (mailbox-drain path)
+                5 => {
+                    let ev = Event {
+                        tick: g.range_u64(0, 1_000_000),
+                        prio: prio::DEFAULT,
+                        seq: 0,
+                        target: CompId(g.range_u64(0, 30) as u32),
+                        kind: EventKind::CpuTick,
+                    };
+                    let h1 = heap.insert(ev.clone());
+                    let h2 = bucket.insert(ev);
+                    assert_eq!(h1, h2, "case {case}: insert handle divergence");
+                    live_handles.push(h1);
+                }
+                // deschedule a random (possibly stale) handle
+                6 => {
+                    if !live_handles.is_empty() {
+                        let i = g.range_usize(0, live_handles.len() - 1);
+                        let h = live_handles[i];
+                        heap.deschedule(h);
+                        bucket.deschedule(h);
+                    }
+                }
+                // reschedule
+                7 => {
+                    if !live_handles.is_empty() {
+                        let i = g.range_usize(0, live_handles.len() - 1);
+                        let h = live_handles[i];
+                        let tick = g.range_u64(0, 300_000);
+                        let t = CompId(g.range_u64(0, 30) as u32);
+                        let h1 = heap.reschedule(
+                            h,
+                            tick,
+                            prio::DEFAULT,
+                            t,
+                            EventKind::CpuTick,
+                        );
+                        let h2 = bucket.reschedule(
+                            h,
+                            tick,
+                            prio::DEFAULT,
+                            t,
+                            EventKind::CpuTick,
+                        );
+                        assert_eq!(h1, h2, "case {case}");
+                        live_handles.push(h1);
+                    }
+                }
+                // pop
+                _ => {
+                    let a = heap.pop();
+                    let b = bucket.pop();
+                    match (&a, &b) {
+                        (None, None) => {}
+                        (Some(x), Some(y)) => {
+                            assert_eq!(
+                                (x.tick, x.prio, x.seq, x.target),
+                                (y.tick, y.prio, y.seq, y.target),
+                                "case {case}: pop divergence"
+                            );
+                        }
+                        _ => panic!("case {case}: pop presence divergence"),
+                    }
+                }
+            }
+            assert_eq!(heap.len(), bucket.len(), "case {case}: len divergence");
+        }
+        // Drain both to the end: the tails must match too.
+        loop {
+            let a = heap.pop();
+            let b = bucket.pop();
+            match (a, b) {
+                (None, None) => break,
+                (Some(x), Some(y)) => assert_eq!(
+                    (x.tick, x.prio, x.seq, x.target),
+                    (y.tick, y.prio, y.seq, y.target),
+                    "case {case}: tail divergence"
+                ),
+                _ => panic!("case {case}: tail presence divergence"),
             }
         }
-        let mut seen = 0;
-        while let Some(e) = q.pop() {
-            assert!(!cancelled.contains(&e.seq), "cancelled event popped");
-            seen += 1;
-        }
-        assert_eq!(seen, keep);
+        assert_eq!(heap.executed(), bucket.executed(), "case {case}");
     });
 }
 

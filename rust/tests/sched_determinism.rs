@@ -1,0 +1,108 @@
+//! Scheduler-layer determinism gates on a small MPSoC config.
+//!
+//! The `sched/` refactor must be invisible to simulation results:
+//!
+//! * Swapping the event-queue implementation (heap ↔ bucket) must produce
+//!   bit-identical runs — same `sim_ticks`, same event count, same
+//!   per-component statistics — on both deterministic kernels.
+//! * The deterministic kernels themselves stay bit-reproducible across
+//!   repetitions with the lock-free mailboxes in place.
+//! * The threaded kernel (whose intra-window inbox interleaving is
+//!   host-timing dependent by design, like parti-gem5 — paper §6) must
+//!   stay functionally identical to the serial reference: same committed
+//!   ops and same load checksums.
+
+use parti_sim::config::{Mode, RunConfig};
+use parti_sim::harness::{make_workload, run_with_workload};
+use parti_sim::pdes::RunResult;
+use parti_sim::sched::QueueKind;
+use parti_sim::sim::time::NS;
+use parti_sim::stats::compare;
+
+fn cfg(mode: Mode, queue: QueueKind) -> RunConfig {
+    let mut c = RunConfig {
+        app: "canneal".into(), // sharing app: exercises cross-domain paths
+        ops_per_core: 768,
+        mode,
+        quantum: 8 * NS,
+        queue,
+        ..Default::default()
+    };
+    c.system.cores = 4;
+    c
+}
+
+fn run(mode: Mode, queue: QueueKind) -> RunResult {
+    let c = cfg(mode, queue);
+    let w = make_workload(&c).unwrap();
+    run_with_workload(&c, &w).unwrap()
+}
+
+fn assert_identical(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.sim_ticks, b.sim_ticks, "{what}: sim_ticks");
+    assert_eq!(a.events, b.events, "{what}: events");
+    assert_eq!(a.pdes.cross_events, b.pdes.cross_events, "{what}: cross");
+    assert_eq!(a.pdes.postponed, b.pdes.postponed, "{what}: postponed");
+    assert_eq!(a.pdes.tpp_sum, b.pdes.tpp_sum, "{what}: tpp_sum");
+    assert_eq!(
+        a.stats.entries.len(),
+        b.stats.entries.len(),
+        "{what}: stat cardinality"
+    );
+    for ((an, av), (bn, bv)) in a.stats.entries.iter().zip(&b.stats.entries) {
+        assert_eq!(an, bn, "{what}: stat name order");
+        assert_eq!(av, bv, "{what}: per-component stat {an}");
+    }
+}
+
+#[test]
+fn serial_is_identical_across_queue_kinds() {
+    let heap = run(Mode::Serial, QueueKind::Heap);
+    let bucket = run(Mode::Serial, QueueKind::Bucket);
+    assert!(heap.events > 0);
+    assert_identical(&heap, &bucket, "serial heap-vs-bucket");
+}
+
+#[test]
+fn virtual_is_identical_across_queue_kinds() {
+    let heap = run(Mode::Virtual, QueueKind::Heap);
+    let bucket = run(Mode::Virtual, QueueKind::Bucket);
+    assert!(heap.pdes.cross_events > 0, "must exercise the mailboxes");
+    assert_identical(&heap, &bucket, "virtual heap-vs-bucket");
+}
+
+#[test]
+fn deterministic_kernels_reproduce_bit_identically() {
+    for mode in [Mode::Serial, Mode::Virtual] {
+        let a = run(mode, QueueKind::Bucket);
+        let b = run(mode, QueueKind::Bucket);
+        assert_identical(&a, &b, "repeat run");
+    }
+}
+
+#[test]
+fn threaded_kernel_matches_serial_functionally() {
+    // Race-free app for the functional comparison (see pdes_equivalence.rs
+    // for why sharing apps legitimately diverge on racing loads).
+    let mut serial_cfg = cfg(Mode::Serial, QueueKind::Bucket);
+    serial_cfg.app = "synthetic".into();
+    let w = make_workload(&serial_cfg).unwrap();
+    let serial = run_with_workload(&serial_cfg, &w).unwrap();
+    for queue in [QueueKind::Heap, QueueKind::Bucket] {
+        let mut par_cfg = cfg(Mode::Parallel, queue);
+        par_cfg.app = "synthetic".into();
+        let par = run_with_workload(&par_cfg, &w).unwrap();
+        let acc = compare(&serial, &par);
+        assert!(acc.checksum_match, "{queue:?}: checksums must match");
+        assert_eq!(
+            serial.stats.sum_suffix(".committed_ops"),
+            par.stats.sum_suffix(".committed_ops"),
+            "{queue:?}: all ops must commit"
+        );
+        assert_eq!(
+            par.stats.sum_suffix(".value_mismatches"),
+            0.0,
+            "{queue:?}"
+        );
+    }
+}

@@ -1,0 +1,174 @@
+//! Offline stand-in for the `anyhow` crate, exposing exactly the subset
+//! parti-sim uses: [`Error`], [`Result`], the [`Context`] extension trait
+//! and the `anyhow!` / `ensure!` / `bail!` macros.
+//!
+//! The build environment has no registry access, so this path dependency
+//! keeps the crate buildable; swapping in the real `anyhow` is a one-line
+//! Cargo.toml change and requires no source edits.
+
+use std::fmt;
+
+/// A string-backed error value. Like the real `anyhow::Error`, it
+/// deliberately does **not** implement `std::error::Error`, which is what
+/// makes the blanket `From<E: std::error::Error>` conversion coherent.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string() }
+    }
+
+    /// Wrap with an outer context line.
+    pub fn context<C: fmt::Display>(self, c: C) -> Self {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension adding `.context(...)` to results and options.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, a formatted message, or any
+/// `Display` value — same arm structure as the real `anyhow!`.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::anyhow!($($arg)+))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::other("boom")
+    }
+
+    #[test]
+    fn macro_forms() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let x = 7;
+        let b = anyhow!("x = {x}");
+        assert_eq!(b.to_string(), "x = 7");
+        let c = anyhow!("x = {}", x);
+        assert_eq!(c.to_string(), "x = 7");
+        let d = anyhow!(String::from("owned"));
+        assert_eq!(d.to_string(), "owned");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(f().unwrap_err().to_string(), "boom");
+    }
+
+    #[test]
+    fn context_wraps() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("loading artifact").unwrap_err();
+        assert_eq!(e.to_string(), "loading artifact: boom");
+        let n: Option<u32> = None;
+        assert_eq!(
+            n.context("missing").unwrap_err().to_string(),
+            "missing"
+        );
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn f(ok: bool) -> Result<u32> {
+            ensure!(ok, "wanted {}", 42);
+            Ok(1)
+        }
+        assert_eq!(f(true).unwrap(), 1);
+        assert_eq!(f(false).unwrap_err().to_string(), "wanted 42");
+        fn g() -> Result<()> {
+            bail!("nope")
+        }
+        assert!(g().is_err());
+    }
+}

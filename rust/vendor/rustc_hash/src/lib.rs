@@ -1,0 +1,120 @@
+//! Offline stand-in for the `rustc-hash` crate: `FxHashMap` / `FxHashSet`
+//! over a fast non-cryptographic multiply-rotate hasher in the Fx style.
+//!
+//! The build environment has no registry access, so this path dependency
+//! keeps the crate buildable; swapping in the real `rustc-hash` is a
+//! one-line Cargo.toml change and requires no source edits.
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
+
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+pub type FxHashMap<K, V> = HashMap<K, V, FxBuildHasher>;
+pub type FxHashSet<T> = HashSet<T, FxBuildHasher>;
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+const ROTATE: u32 = 5;
+
+/// Multiply-rotate hasher in the Fx style: one rotate, one xor and one
+/// multiply per word. Not DoS-resistant — keys here are dense internal
+/// ids (seqs, addresses, component ids), never attacker-controlled.
+#[derive(Default, Clone)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add_to_hash(&mut self, i: u64) {
+        self.hash = (self.hash.rotate_left(ROTATE) ^ i).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.add_to_hash(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut buf = [0u8; 8];
+            buf[..rem.len()].copy_from_slice(rem);
+            self.add_to_hash(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, i: u8) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn write_u16(&mut self, i: u16) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, i: u32) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, i: u64) {
+        self.add_to_hash(i);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, i: usize) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_and_set_work() {
+        let mut m: FxHashMap<u64, u32> = FxHashMap::default();
+        for i in 0..1000u64 {
+            m.insert(i, i as u32 * 2);
+        }
+        assert_eq!(m.len(), 1000);
+        assert_eq!(m.get(&37), Some(&74));
+        let mut s: FxHashSet<u64> = FxHashSet::default();
+        assert!(s.insert(5));
+        assert!(!s.insert(5));
+        assert!(s.remove(&5));
+        assert!(!s.remove(&5));
+    }
+
+    #[test]
+    fn hashing_is_deterministic_and_spreads() {
+        let h = |x: u64| {
+            let mut f = FxHasher::default();
+            f.write_u64(x);
+            f.finish()
+        };
+        assert_eq!(h(42), h(42));
+        assert_ne!(h(1), h(2));
+        // Nearby keys should not collide in the low bits (bucket index).
+        let low: FxHashSet<u64> = (0..64).map(|i| h(i) & 0x3f).collect();
+        assert!(low.len() > 16, "low bits too clustered: {}", low.len());
+    }
+
+    #[test]
+    fn write_bytes_covers_remainder() {
+        let mut a = FxHasher::default();
+        a.write(b"hello world, 13");
+        let mut b = FxHasher::default();
+        b.write(b"hello world, 14");
+        assert_ne!(a.finish(), b.finish());
+    }
+}
