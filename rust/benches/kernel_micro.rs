@@ -17,9 +17,10 @@ use std::sync::Mutex;
 use parti_sim::config::RunConfig;
 use parti_sim::harness::{make_workload, run_with_workload};
 use parti_sim::mem::{CacheArray, LineState};
+use parti_sim::pdes::HostModel;
 use parti_sim::ruby::new_inbox;
 use parti_sim::ruby::{MsgKind, RubyMsg};
-use parti_sim::sched::{Mailbox, QueueKind, SchedQueue, Scheduler};
+use parti_sim::sched::{Mailbox, QuantumPolicy, QueueKind, SchedQueue, Scheduler};
 use parti_sim::sim::event::{prio, Event, EventKind};
 use parti_sim::sim::ids::CompId;
 use parti_sim::util::json::JsonObj;
@@ -202,6 +203,96 @@ fn main() {
         );
     }
     json = json.obj("virtual_16_domain_e2e", e2e);
+
+    // Adaptive quantum on the same 16-domain configuration: barrier count
+    // and wall-clock, fixed vs horizon (results are bit-identical by the
+    // determinism gate — only the border count may shrink), plus the
+    // host-model imbalance cost of static binding vs stealing on an
+    // 8-thread host (16 domains -> 2 domains per thread).
+    let mut adaptive = JsonObj::new();
+    for (name, qp) in
+        [("fixed", QuantumPolicy::Fixed), ("horizon", QuantumPolicy::Horizon)]
+    {
+        let mut cfg = RunConfig {
+            app: "blackscholes".to_string(),
+            ops_per_core: 2048,
+            mode: parti_sim::config::Mode::Virtual,
+            quantum_policy: qp,
+            ..Default::default()
+        };
+        cfg.system.cores = 15; // + shared domain = 16 event queues
+        let w = make_workload(&cfg).expect("workload");
+        // Time only the kernel; the host-model analysis (below) scales
+        // with the window count and would bias the fixed-vs-horizon
+        // comparison if it ran inside the measured closure.
+        let mut last = None;
+        let (m, lo, hi) = measure(5, || {
+            last = Some(run_with_workload(&cfg, &w).unwrap());
+        });
+        let r = last.expect("measured at least once");
+        let barriers = r.pdes.barriers;
+        let skipped = r.pdes.quanta_skipped;
+        let work = r.work.as_ref().expect("virtual records work");
+        let mut host = HostModel::for_threads(8, 16);
+        host.steal = true;
+        let steal_wall = host.parallel_wall_ns(work);
+        host.steal = false;
+        let static_wall = host.parallel_wall_ns(work);
+        bench_util::report(
+            &format!("virtual 16-domain quantum-policy[{name}]"),
+            m,
+            lo,
+            hi,
+        );
+        println!(
+            "  {name}: barriers={barriers} skipped_quanta={skipped} \
+             modeled wall (H=8) steal/static = {:.2} ms / {:.2} ms",
+            steal_wall / 1e6,
+            static_wall / 1e6
+        );
+        adaptive = adaptive.obj(
+            name,
+            JsonObj::new()
+                .u64("median_ns", m as u64)
+                .u64("barriers", barriers)
+                .u64("quanta_skipped", skipped)
+                .f64("modeled_wall_ns_h8_steal", steal_wall)
+                .f64("modeled_wall_ns_h8_static", static_wall),
+        );
+    }
+    json = json.obj("adaptive_quantum_16_domain", adaptive);
+
+    // Threaded kernel, 16 domains oversubscribed onto 2 host threads:
+    // static binding vs claim-based stealing, measured wall-clock.
+    let mut threaded = JsonObj::new();
+    for (name, steal) in [("static", false), ("steal", true)] {
+        let mut cfg = RunConfig {
+            app: "blackscholes".to_string(),
+            ops_per_core: 2048,
+            mode: parti_sim::config::Mode::Parallel,
+            steal,
+            threads: 2,
+            ..Default::default()
+        };
+        cfg.system.cores = 15;
+        let w = make_workload(&cfg).expect("workload");
+        let mut steals = 0u64;
+        let (m, lo, hi) = measure(5, || {
+            let r = run_with_workload(&cfg, &w).unwrap();
+            steals = r.pdes.steals;
+        });
+        bench_util::report(
+            &format!("threaded 16-domain/2-thread [{name}]"),
+            m,
+            lo,
+            hi,
+        );
+        threaded = threaded.obj(
+            name,
+            JsonObj::new().u64("median_ns", m as u64).u64("steals", steals),
+        );
+    }
+    json = json.obj("threaded_16_domain_2_thread", threaded);
 
     // End-to-end serial kernel throughput (the L3 §Perf headline).
     let mut cfg = RunConfig {

@@ -1,7 +1,7 @@
 //! System configuration (Table 2 of the paper) and run configuration.
 
 use crate::cpu::CpuModel;
-use crate::sched::QueueKind;
+use crate::sched::{QuantumPolicy, QueueKind, RunPolicy};
 use crate::sim::time::{Tick, NS};
 
 /// Cache geometry + latency.
@@ -122,6 +122,12 @@ pub struct RunConfig {
     pub host_cores: usize,
     /// Event-queue implementation (see [`QueueKind`]).
     pub queue: QueueKind,
+    /// Window-advance policy at quantum borders (see [`QuantumPolicy`]).
+    pub quantum_policy: QuantumPolicy,
+    /// Claim-based window work stealing in the threaded kernel (opt-in).
+    pub steal: bool,
+    /// Host threads for the threaded kernel; `0` = one per domain.
+    pub threads: usize,
 }
 
 impl Default for RunConfig {
@@ -137,6 +143,20 @@ impl Default for RunConfig {
             max_ticks: 10_000_000_000_000, // 10 s simulated
             host_cores: 64,
             queue: QueueKind::default(),
+            quantum_policy: QuantumPolicy::default(),
+            steal: false,
+            threads: 0,
+        }
+    }
+}
+
+impl RunConfig {
+    /// The border-policy bundle handed to the machine builder.
+    pub fn run_policy(&self) -> RunPolicy {
+        RunPolicy {
+            quantum_policy: self.quantum_policy,
+            steal: self.steal,
+            threads: self.threads,
         }
     }
 }

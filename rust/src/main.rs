@@ -17,7 +17,7 @@ use parti_sim::harness::figures::{
 };
 use parti_sim::harness::{compare_modes, run_once, tables};
 use parti_sim::pdes::HostModel;
-use parti_sim::sched::QueueKind;
+use parti_sim::sched::{QuantumPolicy, QueueKind};
 use parti_sim::sim::time::NS;
 use parti_sim::stats::Summary;
 use parti_sim::util::cli::Args;
@@ -46,11 +46,21 @@ RUN/COMPARE/FFWD FLAGS
   --mode MODE       serial|parallel|virtual           [serial]
   --queue KIND      bucket|heap event queue           [bucket]
   --quantum-ns N    quantum t_qΔ in ns                [16]
+  --quantum-policy P  fixed|horizon|hybrid window advance
+                    (horizon leaps dead windows)      [fixed]
+  --max-leap N      hybrid policy: max quanta leapt
+                    per border                        [64]
+  --steal           claim-based window work stealing
+                    (parallel mode; adds no nondeterminism)
+  --threads N       host threads for parallel mode
+                    (0 = one per domain)              [0]
   --ops N           trace ops per core                [4096]
   --seed N                                            [42]
   --host-cores N    modeled host cores (virtual mode) [64]
   --io-milli N      IO accesses per 1000 ops (§4.3)   [0]
   --json            emit the summary as JSON
+
+  Flags are documented in detail in docs/CLI.md.
 
 FIGURE FLAGS
   --ops N           trace ops per core                [2048]
@@ -78,6 +88,14 @@ fn run_config(a: &Args) -> Result<RunConfig> {
     cfg.queue = QueueKind::parse(&queue)
         .ok_or_else(|| anyhow::anyhow!("bad --queue {queue}"))?;
     cfg.quantum = a.get_u64("quantum-ns", 16) * NS;
+    let qp = a.get_str("quantum-policy", "fixed");
+    cfg.quantum_policy = QuantumPolicy::parse(&qp)
+        .ok_or_else(|| anyhow::anyhow!("bad --quantum-policy {qp}"))?;
+    if let QuantumPolicy::Hybrid { max_leap } = &mut cfg.quantum_policy {
+        *max_leap = a.get_u64("max-leap", *max_leap as u64).max(1) as u32;
+    }
+    cfg.steal = a.has("steal");
+    cfg.threads = a.get_usize("threads", 0);
     cfg.host_cores = a.get_usize("host-cores", 64);
     Ok(cfg)
 }
@@ -211,6 +229,10 @@ fn print_summary(cfg: &RunConfig, s: &Summary) {
     println!(
         "  pdes: cross={} postponed={} tpp_mean={:.2}ns barriers={}",
         s.cross_events, s.postponed, s.tpp_mean_ns, s.barriers
+    );
+    println!(
+        "  sched: policy={:?} skipped_quanta={} steals={} stolen_events={}",
+        cfg.quantum_policy, s.quanta_skipped, s.steals, s.stolen_events
     );
     println!(
         "  miss rates: l1i={:.4} l1d={:.4} l2={:.4} l3={:.4}",

@@ -6,7 +6,7 @@
 
 use std::sync::Arc;
 
-use crate::sched::{QueueKind, SchedQueue, Scheduler};
+use crate::sched::{QueueKind, RunPolicy, SchedQueue, Scheduler};
 use crate::sim::component::Component;
 use crate::sim::ids::{CompId, DomainId};
 use crate::sim::shared::SharedState;
@@ -51,6 +51,7 @@ pub struct MachineBuilder {
     n_cores: u32,
     quantum: Tick,
     queue: QueueKind,
+    policy: RunPolicy,
 }
 
 impl MachineBuilder {
@@ -68,7 +69,19 @@ impl MachineBuilder {
             n_cores: 0,
             quantum,
             queue,
+            policy: RunPolicy::default(),
         }
+    }
+
+    /// Select the border policy (adaptive quantum, work stealing, thread
+    /// count) for the windowed kernels. Defaults to the paper's behaviour:
+    /// fixed quantum, no stealing, one thread per domain.
+    pub fn set_policy(&mut self, policy: RunPolicy) {
+        self.policy = policy;
+    }
+
+    pub fn policy(&self) -> RunPolicy {
+        self.policy
     }
 
     /// Select the event-queue implementation for every domain. Must be
@@ -111,12 +124,14 @@ impl MachineBuilder {
     }
 
     pub fn finish(self) -> Machine {
-        let shared = Arc::new(SharedState::new(
+        let mut state = SharedState::new(
             self.locate,
             self.domains.len(),
             self.quantum,
             self.n_cores,
-        ));
+        );
+        state.policy = self.policy;
+        let shared = Arc::new(state);
         shared.wl_barrier.state.lock().unwrap().participants = self.n_cores;
         Machine { domains: self.domains, shared }
     }

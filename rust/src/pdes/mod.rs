@@ -3,15 +3,23 @@
 //! Three interchangeable kernels drive the same [`domain::Domain`] loop:
 //!
 //! * [`serial::run_serial`] — gem5's reference single-thread DES.
-//! * [`parallel::run_parallel`] — parti-gem5: one thread per time domain,
-//!   quantum barriers, postponed cross-domain events.
+//! * [`parallel::run_parallel`] — parti-gem5: host threads execute time
+//!   domains window by window (one thread per domain by default;
+//!   oversubscribable and work-stealing via `RunPolicy`), quantum barriers,
+//!   postponed cross-domain events.
 //! * [`virtual_host::run_virtual`] — identical PDES semantics executed
 //!   deterministically on one thread, recording a per-quantum work profile
 //!   for the [`virtual_host::HostModel`] speedup estimator (the 64-core-host
 //!   substitution, DESIGN.md §3).
 //!
-//! Event queues, cross-domain mailboxes and the quantum barrier live in
-//! [`crate::sched`]; every kernel schedules exclusively through that API.
+//! Both windowed kernels advance `window_end` through the same
+//! [`crate::sched::plan_next_window`] border decision, so the adaptive
+//! quantum (`--quantum-policy`) is policy-identical — and result-identical,
+//! see DESIGN.md §4.4 — across them.
+//!
+//! Event queues, cross-domain mailboxes, the quantum barrier, the window
+//! policy and the claim list live in [`crate::sched`]; every kernel
+//! schedules exclusively through that API.
 
 pub mod domain;
 pub mod machine;

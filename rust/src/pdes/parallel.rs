@@ -1,14 +1,26 @@
-//! The threaded PDES kernel (parti-gem5 proper, Fig. 1b).
+//! The threaded PDES kernel (parti-gem5 proper, Fig. 1b), extended with an
+//! adaptive quantum and claim-based window work stealing.
 //!
-//! One host thread per time domain; a global combining-tree barrier
-//! ([`crate::sched::TreeBarrier`]) at every border. Within a window,
-//! domains execute their local event queues freely; cross-domain schedules
-//! go through the lock-free mailboxes with the postpone-to-border rule
-//! (see [`crate::sim::component::Ctx`]).
+//! Domains are **work items**, host threads are **executors**. With the
+//! default policy there is one thread per domain and each thread runs its
+//! own domain every window (the paper's configuration); with
+//! `RunPolicy::threads < n_domains` the host is oversubscribed and each
+//! thread runs several domains per window; with `RunPolicy::steal` the
+//! per-window domain→thread binding goes through a
+//! [`crate::sched::ClaimList`], so a thread whose claims finish early
+//! adopts the windows of the most-loaded remaining domains instead of
+//! idling at the freeze barrier. A claim hands a whole domain (its movable
+//! `SchedQueue` plus components) to exactly one thread, so stealing adds
+//! no nondeterminism beyond the kernel's pre-existing intra-window host
+//! timing (paper §6) — see `sched/steal.rs` for the argument.
+//!
+//! Within a window, domains execute their local event queues freely;
+//! cross-domain schedules go through the lock-free mailboxes with the
+//! postpone-to-border rule (see [`crate::sim::component::Ctx`]).
 //!
 //! Each border runs a **three-phase** protocol:
 //!
-//! 1. **Freeze** barrier — every thread has finished its window; no queue
+//! 1. **Freeze** barrier — every thread has finished its claims; no queue
 //!    or mailbox mutates past this point. Draining before this barrier
 //!    would race with producers still inside the window (and made the old
 //!    kernel's drain *batching* host-timing-dependent: a fast thread could
@@ -17,26 +29,34 @@
 //!    the events of the closed window — the drain-sort is deterministic and
 //!    the [`crate::sched::Mailbox`] can reclaim fully-consumed segments
 //!    with no epochs.
-//! 2. Every thread drains its own mailbox (single consumer) and publishes
-//!    its post-drain `next_tick`; the **publish** barrier then makes all of
+//! 2. Inside the quiescent span each thread drains the mailboxes of its
+//!    *statically* assigned domains (`d % n_threads` — one consumer per
+//!    mailbox per border regardless of stealing) and publishes their
+//!    post-drain `next_tick`s; the **publish** barrier then makes all of
 //!    them visible.
 //! 3. The leader of the publish barrier computes the verdict (stop flag /
-//!    global quiescence / max-ticks) while the others wait at the
+//!    global quiescence / max-ticks) and — when continuing — the next
+//!    `window_end` via [`crate::sched::plan_next_window`] (leaping dead
+//!    windows under `--quantum-policy horizon|hybrid`) plus the next claim
+//!    order (heaviest domain first), while the others wait at the
 //!    **verdict** barrier; after it, everyone reads the same verdict and
-//!    either continues or breaks. (Quiescence is simply "all post-drain
-//!    next_ticks are `Tick::MAX`" — mailboxes are empty by construction.)
+//!    either continues into the planned window or breaks. (Quiescence is
+//!    simply "all post-drain next_ticks are `Tick::MAX`" — mailboxes are
+//!    empty by construction.)
 //!
 //! A panic inside a domain (a model bug) aborts the barrier so the
 //! remaining threads exit instead of deadlocking; the panic is re-thrown
 //! on the caller thread.
 
 use std::sync::atomic::Ordering::{Acquire, Relaxed, Release};
-use std::sync::atomic::{AtomicU64, AtomicU8};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8};
+use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::sched::{Outcome, TreeBarrier};
+use crate::sched::{plan_next_window, ClaimList, Outcome, TreeBarrier};
 use crate::sim::time::Tick;
 
+use super::domain::Domain;
 use super::machine::Machine;
 use super::result::{PdesSnapshot, RunResult};
 
@@ -49,30 +69,82 @@ pub fn run_parallel(mut machine: Machine, max_ticks: Tick) -> RunResult {
     let shared = machine.shared.clone();
     let quantum = shared.quantum;
     assert!(quantum > 0 && quantum < Tick::MAX, "parallel requires a quantum");
+    let policy = shared.policy;
+    let n_threads =
+        if policy.threads == 0 { n } else { policy.threads.min(n) };
 
-    let barrier = TreeBarrier::new(n);
+    // Component init is deterministic and single-threaded here (it was
+    // per-domain-thread before; the scheduled events are identical).
+    for dom in machine.domains.iter_mut() {
+        dom.init_components(&shared, quantum);
+    }
+
+    // Domains become claimable work items. The mutexes are uncontended by
+    // construction — claims and the static drain partition each hand a
+    // domain to exactly one thread at a time — they only make the handoff
+    // safe Rust.
+    let slots: Vec<Mutex<Domain>> = std::mem::take(&mut machine.domains)
+        .into_iter()
+        .map(Mutex::new)
+        .collect();
+
+    let barrier = TreeBarrier::new(n_threads);
     let next_ticks: Vec<AtomicU64> =
         (0..n).map(|_| AtomicU64::new(0)).collect();
+    // Events each domain executed in the closed window: the load metric
+    // for the deterministic victim order.
+    let loads: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+    let claims = ClaimList::identity(n);
     let verdict = AtomicU8::new(VERDICT_CONTINUE);
+    // Written by the verdict leader, read by everyone after the verdict
+    // barrier (which provides the ordering).
+    let next_window_end = AtomicU64::new(quantum);
 
     let start = Instant::now();
 
     std::thread::scope(|scope| {
         let mut handles = Vec::new();
-        for (di, dom) in machine.domains.iter_mut().enumerate() {
+        for ti in 0..n_threads {
             let shared = &shared;
             let barrier = &barrier;
             let next_ticks = &next_ticks;
+            let loads = &loads;
+            let claims = &claims;
             let verdict = &verdict;
+            let next_window_end = &next_window_end;
+            let slots = &slots;
             handles.push(scope.spawn(move || {
                 let body = std::panic::AssertUnwindSafe(|| {
-                    let mut w = barrier.waiter(di);
+                    let mut w = barrier.waiter(ti);
                     let mut window_end = quantum;
-                    dom.init_components(shared, window_end);
                     loop {
-                        dom.run_window(shared, window_end.min(max_ticks));
+                        // Window: execute claimed domains.
+                        if policy.steal {
+                            while let Some(d) = claims.claim() {
+                                let mut dom = slots[d].lock().unwrap();
+                                let ex = dom
+                                    .run_window(shared, window_end.min(max_ticks));
+                                loads[d].store(ex as u32, Relaxed);
+                                if d % n_threads != ti {
+                                    shared.pdes.steals.fetch_add(1, Relaxed);
+                                    shared
+                                        .pdes
+                                        .stolen_events
+                                        .fetch_add(ex, Relaxed);
+                                }
+                            }
+                        } else {
+                            // Static binding: loads are only consumed by
+                            // the steal replanner, so don't record them.
+                            let mut d = ti;
+                            while d < n {
+                                let mut dom = slots[d].lock().unwrap();
+                                dom.run_window(shared, window_end.min(max_ticks));
+                                d += n_threads;
+                            }
+                        }
 
-                        // Phase 1: freeze — all windows finished, no
+                        // Phase 1: freeze — all claims finished, no
                         // producer touches any mailbox past this point.
                         match barrier.wait(&mut w) {
                             Outcome::Aborted => return,
@@ -82,23 +154,58 @@ pub fn run_parallel(mut machine: Machine, max_ticks: Tick) -> RunResult {
                             Outcome::Follower => {}
                         }
 
-                        // Quiescent span: single-consumer drain, then
-                        // publish the post-drain horizon.
-                        dom.drain_injections(shared);
-                        next_ticks[di].store(dom.next_tick(), Release);
+                        // Quiescent span: drain the statically assigned
+                        // mailboxes (single consumer per mailbox), then
+                        // publish the post-drain horizons.
+                        let mut d = ti;
+                        while d < n {
+                            let mut dom = slots[d].lock().unwrap();
+                            dom.drain_injections(shared);
+                            next_ticks[d].store(dom.next_tick(), Release);
+                            d += n_threads;
+                        }
 
                         // Phase 2: publish — all post-drain next_ticks are
-                        // now visible; the leader computes the verdict
-                        // while the others park in phase 3.
+                        // now visible; the leader computes the verdict and
+                        // the next window plan while the others park in
+                        // phase 3.
                         match barrier.wait(&mut w) {
                             Outcome::Aborted => return,
                             Outcome::Leader => {
-                                let quiescent = next_ticks
-                                    .iter()
-                                    .all(|t| t.load(Acquire) == Tick::MAX);
+                                let mut horizon = Tick::MAX;
+                                for t in next_ticks.iter() {
+                                    horizon = horizon.min(t.load(Acquire));
+                                }
+                                let quiescent = horizon == Tick::MAX;
                                 let stop = shared.should_stop()
                                     || quiescent
                                     || window_end >= max_ticks;
+                                if !stop {
+                                    // Clamp the leap target to the run
+                                    // cutoff: windows past max_ticks are
+                                    // never executed by any policy, so
+                                    // they must not count as skipped.
+                                    let plan = plan_next_window(
+                                        policy.quantum_policy,
+                                        window_end,
+                                        quantum,
+                                        horizon
+                                            .min(max_ticks.saturating_sub(1)),
+                                    );
+                                    shared
+                                        .pdes
+                                        .quanta_skipped
+                                        .fetch_add(plan.skipped_quanta, Relaxed);
+                                    next_window_end
+                                        .store(plan.window_end, Relaxed);
+                                    if policy.steal {
+                                        let ld: Vec<u32> = loads
+                                            .iter()
+                                            .map(|l| l.load(Relaxed))
+                                            .collect();
+                                        claims.replan(&ld);
+                                    }
+                                }
                                 verdict.store(
                                     if stop { VERDICT_STOP } else { VERDICT_CONTINUE },
                                     Release,
@@ -114,7 +221,7 @@ pub fn run_parallel(mut machine: Machine, max_ticks: Tick) -> RunResult {
                         if verdict.load(Acquire) == VERDICT_STOP {
                             break;
                         }
-                        window_end += quantum;
+                        window_end = next_window_end.load(Relaxed);
                     }
                 });
                 if let Err(payload) = std::panic::catch_unwind(body) {
@@ -133,6 +240,11 @@ pub fn run_parallel(mut machine: Machine, max_ticks: Tick) -> RunResult {
             std::panic::resume_unwind(p);
         }
     });
+
+    machine.domains = slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap_or_else(|p| p.into_inner()))
+        .collect();
 
     let host_ns = start.elapsed().as_nanos() as u64;
     RunResult {

@@ -12,6 +12,10 @@ use crate::sim::time::{ticks_to_seconds, Tick};
 pub struct WorkProfile {
     /// `work[q][d]` = events domain `d` executed in quantum `q`.
     pub per_quantum: Vec<Vec<u32>>,
+    /// `window_ends[q]` = the `window_end` the quantum policy chose for
+    /// window `q` (aligned with `per_quantum`); records every per-window
+    /// adaptive-quantum decision of the run.
+    pub window_ends: Vec<Tick>,
 }
 
 impl WorkProfile {
@@ -30,6 +34,12 @@ pub struct PdesSnapshot {
     pub postponed: u64,
     pub tpp_sum: Tick,
     pub barriers: u64,
+    /// Dead windows the adaptive quantum policy skipped (deterministic).
+    pub quanta_skipped: u64,
+    /// Stolen window claims (threaded kernel; host-timing dependent).
+    pub steals: u64,
+    /// Events executed in stolen claims (host-timing dependent).
+    pub stolen_events: u64,
 }
 
 impl PdesSnapshot {
@@ -39,6 +49,9 @@ impl PdesSnapshot {
             postponed: s.pdes.postponed.load(Relaxed),
             tpp_sum: s.pdes.tpp_sum.load(Relaxed),
             barriers: s.pdes.barriers.load(Relaxed),
+            quanta_skipped: s.pdes.quanta_skipped.load(Relaxed),
+            steals: s.pdes.steals.load(Relaxed),
+            stolen_events: s.pdes.stolen_events.load(Relaxed),
         }
     }
 

@@ -12,8 +12,10 @@
 //! schedule of each quantum's per-domain work plus a per-barrier
 //! synchronisation cost.
 
+use std::sync::atomic::Ordering::Relaxed;
 use std::time::Instant;
 
+use crate::sched::plan_next_window;
 use crate::sim::time::Tick;
 
 use super::machine::Machine;
@@ -25,6 +27,7 @@ pub fn run_virtual(mut machine: Machine, max_ticks: Tick) -> RunResult {
     let shared = machine.shared.clone();
     let quantum = shared.quantum;
     assert!(quantum > 0 && quantum < Tick::MAX, "virtual requires a quantum");
+    let policy = shared.policy;
 
     let start = Instant::now();
     let mut work = WorkProfile::default();
@@ -41,10 +44,8 @@ pub fn run_virtual(mut machine: Machine, max_ticks: Tick) -> RunResult {
                 dom.run_window(&shared, window_end.min(max_ticks)) as u32;
         }
         work.per_quantum.push(q_work);
-        shared
-            .pdes
-            .barriers
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        work.window_ends.push(window_end);
+        shared.pdes.barriers.fetch_add(1, Relaxed);
 
         // Same border verdict as the threaded kernel's three-phase
         // protocol: drain first, then decide on the post-drain horizon
@@ -53,14 +54,27 @@ pub fn run_virtual(mut machine: Machine, max_ticks: Tick) -> RunResult {
         for dom in machine.domains.iter_mut() {
             dom.drain_injections(&shared);
         }
-        let quiescent = machine
+        let horizon = machine
             .domains
             .iter_mut()
-            .all(|d| d.next_tick() == Tick::MAX);
-        if stop || quiescent || window_end >= max_ticks {
+            .map(|d| d.next_tick())
+            .min()
+            .unwrap_or(Tick::MAX);
+        if stop || horizon == Tick::MAX || window_end >= max_ticks {
             break;
         }
-        window_end += quantum;
+        // Identical border plan as the threaded kernel: the quantum policy
+        // may leap over windows that provably contain no events. The leap
+        // target is clamped to the run cutoff — windows past max_ticks are
+        // never executed by any policy, so they must not count as skipped.
+        let plan = plan_next_window(
+            policy.quantum_policy,
+            window_end,
+            quantum,
+            horizon.min(max_ticks.saturating_sub(1)),
+        );
+        shared.pdes.quanta_skipped.fetch_add(plan.skipped_quanta, Relaxed);
+        window_end = plan.window_end;
     }
 
     let host_ns = start.elapsed().as_nanos() as u64;
@@ -87,11 +101,22 @@ pub struct HostModel {
     /// ping-pong; 2 us is a conservative mid-range figure for 33-129
     /// threads).
     pub barrier_cost_ns: f64,
+    /// Model claim-based window work stealing: `true` packs each window's
+    /// per-domain work LPT-style onto the host cores (what `--steal`
+    /// converges to); `false` models the static `d % h_cores`
+    /// domain→thread binding, so a skewed window is bounded by its most
+    /// loaded *thread*, not its most loaded domain.
+    pub steal: bool,
 }
 
 impl Default for HostModel {
     fn default() -> Self {
-        HostModel { h_cores: 64, event_cost_ns: 250.0, barrier_cost_ns: 1_000.0 }
+        HostModel {
+            h_cores: 64,
+            event_cost_ns: 250.0,
+            barrier_cost_ns: 1_000.0,
+            steal: true,
+        }
     }
 }
 
@@ -104,6 +129,7 @@ impl HostModel {
             h_cores,
             event_cost_ns: 250.0,
             barrier_cost_ns: 500.0 + 25.0 * n_domains as f64,
+            steal: true,
         }
     }
 
@@ -114,8 +140,13 @@ impl HostModel {
         }
     }
 
-    /// Makespan (ns) of one quantum's per-domain work on `h_cores` threads:
-    /// longest-processing-time-first list schedule (within 4/3 of optimal).
+    /// Makespan (ns) of one quantum's per-domain work on `h_cores` threads.
+    ///
+    /// With [`HostModel::steal`] the work is packed by a
+    /// longest-processing-time-first list schedule (within 4/3 of optimal —
+    /// the bound claim-based stealing converges to); without it, domain `d`
+    /// is pinned to host core `d % h_cores` like the kernel's static
+    /// assignment.
     pub fn quantum_makespan(&self, work_events: &[u32]) -> f64 {
         if work_events.is_empty() {
             return 0.0;
@@ -127,16 +158,22 @@ impl HostModel {
         if self.h_cores >= w.len() {
             return w.iter().cloned().fold(0.0, f64::max);
         }
-        w.sort_by(|a, b| b.partial_cmp(a).unwrap());
         let mut loads = vec![0.0f64; self.h_cores];
-        for x in w {
-            // assign to least-loaded host core
-            let (mi, _) = loads
-                .iter()
-                .enumerate()
-                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap();
-            loads[mi] += x;
+        if self.steal {
+            w.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            for x in w {
+                // assign to least-loaded host core
+                let (mi, _) = loads
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap();
+                loads[mi] += x;
+            }
+        } else {
+            for (d, x) in w.iter().enumerate() {
+                loads[d % self.h_cores] += x;
+            }
         }
         loads.iter().cloned().fold(0.0, f64::max)
     }
@@ -171,32 +208,55 @@ impl HostModel {
 mod tests {
     use super::*;
 
+    fn model(h_cores: usize, event_cost_ns: f64, barrier_cost_ns: f64) -> HostModel {
+        HostModel { h_cores, event_cost_ns, barrier_cost_ns, steal: true }
+    }
+
     #[test]
     fn makespan_unlimited_cores_is_max() {
-        let m = HostModel { h_cores: 8, event_cost_ns: 1.0, barrier_cost_ns: 0.0 };
+        let m = model(8, 1.0, 0.0);
         assert_eq!(m.quantum_makespan(&[3, 7, 2]), 7.0);
     }
 
     #[test]
     fn makespan_lpt_packs_two_cores() {
-        let m = HostModel { h_cores: 2, event_cost_ns: 1.0, barrier_cost_ns: 0.0 };
+        let m = model(2, 1.0, 0.0);
         // LPT: [8] | [5,4] -> makespan 9
         assert_eq!(m.quantum_makespan(&[5, 8, 4]), 9.0);
     }
 
     #[test]
+    fn steal_beats_static_binding_on_skew() {
+        // Domains 0 and 2 carry all the work; statically they share host
+        // core 0 (d % 2) while core 1 idles.
+        let steal = model(2, 1.0, 0.0);
+        let fixed = HostModel { steal: false, ..steal };
+        assert_eq!(fixed.quantum_makespan(&[10, 0, 10, 0]), 20.0);
+        assert_eq!(steal.quantum_makespan(&[10, 0, 10, 0]), 10.0);
+        // On balanced work the two models agree.
+        assert_eq!(fixed.quantum_makespan(&[5, 5, 5, 5]), 10.0);
+        assert_eq!(steal.quantum_makespan(&[5, 5, 5, 5]), 10.0);
+    }
+
+    #[test]
     fn speedup_perfect_balance() {
-        let m = HostModel { h_cores: 4, event_cost_ns: 10.0, barrier_cost_ns: 0.0 };
-        let work = WorkProfile { per_quantum: vec![vec![100, 100, 100, 100]] };
+        let m = model(4, 10.0, 0.0);
+        let work = WorkProfile {
+            per_quantum: vec![vec![100, 100, 100, 100]],
+            ..Default::default()
+        };
         // serial: 400 events; parallel: 100 events of critical path
         assert!((m.speedup(400, &work) - 4.0).abs() < 1e-9);
     }
 
     #[test]
     fn barrier_cost_reduces_speedup() {
-        let free = HostModel { h_cores: 4, event_cost_ns: 10.0, barrier_cost_ns: 0.0 };
-        let costly = HostModel { h_cores: 4, event_cost_ns: 10.0, barrier_cost_ns: 1000.0 };
-        let work = WorkProfile { per_quantum: vec![vec![100, 100, 100, 100]; 10] };
+        let free = model(4, 10.0, 0.0);
+        let costly = model(4, 10.0, 1000.0);
+        let work = WorkProfile {
+            per_quantum: vec![vec![100, 100, 100, 100]; 10],
+            ..Default::default()
+        };
         assert!(costly.speedup(4000, &work) < free.speedup(4000, &work));
     }
 }

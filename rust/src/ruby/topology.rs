@@ -120,6 +120,7 @@ pub fn build_system(cfg: &RunConfig, workload: &Workload) -> BuiltSystem {
 
     let mut b = MachineBuilder::new(n_domains, quantum);
     b.set_queue(cfg.queue);
+    b.set_policy(cfg.run_policy());
     b.set_cores(n as u32);
 
     let noc = sys.noc_latency();

@@ -3,7 +3,7 @@
 //! The threaded kernel synchronises all domain threads at every quantum
 //! border (Fig. 1b). The old centralised barrier funnelled every arrival
 //! through one mutex + condvar, an O(n) cache-line ping-pong per phase;
-//! here arrivals combine up a fan-in-[`FANIN`] tree of cache-line-padded
+//! here arrivals combine up a fan-in-`FANIN` tree of cache-line-padded
 //! counters, so contention per node is bounded by the fan-in, and release
 //! is a single global sense flip that waiters observe with one acquire
 //! load.

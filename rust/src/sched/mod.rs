@@ -15,22 +15,35 @@
 //!   for cross-domain event scheduling.
 //! * [`barrier`] — [`TreeBarrier`], the sense-reversing combining-tree
 //!   quantum barrier with abort support.
+//! * [`quantum`] — [`QuantumPolicy`] and [`plan_next_window`], the
+//!   adaptive-quantum border decision (leap over provably dead windows),
+//!   plus [`RunPolicy`], the per-run policy knobs.
+//! * [`steal`] — [`ClaimList`], the per-window domain→thread claim list
+//!   that lets idle host threads adopt the windows of loaded domains with
+//!   a deterministic victim order.
 //!
-//! Nothing outside this module names a queue, injector or barrier
-//! implementation directly: kernels and models go through [`SchedQueue`],
-//! [`Mailbox`] and [`TreeBarrier`] only, so future scaling work (sharding,
-//! adaptive quantum, work stealing) stays local to `sched/`.
+//! Nothing outside this module names a queue, injector, barrier or border
+//! policy implementation directly: kernels and models go through
+//! [`SchedQueue`], [`Mailbox`], [`TreeBarrier`], [`plan_next_window`] and
+//! [`ClaimList`] only, so future scaling work (e.g. queue sharding) stays
+//! local to `sched/`.
 
 pub mod api;
 pub mod barrier;
 pub mod bucket;
 pub mod heap;
 pub mod mailbox;
+pub mod quantum;
 pub mod queue;
+pub mod steal;
 
 pub use api::{EventHandle, QueueKind, Scheduler};
 pub use barrier::{Outcome, TreeBarrier, Waiter};
 pub use bucket::BucketQueue;
 pub use heap::HeapQueue;
 pub use mailbox::Mailbox;
+pub use quantum::{
+    plan_next_window, QuantumPolicy, RunPolicy, WindowPlan, DEFAULT_MAX_LEAP,
+};
 pub use queue::SchedQueue;
+pub use steal::ClaimList;

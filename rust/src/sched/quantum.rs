@@ -1,0 +1,230 @@
+//! Adaptive-quantum policy: how the border leader picks the next
+//! `window_end`.
+//!
+//! With a fixed quantum the kernel executes a barrier every `t_q` of
+//! simulated time even when no domain has an event for thousands of ticks
+//! (DRAM stalls, devices idling, all cores blocked on a miss). The border
+//! verdict of the three-phase protocol already sees every domain's
+//! post-drain `next_tick`, so the leader can compute the **global event
+//! horizon** — the minimum over all domains — and leap the window directly
+//! to the first quantum border after it, skipping the dead windows
+//! entirely.
+//!
+//! The leap is **exact**, not an approximation: events only execute in
+//! windows that contain them, cross-domain postponement targets only depend
+//! on the `window_end` of windows in which events execute, and the chosen
+//! `window_end` stays on the fixed quantum grid — so every policy executes
+//! the same events in the same windows and produces bit-identical
+//! `sim_ticks` and per-component statistics. Only the number of barriers
+//! (and therefore host wall-clock) changes. DESIGN.md §4.4 carries the full
+//! argument.
+//!
+//! Policies ([`QuantumPolicy`], selected via `RunConfig::quantum_policy` /
+//! `--quantum-policy`):
+//!
+//! * `Fixed` — the paper's behaviour: `window_end += quantum`, always.
+//! * `Horizon` — leap to the first grid border strictly after the global
+//!   horizon (unbounded leap).
+//! * `Hybrid` — like `Horizon` but leap at most `max_leap` quanta per
+//!   border, bounding the worst-case border-to-border latency for host-side
+//!   observers (stats polling, stop-flag responsiveness).
+
+use crate::sim::time::Tick;
+
+/// Default `max_leap` for [`QuantumPolicy::Hybrid`] (quanta per border).
+pub const DEFAULT_MAX_LEAP: u32 = 64;
+
+/// How the border leader advances `window_end` (see module docs).
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub enum QuantumPolicy {
+    /// Fixed windows: `window_end += quantum` at every border.
+    #[default]
+    Fixed,
+    /// Leap to the first quantum-grid border strictly after the global
+    /// event horizon; dead windows cost no barrier at all.
+    Horizon,
+    /// Horizon leaping, clamped to at most `max_leap` quanta per border.
+    Hybrid {
+        /// Maximum quanta leapt in one border decision (≥ 1).
+        max_leap: u32,
+    },
+}
+
+impl QuantumPolicy {
+    /// Parse a `--quantum-policy` value (`fixed`, `horizon`, `hybrid`).
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "fixed" => QuantumPolicy::Fixed,
+            "horizon" => QuantumPolicy::Horizon,
+            "hybrid" => QuantumPolicy::Hybrid { max_leap: DEFAULT_MAX_LEAP },
+            _ => return None,
+        })
+    }
+}
+
+/// Per-run scheduling policy knobs, carried by the shared state so both
+/// parallel kernels read the same configuration at the border.
+#[derive(Copy, Clone, Debug, Default)]
+pub struct RunPolicy {
+    /// Window-advance policy (see [`QuantumPolicy`]).
+    pub quantum_policy: QuantumPolicy,
+    /// Claim-based window work stealing in the threaded kernel (opt-in;
+    /// see [`crate::sched::ClaimList`]).
+    pub steal: bool,
+    /// Host threads for the threaded kernel; `0` means one per domain
+    /// (the paper's configuration).
+    pub threads: usize,
+}
+
+/// One border decision: the next `window_end` plus how many whole quanta
+/// of dead simulated time the leap skipped (0 under [`QuantumPolicy::Fixed`]).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct WindowPlan {
+    pub window_end: Tick,
+    pub skipped_quanta: u64,
+}
+
+/// Compute the next `window_end` from the current border.
+///
+/// `cur_end` is the border being decided at (always on the quantum grid),
+/// `horizon` the global minimum post-drain `next_tick` over all domains.
+/// The result is always on the grid, always advances by at least one
+/// quantum, and never leaps past an existing event: the returned window is
+/// exactly the one in which the horizon event executes under the fixed
+/// policy (or an earlier, provably empty one under `Hybrid`'s clamp).
+pub fn plan_next_window(
+    policy: QuantumPolicy,
+    cur_end: Tick,
+    quantum: Tick,
+    horizon: Tick,
+) -> WindowPlan {
+    debug_assert!(quantum > 0, "windowed kernels require a positive quantum");
+    let base = cur_end.saturating_add(quantum);
+    let cap = match policy {
+        QuantumPolicy::Fixed => {
+            return WindowPlan { window_end: base, skipped_quanta: 0 };
+        }
+        QuantumPolicy::Horizon => Tick::MAX,
+        QuantumPolicy::Hybrid { max_leap } => cur_end
+            .saturating_add(quantum.saturating_mul(max_leap.max(1) as Tick)),
+    };
+    // First grid border strictly after the horizon: the window an event at
+    // `horizon` executes in (events run strictly before `window_end`).
+    let target = (horizon / quantum).saturating_add(1).saturating_mul(quantum);
+    let window_end = target.clamp(base, cap.max(base));
+    WindowPlan {
+        window_end,
+        skipped_quanta: (window_end - base) / quantum,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses() {
+        assert_eq!(QuantumPolicy::parse("fixed"), Some(QuantumPolicy::Fixed));
+        assert_eq!(
+            QuantumPolicy::parse("Horizon"),
+            Some(QuantumPolicy::Horizon)
+        );
+        assert_eq!(
+            QuantumPolicy::parse("hybrid"),
+            Some(QuantumPolicy::Hybrid { max_leap: DEFAULT_MAX_LEAP })
+        );
+        assert_eq!(QuantumPolicy::parse("adaptive"), None);
+    }
+
+    #[test]
+    fn fixed_always_steps_one_quantum() {
+        for horizon in [0u64, 5, 100, 10_000, Tick::MAX] {
+            let p = plan_next_window(QuantumPolicy::Fixed, 80, 10, horizon);
+            assert_eq!(p, WindowPlan { window_end: 90, skipped_quanta: 0 });
+        }
+    }
+
+    #[test]
+    fn horizon_within_next_window_steps_one_quantum() {
+        // Next event at tick 83: the next window (80, 90) contains it.
+        let p = plan_next_window(QuantumPolicy::Horizon, 80, 10, 83);
+        assert_eq!(p, WindowPlan { window_end: 90, skipped_quanta: 0 });
+    }
+
+    #[test]
+    fn horizon_leaps_dead_windows() {
+        // Next event at tick 137: windows ending 90..=130 are dead; the
+        // event executes in (130, 140).
+        let p = plan_next_window(QuantumPolicy::Horizon, 80, 10, 137);
+        assert_eq!(p, WindowPlan { window_end: 140, skipped_quanta: 5 });
+    }
+
+    #[test]
+    fn horizon_on_grid_border_lands_in_covering_window() {
+        // An event exactly at a border tick executes in the window that
+        // *ends after* it (windows are end-exclusive).
+        let p = plan_next_window(QuantumPolicy::Horizon, 80, 10, 130);
+        assert_eq!(p, WindowPlan { window_end: 140, skipped_quanta: 5 });
+    }
+
+    #[test]
+    fn horizon_in_past_never_stalls() {
+        // A late cross-domain insert below the border still advances the
+        // window by one quantum (it executes in the very next window).
+        let p = plan_next_window(QuantumPolicy::Horizon, 80, 10, 4);
+        assert_eq!(p, WindowPlan { window_end: 90, skipped_quanta: 0 });
+    }
+
+    #[test]
+    fn hybrid_clamps_the_leap() {
+        let p = plan_next_window(
+            QuantumPolicy::Hybrid { max_leap: 3 },
+            80,
+            10,
+            1000,
+        );
+        assert_eq!(p, WindowPlan { window_end: 110, skipped_quanta: 2 });
+        // Within the clamp it behaves like Horizon.
+        let p = plan_next_window(
+            QuantumPolicy::Hybrid { max_leap: 8 },
+            80,
+            10,
+            137,
+        );
+        assert_eq!(p, WindowPlan { window_end: 140, skipped_quanta: 5 });
+    }
+
+    #[test]
+    fn stays_on_the_quantum_grid() {
+        for policy in [
+            QuantumPolicy::Fixed,
+            QuantumPolicy::Horizon,
+            QuantumPolicy::Hybrid { max_leap: 4 },
+        ] {
+            let mut cur = 16u64;
+            for horizon in [17u64, 40, 900, 3333, 100_000] {
+                let p = plan_next_window(policy, cur, 16, horizon);
+                assert_eq!(p.window_end % 16, 0, "{policy:?} left the grid");
+                assert!(p.window_end > cur, "{policy:?} did not advance");
+                if policy == QuantumPolicy::Horizon {
+                    assert!(
+                        p.window_end > horizon,
+                        "Horizon must land past the next event"
+                    );
+                }
+                cur = p.window_end;
+            }
+        }
+    }
+
+    #[test]
+    fn saturates_instead_of_overflowing() {
+        let p = plan_next_window(
+            QuantumPolicy::Horizon,
+            Tick::MAX - 10,
+            1 << 40,
+            Tick::MAX - 5,
+        );
+        assert_eq!(p.window_end, Tick::MAX);
+    }
+}

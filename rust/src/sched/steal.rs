@@ -1,0 +1,159 @@
+//! [`ClaimList`]: deterministic-victim work stealing for window execution.
+//!
+//! The threaded kernel binds *domains* to *host threads*. With the paper's
+//! static 1:1 binding, a thread whose domain goes quiescent early idles at
+//! the freeze barrier while loaded domains still grind — MGSim calls this
+//! out as the main waste of host cores under skewed event density
+//! (arXiv 1302.1390). The cure is to make the binding per-window: each
+//! window, every runnable domain (its whole movable `SchedQueue` plus the
+//! components it drives) is an indivisible work item, and threads *claim*
+//! items from a shared list until it is exhausted. A thread that finishes
+//! its first claim early adopts the next unclaimed — i.e. steals the window
+//! of — the most-loaded remaining domain.
+//!
+//! **Determinism guard.** Stealing never splits a domain: a claim hands the
+//! *entire* domain to exactly one thread for the window, so its events
+//! still execute sequentially in `(tick, prio, seq)` order against its own
+//! components, mailboxes keep their single consumer at the border, and the
+//! component→domain map never changes (cross-domain classification — and
+//! therefore postponement — is untouched). Stealing therefore introduces
+//! **no new nondeterminism**: every simulation-visible effect of a window
+//! (events executed, mailbox pushes, border drains) is the same whichever
+//! thread runs it. What remains host-timing dependent is exactly what was
+//! already host-timing dependent in the threaded kernel without stealing —
+//! intra-window Ruby message arrival (paper §6) — so the gates in
+//! `tests/adaptive_quantum.rs` assert functional identity (checksums,
+//! committed ops) for the threaded kernel across steal/thread settings,
+//! and bit-identity on the deterministic kernel, matching the guarantees
+//! the rest of the suite gives the threaded kernel. Host-side counters
+//! (steal counts, wall-clock) always vary.
+//!
+//! **Victim selection** is deterministic: at each border the leader sorts
+//! the claim order by the events each domain executed in the closed window
+//! (descending — an LPT list schedule), breaking ties by domain id. The
+//! *claim order* is therefore a pure function of the simulation; only the
+//! claim *assignment* (which thread pops which item) depends on host
+//! timing, and that assignment cannot affect results per the argument
+//! above.
+//!
+//! **Synchronisation contract.** `claim` may be called concurrently by any
+//! worker between two barriers; `replan` may only be called while every
+//! other participant is parked at a barrier (the quantum-border quiescent
+//! span). All atomics are `Relaxed`: the surrounding
+//! [`crate::sched::TreeBarrier`] provides the happens-before edges between
+//! a `replan` and the next round of `claim`s.
+
+use std::cmp::Reverse;
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::atomic::{AtomicU32, AtomicUsize};
+
+/// A shared, re-plannable list of domain indices claimed one at a time.
+pub struct ClaimList {
+    /// Claim order for the current window (domain indices).
+    order: Vec<AtomicU32>,
+    /// Next position in `order` to hand out.
+    cursor: AtomicUsize,
+}
+
+impl ClaimList {
+    /// A claim list over `n` domains in identity order (the first window
+    /// runs before any load has been observed).
+    pub fn identity(n: usize) -> Self {
+        ClaimList {
+            order: (0..n).map(|d| AtomicU32::new(d as u32)).collect(),
+            cursor: AtomicUsize::new(0),
+        }
+    }
+
+    /// Number of work items per window.
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    /// Claim the next domain, or `None` when this window's list is
+    /// exhausted. Each index is handed out exactly once per window.
+    pub fn claim(&self) -> Option<usize> {
+        let i = self.cursor.fetch_add(1, Relaxed);
+        if i < self.order.len() {
+            Some(self.order[i].load(Relaxed) as usize)
+        } else {
+            None
+        }
+    }
+
+    /// Re-sort the claim order by observed load (events executed in the
+    /// closed window), heaviest first, ties by domain id, and reset the
+    /// cursor for the next window.
+    ///
+    /// Leader-only, and only while all other participants are parked at a
+    /// barrier (see the module-level contract).
+    pub fn replan(&self, loads: &[u32]) {
+        debug_assert_eq!(loads.len(), self.order.len());
+        let mut ids: Vec<u32> = (0..self.order.len() as u32).collect();
+        ids.sort_by_key(|&d| (Reverse(loads[d as usize]), d));
+        for (slot, d) in self.order.iter().zip(ids) {
+            slot.store(d, Relaxed);
+        }
+        self.cursor.store(0, Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_hands_out_each_index_once() {
+        let c = ClaimList::identity(4);
+        assert_eq!(c.len(), 4);
+        let got: Vec<usize> = std::iter::from_fn(|| c.claim()).collect();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+        assert_eq!(c.claim(), None, "exhausted lists stay exhausted");
+    }
+
+    #[test]
+    fn replan_orders_heaviest_first_with_id_tiebreak() {
+        let c = ClaimList::identity(5);
+        while c.claim().is_some() {}
+        c.replan(&[3, 9, 3, 0, 9]);
+        let got: Vec<usize> = std::iter::from_fn(|| c.claim()).collect();
+        assert_eq!(got, vec![1, 4, 0, 2, 3]);
+    }
+
+    #[test]
+    fn concurrent_claims_are_a_partition() {
+        use std::sync::Mutex;
+        let c = ClaimList::identity(64);
+        let seen = Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    let mut mine = Vec::new();
+                    while let Some(d) = c.claim() {
+                        mine.push(d);
+                    }
+                    seen.lock().unwrap().extend(mine);
+                });
+            }
+        });
+        let mut all = seen.into_inner().unwrap();
+        all.sort_unstable();
+        assert_eq!(all, (0..64).collect::<Vec<_>>(), "lost or double claim");
+    }
+
+    #[test]
+    fn replan_resets_for_the_next_window() {
+        let c = ClaimList::identity(3);
+        while c.claim().is_some() {}
+        c.replan(&[0, 0, 0]);
+        assert_eq!(
+            std::iter::from_fn(|| c.claim()).count(),
+            3,
+            "cursor must reset"
+        );
+    }
+}

@@ -9,7 +9,7 @@
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use crate::sched::Mailbox;
+use crate::sched::{Mailbox, RunPolicy};
 use crate::sim::ids::{CompId, DomainId};
 use crate::sim::time::Tick;
 
@@ -67,6 +67,14 @@ pub struct PdesStats {
     pub tpp_sum: AtomicU64,
     /// Quantum barriers executed.
     pub barriers: AtomicU64,
+    /// Dead quantum windows skipped by the adaptive window policy
+    /// (deterministic: a pure function of the simulation content).
+    pub quanta_skipped: AtomicU64,
+    /// Window claims executed by a thread other than the domain's home
+    /// thread (threaded kernel, `--steal`; host-timing dependent).
+    pub steals: AtomicU64,
+    /// Events executed inside stolen window claims (host-timing dependent).
+    pub stolen_events: AtomicU64,
 }
 
 /// State shared by all domains of one simulation run.
@@ -77,6 +85,9 @@ pub struct SharedState {
     pub injectors: Vec<Mailbox>,
     /// Quantum length in ticks; `Tick::MAX` disables windowing (serial).
     pub quantum: Tick,
+    /// Border policy knobs (adaptive quantum, stealing, thread count);
+    /// set once by the machine builder before the run starts.
+    pub policy: RunPolicy,
     pub pdes: PdesStats,
     pub stop: AtomicBool,
     pub cores_total: u32,
@@ -96,6 +107,7 @@ impl SharedState {
             locate,
             injectors,
             quantum,
+            policy: RunPolicy::default(),
             pdes: PdesStats::default(),
             stop: AtomicBool::new(false),
             cores_total,

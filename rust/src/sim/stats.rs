@@ -1,7 +1,7 @@
 //! Per-component statistic collection.
 //!
 //! Components expose their counters through [`StatSink`]; the harness
-//! aggregates them into a [`crate::stats::StatDump`] at the end of a run.
+//! aggregates them into a [`crate::stats::Summary`] at the end of a run.
 
 /// Collects `(name, value)` pairs, prefixed with the owning component name.
 #[derive(Default, Debug, Clone)]

@@ -23,6 +23,9 @@ pub struct Summary {
     pub postponed: u64,
     pub tpp_mean_ns: f64,
     pub barriers: u64,
+    pub quanta_skipped: u64,
+    pub steals: u64,
+    pub stolen_events: u64,
     pub l1i_miss_rate: f64,
     pub l1d_miss_rate: f64,
     pub l2_miss_rate: f64,
@@ -62,6 +65,9 @@ impl Summary {
             postponed: r.pdes.postponed,
             tpp_mean_ns: r.pdes.tpp_mean() / 1000.0,
             barriers: r.pdes.barriers,
+            quanta_skipped: r.pdes.quanta_skipped,
+            steals: r.pdes.steals,
+            stolen_events: r.pdes.stolen_events,
             l1i_miss_rate: avg_miss_rate(r, ".l1i.miss_rate"),
             l1d_miss_rate: avg_miss_rate(r, ".l1d.miss_rate"),
             l2_miss_rate: avg_miss_rate(r, ".l2.miss_rate"),
@@ -83,6 +89,9 @@ impl Summary {
             .u64("postponed", self.postponed)
             .f64("tpp_mean_ns", self.tpp_mean_ns)
             .u64("barriers", self.barriers)
+            .u64("quanta_skipped", self.quanta_skipped)
+            .u64("steals", self.steals)
+            .u64("stolen_events", self.stolen_events)
             .f64("l1i_miss_rate", self.l1i_miss_rate)
             .f64("l1d_miss_rate", self.l1d_miss_rate)
             .f64("l2_miss_rate", self.l2_miss_rate)

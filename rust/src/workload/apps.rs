@@ -238,7 +238,7 @@ impl App {
     }
 
     /// Procedurally generate the workload (fallback path; see
-    /// [`crate::runtime::trace_source`] for the artifact path).
+    /// [`crate::runtime::artifact_workload`] for the artifact path).
     pub fn generate(&self, n_cores: usize, ops_per_core: usize, seed: u64) -> Workload {
         let params: Vec<AddrGenParams> = (0..n_cores as u64)
             .map(|c| self.params_for_core(c, seed))

@@ -1,0 +1,271 @@
+//! Determinism gates for the adaptive quantum and window work stealing.
+//!
+//! The two mechanisms are host-side optimisations and must be invisible to
+//! simulation results (DESIGN.md §4.4/§4.5):
+//!
+//! * Every `--quantum-policy` value produces bit-identical `sim_ticks`,
+//!   event counts and per-component statistics on the deterministic
+//!   kernel; only the barrier count shrinks. The windows that actually
+//!   execute events are identical border-for-border.
+//! * `horizon` executes at most as many barriers as `fixed`, and on a
+//!   sparse/skewed 16-domain machine strictly fewer, with
+//!   `barriers + quanta_skipped` exactly equal to the fixed barrier count.
+//! * The threaded kernel stays functionally identical to the serial
+//!   reference across policies, steal on/off and thread counts. Its
+//!   intra-window Ruby timing is host-dependent by design (paper §6) —
+//!   with or without stealing — so the functional gate (checksums +
+//!   committed ops) is the strongest one available for it; the
+//!   bit-identity gates run on the deterministic kernel, where the
+//!   quantum policy is the only knob with any effect.
+
+use parti_sim::config::{Mode, RunConfig};
+use parti_sim::harness::{make_workload, run_with_workload};
+use parti_sim::pdes::{run_virtual, MachineBuilder, RunResult};
+use parti_sim::sched::{QuantumPolicy, RunPolicy};
+use parti_sim::sim::component::{Component, Ctx};
+use parti_sim::sim::event::EventKind;
+use parti_sim::sim::ids::DomainId;
+use parti_sim::sim::stats::StatSink;
+use parti_sim::sim::time::{Tick, NS};
+use parti_sim::stats::compare;
+
+const POLICIES: [QuantumPolicy; 3] = [
+    QuantumPolicy::Fixed,
+    QuantumPolicy::Horizon,
+    QuantumPolicy::Hybrid { max_leap: 4 },
+];
+
+fn assert_identical(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.sim_ticks, b.sim_ticks, "{what}: sim_ticks");
+    assert_eq!(a.events, b.events, "{what}: events");
+    assert_eq!(a.pdes.cross_events, b.pdes.cross_events, "{what}: cross");
+    assert_eq!(a.pdes.postponed, b.pdes.postponed, "{what}: postponed");
+    assert_eq!(a.pdes.tpp_sum, b.pdes.tpp_sum, "{what}: tpp_sum");
+    assert_eq!(
+        a.stats.entries.len(),
+        b.stats.entries.len(),
+        "{what}: stat cardinality"
+    );
+    for ((an, av), (bn, bv)) in a.stats.entries.iter().zip(&b.stats.entries) {
+        assert_eq!(an, bn, "{what}: stat name order");
+        assert_eq!(av, bv, "{what}: per-component stat {an}");
+    }
+}
+
+/// The windows that executed at least one event, as (window_end, work).
+fn busy_windows(r: &RunResult) -> Vec<(Tick, Vec<u32>)> {
+    let w = r.work.as_ref().expect("virtual runs record work");
+    w.window_ends
+        .iter()
+        .zip(&w.per_quantum)
+        .filter(|(_, q)| q.iter().any(|&x| x > 0))
+        .map(|(&e, q)| (e, q.clone()))
+        .collect()
+}
+
+fn virtual_run(policy: QuantumPolicy) -> RunResult {
+    let mut c = RunConfig {
+        app: "canneal".into(), // sharing app: exercises cross-domain paths
+        ops_per_core: 768,
+        mode: Mode::Virtual,
+        quantum: 8 * NS,
+        quantum_policy: policy,
+        ..Default::default()
+    };
+    c.system.cores = 4;
+    let w = make_workload(&c).unwrap();
+    run_with_workload(&c, &w).unwrap()
+}
+
+// (`RunPolicy::steal` has no effect in `Mode::Virtual` — the kernel is
+// single-threaded — so a virtual steal-on/off matrix would be vacuous.
+// Steal coverage lives in the threaded-kernel tests below, where the flag
+// actually changes the domain→thread binding.)
+#[test]
+fn virtual_is_identical_across_quantum_policies() {
+    let reference = virtual_run(QuantumPolicy::Fixed);
+    assert!(reference.events > 0);
+    let ref_busy = busy_windows(&reference);
+    assert!(!ref_busy.is_empty());
+    for policy in POLICIES {
+        let r = virtual_run(policy);
+        assert_identical(&reference, &r, &format!("{policy:?}"));
+        assert_eq!(
+            ref_busy,
+            busy_windows(&r),
+            "{policy:?}: busy windows must align border-for-border"
+        );
+        assert!(
+            r.pdes.barriers <= reference.pdes.barriers,
+            "{policy:?}: adaptive policies must not add barriers"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sparse/skewed 16-domain machine: each domain pulses on its own long
+// period, so most fixed windows are provably dead and `horizon` must
+// leap them.
+// ---------------------------------------------------------------------
+
+struct Pulse {
+    name: String,
+    period: Tick,
+    remaining: u32,
+    fired: u64,
+}
+
+impl Component for Pulse {
+    fn handle(&mut self, _kind: EventKind, ctx: &mut Ctx) {
+        self.fired += 1;
+        if self.remaining > 0 {
+            self.remaining -= 1;
+            ctx.schedule_self(
+                self.period,
+                EventKind::Generic { code: 0, arg: 0 },
+            );
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn init(&mut self, ctx: &mut Ctx) {
+        ctx.schedule_self(self.period, EventKind::Generic { code: 0, arg: 0 });
+    }
+
+    fn stats(&self, out: &mut StatSink) {
+        out.add_u64("fired", self.fired);
+    }
+}
+
+/// 16 domains, quantum 10 ticks, domain `d` pulses every `50 + 25*d`
+/// ticks, 30 times: dense enough to overlap, sparse enough that most grid
+/// windows are globally empty.
+fn sparse_machine(policy: QuantumPolicy) -> RunResult {
+    const QUANTUM: Tick = 10;
+    let mut b = MachineBuilder::new(16, QUANTUM);
+    b.set_policy(RunPolicy {
+        quantum_policy: policy,
+        steal: false,
+        threads: 0,
+    });
+    for d in 0..16u32 {
+        b.add(
+            DomainId(d),
+            Box::new(Pulse {
+                name: format!("pulse{d}"),
+                period: 50 + 25 * d as Tick,
+                remaining: 30,
+                fired: 0,
+            }),
+        );
+    }
+    run_virtual(b.finish(), 1_000_000)
+}
+
+#[test]
+fn horizon_skips_dead_windows_on_skewed_16_domains() {
+    let fixed = sparse_machine(QuantumPolicy::Fixed);
+    let horizon = sparse_machine(QuantumPolicy::Horizon);
+    let hybrid = sparse_machine(QuantumPolicy::Hybrid { max_leap: 4 });
+
+    assert_identical(&fixed, &horizon, "horizon vs fixed");
+    assert_identical(&fixed, &hybrid, "hybrid vs fixed");
+    assert_eq!(fixed.events, 16 * 31, "31 pulses per domain");
+
+    // The acceptance gate: horizon executes <= (here: strictly fewer)
+    // barriers than fixed on the skewed 16-domain config.
+    assert!(
+        horizon.pdes.barriers < fixed.pdes.barriers,
+        "horizon ({}) must beat fixed ({}) on a sparse machine",
+        horizon.pdes.barriers,
+        fixed.pdes.barriers
+    );
+    assert!(horizon.pdes.quanta_skipped > 0);
+    assert_eq!(fixed.pdes.quanta_skipped, 0, "fixed never leaps");
+
+    // Every window is either executed or skipped — nothing else: the grid
+    // walk is exact.
+    assert_eq!(
+        horizon.pdes.barriers + horizon.pdes.quanta_skipped,
+        fixed.pdes.barriers,
+        "windows executed + windows leapt must equal the fixed window count"
+    );
+    // Hybrid sits between the two.
+    assert!(horizon.pdes.barriers <= hybrid.pdes.barriers);
+    assert!(hybrid.pdes.barriers < fixed.pdes.barriers);
+    assert_eq!(
+        hybrid.pdes.barriers + hybrid.pdes.quanta_skipped,
+        fixed.pdes.barriers
+    );
+}
+
+// ---------------------------------------------------------------------
+// Threaded kernel: functional identity across every policy knob.
+// ---------------------------------------------------------------------
+
+#[test]
+fn threaded_kernel_functionally_identical_across_policy_knobs() {
+    let mut serial_cfg = RunConfig {
+        app: "synthetic".into(), // race-free app: checksums must match
+        ops_per_core: 512,
+        mode: Mode::Serial,
+        quantum: 8 * NS,
+        ..Default::default()
+    };
+    serial_cfg.system.cores = 4;
+    let w = make_workload(&serial_cfg).unwrap();
+    let serial = run_with_workload(&serial_cfg, &w).unwrap();
+
+    for policy in POLICIES {
+        for steal in [false, true] {
+            for threads in [0usize, 2] {
+                let mut cfg = serial_cfg.clone();
+                cfg.mode = Mode::Parallel;
+                cfg.quantum_policy = policy;
+                cfg.steal = steal;
+                cfg.threads = threads;
+                let par = run_with_workload(&cfg, &w).unwrap();
+                let what =
+                    format!("{policy:?}/steal={steal}/threads={threads}");
+                let acc = compare(&serial, &par);
+                assert!(acc.checksum_match, "{what}: checksums must match");
+                assert_eq!(
+                    serial.stats.sum_suffix(".committed_ops"),
+                    par.stats.sum_suffix(".committed_ops"),
+                    "{what}: all ops must commit"
+                );
+                assert_eq!(
+                    par.stats.sum_suffix(".value_mismatches"),
+                    0.0,
+                    "{what}: no coherence violations"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn oversubscribed_threaded_kernel_steals_windows() {
+    // 16 domains on 2 host threads with stealing: the claim list must
+    // actually migrate work between threads at least once.
+    let mut cfg = RunConfig {
+        app: "canneal".into(),
+        ops_per_core: 512,
+        mode: Mode::Parallel,
+        quantum: 8 * NS,
+        steal: true,
+        threads: 2,
+        ..Default::default()
+    };
+    cfg.system.cores = 15; // + shared domain = 16
+    let w = make_workload(&cfg).unwrap();
+    let r = run_with_workload(&cfg, &w).unwrap();
+    assert!(r.events > 0);
+    assert!(
+        r.pdes.steals > 0,
+        "2 threads x 16 domains must steal at least once"
+    );
+}

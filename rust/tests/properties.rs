@@ -377,12 +377,14 @@ fn prop_host_model_bounds_and_monotonicity() {
                     (0..domains).map(|_| g.range_u64(0, 500) as u32).collect()
                 })
                 .collect(),
+            ..Default::default()
         };
         let cost = 10.0;
         let mk = |h: usize| HostModel {
             h_cores: h,
             event_cost_ns: cost,
             barrier_cost_ns: 0.0,
+            steal: true,
         };
         for q in &work.per_quantum {
             let h = g.range_usize(1, 8);

@@ -1,0 +1,61 @@
+#!/usr/bin/env python3
+"""Offline markdown link checker.
+
+Verifies that every relative link target in the given markdown files exists
+on disk (the build environment has no network, so http(s) links are only
+syntax-checked, not fetched). Usage:
+
+    python3 tools/check_links.py README.md DESIGN.md ...
+
+Exits non-zero listing every broken link.
+"""
+
+import os
+import re
+import sys
+
+# [text](target) — target up to the first closing paren or whitespace.
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_SCHEMES = ("http://", "https://", "mailto:")
+
+
+def check_file(path: str) -> list[str]:
+    errors = []
+    base = os.path.dirname(os.path.abspath(path))
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    for lineno, line in enumerate(text.splitlines(), 1):
+        for target in LINK.findall(line):
+            if target.startswith(SKIP_SCHEMES):
+                continue
+            if target.startswith("#"):  # in-page anchor
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not os.path.exists(os.path.join(base, rel)):
+                errors.append(f"{path}:{lineno}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: check_links.py FILE.md [FILE.md ...]", file=sys.stderr)
+        return 2
+    errors = []
+    for path in argv:
+        if not os.path.exists(path):
+            errors.append(f"{path}: file not found")
+            continue
+        errors.extend(check_file(path))
+    for e in errors:
+        print(e, file=sys.stderr)
+    if errors:
+        print(f"{len(errors)} broken link(s)", file=sys.stderr)
+        return 1
+    print(f"ok: {len(argv)} file(s) checked")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
