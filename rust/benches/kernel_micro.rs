@@ -20,7 +20,9 @@ use parti_sim::mem::{CacheArray, LineState};
 use parti_sim::pdes::HostModel;
 use parti_sim::ruby::new_inbox;
 use parti_sim::ruby::{MsgKind, RubyMsg};
-use parti_sim::sched::{Mailbox, QuantumPolicy, QueueKind, SchedQueue, Scheduler};
+use parti_sim::sched::{
+    InboxOrder, Mailbox, QuantumPolicy, QueueKind, SchedQueue, Scheduler,
+};
 use parti_sim::sim::event::{prio, Event, EventKind};
 use parti_sim::sim::ids::CompId;
 use parti_sim::util::json::JsonObj;
@@ -293,6 +295,62 @@ fn main() {
         );
     }
     json = json.obj("threaded_16_domain_2_thread", threaded);
+
+    // Inbox handoff: host order (the paper's racy consumption) vs the
+    // deterministic border-ordered merge, on a sharing app where the
+    // cross-domain Ruby path is hot. Virtual kernel: both runs are
+    // deterministic, so the delta is the pure cost/benefit of staging +
+    // canonical merge; threaded 2-thread: the end-to-end price of
+    // determinism under real contention.
+    let mut inbox_rows = JsonObj::new();
+    for (mode_name, mode, threads) in [
+        ("virtual", parti_sim::config::Mode::Virtual, 0usize),
+        ("threaded_2t", parti_sim::config::Mode::Parallel, 2),
+    ] {
+        let mut pair = JsonObj::new();
+        for (name, order) in
+            [("host", InboxOrder::Host), ("border", InboxOrder::Border)]
+        {
+            let mut cfg = RunConfig {
+                app: "canneal".to_string(),
+                ops_per_core: 2048,
+                mode,
+                threads,
+                inbox_order: order,
+                ..Default::default()
+            };
+            cfg.system.cores = 15; // + shared domain = 16
+            let w = make_workload(&cfg).expect("workload");
+            let mut last = None;
+            let (m, lo, hi) = measure(5, || {
+                last = Some(run_with_workload(&cfg, &w).unwrap());
+            });
+            let r = last.expect("measured at least once");
+            bench_util::report(
+                &format!("inbox-order[{mode_name}/{name}] 16-domain e2e"),
+                m,
+                lo,
+                hi,
+            );
+            println!(
+                "  {mode_name}/{name}: staged={} reordered={} \
+                 merge={:.0} ns/window",
+                r.pdes.inbox_staged,
+                r.pdes.inbox_reordered,
+                r.pdes.merge_ns_per_window()
+            );
+            pair = pair.obj(
+                name,
+                JsonObj::new()
+                    .u64("median_ns", m as u64)
+                    .u64("inbox_staged", r.pdes.inbox_staged)
+                    .u64("inbox_reordered", r.pdes.inbox_reordered)
+                    .f64("merge_ns_per_window", r.pdes.merge_ns_per_window()),
+            );
+        }
+        inbox_rows = inbox_rows.obj(mode_name, pair);
+    }
+    json = json.obj("inbox_order_16_domain", inbox_rows);
 
     // End-to-end serial kernel throughput (the L3 §Perf headline).
     let mut cfg = RunConfig {

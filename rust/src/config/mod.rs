@@ -1,7 +1,7 @@
 //! System configuration (Table 2 of the paper) and run configuration.
 
 use crate::cpu::CpuModel;
-use crate::sched::{QuantumPolicy, QueueKind, RunPolicy};
+use crate::sched::{InboxOrder, QuantumPolicy, QueueKind, RunPolicy};
 use crate::sim::time::{Tick, NS};
 
 /// Cache geometry + latency.
@@ -128,6 +128,10 @@ pub struct RunConfig {
     pub steal: bool,
     /// Host threads for the threaded kernel; `0` = one per domain.
     pub threads: usize,
+    /// Cross-domain Ruby message visibility (`--inbox-order`): the
+    /// deterministic border-ordered handoff (default) or the paper's
+    /// host-order consumption (see [`InboxOrder`]).
+    pub inbox_order: InboxOrder,
 }
 
 impl Default for RunConfig {
@@ -146,6 +150,7 @@ impl Default for RunConfig {
             quantum_policy: QuantumPolicy::default(),
             steal: false,
             threads: 0,
+            inbox_order: InboxOrder::default(),
         }
     }
 }
@@ -157,6 +162,7 @@ impl RunConfig {
             quantum_policy: self.quantum_policy,
             steal: self.steal,
             threads: self.threads,
+            inbox_order: self.inbox_order,
         }
     }
 }

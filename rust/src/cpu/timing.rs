@@ -255,7 +255,25 @@ impl TimingCpu {
                                 EventKind::WlBarrierRelease,
                             );
                         }
-                        // Last arriver proceeds immediately.
+                        if ctx.border_ordered() {
+                            // Border-ordered mode: the last arriver
+                            // resumes through the same border-postponed
+                            // release event as every waiter, so the
+                            // resume tick no longer depends on which
+                            // core the host happened to run last — the
+                            // releasing call always executes in the
+                            // window of the simulated-last arrival, so
+                            // the effective tick is a pure function of
+                            // the simulation (docs/DETERMINISM.md).
+                            self.waiting_barrier = true;
+                            ctx.schedule_self_postponed(
+                                at,
+                                EventKind::WlBarrierRelease,
+                            );
+                            return;
+                        }
+                        // Host order: last arriver proceeds immediately
+                        // (the paper's behaviour).
                     }
                 }
             }

@@ -7,15 +7,17 @@ use anyhow::Result;
 use crate::config::{Mode, RunConfig};
 use crate::cpu::CpuModel;
 use crate::pdes::HostModel;
+use crate::sched::QuantumPolicy;
 use crate::sim::time::NS;
 use crate::workload::FIG8_APPS;
 
-use super::{compare_modes, run_once, ComparisonRow};
+use super::{compare_modes, make_workload, run_once, run_with_workload, ComparisonRow};
 
 /// Default quantum sweep (ns). The paper's max quantum is the L3-hit
 /// latency (~16 ns, §5.1).
 pub const QUANTA_NS: &[u64] = &[2, 4, 8, 16];
 
+#[derive(Clone, Copy)]
 pub struct FigureOpts {
     pub ops_per_core: usize,
     pub seed: u64,
@@ -26,6 +28,11 @@ pub struct FigureOpts {
     pub threaded: bool,
     /// Scale factor for core counts (keeps CI fast).
     pub max_cores: usize,
+    /// Window-advance policy for the PDES runs (`--quantum-policy`):
+    /// results are bit-identical across policies (DESIGN.md §4.4), so the
+    /// sweeps stay accuracy-comparable while the barrier counters expose
+    /// the border savings.
+    pub quantum_policy: QuantumPolicy,
 }
 
 impl Default for FigureOpts {
@@ -36,6 +43,7 @@ impl Default for FigureOpts {
             host_cores: 64,
             threaded: false,
             max_cores: 120,
+            quantum_policy: QuantumPolicy::Fixed,
         }
     }
 }
@@ -59,6 +67,7 @@ fn cfg_pair(
     let mut par = serial.clone();
     par.mode = if opts.threaded { Mode::Parallel } else { Mode::Virtual };
     par.quantum = quantum_ns * NS;
+    par.quantum_policy = opts.quantum_policy;
     (serial, par)
 }
 
@@ -109,6 +118,117 @@ pub fn fig8(opts: &FigureOpts) -> Result<Vec<(String, ComparisonRow)>> {
 /// cache-miss-rate errors.
 pub fn fig9(opts: &FigureOpts) -> Result<Vec<(String, ComparisonRow)>> {
     fig8(opts)
+}
+
+/// One row of the adaptive-quantum sweep (`figq`): the same app × quantum
+/// point under `fixed` and `horizon`, with the barrier-count reduction
+/// reported next to the modeled speedups. Results are bit-identical across
+/// the two policies (DESIGN.md §4.4, gated by
+/// `rust/tests/adaptive_quantum.rs`) — only the border count, and
+/// therefore the modeled wall-clock, changes.
+pub struct QuantumPolicyRow {
+    pub app: String,
+    pub cores: usize,
+    pub quantum_ns: u64,
+    pub speedup_fixed: f64,
+    pub speedup_horizon: f64,
+    pub barriers_fixed: u64,
+    pub barriers_horizon: u64,
+    /// Dead windows `horizon` leapt (`barriers_horizon + quanta_skipped
+    /// == barriers_fixed`, the §4.4 invariant).
+    pub quanta_skipped: u64,
+}
+
+impl QuantumPolicyRow {
+    /// Fraction of fixed-policy borders the horizon policy eliminated.
+    pub fn barrier_reduction(&self) -> f64 {
+        if self.barriers_fixed == 0 {
+            0.0
+        } else {
+            1.0 - self.barriers_horizon as f64 / self.barriers_fixed as f64
+        }
+    }
+}
+
+/// The adaptive-quantum figure sweep (ROADMAP item): exercise
+/// `--quantum-policy horizon` across the Fig. 7 app × quantum grid and
+/// report barrier-count reductions alongside the modeled speedup. The
+/// speedup model charges every border its barrier cost, so leapt windows
+/// translate directly into modeled wall-clock savings.
+pub fn fig_quantum_policy(opts: &FigureOpts) -> Result<Vec<QuantumPolicyRow>> {
+    let cores = 16.min(opts.max_cores.max(2));
+    let mut rows = Vec::new();
+    for app in ["synthetic", "blackscholes"] {
+        // One serial reference and one workload per app; both policies
+        // replay the identical traces.
+        let (serial_cfg, _) = cfg_pair(app, cores, QUANTA_NS[0], opts);
+        let w = make_workload(&serial_cfg)?;
+        let serial = run_with_workload(&serial_cfg, &w)?;
+        for &q in QUANTA_NS {
+            let mut per_policy = Vec::new();
+            for policy in [QuantumPolicy::Fixed, QuantumPolicy::Horizon] {
+                let sub = FigureOpts { quantum_policy: policy, ..*opts };
+                let (_, mut par) = cfg_pair(app, cores, q, &sub);
+                par.mode = Mode::Virtual; // the measurement kernel
+                let run = run_with_workload(&par, &w)?;
+                let mut host = HostModel::for_threads(
+                    opts.host_cores,
+                    cores + 1,
+                );
+                host.calibrate_cost(&serial);
+                let speedup = host.speedup(
+                    serial.events,
+                    run.work.as_ref().expect("virtual records work"),
+                );
+                per_policy.push((speedup, run.pdes));
+            }
+            let (speedup_fixed, pdes_fixed) = per_policy[0];
+            let (speedup_horizon, pdes_horizon) = per_policy[1];
+            rows.push(QuantumPolicyRow {
+                app: app.to_string(),
+                cores,
+                quantum_ns: q,
+                speedup_fixed,
+                speedup_horizon,
+                barriers_fixed: pdes_fixed.barriers,
+                barriers_horizon: pdes_horizon.barriers,
+                quanta_skipped: pdes_horizon.quanta_skipped,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// Render the adaptive-quantum sweep as an aligned text table.
+pub fn render_quantum_rows(rows: &[QuantumPolicyRow]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<14} {:>6} {:>6} {:>9} {:>9} {:>9} {:>9} {:>9} {:>8}\n",
+        "app",
+        "cores",
+        "q(ns)",
+        "spd-fix",
+        "spd-hor",
+        "bar-fix",
+        "bar-hor",
+        "skipped",
+        "saved"
+    ));
+    for r in rows {
+        s.push_str(&format!(
+            "{:<14} {:>6} {:>6} {:>9.2} {:>9.2} {:>9} {:>9} {:>9} {:>7.1}%\n",
+            r.app,
+            r.cores,
+            r.quantum_ns,
+            r.speedup_fixed,
+            r.speedup_horizon,
+            r.barriers_fixed,
+            r.barriers_horizon,
+            r.quanta_skipped,
+            r.barrier_reduction() * 100.0,
+        ));
+    }
+    s
 }
 
 /// §3.3: "simulations using the timing protocol and the detailed O3CPU

@@ -13,11 +13,12 @@ use anyhow::Result;
 use parti_sim::config::{Mode, RunConfig};
 use parti_sim::cpu::CpuModel;
 use parti_sim::harness::figures::{
-    atomic_vs_timing, fig7, fig8, fig9, render_rows, FigureOpts,
+    atomic_vs_timing, fig7, fig8, fig9, fig_quantum_policy,
+    render_quantum_rows, render_rows, FigureOpts,
 };
 use parti_sim::harness::{compare_modes, run_once, tables};
 use parti_sim::pdes::HostModel;
-use parti_sim::sched::{QuantumPolicy, QueueKind};
+use parti_sim::sched::{InboxOrder, QuantumPolicy, QueueKind};
 use parti_sim::sim::time::NS;
 use parti_sim::stats::Summary;
 use parti_sim::util::cli::Args;
@@ -33,6 +34,7 @@ COMMANDS
   fig7       core & quantum sweep (synthetic + blackscholes)
   fig8       PARSEC subset + STREAM @ 32 cores
   fig9       cache miss-rate accuracy (same runs as fig8)
+  figq       adaptive-quantum sweep: fixed vs horizon barrier savings
   tables     paper tables 1-3 (--which 0|1|2|3)
   protocols  §3.3 atomic-vs-timing throughput comparison
   ffwd       KVM fast-forward (functional warm-up)
@@ -54,6 +56,9 @@ RUN/COMPARE/FFWD FLAGS
                     (parallel mode; adds no nondeterminism)
   --threads N       host threads for parallel mode
                     (0 = one per domain)              [0]
+  --inbox-order O   border|host Ruby message handoff:
+                    border = deterministic border-ordered
+                    merge, host = paper's racy order   [border]
   --ops N           trace ops per core                [4096]
   --seed N                                            [42]
   --host-cores N    modeled host cores (virtual mode) [64]
@@ -96,18 +101,24 @@ fn run_config(a: &Args) -> Result<RunConfig> {
     }
     cfg.steal = a.has("steal");
     cfg.threads = a.get_usize("threads", 0);
+    let order = a.get_str("inbox-order", "border");
+    cfg.inbox_order = InboxOrder::parse(&order)
+        .ok_or_else(|| anyhow::anyhow!("bad --inbox-order {order}"))?;
     cfg.host_cores = a.get_usize("host-cores", 64);
     Ok(cfg)
 }
 
-fn figure_opts(a: &Args, default_max_cores: usize) -> FigureOpts {
-    FigureOpts {
+fn figure_opts(a: &Args, default_max_cores: usize) -> Result<FigureOpts> {
+    let qp = a.get_str("quantum-policy", "fixed");
+    Ok(FigureOpts {
         ops_per_core: a.get_usize("ops", 2048),
         seed: a.get_u64("seed", 42),
         host_cores: a.get_usize("host-cores", 64),
         threaded: a.has("threaded"),
         max_cores: a.get_usize("max-cores", default_max_cores),
-    }
+        quantum_policy: QuantumPolicy::parse(&qp)
+            .ok_or_else(|| anyhow::anyhow!("bad --quantum-policy {qp}"))?,
+    })
 }
 
 fn main() -> Result<()> {
@@ -151,19 +162,28 @@ fn main() -> Result<()> {
             );
         }
         Some("fig7") => {
-            let opts = figure_opts(&args, 120);
+            let opts = figure_opts(&args, 120)?;
             println!("Fig. 7 — speedup & simulated-time error vs cores × quantum\n");
             println!("{}", render_rows(&fig7(&opts)?));
         }
         Some("fig8") => {
-            let opts = figure_opts(&args, 32);
+            let opts = figure_opts(&args, 32)?;
             println!("Fig. 8 — PARSEC + STREAM @ {} cores\n", 32.min(opts.max_cores));
             println!("{}", render_rows(&fig8(&opts)?));
         }
         Some("fig9") => {
-            let opts = figure_opts(&args, 32);
+            let opts = figure_opts(&args, 32)?;
             println!("Fig. 9 — cache miss-rate absolute errors (pp)\n");
             println!("{}", render_rows(&fig9(&opts)?));
+        }
+        Some("figq") => {
+            let opts = figure_opts(&args, 16)?;
+            println!(
+                "Adaptive quantum — fixed vs horizon: modeled speedup and \
+                 barrier savings\n(results are bit-identical across \
+                 policies; only border count and wall-clock change)\n"
+            );
+            println!("{}", render_quantum_rows(&fig_quantum_policy(&opts)?));
         }
         Some("tables") => {
             let which = args.get_usize("which", 0);
@@ -233,6 +253,13 @@ fn print_summary(cfg: &RunConfig, s: &Summary) {
     println!(
         "  sched: policy={:?} skipped_quanta={} steals={} stolen_events={}",
         cfg.quantum_policy, s.quanta_skipped, s.steals, s.stolen_events
+    );
+    println!(
+        "  inbox: order={:?} staged={} reordered={} merge={:.0}ns/window",
+        cfg.inbox_order,
+        s.inbox_staged,
+        s.inbox_reordered,
+        s.inbox_merge_ns_per_window
     );
     println!(
         "  miss rates: l1i={:.4} l1d={:.4} l2={:.4} l3={:.4}",

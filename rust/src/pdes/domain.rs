@@ -4,7 +4,10 @@
 //! domains through the same [`Domain::run_window`] loop, so the model code
 //! paths are identical — only synchronisation differs.
 
-use crate::sched::{QueueKind, SchedQueue, Scheduler};
+use std::sync::atomic::Ordering::Relaxed;
+use std::time::Instant;
+
+use crate::sched::{InboxOrder, QueueKind, SchedQueue, Scheduler};
 use crate::sim::component::{Component, Ctx};
 use crate::sim::ids::{CompId, DomainId};
 use crate::sim::shared::SharedState;
@@ -72,6 +75,45 @@ impl Domain {
         for ev in shared.injectors[self.id.index()].drain() {
             self.eq.insert(ev);
         }
+    }
+
+    /// Full quantum-border synchronisation for this domain, executed
+    /// inside the quiescent span of the border protocol (every producer
+    /// parked at the freeze barrier):
+    ///
+    /// 1. Under the border-ordered handoff (`--inbox-order border`), merge
+    ///    every owned consumer's staged cross-domain Ruby deliveries in
+    ///    canonical order and arm their wakeups
+    ///    ([`Component::border_merge`]).
+    /// 2. Drain the cross-domain event mailbox ([`Self::drain_injections`]).
+    ///
+    /// The fixed order (merges in component order, then the sorted mailbox
+    /// drain) makes the queue's sequence-number assignment — and therefore
+    /// same-`(tick, prio)` tie-breaking — identical across kernels and
+    /// thread counts. Callers must publish this domain's `next_tick` only
+    /// *after* `border_sync`, so merged wakeups count towards the horizon
+    /// and staged traffic is never dropped by a quiescent verdict.
+    pub fn border_sync(&mut self, shared: &SharedState, border: Tick) {
+        if shared.policy.inbox_order == InboxOrder::Border {
+            let t0 = Instant::now();
+            let Domain { eq, comps, comp_ids, id, .. } = self;
+            for (local, comp) in comps.iter_mut().enumerate() {
+                let mut ctx = Ctx::new(
+                    border,
+                    *id,
+                    border,
+                    eq,
+                    shared,
+                    comp_ids[local],
+                );
+                comp.border_merge(&mut ctx);
+            }
+            shared
+                .pdes
+                .inbox_merge_ns
+                .fetch_add(t0.elapsed().as_nanos() as u64, Relaxed);
+        }
+        self.drain_injections(shared);
     }
 
     /// Next pending event tick (`Tick::MAX` if idle).

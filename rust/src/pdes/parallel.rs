@@ -29,11 +29,16 @@
 //!    the events of the closed window — the drain-sort is deterministic and
 //!    the [`crate::sched::Mailbox`] can reclaim fully-consumed segments
 //!    with no epochs.
-//! 2. Inside the quiescent span each thread drains the mailboxes of its
+//! 2. Inside the quiescent span each thread runs the border sync of its
 //!    *statically* assigned domains (`d % n_threads` — one consumer per
-//!    mailbox per border regardless of stealing) and publishes their
-//!    post-drain `next_tick`s; the **publish** barrier then makes all of
-//!    them visible.
+//!    mailbox and one merger per inbox per border, regardless of how the
+//!    window claims were assigned): the border-ordered Ruby inbox merge
+//!    ([`crate::pdes::domain::Domain::border_sync`], canonical
+//!    `(arrival, sender_domain, seq)` order under `--inbox-order border`)
+//!    followed by the mailbox drain — then publishes the post-sync
+//!    `next_tick`s; the **publish** barrier makes all of them visible.
+//!    Merging before publishing is what lets staged Ruby traffic count
+//!    towards the horizon, so a quiescent verdict can never drop it.
 //! 3. The leader of the publish barrier computes the verdict (stop flag /
 //!    global quiescence / max-ticks) and — when continuing — the next
 //!    `window_end` via [`crate::sched::plan_next_window`] (leaping dead
@@ -154,13 +159,18 @@ pub fn run_parallel(mut machine: Machine, max_ticks: Tick) -> RunResult {
                             Outcome::Follower => {}
                         }
 
-                        // Quiescent span: drain the statically assigned
-                        // mailboxes (single consumer per mailbox), then
-                        // publish the post-drain horizons.
+                        // Quiescent span: for the statically assigned
+                        // domains, merge the border-ordered inbox stages
+                        // and drain the mailboxes (one consumer per
+                        // domain per border — the static `d % T`
+                        // partition, independent of window claims), then
+                        // publish the post-sync horizons. The merge must
+                        // precede the publish so staged Ruby traffic
+                        // counts towards quiescence.
                         let mut d = ti;
                         while d < n {
                             let mut dom = slots[d].lock().unwrap();
-                            dom.drain_injections(shared);
+                            dom.border_sync(shared, window_end);
                             next_ticks[d].store(dom.next_tick(), Release);
                             d += n_threads;
                         }

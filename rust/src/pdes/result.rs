@@ -40,6 +40,15 @@ pub struct PdesSnapshot {
     pub steals: u64,
     /// Events executed in stolen claims (host-timing dependent).
     pub stolen_events: u64,
+    /// Cross-domain Ruby deliveries staged by the border-ordered handoff
+    /// (`--inbox-order border`; deterministic).
+    pub inbox_staged: u64,
+    /// Staged deliveries the canonical merge moved away from their host
+    /// staging position (host-timing dependent on the threaded kernel).
+    pub inbox_reordered: u64,
+    /// Host nanoseconds spent in border inbox merges (host-timing
+    /// dependent, like `host_ns`).
+    pub inbox_merge_ns: u64,
 }
 
 impl PdesSnapshot {
@@ -52,6 +61,19 @@ impl PdesSnapshot {
             quanta_skipped: s.pdes.quanta_skipped.load(Relaxed),
             steals: s.pdes.steals.load(Relaxed),
             stolen_events: s.pdes.stolen_events.load(Relaxed),
+            inbox_staged: s.pdes.inbox_staged.load(Relaxed),
+            inbox_reordered: s.pdes.inbox_reordered.load(Relaxed),
+            inbox_merge_ns: s.pdes.inbox_merge_ns.load(Relaxed),
+        }
+    }
+
+    /// Mean host cost of one border inbox merge, in nanoseconds per
+    /// barrier (the "merge cost per window" figure of DESIGN.md §6).
+    pub fn merge_ns_per_window(&self) -> f64 {
+        if self.barriers == 0 {
+            0.0
+        } else {
+            self.inbox_merge_ns as f64 / self.barriers as f64
         }
     }
 

@@ -6,7 +6,13 @@
 //! PDES semantics — same windows, same postpone-to-border rule, same barrier
 //! protocol — on one thread, round-robin over domains, which makes the
 //! timing-deviation results (the accuracy half of every figure) exact and
-//! deterministic. While doing so it records how much host work (events) each
+//! deterministic. Under the border-ordered inbox handoff
+//! (`--inbox-order border`, the default) the threaded kernel consumes Ruby
+//! messages in the same canonical order, so this kernel is then
+//! *bit-identical* to the threaded one — not merely semantics-identical —
+//! across thread counts, quantum policies and stealing
+//! (docs/DETERMINISM.md, gated by `tests/inbox_order.rs`). While doing so
+//! it records how much host work (events) each
 //! domain performed in each quantum; [`HostModel`] then computes the
 //! wall-clock a parallel run would take on an `h_cores` host via an LPT
 //! schedule of each quantum's per-domain work plus a per-barrier
@@ -48,11 +54,13 @@ pub fn run_virtual(mut machine: Machine, max_ticks: Tick) -> RunResult {
         shared.pdes.barriers.fetch_add(1, Relaxed);
 
         // Same border verdict as the threaded kernel's three-phase
-        // protocol: drain first, then decide on the post-drain horizon
-        // (mailboxes are empty by construction after draining).
+        // protocol: border-sync first (border-ordered inbox merge + the
+        // mailbox drain, exactly the threaded kernel's quiescent span),
+        // then decide on the post-sync horizon (mailboxes are empty by
+        // construction after draining).
         let stop = shared.should_stop();
         for dom in machine.domains.iter_mut() {
-            dom.drain_injections(&shared);
+            dom.border_sync(&shared, window_end);
         }
         let horizon = machine
             .domains

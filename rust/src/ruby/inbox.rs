@@ -1,4 +1,6 @@
-//! Thread-safe Ruby message passing — the heart of the paper's §4.2.
+//! Thread-safe Ruby message passing — the heart of the paper's §4.2 —
+//! plus the deterministic border-ordered handoff (DESIGN.md §6,
+//! docs/DETERMINISM.md).
 //!
 //! Every Consumer owns ONE [`SharedInbox`]: a single mutex protecting *all*
 //! of its input [`MessageBuffer`]s. This is exactly the paper's *shared
@@ -15,17 +17,47 @@
 //! * Bi-directional router links still go through [`super::throttle`]
 //!   objects (Fig. 5c): the throttle is the bandwidth model, and it keeps
 //!   every domain-crossing link uni-directional exactly as in the paper.
+//!
+//! # The border-ordered handoff (`--inbox-order border`)
+//!
+//! Under [`InboxOrder::Host`] (the paper's behaviour) a cross-domain
+//! [`OutLink::send`] pushes straight into the consumer's buffer, so whether
+//! a concurrent consumer wakeup sees the message depends on host thread
+//! interleaving — the §6 nondeterminism and the source of the paper's
+//! ≤15 % timing deviation. Under [`InboxOrder::Border`] (the default)
+//! cross-domain deliveries are instead *staged* inside the inbox
+//! ([`Inbox::stage`]) and only become visible at the quantum border, when
+//! [`Inbox::merge_staged`] inserts them in canonical
+//! `(arrival, sender_domain, seq)` order and arms the consumer wakeup.
+//! Three invariants make this deterministic (argued in
+//! docs/DETERMINISM.md):
+//!
+//! 1. **Mid-window isolation** — a foreign-domain send mutates only the
+//!    stage, never the buffers or the wakeup-dedup state, so everything a
+//!    consumer can observe during a window is written exclusively by the
+//!    thread executing its own domain.
+//! 2. **Canonical merge** — the merge key is a pure function of the
+//!    simulation (`arrival` and `sender_domain` from the model, `seq` from
+//!    the sender's program order, which the claim list keeps single-threaded
+//!    per window); the host order in which senders appended is sorted away.
+//! 3. **Snapshot back-pressure** — capacity checks compare against the
+//!    buffer length frozen at the last border plus the sender's *own*
+//!    staged messages ([`Inbox::stage_has_slot`]), never against live state
+//!    another thread is mutating.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::sync::atomic::Ordering::Relaxed;
 use std::sync::{Arc, Mutex};
 
+use crate::sched::InboxOrder;
 use crate::sim::component::Ctx;
 use crate::sim::event::{prio, EventKind};
 use crate::sim::ids::CompId;
+use crate::sim::shared::PdesStats;
 use crate::sim::time::Tick;
 
-use super::msg::RubyMsg;
+use super::msg::{RubyMsg, StagedMsg};
 
 /// Heap entry ordered by (arrival, seq).
 struct Entry {
@@ -58,6 +90,16 @@ pub struct MessageBuffer {
     /// Slot limit; `usize::MAX` = unbounded (gem5 default).
     capacity: usize,
     next_seq: u64,
+    /// Occupancy snapshot taken at the last quantum border by
+    /// [`Inbox::merge_staged`]. Border-mode cross-domain capacity checks
+    /// read this instead of the live `heap.len()`, which the consumer's
+    /// thread may be mutating concurrently (determinism invariant 3).
+    border_len: usize,
+    /// Per-sender-domain count of deliveries staged for this buffer in
+    /// the current window (`domain → count`; maintained only for finite
+    /// buffers, so [`Inbox::stage_has_slot`] is O(senders), not a scan of
+    /// the whole stage). Cleared by the border merge.
+    staged_by: Vec<(u32, usize)>,
     // stats (read via Inbox::stats_sum)
     pub enqueued: u64,
     pub peak: usize,
@@ -69,6 +111,8 @@ impl MessageBuffer {
             heap: BinaryHeap::new(),
             capacity,
             next_seq: 0,
+            border_len: 0,
+            staged_by: Vec::new(),
             enqueued: 0,
             peak: 0,
         }
@@ -123,9 +167,135 @@ pub struct Inbox {
     /// earlier-or-equal wakeup is pending — a large event-count reduction
     /// on bursty consumers (§Perf L3.1).
     pending_wakeup: Tick,
+    /// Border-mode staging area: cross-domain deliveries of the current
+    /// window, in host append order (canonicalised by
+    /// [`Inbox::merge_staged`]). Empty under [`InboxOrder::Host`].
+    stage: Vec<StagedMsg>,
+    /// Per-sender-domain staging sequence counters for the current window
+    /// (tiny linear-scan map `domain → next seq`; at most a handful of
+    /// foreign domains ever feed one inbox).
+    stage_seqs: Vec<(u32, u64)>,
 }
 
 impl Inbox {
+    /// Border-mode capacity check for a cross-domain send from
+    /// `sender_dom` into buffer `buf`: the border occupancy snapshot plus
+    /// this sender's *own* staged deliveries must leave a slot. Other
+    /// domains' in-window stagings are deliberately invisible — the
+    /// verdict must not depend on host interleaving — so a buffer fed by
+    /// several foreign domains can transiently exceed its capacity at the
+    /// merge (none exists in the Fig. 4 topology: every finite
+    /// domain-crossing buffer has exactly one sender).
+    pub fn stage_has_slot(&self, buf: usize, sender_dom: u32) -> bool {
+        let b = &self.bufs[buf];
+        if b.capacity == usize::MAX {
+            return true;
+        }
+        let own = b
+            .staged_by
+            .iter()
+            .find(|(d, _)| *d == sender_dom)
+            .map_or(0, |&(_, c)| c);
+        b.border_len + own < b.capacity
+    }
+
+    /// Stage a cross-domain delivery for the next border merge
+    /// (border-ordered handoff). The caller must have checked
+    /// [`Inbox::stage_has_slot`].
+    pub fn stage(&mut self, sender_dom: u32, buf: usize, arrival: Tick, msg: RubyMsg) {
+        let seq = match self
+            .stage_seqs
+            .iter_mut()
+            .find(|(d, _)| *d == sender_dom)
+        {
+            Some((_, next)) => {
+                let s = *next;
+                *next += 1;
+                s
+            }
+            None => {
+                self.stage_seqs.push((sender_dom, 1));
+                0
+            }
+        };
+        let b = &mut self.bufs[buf];
+        if b.capacity != usize::MAX {
+            match b.staged_by.iter_mut().find(|(d, _)| *d == sender_dom) {
+                Some((_, c)) => *c += 1,
+                None => b.staged_by.push((sender_dom, 1)),
+            }
+        }
+        self.stage.push(StagedMsg { arrival, sender_dom, seq, buf, msg });
+    }
+
+    /// Deliveries currently staged for the next border merge.
+    pub fn staged_len(&self) -> usize {
+        self.stage.len()
+    }
+
+    /// Border merge (the heart of `--inbox-order border`): insert every
+    /// staged delivery into its buffer in canonical
+    /// `(arrival, sender_domain, seq)` order, refresh the capacity
+    /// snapshots, and return the wakeup tick the consumer must be
+    /// scheduled for (if any; `border` is the tick of the closed window's
+    /// end, so postponed wakeups land exactly where the host-order path's
+    /// injector postponement would put them).
+    ///
+    /// Must only be called while every producer is parked at the freeze
+    /// barrier (the quiescent span of the border protocol) and before the
+    /// owning domain publishes its post-drain `next_tick`.
+    pub fn merge_staged(&mut self, border: Tick, stats: &PdesStats) -> Option<Tick> {
+        let mut min_arrival = None;
+        if !self.stage.is_empty() {
+            let staged = std::mem::take(&mut self.stage);
+            self.stage_seqs.clear();
+            let mut order: Vec<usize> = (0..staged.len()).collect();
+            // Unstable sort is deterministic here: the key is unique
+            // (per-domain seqs never repeat within a window).
+            order.sort_unstable_by_key(|&i| {
+                let s = &staged[i];
+                (s.arrival, s.sender_dom, s.seq)
+            });
+            // How many deliveries the host append order got wrong — the
+            // nondeterminism the handoff neutralised this window.
+            let reordered = order
+                .iter()
+                .enumerate()
+                .filter(|&(pos, &i)| pos != i)
+                .count() as u64;
+            let (mut postponed, mut tpp) = (0u64, 0u64);
+            for &i in &order {
+                let s = &staged[i];
+                if s.arrival < border {
+                    // Visibility was deferred to the border: the same
+                    // t_pp artefact the injector path counts (§3.1).
+                    postponed += 1;
+                    tpp += border - s.arrival;
+                }
+                self.bufs[s.buf].push(s.arrival, s.msg);
+            }
+            min_arrival = order.first().map(|&i| staged[i].arrival);
+            stats.inbox_staged.fetch_add(staged.len() as u64, Relaxed);
+            stats.inbox_reordered.fetch_add(reordered, Relaxed);
+            stats.postponed.fetch_add(postponed, Relaxed);
+            stats.tpp_sum.fetch_add(tpp, Relaxed);
+        }
+        // Refresh the snapshot even when nothing was staged: the consumer
+        // drained buffers during the window, and senders judge capacity
+        // against the border state.
+        for b in &mut self.bufs {
+            b.border_len = b.heap.len();
+            b.staged_by.clear();
+        }
+        // Same convention as the host-order sender path: track the
+        // arrival, schedule at the postponed effective tick.
+        if let Some(a) = min_arrival {
+            if self.note_send(a) {
+                return Some(a.max(border));
+            }
+        }
+        None
+    }
     /// Sender-side dedup: record a message arriving at `arrival`; returns
     /// true iff the caller must schedule a wakeup event.
     pub fn note_send(&mut self, arrival: Tick) -> bool {
@@ -199,7 +369,29 @@ pub fn new_inbox(buffer_capacities: &[usize]) -> SharedInbox {
             .map(|&c| MessageBuffer::new(c))
             .collect(),
         pending_wakeup: Tick::MAX,
+        stage: Vec::new(),
+        stage_seqs: Vec::new(),
     }))
+}
+
+/// Border hook shared by every Ruby consumer's
+/// [`crate::sim::component::Component::border_merge`]: merge this inbox's
+/// staged cross-domain deliveries in canonical order and schedule the
+/// consumer wakeup the merge calls for. `ctx.now()` must be the border
+/// tick (the closed window's end).
+pub fn merge_staged_for_border(inbox: &SharedInbox, ctx: &mut Ctx) {
+    let wake = {
+        let mut ib = inbox.lock().unwrap();
+        ib.merge_staged(ctx.now(), &ctx.shared().pdes)
+    };
+    if let Some(t) = wake {
+        ctx.schedule_abs_prio(
+            t,
+            ctx.self_id(),
+            EventKind::ConsumerWakeup,
+            prio::DEFAULT,
+        );
+    }
 }
 
 /// Standard consumer wakeup bracket: drain all ready messages into the
@@ -254,11 +446,43 @@ impl OutLink {
     /// Enqueue `msg` arriving at `now + latency + extra_delay` and schedule
     /// the consumer's wakeup (postponed at domain borders by `ctx`).
     ///
+    /// Under the border-ordered handoff (`--inbox-order border`, the
+    /// default), a *cross-domain* send stages the message instead: it
+    /// becomes visible to the consumer only at the quantum border, merged
+    /// in canonical `(arrival, sender_domain, seq)` order, and the wakeup
+    /// is armed by the merge — so neither the buffers nor the wakeup-dedup
+    /// state are touched from a foreign thread mid-window. Same-domain
+    /// sends (and every send under `--inbox-order host`) take the paper's
+    /// direct path.
+    ///
     /// Returns `false` without enqueueing when the target buffer is full —
-    /// the caller must retry later (router stall).
+    /// the caller must retry later (router stall). In border mode the
+    /// capacity verdict is judged against the border snapshot plus this
+    /// sender's own staged messages (see [`Inbox::stage_has_slot`]), so it
+    /// too is independent of host timing.
     #[must_use]
     pub fn send(&self, ctx: &mut Ctx, msg: RubyMsg, extra_delay: Tick) -> bool {
         let arrival = ctx.now() + self.latency + extra_delay;
+        if ctx.shared().policy.inbox_order == InboxOrder::Border
+            && ctx.shared().domain_of(self.consumer) != ctx.domain()
+        {
+            let sender_dom = ctx.domain().0;
+            let staged = {
+                let mut inbox = self.inbox.lock().unwrap();
+                if inbox.stage_has_slot(self.buf, sender_dom) {
+                    inbox.stage(sender_dom, self.buf, arrival, msg);
+                    true
+                } else {
+                    false
+                }
+            };
+            if staged {
+                // One cross-domain delivery; postponement (t_pp) is
+                // accounted at the merge, where the deferral is known.
+                ctx.shared().pdes.cross_events.fetch_add(1, Relaxed);
+            }
+            return staged;
+        }
         let need_wakeup = {
             let mut inbox = self.inbox.lock().unwrap();
             let buf = &mut inbox.bufs[self.buf];
@@ -279,7 +503,9 @@ impl OutLink {
         true
     }
 
-    /// Slots currently free in the target buffer.
+    /// Slots currently free in the target buffer, judged against the live
+    /// occupancy (an inspection/debug hook — border-mode senders must not
+    /// base decisions on it; [`OutLink::send`] applies the snapshot rule).
     pub fn free_slots(&self) -> usize {
         let inbox = self.inbox.lock().unwrap();
         let b = &inbox.bufs[self.buf];
@@ -362,5 +588,106 @@ mod tests {
         let order: Vec<u64> =
             ib.drain_ready(10).iter().map(|m| m.addr).collect();
         assert_eq!(order, vec![0, 1, 2, 3, 4]);
+    }
+
+    // ---- border-ordered handoff -------------------------------------
+
+    #[test]
+    fn staged_messages_invisible_until_merge() {
+        let stats = PdesStats::default();
+        let inbox = new_inbox(&[usize::MAX]);
+        let mut ib = inbox.lock().unwrap();
+        ib.stage(1, 0, 10, msg(0xa));
+        assert_eq!(ib.staged_len(), 1);
+        assert!(ib.drain_ready(100).is_empty(), "stage must stay hidden");
+        assert_eq!(ib.next_arrival(), None);
+        let wake = ib.merge_staged(50, &stats);
+        assert_eq!(wake, Some(50), "arrival 10 postponed to border 50");
+        assert_eq!(ib.staged_len(), 0);
+        let order: Vec<u64> =
+            ib.drain_ready(100).iter().map(|m| m.addr).collect();
+        assert_eq!(order, vec![0xa]);
+        assert_eq!(stats.inbox_staged.load(Relaxed), 1);
+        assert_eq!(stats.postponed.load(Relaxed), 1);
+        assert_eq!(stats.tpp_sum.load(Relaxed), 40);
+    }
+
+    #[test]
+    fn merge_is_canonical_not_host_order() {
+        // A maximally skewed host: domain 2's whole window of sends is
+        // appended before domain 1's, and domain 2's own sends arrive
+        // out of tick order. The merge must sort it all back into
+        // (arrival, sender_domain, seq) order.
+        let stats = PdesStats::default();
+        let inbox = new_inbox(&[usize::MAX]);
+        let mut ib = inbox.lock().unwrap();
+        ib.stage(2, 0, 30, msg(0xa));
+        ib.stage(2, 0, 10, msg(0xb));
+        ib.stage(1, 0, 10, msg(0xc));
+        ib.stage(1, 0, 30, msg(0xd));
+        ib.merge_staged(40, &stats);
+        let order: Vec<u64> =
+            ib.drain_ready(100).iter().map(|m| m.addr).collect();
+        assert_eq!(
+            order,
+            vec![0xc, 0xb, 0xd, 0xa],
+            "(10,d1) < (10,d2) < (30,d1) < (30,d2)"
+        );
+        assert_eq!(stats.inbox_staged.load(Relaxed), 4);
+        assert!(
+            stats.inbox_reordered.load(Relaxed) > 0,
+            "the skewed host order must be counted as reordered"
+        );
+    }
+
+    #[test]
+    fn same_domain_staging_keeps_program_order() {
+        let stats = PdesStats::default();
+        let inbox = new_inbox(&[usize::MAX]);
+        let mut ib = inbox.lock().unwrap();
+        for i in 0..5 {
+            ib.stage(3, 0, 20, msg(i));
+        }
+        ib.merge_staged(40, &stats);
+        let order: Vec<u64> =
+            ib.drain_ready(100).iter().map(|m| m.addr).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4], "seq preserves program order");
+        assert_eq!(stats.inbox_reordered.load(Relaxed), 0);
+    }
+
+    #[test]
+    fn stage_capacity_is_border_snapshot_plus_own_stagings() {
+        let stats = PdesStats::default();
+        let inbox = new_inbox(&[2]);
+        let mut ib = inbox.lock().unwrap();
+        // Border snapshot starts at 0: two stagings fit, the third not.
+        assert!(ib.stage_has_slot(0, 1));
+        ib.stage(1, 0, 10, msg(1));
+        assert!(ib.stage_has_slot(0, 1));
+        ib.stage(1, 0, 11, msg(2));
+        assert!(!ib.stage_has_slot(0, 1), "own stagings count");
+        ib.merge_staged(16, &stats);
+        // Snapshot now 2 (= capacity): nothing fits until a drain AND a
+        // fresh border refresh the snapshot.
+        assert!(!ib.stage_has_slot(0, 1));
+        let _ = ib.drain_ready(100);
+        assert!(!ib.stage_has_slot(0, 1), "live drain is invisible");
+        ib.merge_staged(32, &stats);
+        assert!(ib.stage_has_slot(0, 1), "border refresh frees the slots");
+    }
+
+    #[test]
+    fn merge_arms_wakeup_only_when_needed() {
+        let stats = PdesStats::default();
+        let inbox = new_inbox(&[usize::MAX]);
+        let mut ib = inbox.lock().unwrap();
+        // Future arrival beyond the border keeps its exact tick.
+        ib.stage(1, 0, 120, msg(1));
+        assert_eq!(ib.merge_staged(50, &stats), Some(120));
+        // A pending earlier-or-equal wakeup dedups the next merge.
+        ib.stage(1, 0, 130, msg(2));
+        assert_eq!(ib.merge_staged(60, &stats), None, "wakeup 120 covers it");
+        // An empty merge is a pure snapshot refresh.
+        assert_eq!(ib.merge_staged(70, &stats), None);
     }
 }

@@ -1,8 +1,11 @@
 //! The Ruby-like coherent memory subsystem (§3.4) plus the paper's
 //! thread-safe message passing (§4.2).
 //!
-//! * [`msg`] — the CHI-lite protocol vocabulary.
-//! * [`inbox`] — MessageBuffers behind per-consumer shared wakeup mutexes.
+//! * [`msg`] — the CHI-lite protocol vocabulary (plus [`StagedMsg`], the
+//!   border-ordered handoff's staging record).
+//! * [`inbox`] — MessageBuffers behind per-consumer shared wakeup mutexes,
+//!   and the deterministic border-ordered cross-domain handoff
+//!   (`--inbox-order`, DESIGN.md §6).
 //! * [`l1`], [`l2`], [`hnf`] — the cache-controller state machines.
 //! * [`router`], [`throttle`] — the NoC (Fig. 5c deadlock-free links).
 //! * [`sequencer`] — packet ↔ message conversion + the IO-crossbar path.
@@ -18,6 +21,9 @@ pub mod sequencer;
 pub mod throttle;
 pub mod topology;
 
-pub use inbox::{new_inbox, Inbox, MessageBuffer, OutLink, SharedInbox};
-pub use msg::{MsgKind, RubyMsg};
+pub use inbox::{
+    merge_staged_for_border, new_inbox, Inbox, MessageBuffer, OutLink,
+    SharedInbox,
+};
+pub use msg::{MsgKind, RubyMsg, StagedMsg};
 pub use topology::{build_atomic_system, build_system, BuiltSystem, Layout};

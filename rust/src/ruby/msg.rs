@@ -98,6 +98,32 @@ impl RubyMsg {
     }
 }
 
+/// A cross-domain delivery captured by the border-ordered inbox handoff
+/// (`--inbox-order border`, DESIGN.md §6): the message plus its canonical
+/// merge key.
+///
+/// During a quantum window, cross-domain sends do not touch the consumer's
+/// [`super::inbox::MessageBuffer`]s; they are staged as `StagedMsg`s inside
+/// the consumer's inbox. At the border — while every producer is parked at
+/// the freeze barrier — the stage is merged into the buffers in
+/// `(arrival, sender_dom, seq)` order, which is a pure function of the
+/// simulation content, never of host thread interleaving.
+#[derive(Copy, Clone, Debug)]
+pub struct StagedMsg {
+    /// Arrival tick at the consumer (`send tick + link latency + extra`).
+    pub arrival: Tick,
+    /// Sending time domain: the canonical tie-break after `arrival`.
+    pub sender_dom: u32,
+    /// Per-(inbox, sender-domain) staging sequence — the sender's program
+    /// order within the window, deterministic because a domain's window is
+    /// executed by exactly one thread (the claim-list exactly-once
+    /// guarantee, `sched/steal.rs`).
+    pub seq: u64,
+    /// Target buffer index within the consumer's inbox.
+    pub buf: usize,
+    pub msg: RubyMsg,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -132,6 +132,13 @@ impl Component for Throttle {
         &self.name
     }
 
+    /// Border-ordered handoff (`--inbox-order border`): merge the
+    /// cross-domain deliveries staged for this inbox during the closed
+    /// window, in canonical order (DESIGN.md §6).
+    fn border_merge(&mut self, ctx: &mut Ctx) {
+        super::inbox::merge_staged_for_border(&self.inbox, ctx);
+    }
+
     fn stats(&self, out: &mut StatSink) {
         out.add_u64("forwarded", self.forwarded);
         out.add_u64("data_msgs", self.data_msgs);

@@ -17,7 +17,9 @@
 //!   quantum barrier with abort support.
 //! * [`quantum`] — [`QuantumPolicy`] and [`plan_next_window`], the
 //!   adaptive-quantum border decision (leap over provably dead windows),
-//!   plus [`RunPolicy`], the per-run policy knobs.
+//!   plus [`RunPolicy`], the per-run policy knobs, and [`InboxOrder`],
+//!   the cross-domain Ruby message visibility contract (the deterministic
+//!   border-ordered handoff vs the paper's host-order consumption).
 //! * [`steal`] — [`ClaimList`], the per-window domain→thread claim list
 //!   that lets idle host threads adopt the windows of loaded domains with
 //!   a deterministic victim order.
@@ -43,7 +45,8 @@ pub use bucket::BucketQueue;
 pub use heap::HeapQueue;
 pub use mailbox::Mailbox;
 pub use quantum::{
-    plan_next_window, QuantumPolicy, RunPolicy, WindowPlan, DEFAULT_MAX_LEAP,
+    plan_next_window, InboxOrder, QuantumPolicy, RunPolicy, WindowPlan,
+    DEFAULT_MAX_LEAP,
 };
 pub use queue::SchedQueue;
 pub use steal::ClaimList;

@@ -62,6 +62,43 @@ impl QuantumPolicy {
     }
 }
 
+/// How cross-domain Ruby deliveries become visible to their consumer
+/// (`--inbox-order`, DESIGN.md §6 and docs/DETERMINISM.md).
+///
+/// The paper concedes (§6) that the threaded kernel consumes Ruby messages
+/// in host-timing-dependent order: a delivery pushed mid-window is seen by
+/// any consumer wakeup that happens to drain after it lands, so two runs of
+/// the same simulation can interleave message consumption differently.
+/// `Border` removes exactly that freedom — and nothing else.
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub enum InboxOrder {
+    /// The paper's behaviour: cross-domain deliveries land in the
+    /// consumer's message buffers immediately; drain order (and therefore
+    /// timing) depends on host thread interleaving. Kept selectable as the
+    /// reference for the paper's §6 nondeterminism discussion.
+    Host,
+    /// Deterministic border-ordered handoff: cross-domain deliveries are
+    /// staged per sender domain during the window and merged into the
+    /// consumer's buffers at the quantum border in canonical
+    /// `(arrival_tick, sender_domain, seq)` order, so consumption never
+    /// depends on host timing. The threaded kernel becomes bit-identical
+    /// to the virtual kernel across thread counts, quantum policies and
+    /// stealing.
+    #[default]
+    Border,
+}
+
+impl InboxOrder {
+    /// Parse an `--inbox-order` value (`host`, `border`).
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "host" => InboxOrder::Host,
+            "border" => InboxOrder::Border,
+            _ => return None,
+        })
+    }
+}
+
 /// Per-run scheduling policy knobs, carried by the shared state so both
 /// parallel kernels read the same configuration at the border.
 #[derive(Copy, Clone, Debug, Default)]
@@ -74,6 +111,9 @@ pub struct RunPolicy {
     /// Host threads for the threaded kernel; `0` means one per domain
     /// (the paper's configuration).
     pub threads: usize,
+    /// Cross-domain Ruby message visibility (see [`InboxOrder`]; the
+    /// default is the deterministic border-ordered handoff).
+    pub inbox_order: InboxOrder,
 }
 
 /// One border decision: the next `window_end` plus how many whole quanta
@@ -121,6 +161,15 @@ pub fn plan_next_window(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn inbox_order_parses_and_defaults_to_border() {
+        assert_eq!(InboxOrder::parse("host"), Some(InboxOrder::Host));
+        assert_eq!(InboxOrder::parse("Border"), Some(InboxOrder::Border));
+        assert_eq!(InboxOrder::parse("sorted"), None);
+        assert_eq!(InboxOrder::default(), InboxOrder::Border);
+        assert_eq!(RunPolicy::default().inbox_order, InboxOrder::Border);
+    }
 
     #[test]
     fn parses() {

@@ -19,14 +19,28 @@
 //! therefore postponement — is untouched). Stealing therefore introduces
 //! **no new nondeterminism**: every simulation-visible effect of a window
 //! (events executed, mailbox pushes, border drains) is the same whichever
-//! thread runs it. What remains host-timing dependent is exactly what was
-//! already host-timing dependent in the threaded kernel without stealing —
-//! intra-window Ruby message arrival (paper §6) — so the gates in
-//! `tests/adaptive_quantum.rs` assert functional identity (checksums,
-//! committed ops) for the threaded kernel across steal/thread settings,
-//! and bit-identity on the deterministic kernel, matching the guarantees
-//! the rest of the suite gives the threaded kernel. Host-side counters
-//! (steal counts, wall-clock) always vary.
+//! thread runs it. Under `--inbox-order host`, what remains host-timing
+//! dependent is exactly what was already host-timing dependent without
+//! stealing — intra-window Ruby message arrival (paper §6) — so the gates
+//! in `tests/adaptive_quantum.rs` assert functional identity (checksums,
+//! committed ops) for the threaded kernel across steal/thread settings.
+//! Under the default `--inbox-order border` even that is gone, and
+//! `tests/inbox_order.rs` tightens the gate to full bit-identity across
+//! steal/thread/policy settings. Host-side counters (steal counts,
+//! wall-clock, merge cost) always vary.
+//!
+//! **Claim binding × the border-ordered handoff.** The handoff's staging
+//! sequence (`StagedMsg::seq`, `ruby/msg.rs`) is "the sender domain's
+//! program order within the window" — well-defined *only because* a claim
+//! hands each domain to exactly one thread per window ([`ClaimList::claim`]
+//! returns every index exactly once between two `replan`s), so a domain's
+//! sends are never interleaved by two executors. The consumer side rides
+//! the **static** `d % n_threads` border partition instead of the claim
+//! binding: any quiesced thread may perform a merge (the canonical order is
+//! a pure function of the stage content), but exactly one must, and the
+//! static partition guarantees that one-merger-per-inbox-per-border
+//! property no matter which thread executed — or stole — the window that
+//! staged the messages.
 //!
 //! **Victim selection** is deterministic: at each border the leader sorts
 //! the claim order by the events each domain executed in the closed window

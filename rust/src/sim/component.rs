@@ -24,6 +24,20 @@ pub trait Component: Send {
     /// Schedule initial events. Called once before the simulation starts.
     fn init(&mut self, _ctx: &mut Ctx) {}
 
+    /// Quantum-border hook of the border-ordered inbox handoff
+    /// (`--inbox-order border`, DESIGN.md §6): merge the cross-domain
+    /// deliveries staged for this component during the closed window into
+    /// its message buffers — in canonical `(arrival, sender_domain, seq)`
+    /// order — and arm the consumer wakeup.
+    ///
+    /// Called by the windowed kernels inside the quiescent span of the
+    /// border protocol: after the freeze barrier (no producer is running)
+    /// and before the domain publishes its post-drain `next_tick`, so
+    /// merged wakeups count towards the horizon and staged traffic can
+    /// never be dropped by a quiescent verdict. `ctx.now()` is the border
+    /// tick. Components without message buffers keep the no-op default.
+    fn border_merge(&mut self, _ctx: &mut Ctx) {}
+
     /// Dump statistics.
     fn stats(&self, _out: &mut StatSink) {}
 }
@@ -147,6 +161,54 @@ impl<'a> Ctx<'a> {
         self.eq.deschedule(h);
     }
 
+    /// True when this run uses the deterministic border-ordered handoff
+    /// (`--inbox-order border`) on a *windowed* kernel. The serial kernel
+    /// has no quantum (`SharedState::quantum == Tick::MAX`) and is
+    /// inherently deterministic, so it always reports `false`.
+    pub fn border_ordered(&self) -> bool {
+        self.shared.policy.inbox_order
+            == crate::sched::InboxOrder::Border
+            && self.shared.quantum < Tick::MAX
+    }
+
+    /// Schedule on self applying the full cross-domain scheduling rule
+    /// even though the target is local: under the border-ordered handoff
+    /// the event goes through this domain's *own injector* — a tick
+    /// inside the current window lands on the border, and the event is
+    /// re-sequenced by the border drain-sort like every foreign-domain
+    /// observer's.
+    ///
+    /// Used where one simulated rendezvous has both local and foreign
+    /// observers and determinism requires them to resume symmetrically —
+    /// today the workload-barrier release (`cpu/timing.rs`): the waiters
+    /// are released through border-postponed cross-domain events, so the
+    /// last arriver must resume at the same effective tick *and* with the
+    /// same same-`(tick, prio)` ordering relative to border-merged
+    /// events, whichever core the host happened to run last. A direct
+    /// local schedule would assign the queue sequence mid-window — before
+    /// the border merges — while the waiters' events are sequenced after
+    /// them, so tie-breaking would depend on which core completed the
+    /// rendezvous (docs/DETERMINISM.md). Outside border mode (or on the
+    /// serial kernel) this is an exact local schedule.
+    pub fn schedule_self_postponed(&mut self, tick: Tick, kind: EventKind) {
+        let tick = tick.max(self.now);
+        if self.border_ordered() {
+            let eff =
+                if tick < self.window_end { self.window_end } else { tick };
+            self.shared.injectors[self.domain.index()].push(
+                crate::sim::event::Event {
+                    tick: eff,
+                    prio: prio::DEFAULT,
+                    seq: 0, // re-sequenced at the border drain
+                    target: self.self_id,
+                    kind,
+                },
+            );
+        } else {
+            self.eq.schedule(tick, prio::DEFAULT, self.self_id, kind);
+        }
+    }
+
     /// Report this core's workload as finished.
     pub fn core_done(&self) {
         self.shared.core_done();
@@ -213,6 +275,41 @@ mod tests {
         assert_eq!(drained[0].tick, 20_100, "beyond border: exact time kept");
         use std::sync::atomic::Ordering::Relaxed;
         assert_eq!(shared.pdes.postponed.load(Relaxed), 0);
+    }
+
+    #[test]
+    fn self_postponed_goes_through_own_injector_when_windowed() {
+        // Windowed + border order (the defaults): the event takes the
+        // injector channel — inside-window ticks land on the border,
+        // beyond-window ticks keep their time, and nothing reaches the
+        // local queue until the border drain re-sequences it.
+        let shared = shared_two_domains();
+        let mut eq = SchedQueue::default();
+        let mut ctx =
+            Ctx::new(100, DomainId(0), 16_000, &mut eq, &shared, CompId(0));
+        assert!(ctx.border_ordered());
+        ctx.schedule_self_postponed(150, EventKind::WlBarrierRelease);
+        ctx.schedule_self_postponed(20_000, EventKind::WlBarrierRelease);
+        assert!(eq.pop().is_none(), "must not land in the local queue");
+        let drained = shared.injectors[0].drain();
+        assert_eq!(drained.len(), 2);
+        assert_eq!(drained[0].tick, 16_000, "postponed to the border");
+        assert_eq!(drained[1].tick, 20_000, "beyond border: exact time");
+        assert_eq!(drained[0].target, CompId(0), "self-targeted");
+
+        // Serial (quantum == Tick::MAX): exact local schedule.
+        let serial = SharedState::new(
+            vec![(DomainId(0), 0), (DomainId(0), 1)],
+            1,
+            Tick::MAX,
+            1,
+        );
+        let mut eq = SchedQueue::default();
+        let mut ctx =
+            Ctx::new(100, DomainId(0), Tick::MAX, &mut eq, &serial, CompId(0));
+        assert!(!ctx.border_ordered());
+        ctx.schedule_self_postponed(150, EventKind::WlBarrierRelease);
+        assert_eq!(eq.pop().unwrap().tick, 150);
     }
 
     #[test]

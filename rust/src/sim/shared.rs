@@ -75,6 +75,16 @@ pub struct PdesStats {
     pub steals: AtomicU64,
     /// Events executed inside stolen window claims (host-timing dependent).
     pub stolen_events: AtomicU64,
+    /// Cross-domain Ruby deliveries staged by the border-ordered handoff
+    /// (`--inbox-order border`; deterministic — one per cross send).
+    pub inbox_staged: AtomicU64,
+    /// Staged deliveries whose canonical merge position differed from
+    /// their host staging order — the reordering the handoff neutralised
+    /// (host-timing dependent on the threaded kernel, like `steals`).
+    pub inbox_reordered: AtomicU64,
+    /// Host nanoseconds spent in border inbox merges (host-timing
+    /// dependent; divide by `barriers` for the per-window merge cost).
+    pub inbox_merge_ns: AtomicU64,
 }
 
 /// State shared by all domains of one simulation run.

@@ -26,6 +26,10 @@ pub struct Summary {
     pub quanta_skipped: u64,
     pub steals: u64,
     pub stolen_events: u64,
+    pub inbox_staged: u64,
+    pub inbox_reordered: u64,
+    /// Mean border-merge cost, ns per window (host-timing dependent).
+    pub inbox_merge_ns_per_window: f64,
     pub l1i_miss_rate: f64,
     pub l1d_miss_rate: f64,
     pub l2_miss_rate: f64,
@@ -68,6 +72,9 @@ impl Summary {
             quanta_skipped: r.pdes.quanta_skipped,
             steals: r.pdes.steals,
             stolen_events: r.pdes.stolen_events,
+            inbox_staged: r.pdes.inbox_staged,
+            inbox_reordered: r.pdes.inbox_reordered,
+            inbox_merge_ns_per_window: r.pdes.merge_ns_per_window(),
             l1i_miss_rate: avg_miss_rate(r, ".l1i.miss_rate"),
             l1d_miss_rate: avg_miss_rate(r, ".l1d.miss_rate"),
             l2_miss_rate: avg_miss_rate(r, ".l2.miss_rate"),
@@ -92,6 +99,9 @@ impl Summary {
             .u64("quanta_skipped", self.quanta_skipped)
             .u64("steals", self.steals)
             .u64("stolen_events", self.stolen_events)
+            .u64("inbox_staged", self.inbox_staged)
+            .u64("inbox_reordered", self.inbox_reordered)
+            .f64("inbox_merge_ns_per_window", self.inbox_merge_ns_per_window)
             .f64("l1i_miss_rate", self.l1i_miss_rate)
             .f64("l1d_miss_rate", self.l1d_miss_rate)
             .f64("l2_miss_rate", self.l2_miss_rate)

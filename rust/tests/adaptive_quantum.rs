@@ -146,11 +146,7 @@ impl Component for Pulse {
 fn sparse_machine(policy: QuantumPolicy) -> RunResult {
     const QUANTUM: Tick = 10;
     let mut b = MachineBuilder::new(16, QUANTUM);
-    b.set_policy(RunPolicy {
-        quantum_policy: policy,
-        steal: false,
-        threads: 0,
-    });
+    b.set_policy(RunPolicy { quantum_policy: policy, ..RunPolicy::default() });
     for d in 0..16u32 {
         b.add(
             DomainId(d),
