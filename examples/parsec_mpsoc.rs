@@ -26,6 +26,7 @@ use parti_sim::harness::{make_workload, run_with_workload};
 use parti_sim::pdes::HostModel;
 use parti_sim::runtime::{blackscholes_payload, Runtime, PAYLOAD_B};
 use parti_sim::sim::time::NS;
+use parti_sim::spec::{platforms, SystemSpec};
 use parti_sim::stats::compare;
 use parti_sim::workload::gen::{squares32, SQUARES_KEY};
 use parti_sim::workload::trace::NO_EXPECT;
@@ -115,8 +116,12 @@ fn main() -> anyhow::Result<()> {
     // ---- Part 1: Black-Scholes prices through the simulated memory ----
     println!("=== Part 1: PJRT Black-Scholes payload through coherent memory ===");
     let w = blackscholes_payload_workload(&rt, 3, 512)?;
-    let mut cfg = RunConfig::default();
-    cfg.system.cores = w.n_cores();
+    // Platform via the declarative spec API: producer + 3 consumers on
+    // the Table 2 star.
+    let spec = SystemSpec { cores: w.n_cores(), ..SystemSpec::default() }
+        .named("payload-4", "Black-Scholes payload machine");
+    spec.validate()?;
+    let cfg = RunConfig::for_spec(&spec);
     for mode in [Mode::Serial, Mode::Virtual] {
         let mut c = cfg.clone();
         c.mode = mode;
@@ -132,16 +137,19 @@ fn main() -> anyhow::Result<()> {
         anyhow::ensure!(mism == 0.0, "payload corrupted in {mode:?} mode");
     }
 
-    // ---- Part 2: Fig. 8-style PARSEC subset on 8 cores ----
-    println!("\n=== Part 2: PARSEC subset + STREAM @ 8 cores (Fig. 8 shape) ===");
+    // ---- Part 2: Fig. 8-style PARSEC subset on the fig4-8 preset ----
+    let fig4_8 = platforms::preset("fig4-8").expect("registry preset");
+    println!(
+        "\n=== Part 2: PARSEC subset + STREAM on `{}` ({}) ===",
+        fig4_8.name, fig4_8.description
+    );
     println!(
         "{:<14} {:>9} {:>10} {:>8}",
         "app", "speedup", "terr(%)", "csum"
     );
     for app in FIG8_APPS {
-        let mut s_cfg = RunConfig::default();
+        let mut s_cfg = RunConfig::for_spec(&fig4_8);
         s_cfg.app = app.to_string();
-        s_cfg.system.cores = 8;
         s_cfg.ops_per_core = 2048;
         let workload = make_workload(&s_cfg)?;
         let serial = run_with_workload(&s_cfg, &workload)?;

@@ -1,5 +1,6 @@
-//! Quickstart: build a 4-core MPSoC (Table 2 defaults), run a workload on
-//! the reference serial kernel and on the parti PDES kernel, and compare.
+//! Quickstart: describe an MPSoC with the declarative [`SystemSpec`]
+//! platform API, run a workload on the reference serial kernel and on the
+//! parti PDES kernel, and compare.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example quickstart
@@ -9,21 +10,30 @@ use parti_sim::config::{Mode, RunConfig};
 use parti_sim::harness::{compare_modes, run_once};
 use parti_sim::pdes::HostModel;
 use parti_sim::sim::time::NS;
+use parti_sim::spec::{platforms, SystemSpec};
 use parti_sim::stats::Summary;
 
 fn main() -> anyhow::Result<()> {
-    // 1. Configure: 4 ARM-like O3 cores, CHI-lite Ruby hierarchy.
-    let mut cfg = RunConfig::default();
+    // 1. Describe the platform: 4 ARM-like O3 cores, Table 2 caches,
+    //    Fig. 4 star interconnect. A spec can also come from the preset
+    //    registry (`platforms::preset("fig4-8")`) or a TOML file
+    //    (`SystemSpec::load`); `to_toml()` below shows the file format.
+    let spec = SystemSpec { cores: 4, ..SystemSpec::default() }
+        .named("quickstart-4", "4-core Fig. 4 star, Table 2 geometry");
+    spec.validate()?;
+    println!("--- platform ---\n{}\n", spec.describe());
+
+    // 2. Put the platform in a run configuration and pick a workload.
+    let mut cfg = RunConfig::for_spec(&spec);
     cfg.app = "blackscholes".to_string();
-    cfg.system.cores = 4;
     cfg.ops_per_core = 4096;
 
-    // 2. Reference run on the single-thread DES kernel.
+    // 3. Reference run on the single-thread DES kernel.
     let serial = run_once(&cfg)?;
     println!("--- serial reference ---");
     println!("{}", Summary::from_result(&serial).to_json());
 
-    // 3. parti PDES: per-core time domains + shared domain, quantum 8 ns.
+    // 4. parti PDES: per-core time domains + shared domain, quantum 8 ns.
     let mut par = cfg.clone();
     par.mode = Mode::Virtual; // deterministic PDES; use Parallel on a many-core host
     par.quantum = 8 * NS;
@@ -49,6 +59,13 @@ fn main() -> anyhow::Result<()> {
         row.run.pdes.cross_events,
         row.run.pdes.postponed,
         row.run.pdes.tpp_mean() / 1000.0
+    );
+
+    // 5. The same API drives every preset — e.g. the 16-core ring:
+    let ring = platforms::preset("ring-16").expect("registry preset");
+    println!(
+        "\n(next: try `parti-sim run --platform {}` — {})",
+        ring.name, ring.description
     );
     Ok(())
 }

@@ -25,6 +25,7 @@ use parti_sim::sched::{
 };
 use parti_sim::sim::event::{prio, Event, EventKind};
 use parti_sim::sim::ids::CompId;
+use parti_sim::spec::{Interconnect, SystemSpec};
 use parti_sim::util::json::JsonObj;
 
 /// The old `Injector` (pre-`sched/` baseline), kept here as the reference
@@ -205,6 +206,55 @@ fn main() {
         );
     }
     json = json.obj("virtual_16_domain_e2e", e2e);
+
+    // Per-topology end-to-end: the same 16-core sharing workload on each
+    // interconnect the SystemSpec API elaborates (star / ring / mesh).
+    // Longer fabrics route the same coherence traffic over more hops, so
+    // both the simulated time and the kernel wall-clock move — this row
+    // tracks the elaboration overhead per topology.
+    let mut topo = JsonObj::new();
+    for (name, ic) in [
+        ("star", Interconnect::Star),
+        ("ring", Interconnect::Ring),
+        ("mesh", Interconnect::Mesh { cols: 4 }),
+    ] {
+        let spec = SystemSpec {
+            cores: 16,
+            interconnect: ic,
+            ..SystemSpec::default()
+        }
+        .named("bench-topo", "kernel_micro topology row");
+        let mut cfg = RunConfig::for_spec(&spec);
+        cfg.app = "canneal".to_string();
+        cfg.ops_per_core = 1024;
+        cfg.mode = parti_sim::config::Mode::Virtual;
+        let w = make_workload(&cfg).expect("workload");
+        let mut last = None;
+        let (m, lo, hi) = measure(5, || {
+            last = Some(run_with_workload(&cfg, &w).unwrap());
+        });
+        let r = last.expect("measured at least once");
+        let routed = r.stats.sum_suffix(".routed");
+        bench_util::report(
+            &format!("virtual 16-core topology[{name}]"),
+            m,
+            lo,
+            hi,
+        );
+        println!(
+            "  {name}: sim_ticks={} routed_msgs={:.0} events={}",
+            r.sim_ticks, routed, r.events
+        );
+        topo = topo.obj(
+            name,
+            JsonObj::new()
+                .u64("median_ns", m as u64)
+                .u64("sim_ticks", r.sim_ticks)
+                .u64("routed_msgs", routed as u64)
+                .f64("events_per_sec", r.events_per_sec()),
+        );
+    }
+    json = json.obj("topology_16_core", topo);
 
     // Adaptive quantum on the same 16-domain configuration: barrier count
     // and wall-clock, fixed vs horizon (results are bit-identical by the

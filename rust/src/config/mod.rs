@@ -1,8 +1,15 @@
 //! System configuration (Table 2 of the paper) and run configuration.
+//!
+//! [`SystemConfig`] is the legacy flat platform description driven by
+//! individual CLI flags; the typed, serializable platform API is
+//! [`crate::spec::SystemSpec`], and [`RunConfig::spec`] /
+//! [`RunConfig::apply_spec`] are the thin conversions between the two.
+//! New code (and anything naming a topology) should go through the spec.
 
 use crate::cpu::CpuModel;
 use crate::sched::{InboxOrder, QuantumPolicy, QueueKind, RunPolicy};
 use crate::sim::time::{Tick, NS};
+use crate::spec::{Interconnect, SystemSpec};
 
 /// Cache geometry + latency.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -35,6 +42,11 @@ pub struct SystemConfig {
     /// Fraction of ops that touch IO devices (milli); exercises the
     /// crossbar path of §4.3. The paper's workloads do this via the OS.
     pub io_milli: u64,
+    /// Interconnect fabric between the private L2s and the shared HN-F
+    /// (Fig. 4's star by default; see [`crate::spec::Interconnect`]).
+    pub interconnect: Interconnect,
+    /// Line-interleaved DRAM channels behind the HN-F.
+    pub mem_channels: usize,
 }
 
 impl Default for SystemConfig {
@@ -60,6 +72,8 @@ impl Default for SystemConfig {
             data_flits: 4,
             dram_mhz: 1000,
             io_milli: 0,
+            interconnect: Interconnect::Star,
+            mem_channels: 1,
         }
     }
 }
@@ -165,11 +179,33 @@ impl RunConfig {
             inbox_order: self.inbox_order,
         }
     }
+
+    /// The platform half of this run as a [`SystemSpec`] — the thin
+    /// conversion that makes the legacy flag surface a front-end of the
+    /// declarative platform API (elaboration only ever sees the spec).
+    pub fn spec(&self) -> SystemSpec {
+        SystemSpec::from_parts(&self.system, self.cpu_model)
+    }
+
+    /// Replace the platform half of this run with `spec` (run knobs —
+    /// mode, quantum, workload, scheduler policy — are untouched).
+    pub fn apply_spec(&mut self, spec: &SystemSpec) {
+        spec.apply_to(self);
+    }
+
+    /// A default run configuration on a named/loaded platform.
+    pub fn for_spec(spec: &SystemSpec) -> Self {
+        let mut cfg = RunConfig::default();
+        cfg.apply_spec(spec);
+        cfg
+    }
 }
 
 impl SystemConfig {
-    /// Serialise to a flat `key = value` config file (TOML-compatible
-    /// subset; hand-rolled because the build environment is offline).
+    /// Serialise to a flat numeric `key = value` config file (legacy
+    /// TOML-compatible subset; hand-rolled because the build environment
+    /// is offline). The interconnect travels as a numeric code —
+    /// [`crate::spec::SystemSpec::to_toml`] is the human-facing format.
     pub fn to_toml(&self) -> String {
         let c = self;
         let mut s = String::new();
@@ -187,6 +223,15 @@ impl SystemConfig {
         kv("data_flits", c.data_flits);
         kv("dram_mhz", c.dram_mhz);
         kv("io_milli", c.io_milli);
+        // 0 = star, 1 = ring, 2 = mesh (mesh_cols carries the width).
+        let (ic, cols) = match c.interconnect {
+            Interconnect::Star => (0, 0),
+            Interconnect::Ring => (1, 0),
+            Interconnect::Mesh { cols } => (2, cols as u64),
+        };
+        kv("interconnect", ic);
+        kv("mesh_cols", cols);
+        kv("mem_channels", c.mem_channels as u64);
         s
     }
 
@@ -194,6 +239,8 @@ impl SystemConfig {
     /// Unknown keys are rejected; missing keys keep their defaults.
     pub fn from_toml(s: &str) -> Result<Self, String> {
         let mut c = SystemConfig::default();
+        let mut ic_code = 0u64;
+        let mut mesh_cols = 0usize;
         for (lineno, line) in s.lines().enumerate() {
             let line = line.split('#').next().unwrap_or("").trim();
             if line.is_empty() {
@@ -222,6 +269,9 @@ impl SystemConfig {
                 "data_flits" => c.data_flits = v,
                 "dram_mhz" => c.dram_mhz = v,
                 "io_milli" => c.io_milli = v,
+                "interconnect" => ic_code = v,
+                "mesh_cols" => mesh_cols = v as usize,
+                "mem_channels" => c.mem_channels = v as usize,
                 _ => {
                     let (p, field) = k
                         .split_once('_')
@@ -242,6 +292,17 @@ impl SystemConfig {
                 }
             }
         }
+        c.interconnect = match ic_code {
+            0 => Interconnect::Star,
+            1 => Interconnect::Ring,
+            2 => Interconnect::Mesh { cols: mesh_cols },
+            other => {
+                return Err(format!(
+                    "interconnect = {other}: use 0 (star), 1 (ring) or 2 \
+                     (mesh, with mesh_cols)"
+                ))
+            }
+        };
         Ok(c)
     }
 }
@@ -277,5 +338,28 @@ mod tests {
         let s = c.to_toml();
         let back = SystemConfig::from_toml(&s).unwrap();
         assert_eq!(c, back);
+    }
+
+    #[test]
+    fn toml_roundtrip_keeps_interconnect_and_channels() {
+        let mut c = SystemConfig::with_cores(12);
+        c.interconnect = Interconnect::Mesh { cols: 4 };
+        c.mem_channels = 2;
+        assert_eq!(SystemConfig::from_toml(&c.to_toml()).unwrap(), c);
+        c.interconnect = Interconnect::Ring;
+        assert_eq!(SystemConfig::from_toml(&c.to_toml()).unwrap(), c);
+    }
+
+    #[test]
+    fn run_config_spec_roundtrip() {
+        let mut cfg =
+            RunConfig { cpu_model: CpuModel::Minor, ..RunConfig::default() };
+        cfg.system.cores = 6;
+        cfg.system.interconnect = Interconnect::Ring;
+        let spec = cfg.spec();
+        let mut cfg2 = RunConfig::default();
+        cfg2.apply_spec(&spec);
+        assert_eq!(cfg2.system, cfg.system);
+        assert_eq!(cfg2.cpu_model, cfg.cpu_model);
     }
 }

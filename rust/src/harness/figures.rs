@@ -9,6 +9,7 @@ use crate::cpu::CpuModel;
 use crate::pdes::HostModel;
 use crate::sched::QuantumPolicy;
 use crate::sim::time::NS;
+use crate::spec::SystemSpec;
 use crate::workload::FIG8_APPS;
 
 use super::{compare_modes, make_workload, run_once, run_with_workload, ComparisonRow};
@@ -17,7 +18,7 @@ use super::{compare_modes, make_workload, run_once, run_with_workload, Compariso
 /// latency (~16 ns, §5.1).
 pub const QUANTA_NS: &[u64] = &[2, 4, 8, 16];
 
-#[derive(Clone, Copy)]
+#[derive(Clone)]
 pub struct FigureOpts {
     pub ops_per_core: usize,
     pub seed: u64,
@@ -33,6 +34,13 @@ pub struct FigureOpts {
     /// sweeps stay accuracy-comparable while the barrier counters expose
     /// the border savings.
     pub quantum_policy: QuantumPolicy,
+    /// Platform template for every swept point (`--platform`): cache
+    /// geometry, memory channels and interconnect topology come from the
+    /// spec, while the sweep still varies the core count. `None` keeps
+    /// the legacy Table 2 star. Core counts the spec cannot scale to
+    /// (e.g. a mesh whose width does not divide the count) are skipped —
+    /// see [`FigureOpts::sweepable`].
+    pub platform: Option<SystemSpec>,
 }
 
 impl Default for FigureOpts {
@@ -44,8 +52,46 @@ impl Default for FigureOpts {
             threaded: false,
             max_cores: 120,
             quantum_policy: QuantumPolicy::Fixed,
+            platform: None,
         }
     }
+}
+
+impl FigureOpts {
+    /// Can this sweep point run on the selected platform? Without
+    /// `--platform` every core count is sweepable; with one, the spec
+    /// re-validated at `cores` must hold (a `mesh` needs full rows, a
+    /// `ring` at least two stations).
+    pub fn sweepable(&self, cores: usize) -> bool {
+        match &self.platform {
+            None => true,
+            Some(spec) => {
+                let mut s = spec.clone();
+                s.cores = cores;
+                s.validate().is_ok()
+            }
+        }
+    }
+}
+
+/// The largest core count `<= target` the selected platform can scale to
+/// (`target` itself without `--platform`). Never exceeds the caller's cap:
+/// a mesh whose width does not divide the target steps *down* to the next
+/// full-rows count, and an unsatisfiable cap is an error, not a silent
+/// upgrade to a bigger machine.
+fn largest_sweepable(opts: &FigureOpts, target: usize) -> Result<usize> {
+    (1..=target)
+        .rev()
+        .find(|&c| opts.sweepable(c))
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "platform {} cannot scale to any core count <= {target} \
+                 (try a larger --max-cores or a different platform)",
+                opts.platform
+                    .as_ref()
+                    .map_or("<none>", |s| s.name.as_str())
+            )
+        })
 }
 
 fn cfg_pair(
@@ -64,6 +110,10 @@ fn cfg_pair(
         ..Default::default()
     };
     serial.system.cores = cores;
+    if let Some(spec) = &opts.platform {
+        serial.apply_spec(spec);
+        serial.system.cores = cores; // the sweep's core count wins
+    }
     let mut par = serial.clone();
     par.mode = if opts.threaded { Mode::Parallel } else { Mode::Virtual };
     par.quantum = quantum_ns * NS;
@@ -88,7 +138,19 @@ pub fn fig7(opts: &FigureOpts) -> Result<Vec<(String, ComparisonRow)>> {
     let mut rows = Vec::new();
     // Paper: cores in multiples of two, stopping at 120.
     let mut core_counts = vec![2usize, 4, 8, 16, 32, 64, 120];
-    core_counts.retain(|&c| c <= opts.max_cores);
+    core_counts.retain(|&c| c <= opts.max_cores && opts.sweepable(c));
+    if core_counts.is_empty() {
+        // An actionable failure like fig8/figq, not a silent empty figure.
+        anyhow::bail!(
+            "platform {} has no sweepable core count <= {} in the Fig. 7 \
+             grid (2,4,8,16,32,64,120) — raise --max-cores or pick \
+             another platform",
+            opts.platform
+                .as_ref()
+                .map_or("<none>", |s| s.name.as_str()),
+            opts.max_cores
+        );
+    }
     for app in ["synthetic", "blackscholes"] {
         for &cores in &core_counts {
             for &q in QUANTA_NS {
@@ -103,7 +165,7 @@ pub fn fig7(opts: &FigureOpts) -> Result<Vec<(String, ComparisonRow)>> {
 /// Fig. 8: speedup + simulated-time error for the PARSEC subset + STREAM on
 /// a 32-core target, per quantum.
 pub fn fig8(opts: &FigureOpts) -> Result<Vec<(String, ComparisonRow)>> {
-    let cores = 32.min(opts.max_cores);
+    let cores = largest_sweepable(opts, 32.min(opts.max_cores))?;
     let mut rows = Vec::new();
     for app in FIG8_APPS {
         for &q in QUANTA_NS {
@@ -156,7 +218,7 @@ impl QuantumPolicyRow {
 /// speedup model charges every border its barrier cost, so leapt windows
 /// translate directly into modeled wall-clock savings.
 pub fn fig_quantum_policy(opts: &FigureOpts) -> Result<Vec<QuantumPolicyRow>> {
-    let cores = 16.min(opts.max_cores.max(2));
+    let cores = largest_sweepable(opts, 16.min(opts.max_cores.max(2)))?;
     let mut rows = Vec::new();
     for app in ["synthetic", "blackscholes"] {
         // One serial reference and one workload per app; both policies
@@ -167,7 +229,8 @@ pub fn fig_quantum_policy(opts: &FigureOpts) -> Result<Vec<QuantumPolicyRow>> {
         for &q in QUANTA_NS {
             let mut per_policy = Vec::new();
             for policy in [QuantumPolicy::Fixed, QuantumPolicy::Horizon] {
-                let sub = FigureOpts { quantum_policy: policy, ..*opts };
+                let sub =
+                    FigureOpts { quantum_policy: policy, ..opts.clone() };
                 let (_, mut par) = cfg_pair(app, cores, q, &sub);
                 par.mode = Mode::Virtual; // the measurement kernel
                 let run = run_with_workload(&par, &w)?;

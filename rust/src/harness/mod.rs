@@ -42,6 +42,11 @@ pub fn run_once(cfg: &RunConfig) -> Result<RunResult> {
 
 /// Execute one run with a pre-built workload (so sweeps reuse traces).
 pub fn run_with_workload(cfg: &RunConfig, workload: &Workload) -> Result<RunResult> {
+    // Surface platform mistakes as errors (with the spec's actionable
+    // hints) before elaboration would panic on them.
+    cfg.spec()
+        .validate()
+        .map_err(|e| anyhow!("{e}"))?;
     if !cfg.cpu_model.is_timing() {
         anyhow::ensure!(
             cfg.mode == Mode::Serial,

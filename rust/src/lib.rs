@@ -14,8 +14,13 @@
 //!   with Pallas kernels, AOT-lowered to HLO and executed from Rust via
 //!   PJRT ([`runtime`]).
 //!
-//! Start with [`config::SystemConfig`] + [`ruby::topology::build_system`],
-//! then run one of the kernels in [`pdes`].
+//! Start with a platform — a preset from [`spec::platforms`], a spec TOML
+//! file, or a hand-built [`spec::SystemSpec`] (star / ring / mesh
+//! interconnects) — put it in a [`config::RunConfig`]
+//! ([`config::RunConfig::for_spec`]), elaborate it with
+//! [`ruby::topology::build_system`], then run one of the kernels in
+//! [`pdes`]. The legacy [`config::SystemConfig`] flag surface still works
+//! as a thin conversion into the spec.
 
 pub mod config;
 pub mod cpu;
@@ -27,6 +32,7 @@ pub mod ruby;
 pub mod runtime;
 pub mod sched;
 pub mod sim;
+pub mod spec;
 pub mod stats;
 pub mod util;
 pub mod workload;

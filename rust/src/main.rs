@@ -2,7 +2,10 @@
 //!
 //! ```text
 //! parti-sim run      --app blackscholes --cores 8 --mode virtual --quantum-ns 8
+//! parti-sim run      --platform ring-16 --mode parallel  # named platform
+//! parti-sim run      --platform my_soc.toml              # spec from disk
 //! parti-sim compare  --app canneal --cores 32           # serial vs PDES
+//! parti-sim platforms                                   # preset registry
 //! parti-sim fig7|fig8|fig9|tables|protocols             # paper artefacts
 //! parti-sim ffwd     --app dedup --cores 4              # KVM fast-forward
 //! parti-sim help
@@ -20,6 +23,7 @@ use parti_sim::harness::{compare_modes, run_once, tables};
 use parti_sim::pdes::HostModel;
 use parti_sim::sched::{InboxOrder, QuantumPolicy, QueueKind};
 use parti_sim::sim::time::NS;
+use parti_sim::spec::{platforms, SystemSpec};
 use parti_sim::stats::Summary;
 use parti_sim::util::cli::Args;
 
@@ -31,6 +35,8 @@ USAGE: parti-sim <command> [--flag value]...
 COMMANDS
   run        one simulation run
   compare    serial reference vs PDES: speedup + accuracy
+  platforms  list platform presets (--describe NAME, --dump NAME,
+             --validate FILE.toml)
   fig7       core & quantum sweep (synthetic + blackscholes)
   fig8       PARSEC subset + STREAM @ 32 cores
   fig9       cache miss-rate accuracy (same runs as fig8)
@@ -41,9 +47,14 @@ COMMANDS
   help       this text
 
 RUN/COMPARE/FFWD FLAGS
+  --platform P      named preset (see `platforms`) or a spec
+                    .toml file: core count, CPU model, caches,
+                    memory channels and interconnect topology
+                    (star|ring|mesh) come from the spec; other
+                    flags still override it    [legacy Table 2 star]
   --app NAME        synthetic|blackscholes|canneal|dedup|ferret|
                     fluidanimate|swaptions|stream     [synthetic]
-  --cores N         simulated cores                   [4]
+  --cores N         simulated cores          [4, or the platform's]
   --cpu MODEL       o3|minor|atomic|kvm               [o3]
   --mode MODE       serial|parallel|virtual           [serial]
   --queue KIND      bucket|heap event queue           [bucket]
@@ -72,7 +83,19 @@ FIGURE FLAGS
   --max-cores N     cap swept core counts             [120 / 32]
   --host-cores N    modeled host cores                [64]
   --threaded        use the threaded kernel (needs a many-core host)
+  --platform P      sweep on this platform's topology/geometry
+                    (core counts the spec cannot scale to are skipped)
 ";
+
+/// Resolve `--platform` (preset name or spec file), if given.
+fn platform_arg(a: &Args) -> Result<Option<SystemSpec>> {
+    match a.get("platform") {
+        None => Ok(None),
+        Some(p) => platforms::resolve(p)
+            .map(Some)
+            .map_err(|e| anyhow::anyhow!("{e}")),
+    }
+}
 
 fn run_config(a: &Args) -> Result<RunConfig> {
     let mut cfg = RunConfig {
@@ -81,11 +104,18 @@ fn run_config(a: &Args) -> Result<RunConfig> {
         seed: a.get_u64("seed", 42),
         ..Default::default()
     };
-    cfg.system.cores = a.get_usize("cores", 4);
-    cfg.system.io_milli = a.get_u64("io-milli", 0);
-    let cpu = a.get_str("cpu", "o3");
-    cfg.cpu_model = CpuModel::parse(&cpu)
-        .ok_or_else(|| anyhow::anyhow!("bad --cpu {cpu}"))?;
+    cfg.system.cores = 4; // legacy CLI default
+    if let Some(spec) = platform_arg(a)? {
+        cfg.apply_spec(&spec);
+    }
+    // Explicit flags override the platform; their defaults are whatever
+    // the platform (or the legacy baseline) already set.
+    cfg.system.cores = a.get_usize("cores", cfg.system.cores);
+    cfg.system.io_milli = a.get_u64("io-milli", cfg.system.io_milli);
+    if let Some(cpu) = a.get("cpu") {
+        cfg.cpu_model = CpuModel::parse(cpu)
+            .ok_or_else(|| anyhow::anyhow!("bad --cpu {cpu}"))?;
+    }
     let mode = a.get_str("mode", "serial");
     cfg.mode = Mode::parse(&mode)
         .ok_or_else(|| anyhow::anyhow!("bad --mode {mode}"))?;
@@ -118,6 +148,7 @@ fn figure_opts(a: &Args, default_max_cores: usize) -> Result<FigureOpts> {
         max_cores: a.get_usize("max-cores", default_max_cores),
         quantum_policy: QuantumPolicy::parse(&qp)
             .ok_or_else(|| anyhow::anyhow!("bad --quantum-policy {qp}"))?,
+        platform: platform_arg(a)?,
     })
 }
 
@@ -160,6 +191,32 @@ fn main() -> Result<()> {
                 row.miss_rate_err_pp[3],
                 if row.checksum_match { "match" } else { "MISMATCH" }
             );
+        }
+        Some("platforms") => {
+            if let Some(name) = args.get("describe") {
+                let spec = platforms::resolve(name)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                println!("{}", spec.describe());
+            } else if let Some(name) = args.get("dump") {
+                let spec = platforms::resolve(name)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                print!("{}", spec.to_toml());
+            } else if let Some(path) = args.get("validate") {
+                let spec = platforms::resolve(path)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                println!(
+                    "ok: platform `{}` is valid ({} cores, {})",
+                    spec.name,
+                    spec.cores,
+                    spec.interconnect.describe(spec.cores)
+                );
+            } else {
+                print!("{}", platforms::render_list());
+                println!(
+                    "\nUse `run --platform <name|file.toml>`; `--describe`, \
+                     `--dump`, `--validate` inspect a spec."
+                );
+            }
         }
         Some("fig7") => {
             let opts = figure_opts(&args, 120)?;
@@ -228,8 +285,13 @@ fn main() -> Result<()> {
 
 fn print_summary(cfg: &RunConfig, s: &Summary) {
     println!(
-        "app={} cores={} cpu={:?} mode={:?}",
-        cfg.app, cfg.system.cores, cfg.cpu_model, cfg.mode
+        "app={} cores={} cpu={:?} mode={:?} fabric={} mem-ch={}",
+        cfg.app,
+        cfg.system.cores,
+        cfg.cpu_model,
+        cfg.mode,
+        cfg.system.interconnect.describe(cfg.system.cores),
+        cfg.system.mem_channels
     );
     println!(
         "  simulated: {:.6} ms  ({} ticks)",

@@ -64,7 +64,10 @@ pub struct HnfCtrl {
     dir: FxHashMap<u64, DirEntry>,
     inbox: SharedInbox,
     to_noc: OutLink,
-    dram: CompId,
+    /// DRAM channel controllers, line-interleaved by address
+    /// ([`HnfCtrl::dram_for`]); a single-channel system has one entry.
+    drams: Vec<CompId>,
+    line_bytes: u64,
     latency: Tick,
     busy: FxHashMap<u64, Txn>,
     waiting: FxHashMap<u64, VecDeque<RubyMsg>>,
@@ -92,15 +95,17 @@ impl HnfCtrl {
         latency: Tick,
         inbox: SharedInbox,
         to_noc: OutLink,
-        dram: CompId,
+        drams: Vec<CompId>,
     ) -> Self {
+        assert!(!drams.is_empty(), "HN-F needs at least one DRAM channel");
         HnfCtrl {
             name,
             l3: CacheArray::new(size_bytes, assoc, line_bytes),
             dir: FxHashMap::default(),
             inbox,
             to_noc,
-            dram,
+            drams,
+            line_bytes,
             latency,
             busy: FxHashMap::default(),
             waiting: FxHashMap::default(),
@@ -122,6 +127,11 @@ impl HnfCtrl {
         debug_assert!(ok, "HNF->router buffer is unbounded");
     }
 
+    /// The DRAM channel serving `addr` (line-interleaved).
+    fn dram_for(&self, addr: u64) -> CompId {
+        self.drams[(addr / self.line_bytes) as usize % self.drams.len()]
+    }
+
     /// Allocate in L3, writing dirty victims back to DRAM.
     fn l3_fill(&mut self, ctx: &mut Ctx, line: u64, state: LineState, data: u64) {
         if let Some(v) = self.l3.allocate(line, state, data) {
@@ -137,7 +147,8 @@ impl HnfCtrl {
                     u16::MAX,
                     ctx.now(),
                 );
-                ctx.schedule(0, self.dram, EventKind::MemReq { pkt });
+                let ch = self.dram_for(v.addr);
+                ctx.schedule(0, ch, EventKind::MemReq { pkt });
             }
         }
     }
@@ -164,7 +175,8 @@ impl HnfCtrl {
                     txn.req.core,
                     txn.req.issued,
                 );
-                ctx.schedule(0, self.dram, EventKind::MemReq { pkt });
+                let ch = self.dram_for(line);
+                ctx.schedule(0, ch, EventKind::MemReq { pkt });
             }
         }
     }

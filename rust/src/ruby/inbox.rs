@@ -184,8 +184,9 @@ impl Inbox {
     /// domains' in-window stagings are deliberately invisible — the
     /// verdict must not depend on host interleaving — so a buffer fed by
     /// several foreign domains can transiently exceed its capacity at the
-    /// merge (none exists in the Fig. 4 topology: every finite
-    /// domain-crossing buffer has exactly one sender).
+    /// merge (none exists in any built-in topology — star, ring or mesh:
+    /// every finite domain-crossing buffer has exactly one sender, see
+    /// `ruby/topology.rs`).
     pub fn stage_has_slot(&self, buf: usize, sender_dom: u32) -> bool {
         let b = &self.bufs[buf];
         if b.capacity == usize::MAX {

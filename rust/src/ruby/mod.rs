@@ -9,7 +9,8 @@
 //! * [`l1`], [`l2`], [`hnf`] — the cache-controller state machines.
 //! * [`router`], [`throttle`] — the NoC (Fig. 5c deadlock-free links).
 //! * [`sequencer`] — packet ↔ message conversion + the IO-crossbar path.
-//! * [`topology`] — Fig. 4 system construction and domain partitioning.
+//! * [`topology`] — [`crate::spec::SystemSpec`] elaboration (star / ring /
+//!   mesh fabrics) and domain partitioning.
 
 pub mod hnf;
 pub mod inbox;
@@ -26,4 +27,6 @@ pub use inbox::{
     SharedInbox,
 };
 pub use msg::{MsgKind, RubyMsg, StagedMsg};
-pub use topology::{build_atomic_system, build_system, BuiltSystem, Layout};
+pub use topology::{
+    build_atomic_system, build_from_spec, build_system, BuiltSystem, Layout,
+};

@@ -1,15 +1,34 @@
-//! System construction: Fig. 4's hierarchical star topology, partitioned
-//! into time domains per §4.1.
+//! System elaboration: a declarative [`SystemSpec`] becomes components and
+//! time domains, partitioned per §4.1 of the paper.
 //!
-//! Per core `i` (domain `i` when parallel, else domain 0):
+//! Per core `i` (domain `i` when parallel, else domain 0), every topology
+//! builds the same private stack:
 //! `cpu_i, seq_i, l1i_i, l1d_i, l2_i, router r_i, throttle t_i`.
-//! Shared domain (`N` when parallel): central router `rc`, per-core central
-//! throttles `tc_i`, the HN-F, the DRAM controller, UART + timer behind the
-//! IO crossbar.
+//! The shared domain (`N` when parallel) holds the interconnect fabric —
+//! its shape is the spec's [`Interconnect`] — plus the HN-F, the DRAM
+//! channel controllers, UART + timer behind the IO crossbar, and the
+//! per-core central throttles `tc_i`:
 //!
-//! The only domain-crossing links are `t_i → rc` and `tc_i → r_i` (Ruby
-//! protocol, both uni-directional through throttles — Fig. 5c) plus the
-//! sequencer↔crossbar path (classic timing protocol, §4.3).
+//! * **Star** (Fig. 4): one central station `rc`; `t_i → rc`, `rc → tc_i`,
+//!   `rc ↔ HN-F`. Exactly the legacy hard-wired system, bit-for-bit.
+//! * **Ring**: stations `s_0..s_{n-1}` linked uni-directionally
+//!   (`s_i → s_{i+1 mod n}`); `t_i → s_i`, `s_i → tc_i`, HN-F at `s_0`.
+//!   Messages ride the ring accumulating one NoC hop per station.
+//! * **Mesh `{cols}`**: stations on a full `cols × rows` grid with
+//!   deterministic X-then-Y routing; `t_i → s_i`, `s_i → tc_i`, HN-F at
+//!   `s_0` (the north-west corner).
+//!
+//! The only domain-crossing links on every topology are `t_i → fabric` and
+//! `tc_i → r_i` (Ruby protocol, both uni-directional through throttles —
+//! Fig. 5c) plus the sequencer↔crossbar path (classic timing protocol,
+//! §4.3). Stations never cross domains (they all live in the shared
+//! domain), so the inbox lock graph stays acyclic and the PDES kernels,
+//! quantum policies and the border-ordered inbox handoff work unchanged on
+//! every topology (`tests/platforms.rs` gates bit-identity per preset).
+//!
+//! [`Layout`] is no longer hand-maintained arithmetic: it is an id table
+//! *planned* from the spec ([`Layout::plan`]) and asserted against the
+//! actual `add` order during elaboration.
 
 use std::sync::Arc;
 
@@ -21,11 +40,12 @@ use crate::mem::{DramCtrl, DramTiming, Timer, Uart};
 use crate::pdes::{Machine, MachineBuilder};
 use crate::sim::ids::{CompId, DomainId};
 use crate::sim::time::{Clock, Tick, NS};
+use crate::spec::{Interconnect, SystemSpec};
 use crate::workload::Workload;
 use crate::xbar::{default_xbar, XbarState, IO_BASE};
 
 use super::hnf::HnfCtrl;
-use super::inbox::{new_inbox, OutLink};
+use super::inbox::{new_inbox, OutLink, SharedInbox};
 use super::l1::L1Ctrl;
 use super::l2::L2Ctrl;
 use super::router::Router;
@@ -34,56 +54,146 @@ use super::throttle::Throttle;
 
 const UNB: usize = usize::MAX;
 
-/// Component-id layout (must match the `add` order in `build_system`).
-#[derive(Clone, Copy, Debug)]
+/// The fabric station the HN-F attaches to on ring/mesh topologies.
+const HNF_STATION: usize = 0;
+
+/// Component-id table, planned from the spec before elaboration and
+/// asserted against the actual `add` order while components are built.
+///
+/// This replaces the old `CompId(i*7+k)` arithmetic: adding a component or
+/// a topology changes [`Layout::plan`] in one place and every consumer of
+/// the table follows.
+#[derive(Clone, Debug)]
 pub struct Layout {
-    pub cores: usize,
+    cpu: Vec<CompId>,
+    seq: Vec<CompId>,
+    l1i: Vec<CompId>,
+    l1d: Vec<CompId>,
+    l2: Vec<CompId>,
+    router: Vec<CompId>,
+    throttle: Vec<CompId>,
+    /// Interconnect stations in the shared domain (the star's single
+    /// central router `rc`, or one ring/mesh station per core).
+    pub stations: Vec<CompId>,
+    hnf_id: CompId,
+    drams: Vec<CompId>,
+    uart_id: CompId,
+    timer_id: CompId,
+    tc_ids: Vec<CompId>,
 }
 
 impl Layout {
-    const PER_CORE: u32 = 7;
+    /// Plan the id table for `spec`: ids follow the elaboration `add`
+    /// order (per-core stacks first, then the shared domain — stations,
+    /// HN-F, DRAM channels, peripherals, central throttles).
+    pub fn plan(spec: &SystemSpec) -> Layout {
+        let n = spec.cores;
+        let mut next = 0u32;
+        let mut id = || {
+            let c = CompId(next);
+            next += 1;
+            c
+        };
+        let mut cpu = Vec::with_capacity(n);
+        let mut seq = Vec::with_capacity(n);
+        let mut l1i = Vec::with_capacity(n);
+        let mut l1d = Vec::with_capacity(n);
+        let mut l2 = Vec::with_capacity(n);
+        let mut router = Vec::with_capacity(n);
+        let mut throttle = Vec::with_capacity(n);
+        for _ in 0..n {
+            cpu.push(id());
+            seq.push(id());
+            l1i.push(id());
+            l1d.push(id());
+            l2.push(id());
+            router.push(id());
+            throttle.push(id());
+        }
+        let stations = (0..spec.n_stations()).map(|_| id()).collect();
+        let hnf_id = id();
+        let drams = (0..spec.mem_channels).map(|_| id()).collect();
+        let uart_id = id();
+        let timer_id = id();
+        let tc_ids = (0..n).map(|_| id()).collect();
+        Layout {
+            cpu,
+            seq,
+            l1i,
+            l1d,
+            l2,
+            router,
+            throttle,
+            stations,
+            hnf_id,
+            drams,
+            uart_id,
+            timer_id,
+            tc_ids,
+        }
+    }
 
+    pub fn cores(&self) -> usize {
+        self.cpu.len()
+    }
     pub fn cpu(&self, i: usize) -> CompId {
-        CompId(i as u32 * Self::PER_CORE)
+        self.cpu[i]
     }
     pub fn seq(&self, i: usize) -> CompId {
-        CompId(i as u32 * Self::PER_CORE + 1)
+        self.seq[i]
     }
     pub fn l1i(&self, i: usize) -> CompId {
-        CompId(i as u32 * Self::PER_CORE + 2)
+        self.l1i[i]
     }
     pub fn l1d(&self, i: usize) -> CompId {
-        CompId(i as u32 * Self::PER_CORE + 3)
+        self.l1d[i]
     }
     pub fn l2(&self, i: usize) -> CompId {
-        CompId(i as u32 * Self::PER_CORE + 4)
+        self.l2[i]
     }
     pub fn router(&self, i: usize) -> CompId {
-        CompId(i as u32 * Self::PER_CORE + 5)
+        self.router[i]
     }
     pub fn throttle(&self, i: usize) -> CompId {
-        CompId(i as u32 * Self::PER_CORE + 6)
+        self.throttle[i]
     }
-    fn shared_base(&self) -> u32 {
-        self.cores as u32 * Self::PER_CORE
-    }
+    /// The star's central router (panics on ring/mesh — use
+    /// [`Layout::stations`]).
     pub fn rc(&self) -> CompId {
-        CompId(self.shared_base())
+        assert_eq!(
+            self.stations.len(),
+            1,
+            "rc() is the star's single station; this layout has {}",
+            self.stations.len()
+        );
+        self.stations[0]
     }
     pub fn hnf(&self) -> CompId {
-        CompId(self.shared_base() + 1)
+        self.hnf_id
     }
+    /// First (or only) DRAM channel controller.
     pub fn dram(&self) -> CompId {
-        CompId(self.shared_base() + 2)
+        self.drams[0]
+    }
+    /// All DRAM channel controllers (line-interleaved by the HN-F).
+    pub fn drams(&self) -> &[CompId] {
+        &self.drams
     }
     pub fn uart(&self) -> CompId {
-        CompId(self.shared_base() + 3)
+        self.uart_id
     }
     pub fn timer(&self) -> CompId {
-        CompId(self.shared_base() + 4)
+        self.timer_id
     }
     pub fn tc(&self, i: usize) -> CompId {
-        CompId(self.shared_base() + 5 + i as u32)
+        self.tc_ids[i]
+    }
+    /// Total number of components in the table.
+    pub fn n_components(&self) -> usize {
+        self.cpu.len() * 8
+            + self.stations.len()
+            + self.drams.len()
+            + 3 // hnf, uart, timer
     }
 }
 
@@ -94,16 +204,31 @@ pub struct BuiltSystem {
     pub layout: Layout,
 }
 
-/// Build the timing-mode system (Minor/O3 + Ruby CHI-lite).
+/// Build the timing-mode system described by the legacy `RunConfig` flag
+/// surface (a thin conversion into [`SystemSpec`] — see
+/// [`RunConfig::spec`]).
 pub fn build_system(cfg: &RunConfig, workload: &Workload) -> BuiltSystem {
+    build_from_spec(&cfg.spec(), cfg, workload)
+}
+
+/// Elaborate `spec` into a timing-mode machine (Minor/O3 + Ruby
+/// CHI-lite). Run knobs (kernel mode, quantum, queue, border policy) come
+/// from `cfg`; the platform comes entirely from the spec.
+pub fn build_from_spec(
+    spec: &SystemSpec,
+    cfg: &RunConfig,
+    workload: &Workload,
+) -> BuiltSystem {
+    if let Err(e) = spec.validate() {
+        panic!("{e}");
+    }
     assert!(
-        cfg.cpu_model.is_timing(),
-        "build_system is for timing models; use build_atomic_system"
+        spec.cpu.is_timing(),
+        "build_from_spec is for timing models; use build_atomic_system"
     );
-    assert_eq!(workload.n_cores(), cfg.system.cores, "workload/core mismatch");
-    let n = cfg.system.cores;
-    let sys = &cfg.system;
-    let lay = Layout { cores: n };
+    assert_eq!(workload.n_cores(), spec.cores, "workload/core mismatch");
+    let n = spec.cores;
+    let lay = Layout::plan(spec);
 
     let (n_domains, quantum) = match cfg.mode {
         Mode::Serial => (1, Tick::MAX),
@@ -123,9 +248,9 @@ pub fn build_system(cfg: &RunConfig, workload: &Workload) -> BuiltSystem {
     b.set_policy(cfg.run_policy());
     b.set_cores(n as u32);
 
-    let noc = sys.noc_latency();
-    let rbuf = sys.router_buffer;
-    let clock = Clock::from_mhz(sys.cpu_mhz);
+    let noc = spec.noc_latency();
+    let rbuf = spec.router_buffer;
+    let clock = Clock::from_mhz(spec.cpu_mhz);
     let xbar = default_xbar(&[lay.uart(), lay.timer()]);
 
     // ---- create all inboxes up front (ids are known from the layout) ----
@@ -138,26 +263,59 @@ pub fn build_system(cfg: &RunConfig, workload: &Workload) -> BuiltSystem {
     let r_inbox: Vec<_> = (0..n).map(|_| new_inbox(&[UNB, rbuf])).collect();
     // t_i: [0] from r_i (finite).
     let t_inbox: Vec<_> = (0..n).map(|_| new_inbox(&[rbuf])).collect();
-    // rc: [0..n] from t_i (finite), [n] from HNF (unbounded).
-    let rc_caps: Vec<usize> =
-        (0..n).map(|_| rbuf).chain(std::iter::once(UNB)).collect();
-    let rc_inbox = new_inbox(&rc_caps);
-    // tc_i: [0] from rc (finite).
+    // tc_i: [0] from its fabric station (finite).
     let tc_inbox: Vec<_> = (0..n).map(|_| new_inbox(&[rbuf])).collect();
     let hnf_inbox = new_inbox(&[UNB]);
 
-    // ---- per-core components ----
+    // Fabric station inboxes. Buffer layouts per topology:
+    //   star  (1 station): [0..n) from t_i (finite), [n] from HNF.
+    //   ring  (n stations): [0] from t_i (finite), [1] from the ring
+    //         predecessor, [2] from the HNF (used on s_0 only).
+    //   mesh  (n stations): [0] from t_i (finite), [1..=4] from the
+    //         W/E/N/S neighbours, [5] from the HNF (s_0 only).
+    let st_inbox: Vec<SharedInbox> = match spec.interconnect {
+        Interconnect::Star => {
+            let caps: Vec<usize> =
+                (0..n).map(|_| rbuf).chain(std::iter::once(UNB)).collect();
+            vec![new_inbox(&caps)]
+        }
+        Interconnect::Ring => {
+            (0..n).map(|_| new_inbox(&[rbuf, UNB, UNB])).collect()
+        }
+        Interconnect::Mesh { .. } => (0..n)
+            .map(|_| new_inbox(&[rbuf, UNB, UNB, UNB, UNB, UNB]))
+            .collect(),
+    };
+    // Where a core's local throttle t_i injects into the fabric.
+    let fabric_entry = |i: usize| -> OutLink {
+        match spec.interconnect {
+            Interconnect::Star => OutLink {
+                inbox: st_inbox[0].clone(),
+                buf: i,
+                consumer: lay.stations[0],
+                latency: noc,
+            },
+            Interconnect::Ring | Interconnect::Mesh { .. } => OutLink {
+                inbox: st_inbox[i].clone(),
+                buf: 0,
+                consumer: lay.stations[i],
+                latency: noc,
+            },
+        }
+    };
+
+    // ---- per-core components (identical private stack, any fabric) ----
     for i in 0..n {
         let d = dom(i);
 
         // CPU
-        let mut params = match cfg.cpu_model {
+        let mut params = match spec.cpu {
             CpuModel::Minor => CpuParams::minor(),
             CpuModel::O3 => CpuParams::o3(),
             _ => unreachable!(),
         };
-        if sys.io_milli > 0 {
-            params.io_every = (1000 / sys.io_milli).max(1) as usize;
+        if spec.io_milli > 0 {
+            params.io_every = (1000 / spec.io_milli).max(1) as usize;
         }
         let code_base =
             crate::workload::apps::PRIVATE_BASE + i as u64 * crate::workload::apps::PRIVATE_SPAN
@@ -201,14 +359,14 @@ pub fn build_system(cfg: &RunConfig, workload: &Workload) -> BuiltSystem {
 
         // L1I / L1D
         for (is_d, name, inbox, cache) in [
-            (false, format!("cpu{i}.l1i"), &l1i_inbox[i], &sys.l1i),
-            (true, format!("cpu{i}.l1d"), &l1d_inbox[i], &sys.l1d),
+            (false, format!("cpu{i}.l1i"), &l1i_inbox[i], &spec.l1i),
+            (true, format!("cpu{i}.l1d"), &l1d_inbox[i], &spec.l1d),
         ] {
             let l1 = L1Ctrl::new(
                 name,
                 cache.size_bytes,
                 cache.assoc,
-                sys.line_bytes,
+                spec.line_bytes,
                 cache.latency_ns * NS,
                 inbox.clone(),
                 OutLink {
@@ -231,10 +389,10 @@ pub fn build_system(cfg: &RunConfig, workload: &Workload) -> BuiltSystem {
         // L2
         let l2 = L2Ctrl::new(
             format!("cpu{i}.l2"),
-            sys.l2.size_bytes,
-            sys.l2.assoc,
-            sys.line_bytes,
-            sys.l2.latency_ns * NS,
+            spec.l2.size_bytes,
+            spec.l2.assoc,
+            spec.line_bytes,
+            spec.l2.latency_ns * NS,
             l2_inbox[i].clone(),
             OutLink {
                 inbox: l1i_inbox[i].clone(),
@@ -286,90 +444,230 @@ pub fn build_system(cfg: &RunConfig, workload: &Workload) -> BuiltSystem {
         let id = b.add(d, Box::new(r));
         debug_assert_eq!(id, lay.router(i));
 
-        // Local throttle t_i -> central router (DOMAIN-CROSSING link).
+        // Local throttle t_i -> fabric (DOMAIN-CROSSING link).
         let t = Throttle::new(
             format!("t{i}"),
             t_inbox[i].clone(),
-            OutLink {
-                inbox: rc_inbox.clone(),
-                buf: i,
-                consumer: lay.rc(),
-                latency: noc,
-            },
+            fabric_entry(i),
             noc,
-            sys.data_flits,
+            spec.data_flits,
         );
         let id = b.add(d, Box::new(t));
         debug_assert_eq!(id, lay.throttle(i));
     }
 
-    // ---- shared-domain components ----
-    // Central router: out[j] -> tc_j, out[n] -> HNF.
-    let mut rc_routes = FxHashMap::default();
-    let mut rc_outs = Vec::new();
-    for j in 0..n {
-        rc_routes.insert(lay.l2(j), j);
-        rc_outs.push(OutLink {
-            inbox: tc_inbox[j].clone(),
-            buf: 0,
-            consumer: lay.tc(j),
-            latency: noc,
-        });
+    // ---- shared-domain fabric stations -------------------------------
+    match spec.interconnect {
+        Interconnect::Star => {
+            // Central router rc: out[j] -> tc_j, out[n] -> HNF.
+            let mut rc_routes = FxHashMap::default();
+            let mut rc_outs = Vec::new();
+            for j in 0..n {
+                rc_routes.insert(lay.l2(j), j);
+                rc_outs.push(OutLink {
+                    inbox: tc_inbox[j].clone(),
+                    buf: 0,
+                    consumer: lay.tc(j),
+                    latency: noc,
+                });
+            }
+            rc_routes.insert(lay.hnf(), n);
+            rc_outs.push(OutLink {
+                inbox: hnf_inbox.clone(),
+                buf: 0,
+                consumer: lay.hnf(),
+                latency: noc,
+            });
+            let rc = Router::new(
+                "rc".to_string(),
+                st_inbox[0].clone(),
+                rc_outs,
+                rc_routes,
+                None,
+                noc,
+            );
+            let id = b.add(shared_dom, Box::new(rc));
+            debug_assert_eq!(id, lay.stations[0]);
+        }
+        Interconnect::Ring => {
+            // Uni-directional ring s_i -> s_{i+1 mod n}; HNF at s_0.
+            for i in 0..n {
+                let next = (i + 1) % n;
+                let mut routes = FxHashMap::default();
+                routes.insert(lay.l2(i), 0usize);
+                let mut outs = vec![
+                    OutLink {
+                        inbox: tc_inbox[i].clone(),
+                        buf: 0,
+                        consumer: lay.tc(i),
+                        latency: noc,
+                    },
+                    OutLink {
+                        inbox: st_inbox[next].clone(),
+                        buf: 1,
+                        consumer: lay.stations[next],
+                        latency: noc,
+                    },
+                ];
+                if i == HNF_STATION {
+                    routes.insert(lay.hnf(), outs.len());
+                    outs.push(OutLink {
+                        inbox: hnf_inbox.clone(),
+                        buf: 0,
+                        consumer: lay.hnf(),
+                        latency: noc,
+                    });
+                }
+                let s = Router::new(
+                    format!("s{i}"),
+                    st_inbox[i].clone(),
+                    outs,
+                    routes,
+                    Some(1), // everything else rides the ring
+                    noc,
+                );
+                let id = b.add(shared_dom, Box::new(s));
+                debug_assert_eq!(id, lay.stations[i]);
+            }
+        }
+        Interconnect::Mesh { cols } => {
+            // Full cols x rows grid, X-then-Y routing; HNF at s_0.
+            // Neighbour buffer convention in the *receiver's* inbox:
+            // [1] = from its W neighbour, [2] = from E, [3] = from N,
+            // [4] = from S.
+            let pos = |s: usize| (s % cols, s / cols);
+            for i in 0..n {
+                let (xi, yi) = pos(i);
+                let mut outs = vec![OutLink {
+                    inbox: tc_inbox[i].clone(),
+                    buf: 0,
+                    consumer: lay.tc(i),
+                    latency: noc,
+                }];
+                let mut dir_out = [usize::MAX; 4]; // E, W, S, N
+                // (neighbour station, buffer index at the receiver):
+                // sending east lands in the receiver's "from W" buffer,
+                // and so on.
+                let neighbours = [
+                    if xi + 1 < cols { Some((i + 1, 1usize)) } else { None },
+                    if xi > 0 { Some((i - 1, 2usize)) } else { None },
+                    if i + cols < n { Some((i + cols, 3usize)) } else { None },
+                    if yi > 0 { Some((i - cols, 4usize)) } else { None },
+                ];
+                for (dir, nb) in neighbours.into_iter().enumerate() {
+                    if let Some((s, buf)) = nb {
+                        dir_out[dir] = outs.len();
+                        outs.push(OutLink {
+                            inbox: st_inbox[s].clone(),
+                            buf,
+                            consumer: lay.stations[s],
+                            latency: noc,
+                        });
+                    }
+                }
+                // First hop from station i towards station `to`, X first.
+                let first_hop = |to: usize| -> usize {
+                    let (xt, yt) = pos(to);
+                    let dir = if xt > xi {
+                        0 // E
+                    } else if xt < xi {
+                        1 // W
+                    } else if yt > yi {
+                        2 // S
+                    } else {
+                        3 // N
+                    };
+                    let out = dir_out[dir];
+                    debug_assert_ne!(out, usize::MAX, "hop off the grid");
+                    out
+                };
+                let mut routes = FxHashMap::default();
+                for j in 0..n {
+                    let out = if j == i { 0 } else { first_hop(j) };
+                    routes.insert(lay.l2(j), out);
+                }
+                if i == HNF_STATION {
+                    routes.insert(lay.hnf(), outs.len());
+                    outs.push(OutLink {
+                        inbox: hnf_inbox.clone(),
+                        buf: 0,
+                        consumer: lay.hnf(),
+                        latency: noc,
+                    });
+                } else {
+                    routes.insert(lay.hnf(), first_hop(HNF_STATION));
+                }
+                let s = Router::new(
+                    format!("s{i}"),
+                    st_inbox[i].clone(),
+                    outs,
+                    routes,
+                    None, // every destination is mapped explicitly
+                    noc,
+                );
+                let id = b.add(shared_dom, Box::new(s));
+                debug_assert_eq!(id, lay.stations[i]);
+            }
+        }
     }
-    rc_routes.insert(lay.hnf(), n);
-    rc_outs.push(OutLink {
-        inbox: hnf_inbox.clone(),
-        buf: 0,
-        consumer: lay.hnf(),
-        latency: noc,
-    });
-    let rc = Router::new(
-        "rc".to_string(),
-        rc_inbox.clone(),
-        rc_outs,
-        rc_routes,
-        None,
-        noc,
-    );
-    let id = b.add(shared_dom, Box::new(rc));
-    debug_assert_eq!(id, lay.rc());
 
-    // HN-F
-    let hnf = HnfCtrl::new(
-        "hnf".to_string(),
-        sys.l3.size_bytes,
-        sys.l3.assoc,
-        sys.line_bytes,
-        sys.l3.latency_ns * NS,
-        hnf_inbox.clone(),
-        OutLink {
-            inbox: rc_inbox.clone(),
+    // ---- HN-F (enters the fabric at its attachment station) ----------
+    let hnf_to_noc = match spec.interconnect {
+        Interconnect::Star => OutLink {
+            inbox: st_inbox[0].clone(),
             buf: n,
-            consumer: lay.rc(),
+            consumer: lay.stations[0],
             latency: noc,
         },
-        lay.dram(),
+        Interconnect::Ring => OutLink {
+            inbox: st_inbox[HNF_STATION].clone(),
+            buf: 2,
+            consumer: lay.stations[HNF_STATION],
+            latency: noc,
+        },
+        Interconnect::Mesh { .. } => OutLink {
+            inbox: st_inbox[HNF_STATION].clone(),
+            buf: 5,
+            consumer: lay.stations[HNF_STATION],
+            latency: noc,
+        },
+    };
+    let hnf = HnfCtrl::new(
+        "hnf".to_string(),
+        spec.l3.size_bytes,
+        spec.l3.assoc,
+        spec.line_bytes,
+        spec.l3.latency_ns * NS,
+        hnf_inbox.clone(),
+        hnf_to_noc,
+        lay.drams().to_vec(),
     );
     let id = b.add(shared_dom, Box::new(hnf));
     debug_assert_eq!(id, lay.hnf());
 
-    // DRAM
+    // ---- DRAM channels (line-interleaved by the HN-F) ----------------
     let dram_timing = DramTiming {
-        clk_period: 1_000_000 / sys.dram_mhz,
+        clk_period: 1_000_000 / spec.dram_mhz,
         ..DramTiming::default()
     };
-    let dram =
-        DramCtrl::new("dram".to_string(), dram_timing, sys.line_bytes);
-    let id = b.add(shared_dom, Box::new(dram));
-    debug_assert_eq!(id, lay.dram());
+    for c in 0..spec.mem_channels {
+        let name = if spec.mem_channels == 1 {
+            "dram".to_string() // legacy stat names stay intact
+        } else {
+            format!("dram{c}")
+        };
+        let dram = DramCtrl::new(name, dram_timing, spec.line_bytes);
+        let id = b.add(shared_dom, Box::new(dram));
+        debug_assert_eq!(id, lay.drams()[c]);
+    }
 
-    // Peripherals behind the IO crossbar.
+    // ---- Peripherals behind the IO crossbar --------------------------
     let id = b.add(shared_dom, Box::new(Uart::new("uart".to_string())));
     debug_assert_eq!(id, lay.uart());
     let id = b.add(shared_dom, Box::new(Timer::new("timer".to_string())));
     debug_assert_eq!(id, lay.timer());
 
-    // Central throttles tc_i -> r_i (DOMAIN-CROSSING links).
+    // ---- Central throttles tc_i -> r_i (DOMAIN-CROSSING links) -------
     for i in 0..n {
         let t = Throttle::new(
             format!("tc{i}"),
@@ -381,7 +679,7 @@ pub fn build_system(cfg: &RunConfig, workload: &Workload) -> BuiltSystem {
                 latency: noc,
             },
             noc,
-            sys.data_flits,
+            spec.data_flits,
         );
         let id = b.add(shared_dom, Box::new(t));
         debug_assert_eq!(id, lay.tc(i));
@@ -391,6 +689,8 @@ pub fn build_system(cfg: &RunConfig, workload: &Workload) -> BuiltSystem {
 }
 
 /// Build the atomic-protocol system (AtomicCPU / KVMCPU; serial only).
+/// Atomic protocols bypass the interconnect entirely, so the spec's
+/// topology is irrelevant here.
 pub fn build_atomic_system(
     cfg: &RunConfig,
     workload: &Workload,
@@ -452,11 +752,13 @@ pub fn build_atomic_system(
 mod tests {
     use super::*;
 
-    #[test]
-    fn layout_ids_disjoint() {
-        let lay = Layout { cores: 3 };
-        let mut all = vec![];
-        for i in 0..3 {
+    fn spec(cores: usize, ic: Interconnect) -> SystemSpec {
+        SystemSpec { cores, interconnect: ic, ..SystemSpec::default() }
+    }
+
+    fn all_ids(lay: &Layout) -> Vec<CompId> {
+        let mut all = Vec::new();
+        for i in 0..lay.cores() {
             all.extend([
                 lay.cpu(i),
                 lay.seq(i),
@@ -468,10 +770,87 @@ mod tests {
                 lay.tc(i),
             ]);
         }
-        all.extend([lay.rc(), lay.hnf(), lay.dram(), lay.uart(), lay.timer()]);
-        let n = all.len();
+        all.extend(lay.stations.iter().copied());
+        all.extend(lay.drams().iter().copied());
+        all.extend([lay.hnf(), lay.uart(), lay.timer()]);
+        all
+    }
+
+    #[test]
+    fn planned_ids_are_dense_and_disjoint_on_every_topology() {
+        for ic in [
+            Interconnect::Star,
+            Interconnect::Ring,
+            Interconnect::Mesh { cols: 3 },
+        ] {
+            let s = spec(6, ic);
+            let lay = Layout::plan(&s);
+            let mut all = all_ids(&lay);
+            let total = all.len();
+            assert_eq!(
+                total,
+                lay.n_components(),
+                "{ic:?}: Layout::n_components disagrees"
+            );
+            all.sort();
+            all.dedup();
+            assert_eq!(all.len(), total, "{ic:?}: duplicate ids");
+            assert_eq!(all[0], CompId(0), "{ic:?}: ids must start at 0");
+            assert_eq!(
+                all[total - 1],
+                CompId(total as u32 - 1),
+                "{ic:?}: ids must be dense"
+            );
+        }
+    }
+
+    #[test]
+    fn star_plan_matches_legacy_arithmetic() {
+        // The old hand-maintained layout: CompId(i*7 + k) per core, then
+        // rc, hnf, dram, uart, timer, tc_i. The spec-derived plan must
+        // reproduce it exactly so legacy runs stay bit-for-bit.
+        let n = 3;
+        let lay = Layout::plan(&spec(n, Interconnect::Star));
+        for i in 0..n {
+            let base = i as u32 * 7;
+            assert_eq!(lay.cpu(i), CompId(base));
+            assert_eq!(lay.seq(i), CompId(base + 1));
+            assert_eq!(lay.l1i(i), CompId(base + 2));
+            assert_eq!(lay.l1d(i), CompId(base + 3));
+            assert_eq!(lay.l2(i), CompId(base + 4));
+            assert_eq!(lay.router(i), CompId(base + 5));
+            assert_eq!(lay.throttle(i), CompId(base + 6));
+        }
+        let sb = n as u32 * 7;
+        assert_eq!(lay.rc(), CompId(sb));
+        assert_eq!(lay.hnf(), CompId(sb + 1));
+        assert_eq!(lay.dram(), CompId(sb + 2));
+        assert_eq!(lay.uart(), CompId(sb + 3));
+        assert_eq!(lay.timer(), CompId(sb + 4));
+        for i in 0..n {
+            assert_eq!(lay.tc(i), CompId(sb + 5 + i as u32));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "rc() is the star's single station")]
+    fn rc_panics_on_ring() {
+        let lay = Layout::plan(&spec(4, Interconnect::Ring));
+        let _ = lay.rc();
+    }
+
+    #[test]
+    fn multi_channel_plan_is_disjoint() {
+        let s = SystemSpec {
+            mem_channels: 4,
+            ..spec(4, Interconnect::Mesh { cols: 2 })
+        };
+        let lay = Layout::plan(&s);
+        assert_eq!(lay.drams().len(), 4);
+        let mut all = all_ids(&lay);
+        let total = all.len();
         all.sort();
         all.dedup();
-        assert_eq!(all.len(), n);
+        assert_eq!(all.len(), total);
     }
 }

@@ -160,10 +160,17 @@ impl Mailbox {
         }
     }
 
-    /// Drain all published events, sorted deterministically by
-    /// `(tick, prio, target, seq)` — the same drain-sort guarantee as the
-    /// old mutex injector, so insertion order into the domain queue (and
-    /// therefore re-sequencing) is reproducible.
+    /// Drain all published events, sorted by `(tick, prio, target, seq)`.
+    ///
+    /// Producers stamp `seq` with the canonical
+    /// `(sender_domain << XSEQ_BITS) | send_counter` merge key
+    /// ([`crate::sim::shared::SharedState::next_injector_seq`]), which
+    /// makes this sort **total**: two distinct same-tick deliveries to
+    /// the same target (e.g. the `--io-milli` crossbar's packets) order
+    /// by sender domain and the sender's program order — a pure function
+    /// of the simulation — never by host push interleaving. Insertion
+    /// order into the domain queue (and therefore re-sequencing) is
+    /// exactly reproducible across kernels and thread counts.
     ///
     /// Contract: single consumer (the owning domain), called only at
     /// quantum borders while producers are parked at the barrier.
@@ -325,6 +332,36 @@ mod tests {
             m.push(ev(i, 0));
         }
         drop(m); // must free all segments and the pending events
+    }
+
+    #[test]
+    fn same_tick_same_target_orders_by_canonical_key_not_push_order() {
+        // Regression for the `--io-milli` crossbar path: two distinct
+        // same-tick deliveries to the same consumer used to tie (both
+        // carried seq 0) and the stable sort fell back to host push
+        // order. With the canonical (sender_domain << XSEQ_BITS) | count
+        // key the drain order is total: a maximally skewed host that
+        // appends domain 2's sends before domain 1's must still drain
+        // domain 1 first, and each domain's own sends in program order.
+        let key = |dom: u64, cnt: u64| {
+            (dom << crate::sim::shared::XSEQ_BITS) | cnt
+        };
+        let m = Mailbox::default();
+        for (dom, cnt) in [(2u64, 0u64), (2, 1), (1, 1), (1, 0)] {
+            m.push(Event {
+                tick: 100,
+                prio: 50,
+                seq: key(dom, cnt),
+                target: CompId(7),
+                kind: EventKind::CpuTick,
+            });
+        }
+        let keys: Vec<u64> = m.drain().iter().map(|e| e.seq).collect();
+        assert_eq!(
+            keys,
+            vec![key(1, 0), key(1, 1), key(2, 0), key(2, 1)],
+            "ties must break by (sender domain, send order), not push order"
+        );
     }
 
     #[test]

@@ -120,7 +120,12 @@ impl<'a> Ctx<'a> {
         self.shared.injectors[tdom.index()].push(crate::sim::event::Event {
             tick: eff,
             prio,
-            seq: 0, // re-sequenced at drain
+            // Canonical (sender domain, send order) merge key: makes the
+            // border drain-sort total, so same-(tick, prio, target)
+            // deliveries (e.g. the IO crossbar's packets) merge in
+            // simulation order, not host push order. The queue re-assigns
+            // its own seq on insert.
+            seq: self.shared.next_injector_seq(self.domain),
             target,
             kind,
         });
@@ -199,7 +204,10 @@ impl<'a> Ctx<'a> {
                 crate::sim::event::Event {
                     tick: eff,
                     prio: prio::DEFAULT,
-                    seq: 0, // re-sequenced at the border drain
+                    // Same canonical merge key as a cross-domain push, so
+                    // the release is ordered like every foreign
+                    // observer's event at the border drain.
+                    seq: self.shared.next_injector_seq(self.domain),
                     target: self.self_id,
                     kind,
                 },

@@ -54,7 +54,11 @@ pub struct Event {
     pub tick: Tick,
     pub prio: u8,
     /// Per-queue monotonic sequence number; tie-breaker making execution
-    /// order total and deterministic.
+    /// order total and deterministic. While an event is in flight through
+    /// a cross-domain [`crate::sched::Mailbox`] this field instead holds
+    /// the canonical `(sender_domain, send order)` merge key
+    /// ([`crate::sim::shared::SharedState::next_injector_seq`]); the
+    /// border drain sorts by it, then the queue re-sequences on insert.
     pub seq: u64,
     pub target: CompId,
     pub kind: EventKind,

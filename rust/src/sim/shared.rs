@@ -87,12 +87,22 @@ pub struct PdesStats {
     pub inbox_merge_ns: AtomicU64,
 }
 
+/// Bits of the canonical injector key reserved for the per-domain send
+/// counter (low bits); the sender domain occupies the bits above. See
+/// [`SharedState::next_injector_seq`].
+pub const XSEQ_BITS: u32 = 40;
+
 /// State shared by all domains of one simulation run.
 pub struct SharedState {
     /// Component -> (owning domain, dense local index).
     pub locate: Vec<(DomainId, u32)>,
     /// Per-domain cross-scheduling mailboxes (drained at quantum borders).
     pub injectors: Vec<Mailbox>,
+    /// Per-*sender*-domain injection counters backing the canonical
+    /// `(sender_domain, send order)` merge key every mailbox-injected
+    /// event carries in its `seq` field (see
+    /// [`SharedState::next_injector_seq`]).
+    xseq: Vec<AtomicU64>,
     /// Quantum length in ticks; `Tick::MAX` disables windowing (serial).
     pub quantum: Tick,
     /// Border policy knobs (adaptive quantum, stealing, thread count);
@@ -113,9 +123,11 @@ impl SharedState {
         cores_total: u32,
     ) -> Self {
         let injectors = (0..n_domains).map(|_| Mailbox::default()).collect();
+        let xseq = (0..n_domains).map(|_| AtomicU64::new(0)).collect();
         SharedState {
             locate,
             injectors,
+            xseq,
             quantum,
             policy: RunPolicy::default(),
             pdes: PdesStats::default(),
@@ -128,6 +140,25 @@ impl SharedState {
 
     pub fn domain_of(&self, c: CompId) -> DomainId {
         self.locate[c.index()].0
+    }
+
+    /// The canonical merge key for the next event `dom` pushes into a
+    /// cross-domain [`Mailbox`]: `(dom << XSEQ_BITS) | send_counter`.
+    ///
+    /// The mailbox drain sorts by `(tick, prio, target, seq)`; with this
+    /// key the sort is *total* — two distinct same-tick deliveries to the
+    /// same consumer (e.g. the `--io-milli` crossbar's `MemReq`/`MemResp`
+    /// packets racing onto one device) can no longer tie, so their merge
+    /// order is a pure function of the simulation (sender domain, then
+    /// the sender's program order) instead of host push interleaving.
+    /// Only the owning thread of `dom`'s window ever advances `dom`'s
+    /// counter (the claim list hands a window to exactly one thread), so
+    /// the sequence each event receives is deterministic; `Relaxed`
+    /// suffices because the value is data, not synchronisation.
+    pub fn next_injector_seq(&self, dom: DomainId) -> u64 {
+        let cnt = self.xseq[dom.index()].fetch_add(1, Ordering::Relaxed);
+        debug_assert!(cnt < 1 << XSEQ_BITS, "injector counter overflow");
+        ((dom.0 as u64) << XSEQ_BITS) | cnt
     }
 
     /// Called by a CPU model when its workload is exhausted.

@@ -1,0 +1,740 @@
+//! The declarative platform API: [`SystemSpec`] describes a complete
+//! simulated MPSoC — core count, CPU model, per-level cache geometry,
+//! memory channels and the interconnect topology — independently of how a
+//! run is executed (kernel, quantum, workload all stay in
+//! [`crate::config::RunConfig`]).
+//!
+//! This is the design-space-exploration surface the paper motivates:
+//! parti-gem5 inherits gem5's custom cache and interconnect models, so a
+//! reproduction that can only build the Fig. 4 hierarchical star is not
+//! exploring anything. A `SystemSpec` can instead be
+//!
+//! * built in code (the examples do this),
+//! * loaded from / saved to TOML ([`SystemSpec::from_toml`],
+//!   [`SystemSpec::to_toml`] — hand-rolled flat subset, the build
+//!   environment is offline),
+//! * taken from the named preset registry
+//!   ([`platforms::presets`], `parti-sim run --platform fig4-8`),
+//! * validated with actionable errors ([`SystemSpec::validate`]),
+//!
+//! and then *elaborated* into components and time domains by
+//! [`crate::ruby::topology::build_system`]. Domain partitioning (one
+//! domain per core plus one shared domain) is computed from the spec, so
+//! every topology runs unchanged on all three PDES kernels, under every
+//! `--quantum-policy`, with `--steal`, and under the deterministic
+//! border-ordered inbox handoff (`tests/platforms.rs` gates bit-identity
+//! on every preset).
+//!
+//! See `docs/PLATFORMS.md` for the schema, the preset table and a guide to
+//! adding a topology.
+
+pub mod platforms;
+
+use crate::config::{CacheConfig, RunConfig, SystemConfig};
+use crate::cpu::CpuModel;
+
+/// The interconnect fabric between the per-core L2s and the shared HN-F.
+///
+/// All three topologies keep the paper's domain discipline: per-core
+/// resources (including the core's local router and throttle) live in the
+/// core's own time domain, the fabric *stations* live in the shared
+/// domain, and every domain-crossing link is a uni-directional
+/// [`crate::ruby::throttle::Throttle`] (Fig. 5c). Hop latency is the
+/// spec's NoC latency, charged per link by the existing
+/// [`crate::ruby::router::Router`] components.
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub enum Interconnect {
+    /// Fig. 4's hierarchical star: one central station (`rc`) every core
+    /// hangs off. One fabric hop between any L2 and the HN-F.
+    #[default]
+    Star,
+    /// A uni-directional ring of one station per core; the HN-F attaches
+    /// at station 0. Average hop count grows with the core count — the
+    /// cheap-to-wire, high-latency end of the design space.
+    Ring,
+    /// A `cols`-wide 2D mesh with deterministic X-then-Y routing; the
+    /// HN-F attaches at station 0 (the north-west corner). Requires
+    /// `cores % cols == 0` (full rows).
+    Mesh { cols: usize },
+}
+
+impl Interconnect {
+    /// Parse the spec-TOML / CLI spelling: `star`, `ring`, `mesh`
+    /// (`mesh_cols` carries the width separately in TOML).
+    pub fn parse(s: &str, mesh_cols: usize) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "star" => Interconnect::Star,
+            "ring" => Interconnect::Ring,
+            "mesh" => Interconnect::Mesh { cols: mesh_cols },
+            _ => return None,
+        })
+    }
+
+    /// The TOML / CLI keyword (the mesh width travels separately).
+    pub fn keyword(&self) -> &'static str {
+        match self {
+            Interconnect::Star => "star",
+            Interconnect::Ring => "ring",
+            Interconnect::Mesh { .. } => "mesh",
+        }
+    }
+
+    /// Human-readable form (`mesh(8x4)` needs the core count for rows).
+    pub fn describe(&self, cores: usize) -> String {
+        match self {
+            Interconnect::Star => "star".to_string(),
+            Interconnect::Ring => format!("ring({cores})"),
+            Interconnect::Mesh { cols } => {
+                format!("mesh({}x{})", cols, cores.div_ceil(*cols))
+            }
+        }
+    }
+}
+
+/// A complete, serializable description of one simulated platform.
+///
+/// Field defaults are the paper's Table 2 machine with the Fig. 4 star —
+/// [`SystemSpec::default`] elaborates to exactly the system the legacy
+/// `RunConfig` flags built before this API existed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SystemSpec {
+    /// Registry / file identity (informational; `platforms` lists it).
+    pub name: String,
+    /// One-line description for `platforms --describe`.
+    pub description: String,
+    /// Simulated cores (= per-core time domains).
+    pub cores: usize,
+    /// CPU model driving every core (`atomic`/`kvm` are serial-only).
+    pub cpu: CpuModel,
+    /// CPU clock in MHz.
+    pub cpu_mhz: u64,
+    pub l1i: CacheConfig,
+    pub l1d: CacheConfig,
+    pub l2: CacheConfig,
+    /// Shared L3 (the HN-F's array).
+    pub l3: CacheConfig,
+    pub line_bytes: u64,
+    pub interconnect: Interconnect,
+    /// NoC link + router latency in tenths of a ns (Table 2: 0.5 ns).
+    pub noc_latency_ns_x10: u64,
+    /// Router buffer size in messages on finite (domain-crossing) links.
+    pub router_buffer: usize,
+    /// Link flits charged for a data message.
+    pub data_flits: u64,
+    /// DRAM clock in MHz.
+    pub dram_mhz: u64,
+    /// Independent DRAM channels behind the HN-F, line-interleaved.
+    pub mem_channels: usize,
+    /// IO accesses per 1000 ops (exercises the §4.3 crossbar path).
+    pub io_milli: u64,
+}
+
+impl Default for SystemSpec {
+    fn default() -> Self {
+        SystemSpec::from_parts(&SystemConfig::default(), CpuModel::O3)
+            .named("table2", "Table 2 defaults (Fig. 4 star)")
+    }
+}
+
+/// Validation failure: every problem found, each with a fix hint.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpecError {
+    pub errors: Vec<String>,
+}
+
+impl SpecError {
+    fn one(msg: impl Into<String>) -> Self {
+        SpecError { errors: vec![msg.into()] }
+    }
+}
+
+impl std::fmt::Display for SpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invalid SystemSpec:")?;
+        for e in &self.errors {
+            write!(f, "\n  - {e}")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+/// Hard cap on simulated cores (one time domain each; the paper's largest
+/// MPSoC is 120).
+pub const MAX_CORES: usize = 1024;
+
+impl SystemSpec {
+    /// Build a spec from the legacy configuration pair — the thin
+    /// conversion that keeps every old `RunConfig` flag working.
+    pub fn from_parts(sys: &SystemConfig, cpu: CpuModel) -> Self {
+        SystemSpec {
+            name: "custom".to_string(),
+            description: String::new(),
+            cores: sys.cores,
+            cpu,
+            cpu_mhz: sys.cpu_mhz,
+            l1i: sys.l1i,
+            l1d: sys.l1d,
+            l2: sys.l2,
+            l3: sys.l3,
+            line_bytes: sys.line_bytes,
+            interconnect: sys.interconnect,
+            noc_latency_ns_x10: sys.noc_latency_ns_x10,
+            router_buffer: sys.router_buffer,
+            data_flits: sys.data_flits,
+            dram_mhz: sys.dram_mhz,
+            mem_channels: sys.mem_channels,
+            io_milli: sys.io_milli,
+        }
+    }
+
+    /// Rename in place (builder-style, used by the preset registry).
+    pub fn named(
+        mut self,
+        name: impl Into<String>,
+        description: impl Into<String>,
+    ) -> Self {
+        self.name = name.into();
+        self.description = description.into();
+        self
+    }
+
+    /// The legacy configuration pair this spec describes (inverse of
+    /// [`SystemSpec::from_parts`]).
+    pub fn to_parts(&self) -> (SystemConfig, CpuModel) {
+        let sys = SystemConfig {
+            cores: self.cores,
+            cpu_mhz: self.cpu_mhz,
+            l1i: self.l1i,
+            l1d: self.l1d,
+            l2: self.l2,
+            l3: self.l3,
+            line_bytes: self.line_bytes,
+            interconnect: self.interconnect,
+            noc_latency_ns_x10: self.noc_latency_ns_x10,
+            router_buffer: self.router_buffer,
+            data_flits: self.data_flits,
+            dram_mhz: self.dram_mhz,
+            mem_channels: self.mem_channels,
+            io_milli: self.io_milli,
+        };
+        (sys, self.cpu)
+    }
+
+    /// Overwrite the platform half of a [`RunConfig`] (cores, CPU model,
+    /// caches, interconnect); run knobs (mode, quantum, workload, policy
+    /// flags) are untouched. CLI flag overrides are applied *after* this.
+    pub fn apply_to(&self, cfg: &mut RunConfig) {
+        let (sys, cpu) = self.to_parts();
+        cfg.system = sys;
+        cfg.cpu_model = cpu;
+    }
+
+    /// Per-hop NoC latency in ticks (mirrors
+    /// [`crate::config::SystemConfig::noc_latency`] — same x10 encoding,
+    /// one conversion for both the legacy and the spec path).
+    pub fn noc_latency(&self) -> crate::sim::time::Tick {
+        self.noc_latency_ns_x10 * crate::sim::time::NS / 10
+    }
+
+    /// Number of fabric stations the interconnect elaborates to (the
+    /// star's single central router, or one per core).
+    pub fn n_stations(&self) -> usize {
+        match self.interconnect {
+            Interconnect::Star => 1,
+            Interconnect::Ring | Interconnect::Mesh { .. } => self.cores,
+        }
+    }
+
+    /// Check every invariant elaboration relies on. Collects *all*
+    /// problems, each with an actionable hint, instead of stopping at the
+    /// first.
+    pub fn validate(&self) -> Result<(), SpecError> {
+        let mut errors = Vec::new();
+        let mut err = |m: String| errors.push(m);
+
+        if self.cores == 0 || self.cores > MAX_CORES {
+            err(format!(
+                "cores = {} is out of range — set cores between 1 and {MAX_CORES}",
+                self.cores
+            ));
+        }
+        if !self.line_bytes.is_power_of_two() || self.line_bytes < 8 {
+            err(format!(
+                "line_bytes = {} must be a power of two >= 8 (gem5 uses 64)",
+                self.line_bytes
+            ));
+        }
+        for (what, c) in [
+            ("l1i", &self.l1i),
+            ("l1d", &self.l1d),
+            ("l2", &self.l2),
+            ("l3", &self.l3),
+        ] {
+            if c.assoc == 0 {
+                err(format!("{what}_assoc = 0 — associativity must be >= 1"));
+            }
+            let way_bytes = self.line_bytes * c.assoc.max(1) as u64;
+            if c.size_bytes == 0 || c.size_bytes % way_bytes != 0 {
+                err(format!(
+                    "{what}_size_bytes = {} must be a nonzero multiple of \
+                     line_bytes * {what}_assoc = {} (whole cache sets)",
+                    c.size_bytes, way_bytes
+                ));
+            }
+            if c.latency_ns == 0 {
+                err(format!(
+                    "{what}_latency_ns = 0 — every cache level needs >= 1 ns \
+                     (Table 2 uses 1/1/4/6)"
+                ));
+            }
+        }
+        if self.cpu_mhz == 0 {
+            err("cpu_mhz = 0 — set a nonzero CPU clock (Table 2: 2000)".into());
+        }
+        if self.dram_mhz == 0 {
+            err("dram_mhz = 0 — set a nonzero DRAM clock (Table 2: 1000)".into());
+        }
+        if self.router_buffer == 0 {
+            err(
+                "router_buffer = 0 would deadlock every finite link — \
+                 set it to >= 1 message (Table 2: 4)"
+                    .into(),
+            );
+        }
+        if self.mem_channels == 0 || self.mem_channels > 16 {
+            err(format!(
+                "mem_channels = {} is out of range — use 1..=16 \
+                 line-interleaved DRAM channels",
+                self.mem_channels
+            ));
+        }
+        match self.interconnect {
+            Interconnect::Star => {}
+            Interconnect::Ring => {
+                if self.cores < 2 {
+                    err(format!(
+                        "interconnect = ring needs cores >= 2 (got {}) — \
+                         a 1-station ring has no links; use star",
+                        self.cores
+                    ));
+                }
+            }
+            Interconnect::Mesh { cols } => {
+                if cols == 0 || cols > self.cores.max(1) {
+                    err(format!(
+                        "mesh_cols = {cols} is out of range — choose \
+                         1..={} (one station per core)",
+                        self.cores.max(1)
+                    ));
+                } else if self.cores % cols != 0 {
+                    err(format!(
+                        "mesh: cores = {} is not a multiple of mesh_cols = \
+                         {cols} — X-then-Y routing needs full rows; choose \
+                         a divisor of the core count",
+                        self.cores
+                    ));
+                }
+            }
+        }
+        if errors.is_empty() {
+            Ok(())
+        } else {
+            Err(SpecError { errors })
+        }
+    }
+
+    // ---- TOML ----------------------------------------------------------
+
+    /// Serialise to the flat TOML subset (`key = value`, `#` comments,
+    /// double-quoted strings). [`SystemSpec::from_toml`] round-trips this
+    /// exactly; `tests/platforms.rs` holds the property test.
+    pub fn to_toml(&self) -> String {
+        let mut s = String::new();
+        s.push_str("# parti-sim platform spec (docs/PLATFORMS.md)\n");
+        s.push_str(&format!("name = \"{}\"\n", self.name));
+        s.push_str(&format!("description = \"{}\"\n", self.description));
+        s.push_str(&format!("cores = {}\n", self.cores));
+        s.push_str(&format!(
+            "cpu = \"{}\"\n",
+            match self.cpu {
+                CpuModel::Kvm => "kvm",
+                CpuModel::Atomic => "atomic",
+                CpuModel::Minor => "minor",
+                CpuModel::O3 => "o3",
+            }
+        ));
+        s.push_str(&format!("cpu_mhz = {}\n", self.cpu_mhz));
+        for (p, c) in [
+            ("l1i", &self.l1i),
+            ("l1d", &self.l1d),
+            ("l2", &self.l2),
+            ("l3", &self.l3),
+        ] {
+            s.push_str(&format!("{p}_size_bytes = {}\n", c.size_bytes));
+            s.push_str(&format!("{p}_assoc = {}\n", c.assoc));
+            s.push_str(&format!("{p}_latency_ns = {}\n", c.latency_ns));
+        }
+        s.push_str(&format!("line_bytes = {}\n", self.line_bytes));
+        s.push_str(&format!(
+            "interconnect = \"{}\"\n",
+            self.interconnect.keyword()
+        ));
+        if let Interconnect::Mesh { cols } = self.interconnect {
+            s.push_str(&format!("mesh_cols = {cols}\n"));
+        }
+        s.push_str(&format!(
+            "noc_latency_ns_x10 = {}\n",
+            self.noc_latency_ns_x10
+        ));
+        s.push_str(&format!("router_buffer = {}\n", self.router_buffer));
+        s.push_str(&format!("data_flits = {}\n", self.data_flits));
+        s.push_str(&format!("dram_mhz = {}\n", self.dram_mhz));
+        s.push_str(&format!("mem_channels = {}\n", self.mem_channels));
+        s.push_str(&format!("io_milli = {}\n", self.io_milli));
+        s
+    }
+
+    /// Parse the format emitted by [`SystemSpec::to_toml`]. Unknown keys
+    /// are rejected (typos must not silently fall back to defaults);
+    /// missing keys keep the Table 2 defaults. The parsed spec is
+    /// validated before being returned.
+    pub fn from_toml(text: &str) -> Result<Self, SpecError> {
+        let mut spec = SystemSpec::default().named("custom", "");
+        let mut interconnect_kw: Option<String> = None;
+        let mut mesh_cols: Option<usize> = None;
+        let mut errors = Vec::new();
+
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let lineno = lineno + 1;
+            let Some((k, v)) = line.split_once('=') else {
+                errors.push(format!(
+                    "line {lineno}: expected `key = value`, got `{line}`"
+                ));
+                continue;
+            };
+            let (k, v) = (k.trim(), v.trim());
+            // String values are double-quoted; numbers are bare.
+            let as_str = v.strip_prefix('"').and_then(|s| s.strip_suffix('"'));
+            let mut as_num = || -> Option<u64> {
+                match v.parse::<u64>() {
+                    Ok(n) => Some(n),
+                    Err(e) => {
+                        errors.push(format!(
+                            "line {lineno}: {k} = {v}: {e} (expected an \
+                             unsigned integer)"
+                        ));
+                        None
+                    }
+                }
+            };
+            match k {
+                "name" | "description" | "cpu" | "interconnect" => {
+                    let Some(sv) = as_str else {
+                        errors.push(format!(
+                            "line {lineno}: {k} must be a double-quoted \
+                             string, e.g. {k} = \"...\""
+                        ));
+                        continue;
+                    };
+                    match k {
+                        "name" => spec.name = sv.to_string(),
+                        "description" => spec.description = sv.to_string(),
+                        "cpu" => match CpuModel::parse(sv) {
+                            Some(m) => spec.cpu = m,
+                            None => errors.push(format!(
+                                "line {lineno}: cpu = \"{sv}\" — use one of \
+                                 o3, minor, atomic, kvm"
+                            )),
+                        },
+                        "interconnect" => {
+                            interconnect_kw = Some(sv.to_string())
+                        }
+                        _ => unreachable!(),
+                    }
+                }
+                "cores" => {
+                    if let Some(n) = as_num() {
+                        spec.cores = n as usize;
+                    }
+                }
+                "cpu_mhz" => {
+                    if let Some(n) = as_num() {
+                        spec.cpu_mhz = n;
+                    }
+                }
+                "line_bytes" => {
+                    if let Some(n) = as_num() {
+                        spec.line_bytes = n;
+                    }
+                }
+                "noc_latency_ns_x10" => {
+                    if let Some(n) = as_num() {
+                        spec.noc_latency_ns_x10 = n;
+                    }
+                }
+                "router_buffer" => {
+                    if let Some(n) = as_num() {
+                        spec.router_buffer = n as usize;
+                    }
+                }
+                "data_flits" => {
+                    if let Some(n) = as_num() {
+                        spec.data_flits = n;
+                    }
+                }
+                "dram_mhz" => {
+                    if let Some(n) = as_num() {
+                        spec.dram_mhz = n;
+                    }
+                }
+                "mem_channels" => {
+                    if let Some(n) = as_num() {
+                        spec.mem_channels = n as usize;
+                    }
+                }
+                "io_milli" => {
+                    if let Some(n) = as_num() {
+                        spec.io_milli = n;
+                    }
+                }
+                "mesh_cols" => {
+                    if let Some(n) = as_num() {
+                        mesh_cols = Some(n as usize);
+                    }
+                }
+                _ => {
+                    let target = if k.starts_with("l1i_") {
+                        Some(&mut spec.l1i)
+                    } else if k.starts_with("l1d_") {
+                        Some(&mut spec.l1d)
+                    } else if k.starts_with("l2_") {
+                        Some(&mut spec.l2)
+                    } else if k.starts_with("l3_") {
+                        Some(&mut spec.l3)
+                    } else {
+                        None
+                    };
+                    let field =
+                        k.split_once('_').map(|(_, f)| f).unwrap_or("");
+                    match (target, field) {
+                        (Some(c), "size_bytes") => {
+                            if let Some(n) = as_num() {
+                                c.size_bytes = n;
+                            }
+                        }
+                        (Some(c), "assoc") => {
+                            if let Some(n) = as_num() {
+                                c.assoc = n as usize;
+                            }
+                        }
+                        (Some(c), "latency_ns") => {
+                            if let Some(n) = as_num() {
+                                c.latency_ns = n;
+                            }
+                        }
+                        _ => errors.push(format!(
+                            "line {lineno}: unknown key `{k}` — see \
+                             docs/PLATFORMS.md for the schema"
+                        )),
+                    }
+                }
+            }
+        }
+
+        if let Some(kw) = interconnect_kw {
+            match Interconnect::parse(&kw, mesh_cols.unwrap_or(0)) {
+                Some(Interconnect::Mesh { cols }) if mesh_cols.is_none() => {
+                    let _ = cols;
+                    errors.push(
+                        "interconnect = \"mesh\" needs a `mesh_cols = N` \
+                         line (the mesh width)"
+                            .to_string(),
+                    );
+                }
+                Some(ic) => spec.interconnect = ic,
+                None => errors.push(format!(
+                    "interconnect = \"{kw}\" — use one of star, ring, mesh"
+                )),
+            }
+        } else if let Some(cols) = mesh_cols {
+            errors.push(format!(
+                "mesh_cols = {cols} without `interconnect = \"mesh\"` — \
+                 add the interconnect line or drop mesh_cols"
+            ));
+        }
+
+        if !errors.is_empty() {
+            return Err(SpecError { errors });
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Load a spec from a `.toml` file on disk.
+    pub fn load(path: &std::path::Path) -> Result<Self, SpecError> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            SpecError::one(format!("cannot read {}: {e}", path.display()))
+        })?;
+        Self::from_toml(&text)
+    }
+
+    /// Multi-line human description for `platforms --describe`.
+    pub fn describe(&self) -> String {
+        let kib = |b: u64| format!("{} KiB", b / 1024);
+        format!(
+            "{name}: {desc}\n\
+             cores          {cores} x {cpu:?} @ {mhz} MHz\n\
+             interconnect   {ic}\n\
+             caches         L1I {l1i}/{l1ia}w  L1D {l1d}/{l1da}w  \
+             L2 {l2}/{l2a}w  L3 {l3}/{l3a}w  ({lb} B lines)\n\
+             memory         {ch} channel(s) @ {dram} MHz\n\
+             noc            {noc_ns:.1} ns/hop, {rb}-msg buffers, \
+             {df} data flits\n\
+             io             {io} accesses per 1000 ops",
+            name = self.name,
+            desc = self.description,
+            cores = self.cores,
+            cpu = self.cpu,
+            mhz = self.cpu_mhz,
+            ic = self.interconnect.describe(self.cores),
+            l1i = kib(self.l1i.size_bytes),
+            l1ia = self.l1i.assoc,
+            l1d = kib(self.l1d.size_bytes),
+            l1da = self.l1d.assoc,
+            l2 = kib(self.l2.size_bytes),
+            l2a = self.l2.assoc,
+            l3 = kib(self.l3.size_bytes),
+            l3a = self.l3.assoc,
+            lb = self.line_bytes,
+            ch = self.mem_channels,
+            dram = self.dram_mhz,
+            noc_ns = self.noc_latency_ns_x10 as f64 / 10.0,
+            rb = self.router_buffer,
+            df = self.data_flits,
+            io = self.io_milli,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_matches_legacy_default_config() {
+        let spec = SystemSpec::default();
+        let (sys, cpu) = spec.to_parts();
+        assert_eq!(sys, SystemConfig::default());
+        assert_eq!(cpu, CpuModel::O3);
+        assert_eq!(spec.noc_latency(), sys.noc_latency(), "x10 mirrors");
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn parts_roundtrip() {
+        let sys = SystemConfig {
+            interconnect: Interconnect::Mesh { cols: 4 },
+            mem_channels: 2,
+            ..SystemConfig::with_cores(16)
+        };
+        let spec = SystemSpec::from_parts(&sys, CpuModel::Minor);
+        let (back, cpu) = spec.to_parts();
+        assert_eq!(back, sys);
+        assert_eq!(cpu, CpuModel::Minor);
+    }
+
+    #[test]
+    fn toml_roundtrip_ring() {
+        let spec = SystemSpec {
+            cores: 8,
+            interconnect: Interconnect::Ring,
+            mem_channels: 2,
+            ..SystemSpec::default()
+        }
+        .named("r", "a ring");
+        let back = SystemSpec::from_toml(&spec.to_toml()).unwrap();
+        assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn toml_roundtrip_mesh_keeps_cols() {
+        let spec = SystemSpec {
+            cores: 12,
+            interconnect: Interconnect::Mesh { cols: 4 },
+            ..SystemSpec::default()
+        }
+        .named("m", "a mesh");
+        let back = SystemSpec::from_toml(&spec.to_toml()).unwrap();
+        assert_eq!(back.interconnect, Interconnect::Mesh { cols: 4 });
+        assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn unknown_key_is_rejected_with_hint() {
+        let err = SystemSpec::from_toml("coers = 4\n").unwrap_err();
+        assert!(err.errors[0].contains("unknown key `coers`"), "{err}");
+        assert!(err.to_string().contains("PLATFORMS.md"));
+    }
+
+    #[test]
+    fn mesh_without_cols_is_rejected() {
+        let err =
+            SystemSpec::from_toml("interconnect = \"mesh\"\n").unwrap_err();
+        assert!(err.errors[0].contains("mesh_cols"), "{err}");
+    }
+
+    #[test]
+    fn validation_collects_all_errors() {
+        let mut spec = SystemSpec {
+            cores: 0,
+            router_buffer: 0,
+            ..SystemSpec::default()
+        };
+        spec.l2.assoc = 0;
+        let err = spec.validate().unwrap_err();
+        assert!(err.errors.len() >= 3, "{err}");
+        assert!(err.errors.iter().any(|e| e.contains("cores")));
+        assert!(err.errors.iter().any(|e| e.contains("router_buffer")));
+    }
+
+    #[test]
+    fn mesh_ragged_rows_rejected() {
+        let mut spec = SystemSpec {
+            cores: 5,
+            interconnect: Interconnect::Mesh { cols: 4 },
+            ..SystemSpec::default()
+        };
+        let err = spec.validate().unwrap_err();
+        assert!(err.errors[0].contains("multiple of mesh_cols"), "{err}");
+        spec.cores = 8;
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn ring_of_one_rejected() {
+        let mut spec = SystemSpec {
+            cores: 1,
+            interconnect: Interconnect::Ring,
+            ..SystemSpec::default()
+        };
+        assert!(spec.validate().is_err());
+        spec.interconnect = Interconnect::Star;
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn n_stations_per_topology() {
+        let mut spec = SystemSpec { cores: 8, ..SystemSpec::default() };
+        assert_eq!(spec.n_stations(), 1);
+        spec.interconnect = Interconnect::Ring;
+        assert_eq!(spec.n_stations(), 8);
+        spec.interconnect = Interconnect::Mesh { cols: 4 };
+        assert_eq!(spec.n_stations(), 8);
+    }
+}

@@ -1,0 +1,170 @@
+//! The named platform registry: curated [`SystemSpec`] presets covering
+//! the paper's machines and the new topology design space, resolvable by
+//! name from the CLI (`run --platform fig4-8`) or programmatically
+//! ([`preset`], [`resolve`]).
+//!
+//! Every preset is gated by the bit-identity matrix in
+//! `tests/platforms.rs` (threaded ≡ virtual kernel under the
+//! border-ordered handoff) and smoke-run by the CI platform matrix.
+
+use std::path::Path;
+
+use super::{Interconnect, SpecError, SystemSpec};
+
+/// All built-in platforms, in listing order.
+pub fn presets() -> Vec<SystemSpec> {
+    let base = SystemSpec::default();
+    vec![
+        SystemSpec {
+            cores: 2,
+            ..base.clone()
+        }
+        .named(
+            "fig4-2",
+            "smallest Fig. 4 star: 2 cores, Table 2 geometry (CI smoke)",
+        ),
+        SystemSpec {
+            cores: 8,
+            ..base.clone()
+        }
+        .named(
+            "fig4-8",
+            "the paper's Fig. 4 hierarchical star at 8 cores, Table 2 \
+             geometry",
+        ),
+        SystemSpec {
+            cores: 16,
+            interconnect: Interconnect::Ring,
+            ..base.clone()
+        }
+        .named(
+            "ring-16",
+            "16 cores on a uni-directional ring, HN-F at station 0 — the \
+             cheap-to-wire, high-hop-count corner",
+        ),
+        SystemSpec {
+            cores: 64,
+            interconnect: Interconnect::Mesh { cols: 8 },
+            mem_channels: 4,
+            ..base.clone()
+        }
+        .named(
+            "mesh-64",
+            "64 cores on an 8x8 mesh (X-then-Y routing), 4 DRAM channels",
+        ),
+        SystemSpec {
+            cores: 120,
+            mem_channels: 4,
+            ..base.clone()
+        }
+        .named(
+            "mpsoc-120",
+            "the paper's largest swept MPSoC: 120-core star (Fig. 7's \
+             right edge), 4 DRAM channels",
+        ),
+    ]
+}
+
+/// Look up a preset by name.
+pub fn preset(name: &str) -> Option<SystemSpec> {
+    presets().into_iter().find(|p| p.name == name)
+}
+
+/// Resolve a CLI `--platform` argument: a preset name, or a path to a
+/// spec TOML file (anything containing a path separator or ending in
+/// `.toml`). The error lists the available presets.
+pub fn resolve(arg: &str) -> Result<SystemSpec, SpecError> {
+    if arg.ends_with(".toml") || arg.contains('/') {
+        return SystemSpec::load(Path::new(arg));
+    }
+    preset(arg).ok_or_else(|| {
+        let names: Vec<String> =
+            presets().iter().map(|p| p.name.clone()).collect();
+        SpecError {
+            errors: vec![format!(
+                "unknown platform `{arg}` — available presets: {}; or pass \
+                 a spec file path ending in .toml",
+                names.join(", ")
+            )],
+        }
+    })
+}
+
+/// One-line-per-preset listing for the `platforms` subcommand.
+pub fn render_list() -> String {
+    let mut s = format!(
+        "{:<12} {:>6} {:>6} {:<12} {:>8} description\n",
+        "name", "cores", "cpu", "fabric", "mem-ch"
+    );
+    for p in presets() {
+        s.push_str(&format!(
+            "{:<12} {:>6} {:>6} {:<12} {:>8} {}\n",
+            p.name,
+            p.cores,
+            format!("{:?}", p.cpu).to_lowercase(),
+            p.interconnect.describe(p.cores),
+            p.mem_channels,
+            p.description,
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_validate_and_roundtrip() {
+        let all = presets();
+        assert!(all.len() >= 4);
+        for p in all {
+            p.validate()
+                .unwrap_or_else(|e| panic!("preset {}: {e}", p.name));
+            let back = SystemSpec::from_toml(&p.to_toml())
+                .unwrap_or_else(|e| panic!("preset {} toml: {e}", p.name));
+            assert_eq!(p, back, "preset {} must round-trip", p.name);
+        }
+    }
+
+    #[test]
+    fn names_are_unique_and_resolvable() {
+        let all = presets();
+        let mut names: Vec<&str> =
+            all.iter().map(|p| p.name.as_str()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), all.len(), "duplicate preset name");
+        for p in &all {
+            assert_eq!(resolve(&p.name).unwrap(), *p);
+        }
+    }
+
+    #[test]
+    fn issue_presets_exist() {
+        for name in ["fig4-8", "ring-16", "mesh-64", "mpsoc-120"] {
+            let p = preset(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(p.name, name);
+        }
+        assert_eq!(
+            preset("mesh-64").unwrap().interconnect,
+            Interconnect::Mesh { cols: 8 }
+        );
+        assert_eq!(preset("ring-16").unwrap().interconnect, Interconnect::Ring);
+    }
+
+    #[test]
+    fn unknown_platform_error_lists_presets() {
+        let err = resolve("nope").unwrap_err();
+        assert!(err.errors[0].contains("fig4-8"), "{err}");
+        assert!(err.errors[0].contains("ring-16"), "{err}");
+    }
+
+    #[test]
+    fn listing_mentions_every_preset() {
+        let s = render_list();
+        for p in presets() {
+            assert!(s.contains(&p.name), "listing misses {}", p.name);
+        }
+    }
+}

@@ -1,0 +1,335 @@
+//! Gates for the declarative `SystemSpec` platform API (ISSUE 4):
+//!
+//! * TOML round-trip property: `SystemSpec -> TOML -> SystemSpec` is the
+//!   identity over a seeded random walk of the spec space.
+//! * Validation rejects broken specs with actionable errors.
+//! * Every preset elaborates and runs on every kernel, and the threaded
+//!   kernel is **bit-identical** to the virtual kernel across
+//!   `{star, ring, mesh}` × `--quantum-policy` × `--steal` ×
+//!   `--threads {1,2,8}` — extending `tests/inbox_order.rs`'s guarantee
+//!   from the Fig. 4 star to the whole topology design space.
+//! * Legacy flag-built star runs match the spec-built `fig4-8` platform
+//!   bit-for-bit (the old `RunConfig` surface is a thin spec conversion).
+
+use parti_sim::config::{Mode, RunConfig};
+use parti_sim::cpu::CpuModel;
+use parti_sim::harness::{make_workload, run_with_workload};
+use parti_sim::pdes::RunResult;
+use parti_sim::sched::QuantumPolicy;
+use parti_sim::sim::time::NS;
+use parti_sim::spec::{platforms, Interconnect, SystemSpec};
+use parti_sim::stats::compare;
+
+// ---- helpers ----------------------------------------------------------
+
+/// Bit-identity: everything deterministic must match exactly (same
+/// criteria as `tests/inbox_order.rs`; host-side counters excluded).
+fn assert_bit_identical(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.sim_ticks, b.sim_ticks, "{what}: sim_ticks");
+    assert_eq!(a.events, b.events, "{what}: events");
+    assert_eq!(a.pdes.cross_events, b.pdes.cross_events, "{what}: cross");
+    assert_eq!(a.pdes.postponed, b.pdes.postponed, "{what}: postponed");
+    assert_eq!(a.pdes.tpp_sum, b.pdes.tpp_sum, "{what}: tpp_sum");
+    assert_eq!(a.pdes.barriers, b.pdes.barriers, "{what}: barriers");
+    assert_eq!(
+        a.pdes.quanta_skipped, b.pdes.quanta_skipped,
+        "{what}: quanta_skipped"
+    );
+    assert_eq!(
+        a.pdes.inbox_staged, b.pdes.inbox_staged,
+        "{what}: inbox_staged"
+    );
+    assert_eq!(
+        a.stats.entries.len(),
+        b.stats.entries.len(),
+        "{what}: stat cardinality"
+    );
+    for ((an, av), (bn, bv)) in a.stats.entries.iter().zip(&b.stats.entries) {
+        assert_eq!(an, bn, "{what}: stat name order");
+        assert_eq!(av, bv, "{what}: per-component stat {an}");
+    }
+}
+
+/// A PDES run config on `spec` with a sharing workload sized so the whole
+/// preset matrix stays test-suite-fast (total core-ops roughly constant).
+fn matrix_cfg(spec: &SystemSpec, policy: QuantumPolicy) -> RunConfig {
+    let mut cfg = RunConfig::for_spec(spec);
+    cfg.app = "canneal".into(); // sharing + software barriers: worst case
+    cfg.ops_per_core = (4096 / spec.cores).max(48);
+    cfg.mode = Mode::Virtual;
+    cfg.quantum = 8 * NS;
+    cfg.quantum_policy = policy;
+    cfg
+}
+
+// ---- TOML round-trip property -----------------------------------------
+
+/// Deterministic xorshift so the walk is reproducible without a rand dep.
+struct Rng(u64);
+impl Rng {
+    fn step(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+    fn pick(&mut self, n: u64) -> u64 {
+        self.step() % n
+    }
+}
+
+#[test]
+fn toml_roundtrip_property_over_random_specs() {
+    let mut rng = Rng(0x5eed_cafe_f00d_0001);
+    let mut checked = 0;
+    while checked < 64 {
+        let cores = (rng.pick(12) + 1) as usize;
+        let ic = match rng.pick(3) {
+            0 => Interconnect::Star,
+            1 => Interconnect::Ring,
+            _ => {
+                // Any divisor keeps the mesh full-rowed.
+                let divisors: Vec<usize> =
+                    (1..=cores).filter(|d| cores % d == 0).collect();
+                let cols =
+                    divisors[rng.pick(divisors.len() as u64) as usize];
+                Interconnect::Mesh { cols }
+            }
+        };
+        let mut spec = SystemSpec {
+            cores,
+            cpu: if rng.pick(2) == 0 {
+                CpuModel::O3
+            } else {
+                CpuModel::Minor
+            },
+            cpu_mhz: 500 * (rng.pick(8) + 1),
+            line_bytes: 1 << (5 + rng.pick(3)), // 32/64/128
+            interconnect: ic,
+            noc_latency_ns_x10: rng.pick(50) + 1,
+            router_buffer: (rng.pick(8) + 1) as usize,
+            data_flits: rng.pick(8) + 1,
+            dram_mhz: 250 * (rng.pick(8) + 1),
+            mem_channels: (rng.pick(4) + 1) as usize,
+            io_milli: rng.pick(100),
+            ..SystemSpec::default()
+        }
+        .named(
+            format!("prop-{checked}"),
+            format!("property walk point {checked}"),
+        );
+        for c in
+            [&mut spec.l1i, &mut spec.l1d, &mut spec.l2, &mut spec.l3]
+        {
+            c.assoc = 1 << rng.pick(4);
+            c.size_bytes =
+                spec.line_bytes * c.assoc as u64 * (1 << rng.pick(6));
+            c.latency_ns = rng.pick(16) + 1;
+        }
+        if spec.validate().is_err() {
+            // The walk occasionally produces an invalid point (e.g. a
+            // 1-core ring); the property is about valid specs.
+            continue;
+        }
+        let toml = spec.to_toml();
+        let back = SystemSpec::from_toml(&toml)
+            .unwrap_or_else(|e| panic!("roundtrip parse failed: {e}\n{toml}"));
+        assert_eq!(spec, back, "TOML roundtrip must be the identity");
+        checked += 1;
+    }
+}
+
+#[test]
+fn from_toml_rejects_broken_specs_with_actionable_errors() {
+    // Unknown key (typo).
+    let err = SystemSpec::from_toml("corez = 8\n").unwrap_err();
+    assert!(err.to_string().contains("unknown key `corez`"), "{err}");
+    // Invalid value type.
+    let err = SystemSpec::from_toml("cores = \"eight\"\n").unwrap_err();
+    assert!(err.to_string().contains("cores"), "{err}");
+    // Structurally valid TOML, semantically broken spec: the validation
+    // layer runs too and explains the fix.
+    let err =
+        SystemSpec::from_toml("cores = 5\ninterconnect = \"mesh\"\nmesh_cols = 4\n")
+            .unwrap_err();
+    assert!(err.to_string().contains("multiple of mesh_cols"), "{err}");
+    // Several problems are all reported at once.
+    let err = SystemSpec::from_toml("cores = 0\nrouter_buffer = 0\n")
+        .unwrap_err();
+    assert!(err.errors.len() >= 2, "{err}");
+}
+
+#[test]
+fn spec_file_loads_from_disk() {
+    let spec = platforms::preset("ring-16").unwrap();
+    let dir = std::env::temp_dir();
+    let path = dir.join("parti_sim_platform_test.toml");
+    std::fs::write(&path, spec.to_toml()).unwrap();
+    let loaded = SystemSpec::load(&path).unwrap();
+    assert_eq!(loaded, spec);
+    // The CLI resolver takes the same path.
+    let resolved = platforms::resolve(path.to_str().unwrap()).unwrap();
+    assert_eq!(resolved, spec);
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---- functional gates per topology ------------------------------------
+
+#[test]
+fn every_topology_is_coherent_serial_vs_virtual() {
+    // The new fabrics must carry the CHI-lite protocol correctly: the
+    // serial reference and the virtual PDES kernel agree on checksums
+    // and committed ops on a sharing workload, per topology.
+    for ic in [
+        Interconnect::Star,
+        Interconnect::Ring,
+        Interconnect::Mesh { cols: 2 },
+    ] {
+        let spec = SystemSpec {
+            cores: 4,
+            interconnect: ic,
+            mem_channels: 2,
+            ..SystemSpec::default()
+        }
+        .named("gate", "coherence gate");
+        let mut serial_cfg = matrix_cfg(&spec, QuantumPolicy::Fixed);
+        serial_cfg.mode = Mode::Serial;
+        let w = make_workload(&serial_cfg).unwrap();
+        let serial = run_with_workload(&serial_cfg, &w).unwrap();
+        let mut vcfg = serial_cfg.clone();
+        vcfg.mode = Mode::Virtual;
+        let virt = run_with_workload(&vcfg, &w).unwrap();
+        let acc = compare(&serial, &virt);
+        assert!(
+            acc.checksum_match,
+            "{ic:?}: virtual kernel corrupted data on the new fabric"
+        );
+        assert_eq!(
+            serial.stats.sum_suffix(".committed_ops"),
+            virt.stats.sum_suffix(".committed_ops"),
+            "{ic:?}: committed ops"
+        );
+        // The fabric actually carried traffic.
+        assert!(
+            serial.stats.sum_suffix(".routed") > 0.0,
+            "{ic:?}: no routed messages?"
+        );
+    }
+}
+
+#[test]
+fn longer_fabrics_cost_more_simulated_time() {
+    // Sanity of the hop-latency model: the same workload on the same
+    // cores takes at least as long on a ring (multi-hop) as on the star
+    // (single central hop).
+    let mut times = Vec::new();
+    for ic in [Interconnect::Star, Interconnect::Ring] {
+        let spec = SystemSpec {
+            cores: 4,
+            interconnect: ic,
+            ..SystemSpec::default()
+        }
+        .named("hop", "hop cost gate");
+        let mut cfg = matrix_cfg(&spec, QuantumPolicy::Fixed);
+        cfg.mode = Mode::Serial;
+        let w = make_workload(&cfg).unwrap();
+        times.push(run_with_workload(&cfg, &w).unwrap().sim_ticks);
+    }
+    assert!(
+        times[1] > times[0],
+        "ring ({}) must be slower than star ({}) — hop latency not \
+         routed through the fabric?",
+        times[1],
+        times[0]
+    );
+}
+
+// ---- the preset bit-identity matrix -----------------------------------
+
+#[test]
+fn preset_matrix_threaded_is_bit_identical_to_virtual() {
+    // Acceptance gate: `run --platform ring-16` / `mesh-64` (and the
+    // star) produce bit-identical stats between the threaded and virtual
+    // kernels across thread counts, policies and stealing, under the
+    // default border-ordered handoff.
+    let presets = ["fig4-2", "ring-16", "mesh-64"];
+    for name in presets {
+        let spec = platforms::preset(name).unwrap();
+        for policy in
+            [QuantumPolicy::Fixed, QuantumPolicy::Hybrid { max_leap: 4 }]
+        {
+            let vcfg = matrix_cfg(&spec, policy);
+            let w = make_workload(&vcfg).unwrap();
+            let reference = run_with_workload(&vcfg, &w).unwrap();
+            assert!(reference.events > 0, "{name}: empty run");
+            assert!(
+                reference.pdes.inbox_staged > 0,
+                "{name}: sharing app must exercise the handoff"
+            );
+            for steal in [false, true] {
+                for threads in [1usize, 2, 8] {
+                    let mut cfg = vcfg.clone();
+                    cfg.mode = Mode::Parallel;
+                    cfg.steal = steal;
+                    cfg.threads = threads;
+                    let r = run_with_workload(&cfg, &w).unwrap();
+                    let what = format!(
+                        "{name}/{policy:?}/steal={steal}/threads={threads}"
+                    );
+                    assert_bit_identical(&reference, &r, &what);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn legacy_flags_and_spec_path_build_identical_star_runs() {
+    // `run` with legacy flags (no --platform) must reproduce the
+    // spec-built star bit-for-bit: the flag surface is a thin conversion
+    // into SystemSpec, and the star elaboration preserves the historic
+    // component order and ids.
+    let spec = platforms::preset("fig4-8").unwrap();
+    let mut legacy = RunConfig {
+        app: "canneal".into(),
+        ops_per_core: 512,
+        mode: Mode::Virtual,
+        quantum: 8 * NS,
+        ..RunConfig::default()
+    };
+    legacy.system.cores = 8; // the legacy flag path
+
+    let mut via_spec = RunConfig::for_spec(&spec);
+    via_spec.app = legacy.app.clone();
+    via_spec.ops_per_core = legacy.ops_per_core;
+    via_spec.mode = legacy.mode;
+    via_spec.quantum = legacy.quantum;
+
+    assert_eq!(legacy.system, via_spec.system, "thin conversion drifted");
+    let w = make_workload(&legacy).unwrap();
+    let a = run_with_workload(&legacy, &w).unwrap();
+    let b = run_with_workload(&via_spec, &w).unwrap();
+    assert_bit_identical(&a, &b, "legacy flags vs fig4-8 spec");
+}
+
+#[test]
+fn invalid_platform_surfaces_as_error_not_panic() {
+    // Poke a broken platform (ragged mesh) straight into the legacy
+    // config surface, bypassing spec validation-by-construction; the
+    // harness must still refuse with the actionable message.
+    let mut cfg = RunConfig {
+        app: "synthetic".into(),
+        ops_per_core: 16,
+        ..RunConfig::default()
+    };
+    cfg.system.cores = 5;
+    cfg.system.interconnect = Interconnect::Mesh { cols: 4 };
+    let w = make_workload(&cfg).unwrap();
+    let err = run_with_workload(&cfg, &w).unwrap_err();
+    assert!(
+        err.to_string().contains("multiple of mesh_cols"),
+        "expected the actionable validation error, got: {err}"
+    );
+}
