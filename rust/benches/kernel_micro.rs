@@ -22,6 +22,7 @@ use parti_sim::ruby::new_inbox;
 use parti_sim::ruby::{MsgKind, RubyMsg};
 use parti_sim::sched::{
     InboxOrder, Mailbox, QuantumPolicy, QueueKind, SchedQueue, Scheduler,
+    XbarArb,
 };
 use parti_sim::sim::event::{prio, Event, EventKind};
 use parti_sim::sim::ids::CompId;
@@ -401,6 +402,60 @@ fn main() {
         inbox_rows = inbox_rows.obj(mode_name, pair);
     }
     json = json.obj("inbox_order_16_domain", inbox_rows);
+
+    // Crossbar arbitration: the paper's mid-window try_lock (host) vs the
+    // deterministic border-staged grants (border), on an IO-heavy sharing
+    // app (one crossbar access per 20 ops). Virtual kernel: the pure
+    // cost/benefit of staging + canonical border grants; threaded
+    // 2-thread: the end-to-end price of unconditional IO determinism.
+    let mut xbar_rows = JsonObj::new();
+    for (mode_name, mode, threads) in [
+        ("virtual", parti_sim::config::Mode::Virtual, 0usize),
+        ("threaded_2t", parti_sim::config::Mode::Parallel, 2),
+    ] {
+        let mut pair = JsonObj::new();
+        for (name, arb) in [("host", XbarArb::Host), ("border", XbarArb::Border)]
+        {
+            let mut cfg = RunConfig {
+                app: "canneal".to_string(),
+                ops_per_core: 2048,
+                mode,
+                threads,
+                xbar_arb: arb,
+                ..Default::default()
+            };
+            cfg.system.cores = 15; // + shared domain = 16
+            cfg.system.io_milli = 50;
+            let w = make_workload(&cfg).expect("workload");
+            let mut last = None;
+            let (m, lo, hi) = measure(5, || {
+                last = Some(run_with_workload(&cfg, &w).unwrap());
+            });
+            let r = last.expect("measured at least once");
+            bench_util::report(
+                &format!("xbar-arb[{mode_name}/{name}] 16-domain io e2e"),
+                m,
+                lo,
+                hi,
+            );
+            println!(
+                "  {mode_name}/{name}: io_reqs={:.0} staged={} deferred={}",
+                r.stats.sum_suffix(".io_reqs"),
+                r.pdes.xbar_staged,
+                r.pdes.xbar_deferred_grants
+            );
+            pair = pair.obj(
+                name,
+                JsonObj::new()
+                    .u64("median_ns", m as u64)
+                    .u64("io_reqs", r.stats.sum_suffix(".io_reqs") as u64)
+                    .u64("xbar_staged", r.pdes.xbar_staged)
+                    .u64("xbar_deferred_grants", r.pdes.xbar_deferred_grants),
+            );
+        }
+        xbar_rows = xbar_rows.obj(mode_name, pair);
+    }
+    json = json.obj("xbar_arb_16_domain", xbar_rows);
 
     // End-to-end serial kernel throughput (the L3 §Perf headline).
     let mut cfg = RunConfig {

@@ -7,7 +7,7 @@
 //! New code (and anything naming a topology) should go through the spec.
 
 use crate::cpu::CpuModel;
-use crate::sched::{InboxOrder, QuantumPolicy, QueueKind, RunPolicy};
+use crate::sched::{InboxOrder, QuantumPolicy, QueueKind, RunPolicy, XbarArb};
 use crate::sim::time::{Tick, NS};
 use crate::spec::{Interconnect, SystemSpec};
 
@@ -146,6 +146,10 @@ pub struct RunConfig {
     /// deterministic border-ordered handoff (default) or the paper's
     /// host-order consumption (see [`InboxOrder`]).
     pub inbox_order: InboxOrder,
+    /// IO-crossbar layer arbitration (`--xbar-arb`): deterministic
+    /// border-staged grants (default) or the paper's mid-window
+    /// `try_lock` occupancy (see [`XbarArb`] and docs/XBAR.md).
+    pub xbar_arb: XbarArb,
 }
 
 impl Default for RunConfig {
@@ -165,6 +169,7 @@ impl Default for RunConfig {
             steal: false,
             threads: 0,
             inbox_order: InboxOrder::default(),
+            xbar_arb: XbarArb::default(),
         }
     }
 }
@@ -177,6 +182,7 @@ impl RunConfig {
             steal: self.steal,
             threads: self.threads,
             inbox_order: self.inbox_order,
+            xbar_arb: self.xbar_arb,
         }
     }
 

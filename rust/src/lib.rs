@@ -9,7 +9,9 @@
 //!   memory subsystem (CHI-lite protocol, message buffers, routers,
 //!   throttles), an IO crossbar, a DRAM model — plus the paper's
 //!   contribution: quantum-based PDES with per-core time domains,
-//!   thread-safe Ruby message passing and thread-safe crossbar layers.
+//!   thread-safe Ruby message passing and thread-safe crossbar layers —
+//!   both made deterministic by border-staged protocols (the inbox
+//!   handoff and the crossbar layer arbitration, docs/XBAR.md).
 //! * **L2/L1 (python/, build-time only)** — JAX workload-trace synthesis
 //!   with Pallas kernels, AOT-lowered to HLO and executed from Rust via
 //!   PJRT ([`runtime`]).

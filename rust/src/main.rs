@@ -21,7 +21,7 @@ use parti_sim::harness::figures::{
 };
 use parti_sim::harness::{compare_modes, run_once, tables};
 use parti_sim::pdes::HostModel;
-use parti_sim::sched::{InboxOrder, QuantumPolicy, QueueKind};
+use parti_sim::sched::{InboxOrder, QuantumPolicy, QueueKind, XbarArb};
 use parti_sim::sim::time::NS;
 use parti_sim::spec::{platforms, SystemSpec};
 use parti_sim::stats::Summary;
@@ -70,6 +70,10 @@ RUN/COMPARE/FFWD FLAGS
   --inbox-order O   border|host Ruby message handoff:
                     border = deterministic border-ordered
                     merge, host = paper's racy order   [border]
+  --xbar-arb A      border|host IO-crossbar layer
+                    arbitration: border = deterministic
+                    border-staged grants, host = paper's
+                    mid-window try_lock (§4.3)         [border]
   --ops N           trace ops per core                [4096]
   --seed N                                            [42]
   --host-cores N    modeled host cores (virtual mode) [64]
@@ -134,6 +138,9 @@ fn run_config(a: &Args) -> Result<RunConfig> {
     let order = a.get_str("inbox-order", "border");
     cfg.inbox_order = InboxOrder::parse(&order)
         .ok_or_else(|| anyhow::anyhow!("bad --inbox-order {order}"))?;
+    let arb = a.get_str("xbar-arb", "border");
+    cfg.xbar_arb = XbarArb::parse(&arb)
+        .ok_or_else(|| anyhow::anyhow!("bad --xbar-arb {arb}"))?;
     cfg.host_cores = a.get_usize("host-cores", 64);
     Ok(cfg)
 }
@@ -322,6 +329,10 @@ fn print_summary(cfg: &RunConfig, s: &Summary) {
         s.inbox_staged,
         s.inbox_reordered,
         s.inbox_merge_ns_per_window
+    );
+    println!(
+        "  xbar: arb={:?} staged={} deferred_grants={}",
+        cfg.xbar_arb, s.xbar_staged, s.xbar_deferred_grants
     );
     println!(
         "  miss rates: l1i={:.4} l1d={:.4} l2={:.4} l3={:.4}",

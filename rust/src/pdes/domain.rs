@@ -7,7 +7,7 @@
 use std::sync::atomic::Ordering::Relaxed;
 use std::time::Instant;
 
-use crate::sched::{InboxOrder, QueueKind, SchedQueue, Scheduler};
+use crate::sched::{QueueKind, SchedQueue, Scheduler};
 use crate::sim::component::{Component, Ctx};
 use crate::sim::ids::{CompId, DomainId};
 use crate::sim::shared::SharedState;
@@ -81,20 +81,25 @@ impl Domain {
     /// inside the quiescent span of the border protocol (every producer
     /// parked at the freeze barrier):
     ///
-    /// 1. Under the border-ordered handoff (`--inbox-order border`), merge
-    ///    every owned consumer's staged cross-domain Ruby deliveries in
-    ///    canonical order and arm their wakeups
-    ///    ([`Component::border_merge`]).
+    /// 1. Under the border-staged protocols (`--inbox-order border` /
+    ///    `--xbar-arb border`), run every owned component's
+    ///    [`Component::border_merge`] hook: Ruby consumers merge their
+    ///    staged cross-domain deliveries in canonical order and arm their
+    ///    wakeups; the crossbar arbiter grants the window's staged layer
+    ///    requests (each hook gates itself on its own policy knob, so
+    ///    e.g. `--inbox-order host --xbar-arb border` arbitrates layers
+    ///    without staging messages).
     /// 2. Drain the cross-domain event mailbox ([`Self::drain_injections`]).
     ///
     /// The fixed order (merges in component order, then the sorted mailbox
     /// drain) makes the queue's sequence-number assignment — and therefore
     /// same-`(tick, prio)` tie-breaking — identical across kernels and
     /// thread counts. Callers must publish this domain's `next_tick` only
-    /// *after* `border_sync`, so merged wakeups count towards the horizon
-    /// and staged traffic is never dropped by a quiescent verdict.
+    /// *after* `border_sync`, so merged wakeups and granted deliveries
+    /// count towards the horizon and staged traffic is never dropped by a
+    /// quiescent verdict.
     pub fn border_sync(&mut self, shared: &SharedState, border: Tick) {
-        if shared.policy.inbox_order == InboxOrder::Border {
+        if shared.policy.border_staging() {
             let t0 = Instant::now();
             let Domain { eq, comps, comp_ids, id, .. } = self;
             for (local, comp) in comps.iter_mut().enumerate() {

@@ -46,9 +46,16 @@ pub struct PdesSnapshot {
     /// Staged deliveries the canonical merge moved away from their host
     /// staging position (host-timing dependent on the threaded kernel).
     pub inbox_reordered: u64,
-    /// Host nanoseconds spent in border inbox merges (host-timing
-    /// dependent, like `host_ns`).
+    /// Host nanoseconds spent in the border-staged merge hooks — inbox
+    /// merges plus the crossbar grant pass under `--xbar-arb border`
+    /// (host-timing dependent, like `host_ns`).
     pub inbox_merge_ns: u64,
+    /// IO-crossbar layer requests staged by the border-staged arbitration
+    /// (`--xbar-arb border`; deterministic).
+    pub xbar_staged: u64,
+    /// Border grant decisions deferred on a still-occupied layer
+    /// (deterministic; a request waiting k borders counts k times).
+    pub xbar_deferred_grants: u64,
 }
 
 impl PdesSnapshot {
@@ -64,11 +71,14 @@ impl PdesSnapshot {
             inbox_staged: s.pdes.inbox_staged.load(Relaxed),
             inbox_reordered: s.pdes.inbox_reordered.load(Relaxed),
             inbox_merge_ns: s.pdes.inbox_merge_ns.load(Relaxed),
+            xbar_staged: s.pdes.xbar_staged.load(Relaxed),
+            xbar_deferred_grants: s.pdes.xbar_deferred_grants.load(Relaxed),
         }
     }
 
-    /// Mean host cost of one border inbox merge, in nanoseconds per
-    /// barrier (the "merge cost per window" figure of DESIGN.md §6).
+    /// Mean host cost of one border's staged-merge hooks (inbox merges
+    /// + crossbar grants), in nanoseconds per barrier (the "merge cost
+    /// per window" figure of DESIGN.md §6).
     pub fn merge_ns_per_window(&self) -> f64 {
         if self.barriers == 0 {
             0.0

@@ -380,7 +380,15 @@ pub fn new_inbox(buffer_capacities: &[usize]) -> SharedInbox {
 /// staged cross-domain deliveries in canonical order and schedule the
 /// consumer wakeup the merge calls for. `ctx.now()` must be the border
 /// tick (the closed window's end).
+///
+/// No-op under `--inbox-order host`: the border hooks also run when only
+/// the crossbar's border-staged arbitration is active (`--xbar-arb
+/// border`), and in that combination the host-order inbox path must stay
+/// untouched — nothing is staged and the capacity snapshots are unused.
 pub fn merge_staged_for_border(inbox: &SharedInbox, ctx: &mut Ctx) {
+    if ctx.shared().policy.inbox_order != InboxOrder::Border {
+        return;
+    }
     let wake = {
         let mut ib = inbox.lock().unwrap();
         ib.merge_staged(ctx.now(), &ctx.shared().pdes)

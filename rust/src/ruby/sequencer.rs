@@ -98,13 +98,42 @@ impl Sequencer {
 
     fn issue_io(&mut self, pkt: Packet, ctx: &mut Ctx) {
         self.io_reqs += 1;
+        // The device answers to `requester`; reroute it through this
+        // sequencer so the response releases the layer before completing
+        // back to the CPU (`Sequencer::complete`).
+        let mut fwd = pkt;
+        fwd.requester = ctx.self_id();
+        if ctx.xbar_border() {
+            // Border-staged arbitration (`--xbar-arb border`, the
+            // default): stage the layer request; the shared-domain
+            // arbiter grants it at the quantum border in canonical
+            // `(request_tick, sender_domain, seq)` order and delivers
+            // the packet to the device itself (docs/XBAR.md). Busy
+            // layers keep the request queued in the crossbar — no retry
+            // events, no mid-window reads of shared layer state.
+            self.io_outstanding.insert(pkt.id, pkt);
+            let staged = self.xbar.stage_occupy(
+                ctx.domain().0,
+                ctx.self_id(),
+                ctx.now(),
+                fwd,
+                &ctx.shared().pdes,
+            );
+            if !staged {
+                panic!(
+                    "{}: IO address {:#x} matches no crossbar target",
+                    self.name, pkt.addr
+                );
+            }
+            return;
+        }
         match self.xbar.try_occupy(pkt.addr, ctx.self_id()) {
             Occupy::Granted { target } => {
                 self.io_outstanding.insert(pkt.id, pkt);
                 ctx.schedule(
                     self.xbar.latency,
                     target,
-                    EventKind::MemReq { pkt },
+                    EventKind::MemReq { pkt: fwd },
                 );
             }
             Occupy::Busy => {
@@ -175,6 +204,10 @@ impl Component for Sequencer {
                 self.scratch = ready;
             }
             // IO target responded: release the layer, wake one waiter.
+            // Under the border-staged arbitration nothing waits in the
+            // layer (pending requests queue in the crossbar and are
+            // granted at the next border), so the release returns no
+            // waiter and no retry event is ever scheduled.
             EventKind::MemResp { pkt } => {
                 let orig = self
                     .io_outstanding

@@ -6,8 +6,9 @@
 //! `cpu_i, seq_i, l1i_i, l1d_i, l2_i, router r_i, throttle t_i`.
 //! The shared domain (`N` when parallel) holds the interconnect fabric —
 //! its shape is the spec's [`Interconnect`] — plus the HN-F, the DRAM
-//! channel controllers, UART + timer behind the IO crossbar, and the
-//! per-core central throttles `tc_i`:
+//! channel controllers, UART + timer behind the IO crossbar, the per-core
+//! central throttles `tc_i`, and the crossbar's border arbiter
+//! (docs/XBAR.md):
 //!
 //! * **Star** (Fig. 4): one central station `rc`; `t_i → rc`, `rc → tc_i`,
 //!   `rc ↔ HN-F`. Exactly the legacy hard-wired system, bit-for-bit.
@@ -80,12 +81,16 @@ pub struct Layout {
     uart_id: CompId,
     timer_id: CompId,
     tc_ids: Vec<CompId>,
+    /// The IO-crossbar border arbiter (shared domain, after the central
+    /// throttles so every pre-existing id is unchanged).
+    xbar_arb_id: CompId,
 }
 
 impl Layout {
     /// Plan the id table for `spec`: ids follow the elaboration `add`
     /// order (per-core stacks first, then the shared domain — stations,
-    /// HN-F, DRAM channels, peripherals, central throttles).
+    /// HN-F, DRAM channels, peripherals, central throttles, and the IO
+    /// crossbar's border arbiter last).
     pub fn plan(spec: &SystemSpec) -> Layout {
         let n = spec.cores;
         let mut next = 0u32;
@@ -116,6 +121,7 @@ impl Layout {
         let uart_id = id();
         let timer_id = id();
         let tc_ids = (0..n).map(|_| id()).collect();
+        let xbar_arb_id = id();
         Layout {
             cpu,
             seq,
@@ -130,6 +136,7 @@ impl Layout {
             uart_id,
             timer_id,
             tc_ids,
+            xbar_arb_id,
         }
     }
 
@@ -188,12 +195,16 @@ impl Layout {
     pub fn tc(&self, i: usize) -> CompId {
         self.tc_ids[i]
     }
+    /// The IO-crossbar border arbiter (docs/XBAR.md).
+    pub fn xbar_arb(&self) -> CompId {
+        self.xbar_arb_id
+    }
     /// Total number of components in the table.
     pub fn n_components(&self) -> usize {
         self.cpu.len() * 8
             + self.stations.len()
             + self.drams.len()
-            + 3 // hnf, uart, timer
+            + 4 // hnf, uart, timer, xbar arbiter
     }
 }
 
@@ -685,6 +696,14 @@ pub fn build_from_spec(
         debug_assert_eq!(id, lay.tc(i));
     }
 
+    // ---- IO-crossbar border arbiter (docs/XBAR.md) -------------------
+    // Lives in the shared domain — the domain of every crossbar target —
+    // so its border grants are local schedules inside the quiescent span.
+    // Inert under `--xbar-arb host` and on the serial kernel.
+    let arb = crate::xbar::XbarArbiter::new("xbar".to_string(), xbar.clone());
+    let id = b.add(shared_dom, Box::new(arb));
+    debug_assert_eq!(id, lay.xbar_arb());
+
     BuiltSystem { machine: b.finish(), xbar, layout: lay }
 }
 
@@ -772,7 +791,7 @@ mod tests {
         }
         all.extend(lay.stations.iter().copied());
         all.extend(lay.drams().iter().copied());
-        all.extend([lay.hnf(), lay.uart(), lay.timer()]);
+        all.extend([lay.hnf(), lay.uart(), lay.timer(), lay.xbar_arb()]);
         all
     }
 

@@ -17,9 +17,12 @@
 //!   quantum barrier with abort support.
 //! * [`quantum`] — [`QuantumPolicy`] and [`plan_next_window`], the
 //!   adaptive-quantum border decision (leap over provably dead windows),
-//!   plus [`RunPolicy`], the per-run policy knobs, and [`InboxOrder`],
+//!   plus [`RunPolicy`], the per-run policy knobs, [`InboxOrder`],
 //!   the cross-domain Ruby message visibility contract (the deterministic
-//!   border-ordered handoff vs the paper's host-order consumption).
+//!   border-ordered handoff vs the paper's host-order consumption), and
+//!   [`XbarArb`], the IO-crossbar layer-arbitration contract (the
+//!   deterministic border-staged grants vs the paper's mid-window
+//!   `try_lock`, docs/XBAR.md).
 //! * [`steal`] — [`ClaimList`], the per-window domain→thread claim list
 //!   that lets idle host threads adopt the windows of loaded domains with
 //!   a deterministic victim order.
@@ -46,7 +49,7 @@ pub use heap::HeapQueue;
 pub use mailbox::Mailbox;
 pub use quantum::{
     plan_next_window, InboxOrder, QuantumPolicy, RunPolicy, WindowPlan,
-    DEFAULT_MAX_LEAP,
+    XbarArb, DEFAULT_MAX_LEAP,
 };
 pub use queue::SchedQueue;
 pub use steal::ClaimList;

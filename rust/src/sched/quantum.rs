@@ -99,6 +99,46 @@ impl InboxOrder {
     }
 }
 
+/// How the IO crossbar arbitrates layer occupancy (`--xbar-arb`,
+/// docs/XBAR.md and docs/DETERMINISM.md).
+///
+/// The paper's §4.3 crossbar guards each layer with a mutex and resolves
+/// occupancy with `try_lock` *mid-window* — which initiator wins a layer
+/// depends on host thread timing, the last documented source of
+/// nondeterminism under true thread concurrency. `Border` extends the
+/// border-handoff protocol from messages to *resources*: layer requests
+/// are staged during the window and granted at the quantum border in
+/// canonical `(request_tick, sender_domain, seq)` order.
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub enum XbarArb {
+    /// The paper's behaviour: occupancy is resolved mid-window with
+    /// `try_lock` + occupy/busy on live layer state; which initiator wins
+    /// can depend on host timing. Kept selectable as the A/B lever for
+    /// divergence bisection (docs/DETERMINISM.md §4).
+    Host,
+    /// Deterministic border-staged arbitration: layer requests are staged
+    /// per sender domain during the window and granted at the quantum
+    /// border — inside the quiescent span — in canonical
+    /// `(request_tick, sender_domain, seq)` order; busy outcomes stay
+    /// queued and replay as postponed grants at later borders. Together
+    /// with [`InboxOrder::Border`] this makes the threaded kernel
+    /// bit-identical to the virtual kernel even on IO-heavy runs under
+    /// true thread concurrency.
+    #[default]
+    Border,
+}
+
+impl XbarArb {
+    /// Parse an `--xbar-arb` value (`host`, `border`).
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "host" => XbarArb::Host,
+            "border" => XbarArb::Border,
+            _ => return None,
+        })
+    }
+}
+
 /// Per-run scheduling policy knobs, carried by the shared state so both
 /// parallel kernels read the same configuration at the border.
 #[derive(Copy, Clone, Debug, Default)]
@@ -114,6 +154,19 @@ pub struct RunPolicy {
     /// Cross-domain Ruby message visibility (see [`InboxOrder`]; the
     /// default is the deterministic border-ordered handoff).
     pub inbox_order: InboxOrder,
+    /// IO-crossbar layer arbitration (see [`XbarArb`]; the default is the
+    /// deterministic border-staged grant protocol).
+    pub xbar_arb: XbarArb,
+}
+
+impl RunPolicy {
+    /// True when any border-staged protocol is active, i.e. the windowed
+    /// kernels must run the [`crate::sim::component::Component::border_merge`]
+    /// hooks inside the quiescent span of the border protocol.
+    pub fn border_staging(&self) -> bool {
+        self.inbox_order == InboxOrder::Border
+            || self.xbar_arb == XbarArb::Border
+    }
 }
 
 /// One border decision: the next `window_end` plus how many whole quanta
@@ -169,6 +222,27 @@ mod tests {
         assert_eq!(InboxOrder::parse("sorted"), None);
         assert_eq!(InboxOrder::default(), InboxOrder::Border);
         assert_eq!(RunPolicy::default().inbox_order, InboxOrder::Border);
+    }
+
+    #[test]
+    fn xbar_arb_parses_and_defaults_to_border() {
+        assert_eq!(XbarArb::parse("host"), Some(XbarArb::Host));
+        assert_eq!(XbarArb::parse("Border"), Some(XbarArb::Border));
+        assert_eq!(XbarArb::parse("staged"), None);
+        assert_eq!(XbarArb::default(), XbarArb::Border);
+        assert_eq!(RunPolicy::default().xbar_arb, XbarArb::Border);
+    }
+
+    #[test]
+    fn border_staging_reflects_either_protocol() {
+        let mut p = RunPolicy::default();
+        assert!(p.border_staging(), "both default to border");
+        p.inbox_order = InboxOrder::Host;
+        assert!(p.border_staging(), "xbar border alone keeps the hooks on");
+        p.xbar_arb = XbarArb::Host;
+        assert!(!p.border_staging(), "both host: hooks off");
+        p.inbox_order = InboxOrder::Border;
+        assert!(p.border_staging(), "inbox border alone keeps the hooks on");
     }
 
     #[test]

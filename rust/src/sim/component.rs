@@ -24,11 +24,15 @@ pub trait Component: Send {
     /// Schedule initial events. Called once before the simulation starts.
     fn init(&mut self, _ctx: &mut Ctx) {}
 
-    /// Quantum-border hook of the border-ordered inbox handoff
-    /// (`--inbox-order border`, DESIGN.md §6): merge the cross-domain
-    /// deliveries staged for this component during the closed window into
-    /// its message buffers — in canonical `(arrival, sender_domain, seq)`
-    /// order — and arm the consumer wakeup.
+    /// Quantum-border hook of the border-staged protocols: under the
+    /// border-ordered inbox handoff (`--inbox-order border`, DESIGN.md
+    /// §6) Ruby consumers merge the cross-domain deliveries staged for
+    /// them during the closed window into their message buffers — in
+    /// canonical `(arrival, sender_domain, seq)` order — and arm the
+    /// consumer wakeup; under the border-staged crossbar arbitration
+    /// (`--xbar-arb border`, docs/XBAR.md) the
+    /// [`crate::xbar::XbarArbiter`] grants the window's staged layer
+    /// requests in canonical `(request_tick, sender_domain, seq)` order.
     ///
     /// Called by the windowed kernels inside the quiescent span of the
     /// border protocol: after the freeze barrier (no producer is running)
@@ -173,6 +177,16 @@ impl<'a> Ctx<'a> {
     pub fn border_ordered(&self) -> bool {
         self.shared.policy.inbox_order
             == crate::sched::InboxOrder::Border
+            && self.shared.quantum < Tick::MAX
+    }
+
+    /// True when this run arbitrates IO-crossbar layers at quantum borders
+    /// (`--xbar-arb border`, docs/XBAR.md) on a *windowed* kernel. Like
+    /// [`Ctx::border_ordered`], the serial kernel has no quantum and its
+    /// single-threaded `try_lock` path is already deterministic, so it
+    /// always reports `false`.
+    pub fn xbar_border(&self) -> bool {
+        self.shared.policy.xbar_arb == crate::sched::XbarArb::Border
             && self.shared.quantum < Tick::MAX
     }
 

@@ -82,9 +82,19 @@ pub struct PdesStats {
     /// their host staging order — the reordering the handoff neutralised
     /// (host-timing dependent on the threaded kernel, like `steals`).
     pub inbox_reordered: AtomicU64,
-    /// Host nanoseconds spent in border inbox merges (host-timing
-    /// dependent; divide by `barriers` for the per-window merge cost).
+    /// Host nanoseconds spent in the border-staged merge hooks — the
+    /// inbox merges plus, when `--xbar-arb border`, the crossbar grant
+    /// pass (host-timing dependent; divide by `barriers` for the
+    /// per-window cost). Zero only when both staging protocols are
+    /// `host`.
     pub inbox_merge_ns: AtomicU64,
+    /// IO-crossbar layer requests staged by the border-staged arbitration
+    /// (`--xbar-arb border`; deterministic — one per IO request).
+    pub xbar_staged: AtomicU64,
+    /// Border grant decisions deferred because the layer was still
+    /// occupied (`--xbar-arb border`; deterministic — a request that
+    /// waits k borders counts k times).
+    pub xbar_deferred_grants: AtomicU64,
 }
 
 /// Bits of the canonical injector key reserved for the per-domain send

@@ -28,8 +28,13 @@ pub struct Summary {
     pub stolen_events: u64,
     pub inbox_staged: u64,
     pub inbox_reordered: u64,
-    /// Mean border-merge cost, ns per window (host-timing dependent).
+    /// Mean cost of the border-staged merge hooks (inbox merges +
+    /// crossbar grants), ns per window (host-timing dependent).
     pub inbox_merge_ns_per_window: f64,
+    /// IO-crossbar layer requests staged at borders (deterministic).
+    pub xbar_staged: u64,
+    /// Crossbar grant decisions deferred at borders (deterministic).
+    pub xbar_deferred_grants: u64,
     pub l1i_miss_rate: f64,
     pub l1d_miss_rate: f64,
     pub l2_miss_rate: f64,
@@ -75,6 +80,8 @@ impl Summary {
             inbox_staged: r.pdes.inbox_staged,
             inbox_reordered: r.pdes.inbox_reordered,
             inbox_merge_ns_per_window: r.pdes.merge_ns_per_window(),
+            xbar_staged: r.pdes.xbar_staged,
+            xbar_deferred_grants: r.pdes.xbar_deferred_grants,
             l1i_miss_rate: avg_miss_rate(r, ".l1i.miss_rate"),
             l1d_miss_rate: avg_miss_rate(r, ".l1d.miss_rate"),
             l2_miss_rate: avg_miss_rate(r, ".l2.miss_rate"),
@@ -102,6 +109,8 @@ impl Summary {
             .u64("inbox_staged", self.inbox_staged)
             .u64("inbox_reordered", self.inbox_reordered)
             .f64("inbox_merge_ns_per_window", self.inbox_merge_ns_per_window)
+            .u64("xbar_staged", self.xbar_staged)
+            .u64("xbar_deferred_grants", self.xbar_deferred_grants)
             .f64("l1i_miss_rate", self.l1i_miss_rate)
             .f64("l1d_miss_rate", self.l1d_miss_rate)
             .f64("l2_miss_rate", self.l2_miss_rate)

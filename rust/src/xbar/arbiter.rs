@@ -1,0 +1,82 @@
+//! The border arbiter component of the IO crossbar (docs/XBAR.md).
+//!
+//! Under `--xbar-arb border` the crossbar's layer grants are a *border*
+//! decision, not a mid-window race — but grants must become `MemReq`
+//! events in the targets' domain, and the quiescent span of the border
+//! protocol forbids cross-domain scheduling (each domain's mailbox may
+//! already have been drained). [`XbarArbiter`] resolves this the same way
+//! the inbox merge does: it is an ordinary [`Component`] elaborated into
+//! the *shared* domain — the domain that owns every crossbar target — so
+//! its [`Component::border_merge`] hook runs inside the quiescent span and
+//! every granted delivery is a plain local schedule.
+//!
+//! The arbiter receives no events; it exists for its border hook and for
+//! surfacing the crossbar's counters as per-component statistics.
+
+use std::sync::Arc;
+
+use crate::sim::component::{Component, Ctx};
+use crate::sim::event::{prio, EventKind};
+use crate::sim::stats::StatSink;
+
+use super::XbarState;
+
+/// Shared-domain component running the crossbar's border-staged grant
+/// protocol (one arbitration per quantum border, inside the quiescent
+/// span) and reporting the crossbar statistics.
+pub struct XbarArbiter {
+    name: String,
+    xbar: Arc<XbarState>,
+    /// Grants issued by this arbiter's border passes (deterministic under
+    /// `--xbar-arb border`).
+    granted: u64,
+}
+
+impl XbarArbiter {
+    pub fn new(name: String, xbar: Arc<XbarState>) -> Self {
+        XbarArbiter { name, xbar, granted: 0 }
+    }
+}
+
+impl Component for XbarArbiter {
+    fn handle(&mut self, kind: EventKind, _ctx: &mut Ctx) {
+        panic!("{}: unexpected event {kind:?}", self.name);
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Border-staged layer arbitration (`--xbar-arb border`): grant the
+    /// closed window's staged layer requests in canonical
+    /// `(request_tick, sender_domain, seq)` order and schedule each
+    /// granted `MemReq` locally at `max(request_tick + latency, border)`.
+    /// Runs before the shared domain publishes its post-sync `next_tick`,
+    /// so granted deliveries count towards the horizon and staged traffic
+    /// can never be dropped by a quiescent verdict.
+    fn border_merge(&mut self, ctx: &mut Ctx) {
+        if !ctx.xbar_border() {
+            return;
+        }
+        let grants =
+            self.xbar.border_grants(ctx.now(), &ctx.shared().pdes);
+        self.granted += grants.len() as u64;
+        for g in grants {
+            ctx.schedule_abs_prio(
+                g.deliver,
+                g.target,
+                EventKind::MemReq { pkt: g.pkt },
+                prio::DEFAULT,
+            );
+        }
+    }
+
+    fn stats(&self, out: &mut StatSink) {
+        out.add_u64("granted", self.granted);
+        let pending: u64 = (0..self.xbar.n_layers())
+            .map(|l| self.xbar.pending_len(l) as u64)
+            .sum();
+        out.add_u64("pending", pending);
+        self.xbar.stats(out);
+    }
+}

@@ -1,31 +1,92 @@
-//! The non-coherent IO crossbar with thread-safe layers (paper §4.3).
+//! The non-coherent IO crossbar with thread-safe layers (paper §4.3) and
+//! the deterministic border-staged layer arbitration (docs/XBAR.md).
 //!
 //! An N-to-M crossbar: each *layer* is a channel to one target that only one
 //! initiator may hold at a time. Initiators occupy the layer, talk to the
 //! target with the classic timing protocol, and release it when the response
 //! returns; rejected initiators are woken with a retry.
 //!
-//! parti adaptation: the layer state sits behind a mutex. `try_occupy` uses
-//! `try_lock` — initiators racing on *host* time (their local simulated
-//! times may differ!) are simply rejected and retry, which the paper shows
-//! is a special case of the existing occupy/retry protocol.
+//! Two arbitration contracts ([`crate::sched::XbarArb`]):
+//!
+//! * **Host** (the paper's §4.3): the layer state sits behind a mutex and
+//!   [`XbarState::try_occupy`] uses `try_lock` — initiators racing on
+//!   *host* time (their local simulated times may differ!) are simply
+//!   rejected and retry, which the paper shows is a special case of the
+//!   existing occupy/retry protocol. Which initiator wins is host-timing
+//!   dependent — the last documented nondeterminism of the threaded
+//!   kernel.
+//! * **Border** (the default): layer requests are *staged* per sender
+//!   domain during the window ([`XbarState::stage_occupy`], mirroring
+//!   `ruby::inbox::Inbox::stage`) and granted at the quantum border —
+//!   inside the quiescent span, by [`XbarState::border_grants`] via the
+//!   [`arbiter::XbarArbiter`] component — in canonical
+//!   `(request_tick, sender_domain, seq)` order. Busy outcomes stay
+//!   queued per layer and replay as postponed grants at later borders, so
+//!   occupancy, delivery ticks and every statistic are a pure function of
+//!   the simulation (docs/DETERMINISM.md).
 //!
 //! gem5's IO-XBAR is a SimObject; here the crossbar is the shared layer
 //! state plus direct event scheduling into the target's domain (semantics
 //! identical; the crossing latency is charged on the scheduled delivery).
 
+pub mod arbiter;
+
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::sync::{Arc, Mutex};
 
+use crate::proto::Packet;
 use crate::sim::ids::CompId;
+use crate::sim::shared::PdesStats;
 use crate::sim::stats::StatSink;
 use crate::sim::time::{Tick, NS};
+
+pub use arbiter::XbarArbiter;
 
 /// One layer: the channel to a single target.
 #[derive(Default)]
 struct Layer {
     occupied_by: Option<CompId>,
     waiting: Vec<CompId>,
+}
+
+/// One staged layer request of the border-staged arbitration protocol:
+/// the canonical key `(req_tick, sender_dom, seq)` plus the packet to
+/// deliver when the grant happens.
+#[derive(Clone, Copy, Debug)]
+struct StagedReq {
+    req_tick: Tick,
+    sender_dom: u32,
+    seq: u64,
+    layer: usize,
+    who: CompId,
+    pkt: Packet,
+}
+
+/// Border-staged arbitration state, all behind one mutex: the current
+/// window's stage (host append order, canonicalised at the border) and the
+/// per-layer queues of requests still waiting for a grant.
+#[derive(Default)]
+struct ArbState {
+    stage: Vec<StagedReq>,
+    /// Per-sender-domain staging sequence counters for the current window
+    /// (tiny linear-scan map `domain → next seq`, like the inbox's).
+    stage_seqs: Vec<(u32, u64)>,
+    /// Per-layer pending requests in canonical order, head = oldest.
+    pending: Vec<VecDeque<StagedReq>>,
+}
+
+/// One border grant decision: deliver `pkt` to the layer's target at tick
+/// `deliver` (the grant also marked the layer occupied by the requester).
+#[derive(Debug)]
+pub struct Grant {
+    /// The device the granted request must be delivered to.
+    pub target: CompId,
+    /// Delivery tick: `max(req_tick + latency, border)` — the same
+    /// postponement convention as the cross-domain injector path.
+    pub deliver: Tick,
+    /// The granted request's packet.
+    pub pkt: Packet,
 }
 
 /// Address range → target mapping entry.
@@ -39,6 +100,8 @@ pub struct XbarTarget {
 pub struct XbarState {
     targets: Vec<XbarTarget>,
     layers: Vec<Mutex<Layer>>,
+    /// Border-staged arbitration state (inert under `--xbar-arb host`).
+    arb: Mutex<ArbState>,
     /// Crossbar traversal latency (request and response each).
     pub latency: Tick,
     /// Retry backoff after a host-time mutex collision.
@@ -65,15 +128,26 @@ pub enum Occupy {
 impl XbarState {
     pub fn new(targets: Vec<XbarTarget>, latency: Tick, retry_delay: Tick) -> Arc<Self> {
         let layers = (0..targets.len()).map(|_| Mutex::new(Layer::default())).collect();
+        let pending = (0..targets.len()).map(|_| VecDeque::new()).collect();
         Arc::new(XbarState {
             targets,
             layers,
+            arb: Mutex::new(ArbState {
+                stage: Vec::new(),
+                stage_seqs: Vec::new(),
+                pending,
+            }),
             latency,
             retry_delay,
             occupancies: AtomicU64::new(0),
             busy_rejects: AtomicU64::new(0),
             lock_rejects: AtomicU64::new(0),
         })
+    }
+
+    /// Number of layers (= targets) in this crossbar.
+    pub fn n_layers(&self) -> usize {
+        self.targets.len()
     }
 
     /// Index of the layer serving `addr`.
@@ -113,6 +187,15 @@ impl XbarState {
 
     /// Release the layer for `addr`; returns the next waiting initiator (to
     /// be sent a retry event), if any.
+    ///
+    /// Under the border-staged arbitration nothing ever enters the
+    /// host-mode wait list, so the release only clears the occupancy
+    /// (always `None`); the freed layer is re-granted to the head of the
+    /// canonical pending queue at the *next* border
+    /// ([`XbarState::border_grants`]). A mid-window release is safe under
+    /// true concurrency because border mode never reads layer state
+    /// mid-window — only the holder's own thread writes it, and the
+    /// arbiter reads it strictly after the freeze barrier.
     pub fn release(&self, addr: u64, who: CompId) -> Option<CompId> {
         let idx = self.layer_of(addr)?;
         let mut layer = self.layers[idx].lock().unwrap();
@@ -123,6 +206,126 @@ impl XbarState {
         } else {
             Some(layer.waiting.remove(0))
         }
+    }
+
+    /// Border-staged arbitration (`--xbar-arb border`): stage a layer
+    /// request for `pkt.addr` on behalf of `who` (domain `sender_dom`) at
+    /// simulated time `req_tick`, to be arbitrated at the next quantum
+    /// border in canonical `(req_tick, sender_dom, seq)` order.
+    ///
+    /// `seq` is this sender domain's program order within the window —
+    /// well-defined under work stealing because a window claim hands each
+    /// domain to exactly one thread. Mid-window this touches *only* the
+    /// staging state, never the layers, so nothing an arbitration decision
+    /// depends on is written in host-timing order (docs/XBAR.md).
+    ///
+    /// Returns `false` (staging nothing) when `pkt.addr` maps to no
+    /// target, mirroring [`Occupy::NoTarget`].
+    #[must_use]
+    pub fn stage_occupy(
+        &self,
+        sender_dom: u32,
+        who: CompId,
+        req_tick: Tick,
+        pkt: Packet,
+        stats: &PdesStats,
+    ) -> bool {
+        let Some(layer) = self.layer_of(pkt.addr) else {
+            return false;
+        };
+        let mut arb = self.arb.lock().unwrap();
+        let seq = match arb
+            .stage_seqs
+            .iter_mut()
+            .find(|(d, _)| *d == sender_dom)
+        {
+            Some((_, next)) => {
+                let s = *next;
+                *next += 1;
+                s
+            }
+            None => {
+                arb.stage_seqs.push((sender_dom, 1));
+                0
+            }
+        };
+        arb.stage.push(StagedReq { req_tick, sender_dom, seq, layer, who, pkt });
+        stats.xbar_staged.fetch_add(1, Relaxed);
+        true
+    }
+
+    /// Layer requests currently staged for the next border arbitration.
+    pub fn staged_len(&self) -> usize {
+        self.arb.lock().unwrap().stage.len()
+    }
+
+    /// Requests pending a grant on `layer` (staged at earlier borders,
+    /// still waiting for the layer to free up).
+    pub fn pending_len(&self, layer: usize) -> usize {
+        self.arb.lock().unwrap().pending[layer].len()
+    }
+
+    /// The border arbitration (the heart of `--xbar-arb border`): sort the
+    /// window's staged requests into canonical
+    /// `(req_tick, sender_dom, seq)` order, append them to the per-layer
+    /// pending queues, and grant each *free* layer to the head of its
+    /// queue — marking the layer occupied and returning the grant so the
+    /// caller (the [`XbarArbiter`] component, which lives in the same
+    /// domain as every crossbar target) can schedule the `MemReq`
+    /// delivery at `max(req_tick + latency, border)`. Occupied layers
+    /// defer their whole queue to a later border
+    /// (`PdesStats::xbar_deferred_grants`); deliveries clamped to the
+    /// border are accounted as postponement (`postponed` / `tpp_sum`),
+    /// exactly like the inbox merge.
+    ///
+    /// Must only be called at a quantum border inside the quiescent span
+    /// (every producer parked at the freeze barrier), once per border: the
+    /// stage content is frozen and every release of the closed window has
+    /// happened, so the outcome is a pure function of the simulation.
+    pub fn border_grants(&self, border: Tick, stats: &PdesStats) -> Vec<Grant> {
+        let mut arb = self.arb.lock().unwrap();
+        let ArbState { stage, stage_seqs, pending } = &mut *arb;
+        if !stage.is_empty() {
+            let mut staged = std::mem::take(stage);
+            stage_seqs.clear();
+            // Unstable sort is deterministic here: the key is unique
+            // (per-domain seqs never repeat within a window).
+            staged.sort_unstable_by_key(|s| (s.req_tick, s.sender_dom, s.seq));
+            for s in staged {
+                pending[s.layer].push_back(s);
+            }
+        }
+        let mut grants = Vec::new();
+        let mut deferred = 0u64;
+        for (li, queue) in pending.iter_mut().enumerate() {
+            if queue.is_empty() {
+                continue;
+            }
+            let mut layer = self.layers[li].lock().unwrap();
+            if layer.occupied_by.is_some() {
+                deferred += queue.len() as u64;
+                continue;
+            }
+            let s = queue.pop_front().expect("checked non-empty");
+            layer.occupied_by = Some(s.who);
+            self.occupancies.fetch_add(1, Relaxed);
+            // One grant per layer per border: the rest of the queue waits
+            // for the release (and the next border).
+            deferred += queue.len() as u64;
+            let arrive = s.req_tick + self.latency;
+            let deliver = arrive.max(border);
+            if deliver > arrive {
+                stats.postponed.fetch_add(1, Relaxed);
+                stats.tpp_sum.fetch_add(deliver - arrive, Relaxed);
+            }
+            grants.push(Grant {
+                target: self.targets[s.layer].comp,
+                deliver,
+                pkt: s.pkt,
+            });
+        }
+        stats.xbar_deferred_grants.fetch_add(deferred, Relaxed);
+        grants
     }
 
     pub fn stats(&self, out: &mut StatSink) {
@@ -205,5 +408,201 @@ mod tests {
         assert_eq!(x.release(IO_BASE, CompId(1)), Some(CompId(2)));
         assert_eq!(x.try_occupy(IO_BASE, CompId(2)), Occupy::Granted { target: CompId(10) });
         assert_eq!(x.release(IO_BASE, CompId(2)), None, "no stale waiter entry");
+    }
+
+    // ---- border-staged arbitration ----------------------------------
+
+    use crate::proto::Cmd;
+
+    /// Two-target crossbar with tick-granular latencies (latency 5,
+    /// retry 1) so border arithmetic is readable in the tests below.
+    fn xbar2b() -> Arc<XbarState> {
+        XbarState::new(
+            vec![
+                XbarTarget { base: IO_BASE, size: IO_PAGE, comp: CompId(10) },
+                XbarTarget {
+                    base: IO_BASE + IO_PAGE,
+                    size: IO_PAGE,
+                    comp: CompId(11),
+                },
+            ],
+            5,
+            1,
+        )
+    }
+
+    fn pkt(addr: u64, id: u64, requester: u32) -> Packet {
+        Packet::request(id, Cmd::ReadReq, addr, 64, 0, CompId(requester), 0, 0)
+    }
+
+    fn stage(
+        x: &XbarState,
+        dom: u32,
+        who: u32,
+        tick: Tick,
+        id: u64,
+        stats: &PdesStats,
+    ) {
+        assert!(x.stage_occupy(
+            dom,
+            CompId(who),
+            tick,
+            pkt(IO_BASE, id, who),
+            stats
+        ));
+    }
+
+    #[test]
+    fn staging_is_invisible_until_the_border() {
+        let stats = PdesStats::default();
+        let x = xbar2b();
+        stage(&x, 1, 1, 10, 0xa, &stats);
+        assert_eq!(x.staged_len(), 1);
+        assert_eq!(stats.xbar_staged.load(Relaxed), 1);
+        // No layer state was touched mid-window: a host-mode probe still
+        // sees the layer free.
+        assert!(matches!(
+            x.try_occupy(IO_BASE, CompId(9)),
+            Occupy::Granted { .. }
+        ));
+        assert_eq!(x.release(IO_BASE, CompId(9)), None);
+        let grants = x.border_grants(16, &stats);
+        assert_eq!(grants.len(), 1);
+        assert_eq!(x.staged_len(), 0);
+        assert_eq!(grants[0].target, CompId(10));
+        assert_eq!(grants[0].pkt.id, 0xa);
+    }
+
+    #[test]
+    fn same_tick_grants_tie_break_on_sender_domain_then_seq() {
+        // Maximally skewed host append order: domain 2's whole window is
+        // staged before domain 1's, and domain 2's own requests arrive
+        // out of tick order. The grant order must come out canonical —
+        // the reordered-grant regression mirroring
+        // tests/inbox_order.rs::skewed_host_order_shows_nonzero_reordered_counter.
+        let stats = PdesStats::default();
+        let x = xbar2b();
+        stage(&x, 2, 2, 30, 0xa, &stats);
+        stage(&x, 2, 2, 10, 0xb, &stats);
+        stage(&x, 1, 1, 10, 0xc, &stats);
+        stage(&x, 1, 1, 30, 0xd, &stats);
+        // One layer serves one transaction at a time: drive four borders
+        // with a release in each window and record the grant order.
+        let mut order = Vec::new();
+        let mut border = 40;
+        for _ in 0..4 {
+            let grants = x.border_grants(border, &stats);
+            assert_eq!(grants.len(), 1, "single layer grants one per border");
+            order.push(grants[0].pkt.id);
+            assert_eq!(
+                grants[0].deliver, border,
+                "in-window requests deliver at the border"
+            );
+            x.release(IO_BASE, CompId(grants[0].pkt.requester.0));
+            border += 16;
+        }
+        assert_eq!(
+            order,
+            vec![0xc, 0xb, 0xd, 0xa],
+            "(10,d1) < (10,d2) < (30,d1) < (30,d2)"
+        );
+        assert_eq!(x.border_grants(border, &stats).len(), 0, "drained");
+    }
+
+    #[test]
+    fn occupied_layer_defers_to_a_later_border() {
+        let stats = PdesStats::default();
+        let x = xbar2b();
+        stage(&x, 1, 1, 5, 1, &stats);
+        let g = x.border_grants(16, &stats);
+        assert_eq!(g.len(), 1);
+        assert_eq!(stats.xbar_deferred_grants.load(Relaxed), 0);
+        // The layer is occupied for the whole next window: a request
+        // staged meanwhile is deferred, not granted.
+        stage(&x, 2, 2, 20, 2, &stats);
+        assert!(x.border_grants(32, &stats).is_empty());
+        assert_eq!(x.pending_len(0), 1);
+        assert_eq!(stats.xbar_deferred_grants.load(Relaxed), 1);
+        // Release mid-window; the *next* border grants — never mid-window
+        // (the occupancy snapshot the grant reads is the border's).
+        x.release(IO_BASE, CompId(1));
+        let g = x.border_grants(48, &stats);
+        assert_eq!(g.len(), 1);
+        assert_eq!(g[0].pkt.id, 2);
+        assert_eq!(
+            g[0].deliver, 48,
+            "busy retry replays as a border-postponed delivery"
+        );
+        assert_eq!(x.pending_len(0), 0);
+    }
+
+    #[test]
+    fn grant_postponement_is_accounted_like_the_inbox_merge() {
+        let stats = PdesStats::default();
+        let x = xbar2b();
+        // Arrival (req_tick + latency = 10 + 5) before the border 32:
+        // postponed, t_pp = 17.
+        stage(&x, 1, 1, 10, 1, &stats);
+        let g = x.border_grants(32, &stats);
+        assert_eq!(g[0].deliver, 32);
+        assert_eq!(stats.postponed.load(Relaxed), 1);
+        assert_eq!(stats.tpp_sum.load(Relaxed), 17);
+        x.release(IO_BASE, CompId(1));
+        // Arrival exactly on the border: no postponement counted.
+        stage(&x, 1, 1, 43, 2, &stats);
+        let g = x.border_grants(48, &stats);
+        assert_eq!(g[0].deliver, 48);
+        assert_eq!(stats.postponed.load(Relaxed), 1, "48 == arrival: exact");
+    }
+
+    #[test]
+    fn disjoint_layers_grant_independently_at_one_border() {
+        let stats = PdesStats::default();
+        let x = xbar2b();
+        assert!(x.stage_occupy(
+            1,
+            CompId(1),
+            10,
+            pkt(IO_BASE, 1, 1),
+            &stats
+        ));
+        assert!(x.stage_occupy(
+            2,
+            CompId(2),
+            10,
+            pkt(IO_BASE + IO_PAGE, 2, 2),
+            &stats
+        ));
+        let g = x.border_grants(16, &stats);
+        assert_eq!(g.len(), 2, "independent layers both grant");
+        let targets: Vec<CompId> = g.iter().map(|g| g.target).collect();
+        assert!(targets.contains(&CompId(10)) && targets.contains(&CompId(11)));
+    }
+
+    #[test]
+    fn stage_rejects_unmapped_addresses() {
+        let stats = PdesStats::default();
+        let x = xbar2b();
+        assert!(!x.stage_occupy(1, CompId(1), 0, pkt(0x1234, 1, 1), &stats));
+        assert_eq!(x.staged_len(), 0);
+        assert_eq!(stats.xbar_staged.load(Relaxed), 0);
+    }
+
+    #[test]
+    fn program_order_within_one_domain_is_preserved() {
+        let stats = PdesStats::default();
+        let x = xbar2b();
+        for id in 0..4u64 {
+            stage(&x, 3, 3, 20, id, &stats);
+        }
+        let mut order = Vec::new();
+        let mut border = 32;
+        for _ in 0..4 {
+            let g = x.border_grants(border, &stats);
+            order.push(g[0].pkt.id);
+            x.release(IO_BASE, CompId(3));
+            border += 16;
+        }
+        assert_eq!(order, vec![0, 1, 2, 3], "seq preserves program order");
     }
 }

@@ -20,7 +20,7 @@
 use parti_sim::config::{Mode, RunConfig};
 use parti_sim::harness::{make_workload, run_with_workload};
 use parti_sim::pdes::RunResult;
-use parti_sim::sched::{InboxOrder, QuantumPolicy};
+use parti_sim::sched::{InboxOrder, QuantumPolicy, XbarArb};
 use parti_sim::sim::time::NS;
 use parti_sim::stats::compare;
 
@@ -149,10 +149,11 @@ fn io_crossbar_runs_are_bit_identical_on_deterministic_executors() {
     // push order). With the canonical `(sender_domain, send order)` key
     // the drain is total, extending bit-exactness to IO-heavy runs on
     // every deterministic executor order: the virtual kernel and the
-    // threaded kernel with a single statically-bound thread. (True
-    // thread concurrency additionally races on the crossbar layer mutex
-    // itself — the paper's §4.3 concession, documented in
-    // docs/DETERMINISM.md — so it is deliberately out of scope here.)
+    // threaded kernel with a single statically-bound thread. (The former
+    // §4.3 concession — the crossbar layer mutex racing under *true*
+    // thread concurrency — is closed by the border-staged arbitration,
+    // `--xbar-arb border`; the full threads × steal × preset matrix is
+    // gated in tests/xbar_arb.rs and docs/XBAR.md tells the story.)
     for policy in POLICIES {
         let mut vcfg = base_cfg(InboxOrder::Border, policy);
         vcfg.system.io_milli = 50;
@@ -181,10 +182,12 @@ fn io_crossbar_runs_are_bit_identical_on_deterministic_executors() {
 
 #[test]
 fn host_order_stays_functional_and_stages_nothing() {
-    // `--inbox-order host` is the paper's original consumption contract:
-    // still functionally correct (checksums, committed ops), with the
-    // staging machinery completely inert.
+    // `--inbox-order host --xbar-arb host` is the paper's original
+    // contract: still functionally correct (checksums, committed ops),
+    // with both border-staging machineries completely inert — no stages,
+    // no border-merge hooks, no merge time.
     let mut scfg = base_cfg(InboxOrder::Host, QuantumPolicy::Fixed);
+    scfg.xbar_arb = XbarArb::Host;
     scfg.app = "synthetic".into(); // race-free: checksums must match
     scfg.ops_per_core = 512;
     scfg.mode = Mode::Serial;
@@ -202,6 +205,8 @@ fn host_order_stays_functional_and_stages_nothing() {
     assert_eq!(par.pdes.inbox_staged, 0, "host order must not stage");
     assert_eq!(par.pdes.inbox_reordered, 0);
     assert_eq!(par.pdes.inbox_merge_ns, 0);
+    assert_eq!(par.pdes.xbar_staged, 0, "host arb must not stage");
+    assert_eq!(par.pdes.xbar_deferred_grants, 0);
 }
 
 #[test]

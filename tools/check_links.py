@@ -6,13 +6,29 @@ on disk (the build environment has no network, so http(s) links are only
 syntax-checked, not fetched). Usage:
 
     python3 tools/check_links.py README.md DESIGN.md ...
+    python3 tools/check_links.py          # checks DEFAULT_FILES
 
+With no arguments the checker walks DEFAULT_FILES (every tracked doc with
+cross-references) — add new docs there so CI picks them up in one place.
 Exits non-zero listing every broken link.
 """
 
 import os
 import re
 import sys
+
+# Every doc with cross-references, relative to the repo root. CI runs the
+# checker with no arguments, so this list is the single registry.
+DEFAULT_FILES = [
+    "README.md",
+    "DESIGN.md",
+    "ROADMAP.md",
+    "docs/README.md",
+    "docs/CLI.md",
+    "docs/DETERMINISM.md",
+    "docs/PLATFORMS.md",
+    "docs/XBAR.md",
+]
 
 # [text](target) — target up to the first closing paren or whitespace.
 LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
@@ -40,8 +56,10 @@ def check_file(path: str) -> list[str]:
 
 def main(argv: list[str]) -> int:
     if not argv:
-        print("usage: check_links.py FILE.md [FILE.md ...]", file=sys.stderr)
-        return 2
+        # Resolve DEFAULT_FILES against the repo root (the parent of this
+        # script's directory) so the checker works from any CWD.
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        argv = [os.path.join(root, f) for f in DEFAULT_FILES]
     errors = []
     for path in argv:
         if not os.path.exists(path):
