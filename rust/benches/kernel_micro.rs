@@ -21,12 +21,12 @@ use parti_sim::pdes::HostModel;
 use parti_sim::ruby::new_inbox;
 use parti_sim::ruby::{MsgKind, RubyMsg};
 use parti_sim::sched::{
-    InboxOrder, Mailbox, QuantumPolicy, QueueKind, SchedQueue, Scheduler,
-    XbarArb,
+    BucketShape, InboxOrder, Mailbox, QuantumPolicy, QueueKind, SchedQueue,
+    Scheduler, XbarArb,
 };
 use parti_sim::sim::event::{prio, Event, EventKind};
 use parti_sim::sim::ids::CompId;
-use parti_sim::spec::{Interconnect, SystemSpec};
+use parti_sim::spec::{platforms, Interconnect, SystemSpec};
 use parti_sim::util::json::JsonObj;
 
 /// The old `Injector` (pre-`sched/` baseline), kept here as the reference
@@ -115,6 +115,30 @@ fn main() {
             .u64("heap_median_ns", queue_ns[0].1 as u64)
             .u64("bucket_median_ns", queue_ns[1].1 as u64),
     );
+
+    // Bucket-queue calendar geometry calibration (`--bucket-width` /
+    // `--bucket-slots`): the same 100k mixed-tick workload across shapes.
+    // The default (2048×64) is the committed choice; this row is the
+    // evidence for revisiting it per host (docs/PERF.md).
+    let mut shapes = JsonObj::new();
+    for (width, nbuckets) in [(2048u64, 64usize), (256, 16), (65536, 128)] {
+        let shape = BucketShape { width, nbuckets }.validate().unwrap();
+        let (m, lo, hi) = measure(11, || {
+            let mut q = SchedQueue::with_shape(QueueKind::Bucket, shape);
+            queue_workload(&mut q, 100_000);
+        });
+        bench_util::report(
+            &format!("bucket_shape[{width}x{nbuckets}] schedule+pop 100k"),
+            m,
+            lo,
+            hi,
+        );
+        shapes = shapes.obj(
+            &format!("w{width}_s{nbuckets}"),
+            JsonObj::new().u64("median_ns", m as u64),
+        );
+    }
+    json = json.obj("bucket_shape_100k", shapes);
 
     // Cross-domain injector: 4 producers × 25k, then one border drain.
     let (mutex_m, lo, hi) = measure(11, || {
@@ -346,6 +370,88 @@ fn main() {
         );
     }
     json = json.obj("threaded_16_domain_2_thread", threaded);
+
+    // `--profile` breakdown of the same threaded configuration: where the
+    // border protocol actually spends its wall time, summed over threads
+    // (window execution vs freeze-barrier wait vs border sync vs
+    // publish/verdict wait — docs/PERF.md explains how to read it).
+    {
+        let mut cfg = RunConfig {
+            app: "blackscholes".to_string(),
+            ops_per_core: 2048,
+            mode: parti_sim::config::Mode::Parallel,
+            threads: 2,
+            profile: true,
+            ..Default::default()
+        };
+        cfg.system.cores = 15;
+        let w = make_workload(&cfg).expect("workload");
+        let mut last = None;
+        let (m, lo, hi) = measure(5, || {
+            last = Some(run_with_workload(&cfg, &w).unwrap());
+        });
+        let r = last.expect("measured at least once");
+        bench_util::report("threaded 16-domain/2-thread --profile", m, lo, hi);
+        println!(
+            "  profile: window={:.2}ms freeze={:.2}ms sync={:.2}ms \
+             publish={:.2}ms (thread-summed)",
+            r.pdes.prof_window_ns as f64 / 1e6,
+            r.pdes.prof_freeze_wait_ns as f64 / 1e6,
+            r.pdes.prof_border_sync_ns as f64 / 1e6,
+            r.pdes.prof_publish_wait_ns as f64 / 1e6,
+        );
+        json = json.obj(
+            "border_profile_16_domain_2_thread",
+            JsonObj::new()
+                .u64("median_ns", m as u64)
+                .u64("window_ns", r.pdes.prof_window_ns)
+                .u64("freeze_wait_ns", r.pdes.prof_freeze_wait_ns)
+                .u64("border_sync_ns", r.pdes.prof_border_sync_ns)
+                .u64("publish_wait_ns", r.pdes.prof_publish_wait_ns),
+        );
+    }
+
+    // Fig. 7-style strong scaling on the paper's flagship mpsoc-120
+    // platform: the threaded kernel at 1/2/4/8 host threads on a small
+    // tick budget. Speedup is t1_median / tN_median; CI uploads this
+    // table per push so the trajectory is visible without a local
+    // many-core host.
+    {
+        let spec = platforms::preset("mpsoc-120").expect("mpsoc-120 preset");
+        let mut scaling = JsonObj::new();
+        let mut t1_median = 0.0f64;
+        for threads in [1usize, 2, 4, 8] {
+            let mut cfg = RunConfig::for_spec(&spec);
+            cfg.app = "blackscholes".to_string();
+            cfg.ops_per_core = 64;
+            cfg.mode = parti_sim::config::Mode::Parallel;
+            cfg.threads = threads;
+            let w = make_workload(&cfg).expect("workload");
+            let (m, lo, hi) = measure(3, || {
+                let r = run_with_workload(&cfg, &w).unwrap();
+                std::hint::black_box(r.events);
+            });
+            bench_util::report(
+                &format!("mpsoc-120 strong scaling [t{threads}]"),
+                m,
+                lo,
+                hi,
+            );
+            let m_ns = m as f64;
+            if threads == 1 {
+                t1_median = m_ns;
+            }
+            let speedup = if m_ns > 0.0 { t1_median / m_ns } else { 0.0 };
+            println!("  t{threads}: speedup vs t1 = {speedup:.2}x");
+            scaling = scaling.obj(
+                &format!("t{threads}"),
+                JsonObj::new()
+                    .u64("median_ns", m as u64)
+                    .f64("speedup", speedup),
+            );
+        }
+        json = json.obj("strong_scaling_mpsoc120", scaling);
+    }
 
     // Inbox handoff: host order (the paper's racy consumption) vs the
     // deterministic border-ordered merge, on a sharing app where the

@@ -7,7 +7,9 @@
 //! New code (and anything naming a topology) should go through the spec.
 
 use crate::cpu::CpuModel;
-use crate::sched::{InboxOrder, QuantumPolicy, QueueKind, RunPolicy, XbarArb};
+use crate::sched::{
+    BucketShape, InboxOrder, QuantumPolicy, QueueKind, RunPolicy, XbarArb,
+};
 use crate::sim::time::{Tick, NS};
 use crate::spec::{Interconnect, SystemSpec};
 
@@ -150,6 +152,13 @@ pub struct RunConfig {
     /// border-staged grants (default) or the paper's mid-window
     /// `try_lock` occupancy (see [`XbarArb`] and docs/XBAR.md).
     pub xbar_arb: XbarArb,
+    /// Calendar geometry for [`QueueKind::Bucket`] (`--bucket-width` /
+    /// `--bucket-slots`); a pure performance lever — the pop order is
+    /// shape-independent (docs/PERF.md).
+    pub bucket_shape: BucketShape,
+    /// `--profile`: record per-thread, per-phase wall breakdowns into the
+    /// run's `PdesStats` (host-side observation only).
+    pub profile: bool,
 }
 
 impl Default for RunConfig {
@@ -170,6 +179,8 @@ impl Default for RunConfig {
             threads: 0,
             inbox_order: InboxOrder::default(),
             xbar_arb: XbarArb::default(),
+            bucket_shape: BucketShape::default(),
+            profile: false,
         }
     }
 }
@@ -183,6 +194,7 @@ impl RunConfig {
             threads: self.threads,
             inbox_order: self.inbox_order,
             xbar_arb: self.xbar_arb,
+            profile: self.profile,
         }
     }
 

@@ -21,7 +21,9 @@ use parti_sim::harness::figures::{
 };
 use parti_sim::harness::{compare_modes, run_once, tables};
 use parti_sim::pdes::HostModel;
-use parti_sim::sched::{InboxOrder, QuantumPolicy, QueueKind, XbarArb};
+use parti_sim::sched::{
+    BucketShape, InboxOrder, QuantumPolicy, QueueKind, XbarArb,
+};
 use parti_sim::sim::time::NS;
 use parti_sim::spec::{platforms, SystemSpec};
 use parti_sim::stats::Summary;
@@ -58,6 +60,10 @@ RUN/COMPARE/FFWD FLAGS
   --cpu MODEL       o3|minor|atomic|kvm               [o3]
   --mode MODE       serial|parallel|virtual           [serial]
   --queue KIND      bucket|heap event queue           [bucket]
+  --bucket-width N  bucket-queue slot width in ticks
+                    (power of two; docs/PERF.md)      [2048]
+  --bucket-slots N  bucket-queue ring slots
+                    (power of two >= 2)               [64]
   --quantum-ns N    quantum t_qΔ in ns                [16]
   --quantum-policy P  fixed|horizon|hybrid window advance
                     (horizon leaps dead windows)      [fixed]
@@ -78,6 +84,10 @@ RUN/COMPARE/FFWD FLAGS
   --seed N                                            [42]
   --host-cores N    modeled host cores (virtual mode) [64]
   --io-milli N      IO accesses per 1000 ops (§4.3)   [0]
+  --profile         record per-phase border wall time
+                    (window/freeze/border-sync/publish;
+                    docs/PERF.md) — host-side only,
+                    simulation results are unchanged
   --json            emit the summary as JSON
 
   Flags are documented in detail in docs/CLI.md.
@@ -126,6 +136,12 @@ fn run_config(a: &Args) -> Result<RunConfig> {
     let queue = a.get_str("queue", "bucket");
     cfg.queue = QueueKind::parse(&queue)
         .ok_or_else(|| anyhow::anyhow!("bad --queue {queue}"))?;
+    cfg.bucket_shape = BucketShape {
+        width: a.get_u64("bucket-width", cfg.bucket_shape.width),
+        nbuckets: a.get_usize("bucket-slots", cfg.bucket_shape.nbuckets),
+    }
+    .validate()
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
     cfg.quantum = a.get_u64("quantum-ns", 16) * NS;
     let qp = a.get_str("quantum-policy", "fixed");
     cfg.quantum_policy = QuantumPolicy::parse(&qp)
@@ -142,6 +158,7 @@ fn run_config(a: &Args) -> Result<RunConfig> {
     cfg.xbar_arb = XbarArb::parse(&arb)
         .ok_or_else(|| anyhow::anyhow!("bad --xbar-arb {arb}"))?;
     cfg.host_cores = a.get_usize("host-cores", 64);
+    cfg.profile = a.has("profile");
     Ok(cfg)
 }
 
@@ -334,6 +351,16 @@ fn print_summary(cfg: &RunConfig, s: &Summary) {
         "  xbar: arb={:?} staged={} deferred_grants={}",
         cfg.xbar_arb, s.xbar_staged, s.xbar_deferred_grants
     );
+    if cfg.profile {
+        println!(
+            "  profile (summed over threads): window={:.2}ms \
+             freeze-wait={:.2}ms border-sync={:.2}ms publish-wait={:.2}ms",
+            s.prof_window_ns as f64 / 1e6,
+            s.prof_freeze_wait_ns as f64 / 1e6,
+            s.prof_border_sync_ns as f64 / 1e6,
+            s.prof_publish_wait_ns as f64 / 1e6
+        );
+    }
     println!(
         "  miss rates: l1i={:.4} l1d={:.4} l2={:.4} l3={:.4}",
         s.l1i_miss_rate, s.l1d_miss_rate, s.l2_miss_rate, s.l3_miss_rate

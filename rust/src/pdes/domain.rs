@@ -9,6 +9,7 @@ use std::time::Instant;
 
 use crate::sched::{QueueKind, SchedQueue, Scheduler};
 use crate::sim::component::{Component, Ctx};
+use crate::sim::event::Event;
 use crate::sim::ids::{CompId, DomainId};
 use crate::sim::shared::SharedState;
 use crate::sim::stats::StatSink;
@@ -23,6 +24,9 @@ pub struct Domain {
     pub comp_ids: Vec<CompId>,
     /// Local simulated time: tick of the last executed event.
     pub now: Tick,
+    /// Reusable scratch for the border mailbox drain — steady state
+    /// injects without allocating ([`Domain::drain_injections`]).
+    inject_scratch: Vec<Event>,
 }
 
 impl Domain {
@@ -33,6 +37,7 @@ impl Domain {
             comps: Vec::new(),
             comp_ids: Vec::new(),
             now: 0,
+            inject_scratch: Vec::new(),
         }
     }
 
@@ -52,7 +57,7 @@ impl Domain {
     /// proxy used by the virtual host model).
     pub fn run_window(&mut self, shared: &SharedState, window_end: Tick) -> u64 {
         let mut executed = 0u64;
-        let Domain { eq, comps, comp_ids, id, now } = self;
+        let Domain { eq, comps, comp_ids, id, now, .. } = self;
         while let Some(ev) = eq.pop_before(window_end) {
             debug_assert!(ev.tick >= *now, "time must not go backwards");
             *now = ev.tick;
@@ -72,7 +77,8 @@ impl Domain {
     /// borders while all producers are parked at the barrier (the
     /// [`crate::sched::Mailbox`] single-consumer contract).
     pub fn drain_injections(&mut self, shared: &SharedState) {
-        for ev in shared.injectors[self.id.index()].drain() {
+        shared.injectors[self.id.index()].drain_into(&mut self.inject_scratch);
+        for ev in self.inject_scratch.drain(..) {
             self.eq.insert(ev);
         }
     }

@@ -6,7 +6,7 @@
 
 use std::sync::Arc;
 
-use crate::sched::{QueueKind, RunPolicy, SchedQueue, Scheduler};
+use crate::sched::{BucketShape, QueueKind, RunPolicy, SchedQueue, Scheduler};
 use crate::sim::component::Component;
 use crate::sim::ids::{CompId, DomainId};
 use crate::sim::shared::SharedState;
@@ -51,6 +51,7 @@ pub struct MachineBuilder {
     n_cores: u32,
     quantum: Tick,
     queue: QueueKind,
+    shape: BucketShape,
     policy: RunPolicy,
 }
 
@@ -69,6 +70,7 @@ impl MachineBuilder {
             n_cores: 0,
             quantum,
             queue,
+            shape: BucketShape::default(),
             policy: RunPolicy::default(),
         }
     }
@@ -88,9 +90,24 @@ impl MachineBuilder {
     /// called before `finish` (queues are empty until component init).
     pub fn set_queue(&mut self, kind: QueueKind) {
         self.queue = kind;
+        self.rebuild_queues();
+    }
+
+    /// Select the calendar geometry for [`QueueKind::Bucket`] domains
+    /// (`--bucket-width` / `--bucket-slots`). Like `set_queue`, must be
+    /// called before components schedule anything.
+    pub fn set_bucket_shape(&mut self, shape: BucketShape) {
+        self.shape = shape;
+        self.rebuild_queues();
+    }
+
+    fn rebuild_queues(&mut self) {
         for d in &mut self.domains {
-            debug_assert!(d.eq.is_empty(), "set_queue after events scheduled");
-            d.eq = SchedQueue::new(kind);
+            debug_assert!(
+                d.eq.is_empty(),
+                "queue reconfigured after events scheduled"
+            );
+            d.eq = SchedQueue::with_shape(self.queue, self.shape);
         }
     }
 

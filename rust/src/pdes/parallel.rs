@@ -60,6 +60,7 @@ use std::time::Instant;
 
 use crate::sched::{plan_next_window, ClaimList, Outcome, TreeBarrier};
 use crate::sim::time::Tick;
+use crate::util::CachePadded;
 
 use super::domain::Domain;
 use super::machine::Machine;
@@ -94,11 +95,16 @@ pub fn run_parallel(mut machine: Machine, max_ticks: Tick) -> RunResult {
         .collect();
 
     let barrier = TreeBarrier::new(n_threads);
-    let next_ticks: Vec<AtomicU64> =
-        (0..n).map(|_| AtomicU64::new(0)).collect();
+    // Per-domain hot words are cache-line padded: at every border all
+    // threads publish into `next_ticks` (and under `--steal` into `loads`)
+    // at once, and unpadded AtomicU64s would pack eight domains onto one
+    // line — pure false sharing on the hottest synchronisation path.
+    let next_ticks: Vec<CachePadded<AtomicU64>> =
+        (0..n).map(|_| CachePadded::new(AtomicU64::new(0))).collect();
     // Events each domain executed in the closed window: the load metric
     // for the deterministic victim order.
-    let loads: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+    let loads: Vec<CachePadded<AtomicU32>> =
+        (0..n).map(|_| CachePadded::new(AtomicU32::new(0))).collect();
     let claims = ClaimList::identity(n);
     let verdict = AtomicU8::new(VERDICT_CONTINUE);
     // Written by the verdict leader, read by everyone after the verdict
@@ -122,8 +128,14 @@ pub fn run_parallel(mut machine: Machine, max_ticks: Tick) -> RunResult {
                 let body = std::panic::AssertUnwindSafe(|| {
                     let mut w = barrier.waiter(ti);
                     let mut window_end = quantum;
+                    // `--profile`: per-phase wall breakdowns, summed over
+                    // threads into PdesStats. Host-side observation only —
+                    // no simulation decision reads these, so determinism
+                    // is untouched (gated by tests/perf_identity.rs).
+                    let profile = policy.profile;
                     loop {
                         // Window: execute claimed domains.
+                        let t_win = profile.then(Instant::now);
                         if policy.steal {
                             while let Some(d) = claims.claim() {
                                 let mut dom = slots[d].lock().unwrap();
@@ -149,14 +161,28 @@ pub fn run_parallel(mut machine: Machine, max_ticks: Tick) -> RunResult {
                             }
                         }
 
+                        if let Some(t) = t_win {
+                            shared.pdes.prof_window_ns.fetch_add(
+                                t.elapsed().as_nanos() as u64,
+                                Relaxed,
+                            );
+                        }
+
                         // Phase 1: freeze — all claims finished, no
                         // producer touches any mailbox past this point.
+                        let t_frz = profile.then(Instant::now);
                         match barrier.wait(&mut w) {
                             Outcome::Aborted => return,
                             Outcome::Leader => {
                                 shared.pdes.barriers.fetch_add(1, Relaxed);
                             }
                             Outcome::Follower => {}
+                        }
+                        if let Some(t) = t_frz {
+                            shared.pdes.prof_freeze_wait_ns.fetch_add(
+                                t.elapsed().as_nanos() as u64,
+                                Relaxed,
+                            );
                         }
 
                         // Quiescent span: for the statically assigned
@@ -167,6 +193,7 @@ pub fn run_parallel(mut machine: Machine, max_ticks: Tick) -> RunResult {
                         // publish the post-sync horizons. The merge must
                         // precede the publish so staged Ruby traffic
                         // counts towards quiescence.
+                        let t_sync = profile.then(Instant::now);
                         let mut d = ti;
                         while d < n {
                             let mut dom = slots[d].lock().unwrap();
@@ -174,11 +201,19 @@ pub fn run_parallel(mut machine: Machine, max_ticks: Tick) -> RunResult {
                             next_ticks[d].store(dom.next_tick(), Release);
                             d += n_threads;
                         }
+                        if let Some(t) = t_sync {
+                            shared.pdes.prof_border_sync_ns.fetch_add(
+                                t.elapsed().as_nanos() as u64,
+                                Relaxed,
+                            );
+                        }
 
                         // Phase 2: publish — all post-drain next_ticks are
                         // now visible; the leader computes the verdict and
                         // the next window plan while the others park in
-                        // phase 3.
+                        // phase 3. (The profile bucket covers both waits
+                        // plus the leader's planning work.)
+                        let t_pub = profile.then(Instant::now);
                         match barrier.wait(&mut w) {
                             Outcome::Aborted => return,
                             Outcome::Leader => {
@@ -227,6 +262,12 @@ pub fn run_parallel(mut machine: Machine, max_ticks: Tick) -> RunResult {
                         // Phase 3: verdict — everyone reads the same one.
                         if barrier.wait(&mut w) == Outcome::Aborted {
                             return;
+                        }
+                        if let Some(t) = t_pub {
+                            shared.pdes.prof_publish_wait_ns.fetch_add(
+                                t.elapsed().as_nanos() as u64,
+                                Relaxed,
+                            );
                         }
                         if verdict.load(Acquire) == VERDICT_STOP {
                             break;

@@ -56,6 +56,16 @@ pub struct PdesSnapshot {
     /// Border grant decisions deferred on a still-occupied layer
     /// (deterministic; a request waiting k borders counts k times).
     pub xbar_deferred_grants: u64,
+    /// `--profile`: host ns executing window claims, summed over threads.
+    pub prof_window_ns: u64,
+    /// `--profile`: host ns waiting at the freeze barrier, summed over
+    /// threads.
+    pub prof_freeze_wait_ns: u64,
+    /// `--profile`: host ns in the border sync, summed over threads.
+    pub prof_border_sync_ns: u64,
+    /// `--profile`: host ns in the publish+verdict phases, summed over
+    /// threads.
+    pub prof_publish_wait_ns: u64,
 }
 
 impl PdesSnapshot {
@@ -73,7 +83,21 @@ impl PdesSnapshot {
             inbox_merge_ns: s.pdes.inbox_merge_ns.load(Relaxed),
             xbar_staged: s.pdes.xbar_staged.load(Relaxed),
             xbar_deferred_grants: s.pdes.xbar_deferred_grants.load(Relaxed),
+            prof_window_ns: s.pdes.prof_window_ns.load(Relaxed),
+            prof_freeze_wait_ns: s.pdes.prof_freeze_wait_ns.load(Relaxed),
+            prof_border_sync_ns: s.pdes.prof_border_sync_ns.load(Relaxed),
+            prof_publish_wait_ns: s.pdes.prof_publish_wait_ns.load(Relaxed),
         }
+    }
+
+    /// True when any `--profile` phase timer fired (profiling was on and
+    /// the run reached at least one border).
+    pub fn profiled(&self) -> bool {
+        self.prof_window_ns
+            | self.prof_freeze_wait_ns
+            | self.prof_border_sync_ns
+            | self.prof_publish_wait_ns
+            != 0
     }
 
     /// Mean host cost of one border's staged-merge hooks (inbox merges

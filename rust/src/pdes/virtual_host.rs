@@ -43,11 +43,23 @@ pub fn run_virtual(mut machine: Machine, max_ticks: Tick) -> RunResult {
         dom.init_components(&shared, window_end);
     }
 
+    // `--profile`: the same phase timers as the threaded kernel; on one
+    // thread the freeze/publish waits are structurally zero, so only the
+    // window-exec and border-sync buckets fill.
+    let profile = policy.profile;
+
     loop {
+        let t_win = profile.then(Instant::now);
         let mut q_work = vec![0u32; n];
         for (di, dom) in machine.domains.iter_mut().enumerate() {
             q_work[di] =
                 dom.run_window(&shared, window_end.min(max_ticks)) as u32;
+        }
+        if let Some(t) = t_win {
+            shared
+                .pdes
+                .prof_window_ns
+                .fetch_add(t.elapsed().as_nanos() as u64, Relaxed);
         }
         work.per_quantum.push(q_work);
         work.window_ends.push(window_end);
@@ -59,6 +71,7 @@ pub fn run_virtual(mut machine: Machine, max_ticks: Tick) -> RunResult {
         // then decide on the post-sync horizon (mailboxes are empty by
         // construction after draining).
         let stop = shared.should_stop();
+        let t_sync = profile.then(Instant::now);
         for dom in machine.domains.iter_mut() {
             dom.border_sync(&shared, window_end);
         }
@@ -68,6 +81,12 @@ pub fn run_virtual(mut machine: Machine, max_ticks: Tick) -> RunResult {
             .map(|d| d.next_tick())
             .min()
             .unwrap_or(Tick::MAX);
+        if let Some(t) = t_sync {
+            shared
+                .pdes
+                .prof_border_sync_ns
+                .fetch_add(t.elapsed().as_nanos() as u64, Relaxed);
+        }
         if stop || horizon == Tick::MAX || window_end >= max_ticks {
             break;
         }

@@ -167,14 +167,22 @@ pub struct Inbox {
     /// earlier-or-equal wakeup is pending — a large event-count reduction
     /// on bursty consumers (§Perf L3.1).
     pending_wakeup: Tick,
-    /// Border-mode staging area: cross-domain deliveries of the current
-    /// window, in host append order (canonicalised by
-    /// [`Inbox::merge_staged`]). Empty under [`InboxOrder::Host`].
-    stage: Vec<StagedMsg>,
-    /// Per-sender-domain staging sequence counters for the current window
-    /// (tiny linear-scan map `domain → next seq`; at most a handful of
-    /// foreign domains ever feed one inbox).
-    stage_seqs: Vec<(u32, u64)>,
+    /// Border-mode staging area: one *run* of cross-domain deliveries per
+    /// sending domain, each in that sender's program order (canonicalised
+    /// by the k-way merge in [`Inbox::merge_staged`]). At most a handful
+    /// of foreign domains ever feed one inbox, so the run map is a tiny
+    /// linear-scan Vec; the run Vecs are cleared (capacity kept) by the
+    /// merge, so steady state stages without allocating. Empty under
+    /// [`InboxOrder::Host`].
+    stage_runs: Vec<(u32, Vec<StagedMsg>)>,
+    /// Total deliveries across all runs (avoids summing on every
+    /// [`Inbox::staged_len`] / merge-emptiness check).
+    stage_total: usize,
+    /// Next global host-append index for the current window (feeds
+    /// [`StagedMsg::host_idx`]); reset by the merge.
+    stage_host_idx: u32,
+    /// Reusable per-run cursor scratch for the k-way merge.
+    merge_cursors: Vec<usize>,
 }
 
 impl Inbox {
@@ -204,21 +212,6 @@ impl Inbox {
     /// (border-ordered handoff). The caller must have checked
     /// [`Inbox::stage_has_slot`].
     pub fn stage(&mut self, sender_dom: u32, buf: usize, arrival: Tick, msg: RubyMsg) {
-        let seq = match self
-            .stage_seqs
-            .iter_mut()
-            .find(|(d, _)| *d == sender_dom)
-        {
-            Some((_, next)) => {
-                let s = *next;
-                *next += 1;
-                s
-            }
-            None => {
-                self.stage_seqs.push((sender_dom, 1));
-                0
-            }
-        };
         let b = &mut self.bufs[buf];
         if b.capacity != usize::MAX {
             match b.staged_by.iter_mut().find(|(d, _)| *d == sender_dom) {
@@ -226,12 +219,27 @@ impl Inbox {
                 None => b.staged_by.push((sender_dom, 1)),
             }
         }
-        self.stage.push(StagedMsg { arrival, sender_dom, seq, buf, msg });
+        let host_idx = self.stage_host_idx;
+        self.stage_host_idx += 1;
+        self.stage_total += 1;
+        let run = match self
+            .stage_runs
+            .iter_mut()
+            .position(|(d, _)| *d == sender_dom)
+        {
+            Some(i) => &mut self.stage_runs[i].1,
+            None => {
+                self.stage_runs.push((sender_dom, Vec::new()));
+                &mut self.stage_runs.last_mut().unwrap().1
+            }
+        };
+        let seq = run.len() as u64;
+        run.push(StagedMsg { arrival, seq, host_idx, buf, msg });
     }
 
     /// Deliveries currently staged for the next border merge.
     pub fn staged_len(&self) -> usize {
-        self.stage.len()
+        self.stage_total
     }
 
     /// Border merge (the heart of `--inbox-order border`): insert every
@@ -242,41 +250,78 @@ impl Inbox {
     /// end, so postponed wakeups land exactly where the host-order path's
     /// injector postponement would put them).
     ///
+    /// Canonical order is produced by a k-way merge of the per-sender runs
+    /// rather than a flat sort of the whole stage: each run is already in
+    /// the sender's program order, so it only needs a (usually skipped)
+    /// per-run sort by `(arrival, seq)` before its head competes in the
+    /// merge. With k = foreign domains feeding this inbox (1 for every
+    /// buffer in the built-in topologies) the border cost is O(total)
+    /// instead of the old O(total log total) gather-and-sort.
+    ///
     /// Must only be called while every producer is parked at the freeze
     /// barrier (the quiescent span of the border protocol) and before the
     /// owning domain publishes its post-drain `next_tick`.
     pub fn merge_staged(&mut self, border: Tick, stats: &PdesStats) -> Option<Tick> {
         let mut min_arrival = None;
-        if !self.stage.is_empty() {
-            let staged = std::mem::take(&mut self.stage);
-            self.stage_seqs.clear();
-            let mut order: Vec<usize> = (0..staged.len()).collect();
+        if self.stage_total > 0 {
+            let total = self.stage_total as u64;
+            self.stage_total = 0;
+            self.stage_host_idx = 0;
+            // A run leaves program order only when a later send overtakes
+            // an earlier one in arrival time (shorter latency path); the
+            // is-sorted scan makes the common monotonic window free.
             // Unstable sort is deterministic here: the key is unique
-            // (per-domain seqs never repeat within a window).
-            order.sort_unstable_by_key(|&i| {
-                let s = &staged[i];
-                (s.arrival, s.sender_dom, s.seq)
-            });
-            // How many deliveries the host append order got wrong — the
-            // nondeterminism the handoff neutralised this window.
-            let reordered = order
-                .iter()
-                .enumerate()
-                .filter(|&(pos, &i)| pos != i)
-                .count() as u64;
-            let (mut postponed, mut tpp) = (0u64, 0u64);
-            for &i in &order {
-                let s = &staged[i];
-                if s.arrival < border {
+            // (seq never repeats within a run).
+            for (_, run) in &mut self.stage_runs {
+                if run
+                    .windows(2)
+                    .any(|w| (w[0].arrival, w[0].seq) > (w[1].arrival, w[1].seq))
+                {
+                    run.sort_unstable_by_key(|e| (e.arrival, e.seq));
+                }
+            }
+            self.merge_cursors.clear();
+            self.merge_cursors.resize(self.stage_runs.len(), 0);
+            let (mut postponed, mut tpp, mut reordered) = (0u64, 0u64, 0u64);
+            let mut pos = 0u32;
+            loop {
+                // Scan the run heads for the minimal canonical key. Keys
+                // are globally unique (the sender domain is part of the
+                // key), so the winner is independent of scan order.
+                let mut best: Option<((Tick, u32, u64), usize)> = None;
+                for (ri, (dom, run)) in self.stage_runs.iter().enumerate() {
+                    if let Some(e) = run.get(self.merge_cursors[ri]) {
+                        let key = (e.arrival, *dom, e.seq);
+                        if best.is_none_or(|(k, _)| key < k) {
+                            best = Some((key, ri));
+                        }
+                    }
+                }
+                let Some((_, ri)) = best else { break };
+                let e = &self.stage_runs[ri].1[self.merge_cursors[ri]];
+                self.merge_cursors[ri] += 1;
+                if e.arrival < border {
                     // Visibility was deferred to the border: the same
                     // t_pp artefact the injector path counts (§3.1).
                     postponed += 1;
-                    tpp += border - s.arrival;
+                    tpp += border - e.arrival;
                 }
-                self.bufs[s.buf].push(s.arrival, s.msg);
+                // How many deliveries the host append order got wrong —
+                // the nondeterminism the handoff neutralised this window.
+                if e.host_idx != pos {
+                    reordered += 1;
+                }
+                if min_arrival.is_none() {
+                    min_arrival = Some(e.arrival);
+                }
+                self.bufs[e.buf].push(e.arrival, e.msg);
+                pos += 1;
             }
-            min_arrival = order.first().map(|&i| staged[i].arrival);
-            stats.inbox_staged.fetch_add(staged.len() as u64, Relaxed);
+            // Keep the run Vecs (and their capacity) for the next window.
+            for (_, run) in &mut self.stage_runs {
+                run.clear();
+            }
+            stats.inbox_staged.fetch_add(total, Relaxed);
             stats.inbox_reordered.fetch_add(reordered, Relaxed);
             stats.postponed.fetch_add(postponed, Relaxed);
             stats.tpp_sum.fetch_add(tpp, Relaxed);
@@ -370,8 +415,10 @@ pub fn new_inbox(buffer_capacities: &[usize]) -> SharedInbox {
             .map(|&c| MessageBuffer::new(c))
             .collect(),
         pending_wakeup: Tick::MAX,
-        stage: Vec::new(),
-        stage_seqs: Vec::new(),
+        stage_runs: Vec::new(),
+        stage_total: 0,
+        stage_host_idx: 0,
+        merge_cursors: Vec::new(),
     }))
 }
 
@@ -662,6 +709,38 @@ mod tests {
             ib.drain_ready(100).iter().map(|m| m.addr).collect();
         assert_eq!(order, vec![0, 1, 2, 3, 4], "seq preserves program order");
         assert_eq!(stats.inbox_reordered.load(Relaxed), 0);
+    }
+
+    #[test]
+    fn kway_merge_interleaves_runs_and_resets_between_windows() {
+        let stats = PdesStats::default();
+        let inbox = new_inbox(&[usize::MAX]);
+        let mut ib = inbox.lock().unwrap();
+        // Three senders; domain 1's run needs its per-run sort first.
+        ib.stage(3, 0, 15, msg(0x1));
+        ib.stage(1, 0, 20, msg(0x2));
+        ib.stage(2, 0, 15, msg(0x3));
+        ib.stage(1, 0, 10, msg(0x4));
+        ib.merge_staged(30, &stats);
+        let order: Vec<u64> =
+            ib.drain_ready(100).iter().map(|m| m.addr).collect();
+        assert_eq!(
+            order,
+            vec![0x4, 0x3, 0x1, 0x2],
+            "(10,d1) < (15,d2) < (15,d3) < (20,d1)"
+        );
+        assert_eq!(stats.inbox_reordered.load(Relaxed), 4);
+        // The next window starts from clean run state: fresh seqs, fresh
+        // host indices, and an empty stage.
+        assert_eq!(ib.staged_len(), 0);
+        ib.stage(2, 0, 205, msg(0xb));
+        ib.stage(1, 0, 205, msg(0xa));
+        ib.merge_staged(210, &stats);
+        let order: Vec<u64> =
+            ib.drain_ready(300).iter().map(|m| m.addr).collect();
+        assert_eq!(order, vec![0xa, 0xb], "domain breaks the arrival tie");
+        assert_eq!(stats.inbox_reordered.load(Relaxed), 4 + 2);
+        assert_eq!(stats.inbox_staged.load(Relaxed), 6);
     }
 
     #[test]

@@ -104,21 +104,26 @@ impl RubyMsg {
 ///
 /// During a quantum window, cross-domain sends do not touch the consumer's
 /// [`super::inbox::MessageBuffer`]s; they are staged as `StagedMsg`s inside
-/// the consumer's inbox. At the border — while every producer is parked at
-/// the freeze barrier — the stage is merged into the buffers in
-/// `(arrival, sender_dom, seq)` order, which is a pure function of the
-/// simulation content, never of host thread interleaving.
+/// the consumer's inbox, grouped into one *run* per sending domain. At the
+/// border — while every producer is parked at the freeze barrier — the runs
+/// are k-way merged into the buffers in `(arrival, sender_dom, seq)` order
+/// (the sending domain is the run's key, not stored per message), which is
+/// a pure function of the simulation content, never of host thread
+/// interleaving.
 #[derive(Copy, Clone, Debug)]
 pub struct StagedMsg {
     /// Arrival tick at the consumer (`send tick + link latency + extra`).
     pub arrival: Tick,
-    /// Sending time domain: the canonical tie-break after `arrival`.
-    pub sender_dom: u32,
     /// Per-(inbox, sender-domain) staging sequence — the sender's program
-    /// order within the window, deterministic because a domain's window is
-    /// executed by exactly one thread (the claim-list exactly-once
-    /// guarantee, `sched/steal.rs`).
+    /// order within the window (its position in the run), deterministic
+    /// because a domain's window is executed by exactly one thread (the
+    /// claim-list exactly-once guarantee, `sched/steal.rs`).
     pub seq: u64,
+    /// Global host-append position within the window, across all runs of
+    /// this inbox. Only used to *measure* how far the host order diverged
+    /// from the canonical merge order (the `inbox_reordered` counter) —
+    /// never to order anything.
+    pub host_idx: u32,
     /// Target buffer index within the consumer's inbox.
     pub buf: usize,
     pub msg: RubyMsg,

@@ -256,6 +256,7 @@ pub fn build_from_spec(
 
     let mut b = MachineBuilder::new(n_domains, quantum);
     b.set_queue(cfg.queue);
+    b.set_bucket_shape(cfg.bucket_shape);
     b.set_policy(cfg.run_policy());
     b.set_cores(n as u32);
 
@@ -739,6 +740,7 @@ pub fn build_atomic_system(
 
     let mut b = MachineBuilder::new(1, Tick::MAX);
     b.set_queue(cfg.queue);
+    b.set_bucket_shape(cfg.bucket_shape);
     b.set_cores(n as u32);
     for i in 0..n {
         if kvm {

@@ -1,22 +1,33 @@
 //! Two-level bucketed (calendar-style) event queue.
 //!
-//! The near future is split into `NBUCKETS` fixed-width buckets arranged as
-//! a ring; the bucket currently containing the horizon is kept as a small
-//! binary heap (`cur`), the rest as unsorted vectors, and everything beyond
-//! the ring lives in an overflow heap. Scheduling into the current window is
-//! O(log b) for a bucket of size b (vs O(log n) of the whole-queue heap),
-//! and the common DES pattern — schedule a few ns ahead, pop, repeat —
-//! touches only the small `cur` heap.
+//! The near future is split into `shape.nbuckets` fixed-width buckets
+//! arranged as a ring; the bucket currently containing the horizon is kept
+//! as a small binary heap (`cur`), the rest as unsorted vectors, and
+//! everything beyond the ring lives in an overflow heap. Scheduling into
+//! the current window is O(log b) for a bucket of size b (vs O(log n) of
+//! the whole-queue heap), and the common DES pattern — schedule a few ns
+//! ahead, pop, repeat — touches only the small `cur` heap.
+//!
+//! The geometry is a run knob ([`BucketShape`], `--bucket-width` /
+//! `--bucket-slots`): workloads whose latencies cluster tightly want
+//! narrow buckets (less sorting inside `cur`), sparse ones want a wider
+//! ring (fewer overflow migrations). Both axes are powers of two so the
+//! level arithmetic stays shift/mask. The pop order is shape-independent,
+//! so the shape is a pure performance lever (docs/PERF.md).
 //!
 //! Invariants (checked in debug builds):
-//! * `horizon` is `WIDTH`-aligned and never decreases.
-//! * `cur` holds exactly the events with `tick < horizon + WIDTH` (late
+//! * `horizon` is width-aligned and never decreases.
+//! * `cur` holds exactly the events with `tick < horizon + width` (late
 //!   cross-domain inserts below `horizon` also land here; the heap order
 //!   absorbs them).
-//! * ring slot `(tick / WIDTH) % NBUCKETS` holds events with
-//!   `horizon + WIDTH <= tick < horizon + WIDTH * NBUCKETS`; at any moment
-//!   a slot holds events of exactly one `WIDTH`-aligned range.
+//! * ring slot `(tick / width) % nbuckets` holds events with
+//!   `horizon + width <= tick < horizon + width * nbuckets`; at any moment
+//!   a slot holds events of exactly one width-aligned range.
 //! * `overflow` holds everything at or beyond the ring.
+//! * `live` has bit `s` set iff ring slot `s` is non-empty, and
+//!   `ring_count` is the total event count across slots — so an `advance`
+//!   finds the earliest non-empty bucket with a couple of word scans
+//!   instead of touching up to `nbuckets` scattered `Vec` headers.
 //!
 //! Pop order is identical to [`crate::sched::HeapQueue`]: the global
 //! minimum by `(tick, prio, seq)` is always in `cur` when `cur` is
@@ -33,44 +44,84 @@ use crate::sim::event::{Event, EventKind};
 use crate::sim::ids::CompId;
 use crate::sim::time::Tick;
 
-/// Bucket width in ticks (2 ns at the 1 tick = 1 ps base). Most model
-/// latencies (NoC hops, cache accesses) fall within a few buckets.
+/// Default bucket width in ticks (2 ns at the 1 tick = 1 ps base). Most
+/// model latencies (NoC hops, cache accesses) fall within a few buckets.
 const WIDTH: Tick = 2048;
-/// Ring size; the ring spans `WIDTH * NBUCKETS` = 128 ns of near future.
+/// Default ring size; the ring spans `WIDTH * NBUCKETS` = 128 ns of near
+/// future.
 const NBUCKETS: usize = 64;
 
+/// Calendar geometry: bucket width (ticks) × ring slots. Both must be
+/// powers of two (the hot-path level arithmetic is shift/mask). Selected
+/// per run via `RunConfig` / `--bucket-width` / `--bucket-slots`; the
+/// default `(2048, 64)` is the geometry every earlier PR measured.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct BucketShape {
+    /// Bucket width in ticks (power of two).
+    pub width: Tick,
+    /// Ring slots (power of two, ≥ 2).
+    pub nbuckets: usize,
+}
+
+impl Default for BucketShape {
+    fn default() -> Self {
+        BucketShape { width: WIDTH, nbuckets: NBUCKETS }
+    }
+}
+
+impl BucketShape {
+    /// Check the power-of-two constraints, returning an actionable error.
+    pub fn validate(self) -> Result<Self, String> {
+        if !self.width.is_power_of_two() {
+            return Err(format!(
+                "bucket width must be a power of two, got {}",
+                self.width
+            ));
+        }
+        if self.nbuckets < 2 || !self.nbuckets.is_power_of_two() {
+            return Err(format!(
+                "bucket slots must be a power of two >= 2, got {}",
+                self.nbuckets
+            ));
+        }
+        Ok(self)
+    }
+}
+
 pub struct BucketQueue {
-    /// Sorted current bucket: all events with `tick < horizon + WIDTH`.
+    /// Sorted current bucket: all events with `tick < horizon + width`.
     cur: BinaryHeap<Reverse<Event>>,
-    /// Unsorted near-future buckets, indexed by `(tick / WIDTH) % NBUCKETS`.
+    /// Unsorted near-future buckets, indexed by `(tick / width) % nbuckets`.
     ring: Vec<Vec<Event>>,
+    /// Bit `s` set iff `ring[s]` is non-empty (see module invariants).
+    live: Vec<u64>,
     /// Total events stored across all ring buckets.
     ring_count: usize,
-    /// Far future: events at or beyond `horizon + WIDTH * NBUCKETS`.
+    /// Far future: events at or beyond `horizon + width * nbuckets`.
     overflow: BinaryHeap<Reverse<Event>>,
-    /// `WIDTH`-aligned start of `cur`'s range.
+    /// Width-aligned start of `cur`'s range.
     horizon: Tick,
     /// Seqs scheduled and not yet popped or cancelled (the live set).
     pending: FxHashSet<u64>,
     /// Tombstones still physically present in one of the levels.
     cancelled: FxHashSet<u64>,
+    /// Reused drain buffer: `advance` swaps it with the slot being
+    /// emptied so the slot's `Vec` keeps its capacity across ring
+    /// revolutions — steady state allocates no `Vec` growth per window.
+    scratch: Vec<Event>,
+    /// log2 of the bucket width (shape.width = 1 << width_log2).
+    width_log2: u32,
+    /// `nbuckets - 1` (slot index mask).
+    slot_mask: usize,
+    /// `width * nbuckets`, saturated.
+    span: Tick,
     next_seq: u64,
     executed: u64,
 }
 
 impl Default for BucketQueue {
     fn default() -> Self {
-        BucketQueue {
-            cur: BinaryHeap::new(),
-            ring: (0..NBUCKETS).map(|_| Vec::new()).collect(),
-            ring_count: 0,
-            overflow: BinaryHeap::new(),
-            horizon: 0,
-            pending: FxHashSet::default(),
-            cancelled: FxHashSet::default(),
-            next_seq: 0,
-            executed: 0,
-        }
+        Self::with_shape(BucketShape::default())
     }
 }
 
@@ -79,20 +130,69 @@ impl BucketQueue {
         Self::default()
     }
 
+    /// Build a queue with an explicit calendar geometry. Panics on an
+    /// invalid shape — validate at the configuration boundary
+    /// ([`BucketShape::validate`]) for a recoverable error.
+    pub fn with_shape(shape: BucketShape) -> Self {
+        let shape = shape.validate().expect("invalid bucket shape");
+        BucketQueue {
+            cur: BinaryHeap::new(),
+            ring: (0..shape.nbuckets).map(|_| Vec::new()).collect(),
+            live: vec![0; shape.nbuckets.div_ceil(64)],
+            ring_count: 0,
+            overflow: BinaryHeap::new(),
+            horizon: 0,
+            pending: FxHashSet::default(),
+            cancelled: FxHashSet::default(),
+            scratch: Vec::new(),
+            width_log2: shape.width.trailing_zeros(),
+            slot_mask: shape.nbuckets - 1,
+            span: shape.width.saturating_mul(shape.nbuckets as Tick),
+            next_seq: 0,
+            executed: 0,
+        }
+    }
+
+    #[inline]
+    fn width(&self) -> Tick {
+        1 << self.width_log2
+    }
+
     #[inline]
     fn ring_end(&self) -> Tick {
-        self.horizon.saturating_add(WIDTH * NBUCKETS as Tick)
+        self.horizon.saturating_add(self.span)
+    }
+
+    #[inline]
+    fn slot_of(&self, t: Tick) -> usize {
+        ((t >> self.width_log2) as usize) & self.slot_mask
+    }
+
+    #[inline]
+    fn bucket_start(&self, t: Tick) -> Tick {
+        (t >> self.width_log2) << self.width_log2
+    }
+
+    #[inline]
+    fn set_live(&mut self, slot: usize) {
+        self.live[slot >> 6] |= 1 << (slot & 63);
+    }
+
+    #[inline]
+    fn clear_live(&mut self, slot: usize) {
+        self.live[slot >> 6] &= !(1 << (slot & 63));
     }
 
     /// Place an event into the level its tick belongs to.
     #[inline]
     fn place(&mut self, ev: Event) {
         let t = ev.tick;
-        if t < self.horizon.saturating_add(WIDTH) {
+        if t < self.horizon.saturating_add(self.width()) {
             self.cur.push(Reverse(ev));
         } else if t < self.ring_end() {
-            let slot = ((t / WIDTH) as usize) % NBUCKETS;
+            let slot = self.slot_of(t);
             self.ring[slot].push(ev);
+            self.set_live(slot);
             self.ring_count += 1;
         } else {
             self.overflow.push(Reverse(ev));
@@ -114,46 +214,86 @@ impl BucketQueue {
         }
     }
 
+    /// First live ring slot cyclically after `base` — `base` itself is
+    /// never live at an `advance` (its residue maps to the overflow
+    /// range). Word scans over the `live` bitmap: O(nbuckets / 64) words
+    /// instead of up to `nbuckets` scattered `Vec` header reads, which is
+    /// what made sparse far-future schedules crawl.
+    fn next_live_slot(&self, base: usize) -> Option<usize> {
+        debug_assert_eq!(
+            self.live[base >> 6] >> (base & 63) & 1,
+            0,
+            "horizon residue slot must be empty at advance"
+        );
+        let start = (base + 1) & self.slot_mask;
+        let (w0, b0) = (start >> 6, start & 63);
+        let high = self.live[w0] & (!0u64 << b0);
+        if high != 0 {
+            return Some((w0 << 6) + high.trailing_zeros() as usize);
+        }
+        let words = self.live.len();
+        for i in 1..words {
+            let w = (w0 + i) % words;
+            if self.live[w] != 0 {
+                return Some(
+                    (w << 6) + self.live[w].trailing_zeros() as usize,
+                );
+            }
+        }
+        let low = self.live[w0] & !(!0u64 << b0);
+        if low != 0 {
+            return Some((w0 << 6) + low.trailing_zeros() as usize);
+        }
+        None
+    }
+
     /// Jump the horizon to the earliest non-empty bucket and refill `cur`.
     ///
     /// Precondition: `cur` is empty and `ring_count + overflow.len() > 0`.
     /// Guaranteed to move at least one stored event out of ring/overflow
     /// (possibly dropping it as cancelled), so caller loops terminate.
     fn advance(&mut self) {
-        // Ring slots at residues (horizon/WIDTH + 1), (horizon/WIDTH + 2),
-        // ... hold strictly increasing bucket starts (one WIDTH-aligned
-        // range per slot), so walking forward from the horizon residue and
-        // stopping at the first non-empty slot finds the ring minimum —
-        // amortised O(1) per bucket over a ring revolution, instead of a
-        // full 64-slot scan per advance. Every ring bucket start is below
-        // the overflow's (overflow holds ticks >= ring_end), so overflow
-        // is only consulted when the ring is empty.
+        // Ring slots at residues cyclically after the horizon's hold
+        // strictly increasing bucket starts (one width-aligned range per
+        // slot), so the first live bit after the horizon residue is the
+        // ring minimum. Every ring bucket start is below the overflow's
+        // (overflow holds ticks >= ring_end), so overflow is only
+        // consulted when the ring is empty.
+        let mut next_slot = usize::MAX;
         let mut next_start = Tick::MAX;
         if self.ring_count > 0 {
-            let base = (self.horizon / WIDTH) as usize;
-            for k in 1..NBUCKETS {
-                let slot = &self.ring[(base + k) % NBUCKETS];
-                if let Some(e) = slot.first() {
-                    next_start = e.tick / WIDTH * WIDTH;
-                    break;
-                }
-            }
+            let base = self.slot_of(self.horizon);
+            let slot = self
+                .next_live_slot(base)
+                .expect("ring_count > 0 with an all-zero live bitmap");
+            let head =
+                self.ring[slot].first().expect("live bit on empty slot");
+            next_start = self.bucket_start(head.tick);
+            next_slot = slot;
         } else if let Some(Reverse(e)) = self.overflow.peek() {
-            next_start = e.tick / WIDTH * WIDTH;
+            next_start = self.bucket_start(e.tick);
         }
         debug_assert_ne!(next_start, Tick::MAX, "advance on empty queue");
         debug_assert!(next_start >= self.horizon, "horizon must not retreat");
         self.horizon = next_start;
 
-        let slot = ((next_start / WIDTH) as usize) % NBUCKETS;
-        let moved = std::mem::take(&mut self.ring[slot]);
-        self.ring_count -= moved.len();
-        for ev in moved {
-            if self.cancelled.remove(&ev.seq) {
-                continue;
+        if next_slot != usize::MAX {
+            // Drain the slot through the scratch buffer so its Vec keeps
+            // its capacity for the next ring revolution (the old
+            // `mem::take` dropped the allocation every time).
+            std::mem::swap(&mut self.scratch, &mut self.ring[next_slot]);
+            self.ring_count -= self.scratch.len();
+            self.clear_live(next_slot);
+            for ev in self.scratch.drain(..) {
+                if self.cancelled.remove(&ev.seq) {
+                    continue;
+                }
+                debug_assert!(
+                    ev.tick < self.horizon.saturating_add(self.width())
+                );
+                self.cur.push(Reverse(ev));
             }
-            debug_assert!(ev.tick < self.horizon.saturating_add(WIDTH));
-            self.cur.push(Reverse(ev));
+            std::mem::swap(&mut self.scratch, &mut self.ring[next_slot]);
         }
 
         // The ring's span moved forward: migrate newly-near overflow events.
@@ -166,11 +306,12 @@ impl BucketQueue {
             if self.cancelled.remove(&ev.seq) {
                 continue;
             }
-            if ev.tick < self.horizon.saturating_add(WIDTH) {
+            if ev.tick < self.horizon.saturating_add(self.width()) {
                 self.cur.push(Reverse(ev));
             } else {
-                let s = ((ev.tick / WIDTH) as usize) % NBUCKETS;
+                let s = self.slot_of(ev.tick);
                 self.ring[s].push(ev);
+                self.set_live(s);
                 self.ring_count += 1;
             }
         }
@@ -186,6 +327,18 @@ impl BucketQueue {
                 self.cur.push(Reverse(ev));
             }
         }
+    }
+
+    /// Test hook: the `live` bitmap mirrors slot occupancy exactly.
+    #[cfg(test)]
+    fn check_live_invariant(&self) {
+        let mut count = 0;
+        for (s, slot) in self.ring.iter().enumerate() {
+            let bit = self.live[s >> 6] >> (s & 63) & 1 == 1;
+            assert_eq!(bit, !slot.is_empty(), "live bit {s} out of sync");
+            count += slot.len();
+        }
+        assert_eq!(count, self.ring_count, "ring_count out of sync");
     }
 }
 
@@ -345,6 +498,83 @@ mod tests {
             assert_eq!(q.pop().unwrap().target, CompId(i as u32));
         }
         assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn sparse_far_future_keeps_live_bitmap_in_sync() {
+        // A sparse schedule that walks every level: a handful of distant
+        // ring slots (including the wrap-around residues), overflow events
+        // that migrate in as the horizon jumps, and deschedules that leave
+        // tombstones in live slots. The bitmap must mirror physical slot
+        // occupancy after every mutation — it is what lets `advance`
+        // short-circuit the old full-ring scan.
+        let mut q = BucketQueue::new();
+        let mut handles = Vec::new();
+        for i in 0..40u64 {
+            // Strides coprime to the ring size hit scattered residues.
+            let t = i * (WIDTH * 13 + 5) + i * i * 977;
+            handles.push(q.schedule(t, 50, CompId(i as u32), k()));
+            q.check_live_invariant();
+        }
+        // Cancel every third event, including ones sitting in ring slots.
+        for h in handles.iter().step_by(3) {
+            q.deschedule(*h);
+            q.check_live_invariant();
+        }
+        let mut last = 0;
+        let mut popped = 0;
+        while let Some(e) = q.pop() {
+            assert!(e.tick >= last, "pop order violated");
+            last = e.tick;
+            popped += 1;
+            q.check_live_invariant();
+        }
+        assert_eq!(popped, 40 - handles.iter().step_by(3).count());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn custom_shapes_pop_identically() {
+        // The calendar geometry is a pure performance lever: every shape
+        // must produce the exact pop sequence of the default.
+        let shapes = [
+            BucketShape::default(),
+            BucketShape { width: 256, nbuckets: 16 },
+            BucketShape { width: 64, nbuckets: 4 },
+            BucketShape { width: 1 << 16, nbuckets: 128 },
+        ];
+        let mut seed = 0x9e3779b97f4a7c15u64;
+        let mut ticks = Vec::new();
+        for _ in 0..500 {
+            seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+            ticks.push(seed >> 24); // up to ~2^40 ticks: all levels hit
+        }
+        let reference: Vec<(Tick, u64)> = {
+            let mut q = BucketQueue::with_shape(shapes[0]);
+            for &t in &ticks {
+                q.schedule(t, 50, CompId(0), k());
+            }
+            std::iter::from_fn(|| q.pop().map(|e| (e.tick, e.seq))).collect()
+        };
+        assert_eq!(reference.len(), ticks.len());
+        for shape in &shapes[1..] {
+            let mut q = BucketQueue::with_shape(*shape);
+            for &t in &ticks {
+                q.schedule(t, 50, CompId(0), k());
+            }
+            let order: Vec<(Tick, u64)> =
+                std::iter::from_fn(|| q.pop().map(|e| (e.tick, e.seq)))
+                    .collect();
+            assert_eq!(order, reference, "{shape:?} diverged");
+        }
+    }
+
+    #[test]
+    fn shape_validation_rejects_bad_geometry() {
+        assert!(BucketShape { width: 2048, nbuckets: 64 }.validate().is_ok());
+        assert!(BucketShape { width: 1000, nbuckets: 64 }.validate().is_err());
+        assert!(BucketShape { width: 2048, nbuckets: 48 }.validate().is_err());
+        assert!(BucketShape { width: 2048, nbuckets: 1 }.validate().is_err());
     }
 
     #[test]

@@ -175,12 +175,23 @@ impl Mailbox {
     /// Contract: single consumer (the owning domain), called only at
     /// quantum borders while producers are parked at the barrier.
     pub fn drain(&self) -> Vec<Event> {
+        let mut out = Vec::new();
+        self.drain_into(&mut out);
+        out
+    }
+
+    /// [`Mailbox::drain`] into a caller-owned scratch Vec (cleared first).
+    /// The border path reuses one scratch per domain, so a steady-state
+    /// drain allocates nothing: the scratch keeps its capacity and the
+    /// sort is unstable (in-place) — safe because the canonical seq key
+    /// makes the sort key total, so stability buys nothing.
+    pub fn drain_into(&self, out: &mut Vec<Event>) {
         #[cfg(debug_assertions)]
         assert!(
             !self.draining.swap(true, Acquire),
             "concurrent Mailbox::drain (single-consumer contract violated)"
         );
-        let mut out = Vec::new();
+        out.clear();
         // SAFETY: single consumer; segments ahead of `head` are only freed
         // here; producers are quiescent per the border protocol.
         unsafe {
@@ -216,8 +227,7 @@ impl Mailbox {
         self.drained.fetch_add(out.len() as u64, Release);
         #[cfg(debug_assertions)]
         self.draining.store(false, Release);
-        out.sort_by_key(|e| (e.tick, e.prio, e.target.0, e.seq));
-        out
+        out.sort_unstable_by_key(|e| (e.tick, e.prio, e.target.0, e.seq));
     }
 
     /// Exact at quantum borders (producers quiescent); a racy estimate

@@ -44,7 +44,7 @@ pub mod steal;
 
 pub use api::{EventHandle, QueueKind, Scheduler};
 pub use barrier::{Outcome, TreeBarrier, Waiter};
-pub use bucket::BucketQueue;
+pub use bucket::{BucketQueue, BucketShape};
 pub use heap::HeapQueue;
 pub use mailbox::Mailbox;
 pub use quantum::{

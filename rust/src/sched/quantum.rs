@@ -157,6 +157,12 @@ pub struct RunPolicy {
     /// IO-crossbar layer arbitration (see [`XbarArb`]; the default is the
     /// deterministic border-staged grant protocol).
     pub xbar_arb: XbarArb,
+    /// `--profile`: record per-thread, per-phase wall breakdowns
+    /// (window-exec / freeze-wait / border-sync / publish-wait ns) into
+    /// [`crate::sim::shared::PdesStats`]. Host-side observation only — no
+    /// simulation decision reads the timers, so every deterministic
+    /// guarantee is unchanged (gated by `tests/perf_identity.rs`).
+    pub profile: bool,
 }
 
 impl RunPolicy {

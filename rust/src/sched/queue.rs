@@ -7,7 +7,7 @@
 //! [`QueueKind`].
 
 use crate::sched::api::{EventHandle, QueueKind, Scheduler};
-use crate::sched::bucket::BucketQueue;
+use crate::sched::bucket::{BucketQueue, BucketShape};
 use crate::sched::heap::HeapQueue;
 use crate::sim::event::{Event, EventKind};
 use crate::sim::ids::CompId;
@@ -20,9 +20,17 @@ pub enum SchedQueue {
 
 impl SchedQueue {
     pub fn new(kind: QueueKind) -> Self {
+        Self::with_shape(kind, BucketShape::default())
+    }
+
+    /// Construct with an explicit calendar geometry (`--bucket-width` /
+    /// `--bucket-slots`); the shape only matters for [`QueueKind::Bucket`].
+    pub fn with_shape(kind: QueueKind, shape: BucketShape) -> Self {
         match kind {
             QueueKind::Heap => SchedQueue::Heap(HeapQueue::new()),
-            QueueKind::Bucket => SchedQueue::Bucket(BucketQueue::new()),
+            QueueKind::Bucket => {
+                SchedQueue::Bucket(BucketQueue::with_shape(shape))
+            }
         }
     }
 

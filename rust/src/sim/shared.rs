@@ -95,6 +95,19 @@ pub struct PdesStats {
     /// occupied (`--xbar-arb border`; deterministic — a request that
     /// waits k borders counts k times).
     pub xbar_deferred_grants: AtomicU64,
+    /// `--profile`: host ns spent executing window claims, summed over
+    /// threads (host-timing dependent; zero when profiling is off).
+    pub prof_window_ns: AtomicU64,
+    /// `--profile`: host ns waiting at the freeze barrier (phase 1),
+    /// summed over threads — the load-imbalance signal.
+    pub prof_freeze_wait_ns: AtomicU64,
+    /// `--profile`: host ns in the border sync (inbox merge + xbar grants
+    /// + mailbox drain + horizon publish), summed over threads.
+    pub prof_border_sync_ns: AtomicU64,
+    /// `--profile`: host ns from entering the publish barrier to leaving
+    /// the verdict barrier (phases 2+3, including the leader's planning),
+    /// summed over threads.
+    pub prof_publish_wait_ns: AtomicU64,
 }
 
 /// Bits of the canonical injector key reserved for the per-domain send

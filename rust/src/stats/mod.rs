@@ -35,6 +35,12 @@ pub struct Summary {
     pub xbar_staged: u64,
     /// Crossbar grant decisions deferred at borders (deterministic).
     pub xbar_deferred_grants: u64,
+    /// `--profile` phase breakdowns, host ns summed over threads (all zero
+    /// when profiling is off; host-timing dependent like `host_ns`).
+    pub prof_window_ns: u64,
+    pub prof_freeze_wait_ns: u64,
+    pub prof_border_sync_ns: u64,
+    pub prof_publish_wait_ns: u64,
     pub l1i_miss_rate: f64,
     pub l1d_miss_rate: f64,
     pub l2_miss_rate: f64,
@@ -82,6 +88,10 @@ impl Summary {
             inbox_merge_ns_per_window: r.pdes.merge_ns_per_window(),
             xbar_staged: r.pdes.xbar_staged,
             xbar_deferred_grants: r.pdes.xbar_deferred_grants,
+            prof_window_ns: r.pdes.prof_window_ns,
+            prof_freeze_wait_ns: r.pdes.prof_freeze_wait_ns,
+            prof_border_sync_ns: r.pdes.prof_border_sync_ns,
+            prof_publish_wait_ns: r.pdes.prof_publish_wait_ns,
             l1i_miss_rate: avg_miss_rate(r, ".l1i.miss_rate"),
             l1d_miss_rate: avg_miss_rate(r, ".l1d.miss_rate"),
             l2_miss_rate: avg_miss_rate(r, ".l2.miss_rate"),
@@ -111,6 +121,10 @@ impl Summary {
             .f64("inbox_merge_ns_per_window", self.inbox_merge_ns_per_window)
             .u64("xbar_staged", self.xbar_staged)
             .u64("xbar_deferred_grants", self.xbar_deferred_grants)
+            .u64("prof_window_ns", self.prof_window_ns)
+            .u64("prof_freeze_wait_ns", self.prof_freeze_wait_ns)
+            .u64("prof_border_sync_ns", self.prof_border_sync_ns)
+            .u64("prof_publish_wait_ns", self.prof_publish_wait_ns)
             .f64("l1i_miss_rate", self.l1i_miss_rate)
             .f64("l1d_miss_rate", self.l1d_miss_rate)
             .f64("l2_miss_rate", self.l2_miss_rate)

@@ -3,4 +3,7 @@
 
 pub mod cli;
 pub mod json;
+pub mod padded;
 pub mod prop;
+
+pub use padded::CachePadded;

@@ -1,0 +1,71 @@
+//! Cache-line padding for per-domain hot words.
+//!
+//! The threaded kernel keeps per-domain scalars (`next_ticks`, `loads`)
+//! in dense `Vec`s — eight `AtomicU64`s share one 64-byte line, so eight
+//! threads publishing their horizons at a border ping-pong the same line
+//! (false sharing). [`CachePadded`] gives each element its own line(s):
+//! 128-byte alignment covers the adjacent-line prefetcher on modern x86
+//! (pairs of lines move together) and is what crossbeam settled on for
+//! the same reason.
+//!
+//! The wrapper is deliberately tiny: `Deref`/`DerefMut` make
+//! `padded[i].store(..)` read exactly like the unpadded code it replaces.
+
+use std::ops::{Deref, DerefMut};
+
+/// Pads and aligns `T` to 128 bytes so two instances never share a cache
+/// line (or an adjacent-line prefetch pair).
+#[derive(Default, Debug)]
+#[repr(align(128))]
+pub struct CachePadded<T> {
+    value: T,
+}
+
+impl<T> CachePadded<T> {
+    pub fn new(value: T) -> Self {
+        CachePadded { value }
+    }
+
+    pub fn into_inner(self) -> T {
+        self.value
+    }
+}
+
+impl<T> Deref for CachePadded<T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        &self.value
+    }
+}
+
+impl<T> DerefMut for CachePadded<T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+    #[test]
+    fn elements_live_on_distinct_lines() {
+        assert_eq!(std::mem::align_of::<CachePadded<AtomicU64>>(), 128);
+        assert!(std::mem::size_of::<CachePadded<AtomicU64>>() >= 128);
+        let v: Vec<CachePadded<AtomicU64>> =
+            (0..4).map(|_| CachePadded::new(AtomicU64::new(0))).collect();
+        let a = &*v[0] as *const AtomicU64 as usize;
+        let b = &*v[1] as *const AtomicU64 as usize;
+        assert!(b - a >= 128, "adjacent elements {a:#x}/{b:#x} share a line");
+    }
+
+    #[test]
+    fn deref_reads_like_the_inner_type() {
+        let p = CachePadded::new(AtomicU64::new(7));
+        p.store(9, Relaxed);
+        assert_eq!(p.load(Relaxed), 9);
+        assert_eq!(p.into_inner().into_inner(), 9);
+    }
+}

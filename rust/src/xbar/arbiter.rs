@@ -30,11 +30,14 @@ pub struct XbarArbiter {
     /// Grants issued by this arbiter's border passes (deterministic under
     /// `--xbar-arb border`).
     granted: u64,
+    /// IO-free borders where the arbitration pass (and its lock) was
+    /// skipped entirely — on most workloads the overwhelming majority.
+    skipped_borders: u64,
 }
 
 impl XbarArbiter {
     pub fn new(name: String, xbar: Arc<XbarState>) -> Self {
-        XbarArbiter { name, xbar, granted: 0 }
+        XbarArbiter { name, xbar, granted: 0, skipped_borders: 0 }
     }
 }
 
@@ -58,6 +61,14 @@ impl Component for XbarArbiter {
         if !ctx.xbar_border() {
             return;
         }
+        // IO-free border fast path: nothing staged this window and no
+        // carried-over pending grants — the arbitration would be a no-op,
+        // so skip it (and the `arb` lock) on one relaxed load. Exact
+        // because every sender is parked at the freeze barrier.
+        if !self.xbar.has_border_work() {
+            self.skipped_borders += 1;
+            return;
+        }
         let grants =
             self.xbar.border_grants(ctx.now(), &ctx.shared().pdes);
         self.granted += grants.len() as u64;
@@ -73,6 +84,7 @@ impl Component for XbarArbiter {
 
     fn stats(&self, out: &mut StatSink) {
         out.add_u64("granted", self.granted);
+        out.add_u64("skipped_borders", self.skipped_borders);
         let pending: u64 = (0..self.xbar.n_layers())
             .map(|l| self.xbar.pending_len(l) as u64)
             .sum();

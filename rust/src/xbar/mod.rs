@@ -102,6 +102,14 @@ pub struct XbarState {
     layers: Vec<Mutex<Layer>>,
     /// Border-staged arbitration state (inert under `--xbar-arb host`).
     arb: Mutex<ArbState>,
+    /// Requests the next border arbitration must look at: the window's
+    /// stagings plus every carried-over pending queue entry. Lets
+    /// [`XbarState::has_border_work`] answer the IO-free-border question
+    /// with one relaxed load, so the per-domain arbiter hook skips the
+    /// `arb` lock entirely on the (overwhelmingly common) borders with no
+    /// IO traffic. Senders only increment mid-window; the exact value is
+    /// re-established by `border_grants` inside the quiescent span.
+    border_work: AtomicU64,
     /// Crossbar traversal latency (request and response each).
     pub latency: Tick,
     /// Retry backoff after a host-time mutex collision.
@@ -137,6 +145,7 @@ impl XbarState {
                 stage_seqs: Vec::new(),
                 pending,
             }),
+            border_work: AtomicU64::new(0),
             latency,
             retry_delay,
             occupancies: AtomicU64::new(0),
@@ -250,8 +259,18 @@ impl XbarState {
             }
         };
         arb.stage.push(StagedReq { req_tick, sender_dom, seq, layer, who, pkt });
+        self.border_work.fetch_add(1, Relaxed);
         stats.xbar_staged.fetch_add(1, Relaxed);
         true
+    }
+
+    /// Whether the next border arbitration has anything to decide (staged
+    /// requests or carried-over pending grants). One relaxed load — the
+    /// IO-free-border fast path checked by
+    /// [`arbiter::XbarArbiter::border_merge`] before taking any lock.
+    /// Exact inside the quiescent span (senders are parked).
+    pub fn has_border_work(&self) -> bool {
+        self.border_work.load(Relaxed) != 0
     }
 
     /// Layer requests currently staged for the next border arbitration.
@@ -325,6 +344,11 @@ impl XbarState {
             });
         }
         stats.xbar_deferred_grants.fetch_add(deferred, Relaxed);
+        // Re-establish the fast-path counter: exactly the carried-over
+        // pending entries survive this border (the quiescent span keeps
+        // senders parked, so no increment races this store).
+        let remaining: u64 = pending.iter().map(|q| q.len() as u64).sum();
+        self.border_work.store(remaining, Relaxed);
         grants
     }
 
@@ -577,6 +601,25 @@ mod tests {
         assert_eq!(g.len(), 2, "independent layers both grant");
         let targets: Vec<CompId> = g.iter().map(|g| g.target).collect();
         assert!(targets.contains(&CompId(10)) && targets.contains(&CompId(11)));
+    }
+
+    #[test]
+    fn border_work_tracks_staged_and_pending() {
+        let stats = PdesStats::default();
+        let x = xbar2b();
+        assert!(!x.has_border_work(), "fresh crossbar: IO-free border");
+        stage(&x, 1, 1, 10, 1, &stats);
+        assert!(x.has_border_work());
+        // Grant consumes the staged request: back to IO-free.
+        assert_eq!(x.border_grants(16, &stats).len(), 1);
+        assert!(!x.has_border_work());
+        // Deferred grants keep the border busy until they drain.
+        stage(&x, 2, 2, 20, 2, &stats);
+        assert!(x.border_grants(32, &stats).is_empty(), "layer occupied");
+        assert!(x.has_border_work(), "pending carry-over is border work");
+        x.release(IO_BASE, CompId(1));
+        assert_eq!(x.border_grants(48, &stats).len(), 1);
+        assert!(!x.has_border_work());
     }
 
     #[test]

@@ -1,0 +1,152 @@
+//! Gates for the raw-speed campaign (ISSUE 6): every hot-path
+//! optimisation — cache-line padding of the shared per-domain arrays, the
+//! k-way border inbox merge, the mailbox drain-into scratch, the IO-free
+//! crossbar border skip, the bucket-queue live bitmap and the tunable
+//! calendar geometry — must be invisible to the simulation. The matrix
+//! runs {fig4-2, mesh-64} × {heap, bucket} × `--threads {1,8}` with
+//! `--profile` enabled and asserts the threaded kernel stays bit-identical
+//! to the virtual reference: `sim_ticks`, every deterministic PDES
+//! counter, and every per-component statistic.
+//!
+//! The `--profile` instrumentation itself is also gated: it must record
+//! wall-time without perturbing any simulated result, and a non-default
+//! `--bucket-width`/`--bucket-slots` geometry must only change host speed,
+//! never outcomes.
+
+use parti_sim::config::{Mode, RunConfig};
+use parti_sim::harness::{make_workload, run_with_workload};
+use parti_sim::pdes::RunResult;
+use parti_sim::sched::{BucketShape, QuantumPolicy, QueueKind};
+use parti_sim::sim::time::NS;
+use parti_sim::spec::{platforms, SystemSpec};
+
+/// Bit-identity: everything deterministic must match exactly (the
+/// `tests/xbar_arb.rs` criteria; host-side counters — `steals`,
+/// `stolen_events`, `inbox_reordered`, `inbox_merge_ns`, the `prof_*`
+/// wall-time buckets — are excluded by design: they describe the host
+/// execution, not the simulation).
+fn assert_bit_identical(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.sim_ticks, b.sim_ticks, "{what}: sim_ticks");
+    assert_eq!(a.events, b.events, "{what}: events");
+    assert_eq!(a.pdes.cross_events, b.pdes.cross_events, "{what}: cross");
+    assert_eq!(a.pdes.postponed, b.pdes.postponed, "{what}: postponed");
+    assert_eq!(a.pdes.tpp_sum, b.pdes.tpp_sum, "{what}: tpp_sum");
+    assert_eq!(a.pdes.barriers, b.pdes.barriers, "{what}: barriers");
+    assert_eq!(
+        a.pdes.quanta_skipped, b.pdes.quanta_skipped,
+        "{what}: quanta_skipped"
+    );
+    assert_eq!(
+        a.pdes.inbox_staged, b.pdes.inbox_staged,
+        "{what}: inbox_staged"
+    );
+    assert_eq!(
+        a.pdes.xbar_staged, b.pdes.xbar_staged,
+        "{what}: xbar_staged"
+    );
+    assert_eq!(
+        a.pdes.xbar_deferred_grants, b.pdes.xbar_deferred_grants,
+        "{what}: xbar_deferred_grants"
+    );
+    assert_eq!(
+        a.stats.entries.len(),
+        b.stats.entries.len(),
+        "{what}: stat cardinality"
+    );
+    for ((an, av), (bn, bv)) in a.stats.entries.iter().zip(&b.stats.entries) {
+        assert_eq!(an, bn, "{what}: stat name order");
+        assert_eq!(av, bv, "{what}: per-component stat {an}");
+    }
+}
+
+/// PDES config on `spec` with a sharing workload plus IO traffic, so the
+/// matrix exercises the inbox merge, the crossbar arbitration *and* its
+/// IO-free skip (at 5 accesses per 1000 ops = 1 per 200, most borders
+/// still carry no IO; ops_per_core must exceed 200 so every core issues
+/// at least one — same geometry as tests/xbar_arb.rs).
+fn matrix_cfg(spec: &SystemSpec, queue: QueueKind) -> RunConfig {
+    let mut cfg = RunConfig::for_spec(spec);
+    cfg.app = "canneal".into();
+    cfg.ops_per_core = if spec.cores <= 2 { 768 } else { 224 };
+    cfg.system.io_milli = 5;
+    cfg.mode = Mode::Virtual;
+    cfg.quantum = 8 * NS;
+    cfg.quantum_policy = QuantumPolicy::Fixed;
+    cfg.queue = queue;
+    cfg
+}
+
+#[test]
+fn optimised_matrix_is_bit_identical_with_profile_enabled() {
+    for name in ["fig4-2", "mesh-64"] {
+        let spec = platforms::preset(name).unwrap();
+        for queue in [QueueKind::Heap, QueueKind::Bucket] {
+            let vcfg = matrix_cfg(&spec, queue);
+            let w = make_workload(&vcfg).unwrap();
+            let reference = run_with_workload(&vcfg, &w).unwrap();
+            assert!(reference.events > 0, "{name}: empty run");
+            assert!(
+                reference.pdes.inbox_staged > 0,
+                "{name}: sharing app must exercise the inbox handoff"
+            );
+            assert!(
+                reference.pdes.xbar_staged > 0,
+                "{name}: io_milli must exercise the crossbar arbitration"
+            );
+            for threads in [1usize, 8] {
+                let mut cfg = vcfg.clone();
+                cfg.mode = Mode::Parallel;
+                cfg.threads = threads;
+                cfg.profile = true;
+                let r = run_with_workload(&cfg, &w).unwrap();
+                let what = format!("{name}/{queue:?}/threads={threads}");
+                assert_bit_identical(&reference, &r, &what);
+                assert!(
+                    r.pdes.profiled(),
+                    "{what}: --profile recorded no wall time"
+                );
+                assert!(
+                    r.pdes.prof_window_ns > 0,
+                    "{what}: window execution must show up in the profile"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn profile_flag_does_not_perturb_the_virtual_kernel() {
+    let spec = platforms::preset("fig4-2").unwrap();
+    let cfg = matrix_cfg(&spec, QueueKind::Bucket);
+    let w = make_workload(&cfg).unwrap();
+    let plain = run_with_workload(&cfg, &w).unwrap();
+    assert!(!plain.pdes.profiled(), "profile off must record nothing");
+    let mut pcfg = cfg.clone();
+    pcfg.profile = true;
+    let profiled = run_with_workload(&pcfg, &w).unwrap();
+    assert_bit_identical(&plain, &profiled, "virtual/profile");
+    assert_eq!(
+        plain.pdes.inbox_reordered, profiled.pdes.inbox_reordered,
+        "same kernel, same workload: even the host-order divergence matches"
+    );
+    assert!(profiled.pdes.prof_window_ns > 0, "virtual fills the window bucket");
+}
+
+#[test]
+fn bucket_geometry_changes_speed_never_outcomes() {
+    let spec = platforms::preset("fig4-2").unwrap();
+    let cfg = matrix_cfg(&spec, QueueKind::Bucket);
+    let w = make_workload(&cfg).unwrap();
+    let reference = run_with_workload(&cfg, &w).unwrap();
+    for (width, nbuckets) in [(256u64, 16usize), (64, 4), (1 << 16, 128)] {
+        let mut scfg = cfg.clone();
+        scfg.bucket_shape =
+            BucketShape { width, nbuckets }.validate().unwrap();
+        let r = run_with_workload(&scfg, &w).unwrap();
+        assert_bit_identical(
+            &reference,
+            &r,
+            &format!("shape {width}x{nbuckets}"),
+        );
+    }
+}

@@ -26,6 +26,7 @@ DEFAULT_FILES = [
     "docs/README.md",
     "docs/CLI.md",
     "docs/DETERMINISM.md",
+    "docs/PERF.md",
     "docs/PLATFORMS.md",
     "docs/XBAR.md",
 ]

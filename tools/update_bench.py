@@ -1,0 +1,148 @@
+#!/usr/bin/env python3
+"""Merge a measured BENCH_sched.json artifact into the committed copy.
+
+The perf-trajectory workflow (docs/PERF.md): CI runs `cargo bench --bench
+kernel_micro`, which rewrites BENCH_sched.json with measured numbers and
+uploads it as an artifact. This script brings those numbers back into the
+repository copy — with a schema check, so a bench that silently grows,
+drops or renames a row fails loudly instead of drifting:
+
+* every key of the committed schema must be present in the artifact,
+* the artifact must not contain unknown keys,
+* every leaf must be a number or null (strings live only in the
+  documentation keys `status` / `note`, which are exempt and preserved
+  from the schema side except `status`, which the merge takes from the
+  artifact).
+
+Usage:
+    tools/update_bench.py ARTIFACT.json            # validate + merge
+    tools/update_bench.py --check ARTIFACT.json    # validate only (CI)
+    tools/update_bench.py --repo PATH ARTIFACT.json
+
+`--repo` points at the committed copy (default: BENCH_sched.json next to
+this script's repository root); with `--check` it is only read, never
+written.
+"""
+
+import argparse
+import json
+import numbers
+import os
+import sys
+
+# Keys that carry prose, not measurements: exempt from the numeric-leaf
+# rule and from the merge (except `status`, which the artifact decides).
+DOC_KEYS = {"status", "note"}
+
+
+def is_leaf(value):
+    return value is None or isinstance(value, numbers.Number)
+
+
+def schema_errors(schema, artifact, path=""):
+    """Recursively compare the artifact's structure to the schema's."""
+    errors = []
+    for key, sval in schema.items():
+        if path == "" and key in DOC_KEYS:
+            continue
+        here = f"{path}.{key}" if path else key
+        if key not in artifact:
+            errors.append(f"missing key `{here}`")
+            continue
+        aval = artifact[key]
+        if isinstance(sval, dict):
+            if not isinstance(aval, dict):
+                errors.append(f"`{here}` must be an object, got {type(aval).__name__}")
+            else:
+                errors.extend(schema_errors(sval, aval, here))
+        else:
+            if not is_leaf(aval):
+                errors.append(
+                    f"`{here}` must be a number or null, got {type(aval).__name__}"
+                )
+    for key in artifact:
+        if path == "" and key in DOC_KEYS:
+            continue
+        if key not in schema:
+            here = f"{path}.{key}" if path else key
+            errors.append(f"unknown key `{here}` (schema drift: update BENCH_sched.json and tools/update_bench.py together)")
+    return errors
+
+
+def merge(schema, artifact):
+    """Return the schema structure with the artifact's leaf values."""
+    out = {}
+    for key, sval in schema.items():
+        if key in DOC_KEYS:
+            if key == "status":
+                out[key] = artifact.get("status", sval)
+            else:
+                out[key] = sval
+        elif isinstance(sval, dict):
+            out[key] = merge(sval, artifact[key])
+        else:
+            out[key] = artifact[key]
+    return out
+
+
+def count_measured(node):
+    """(non-null leaves, total leaves) under `node`, ignoring doc keys."""
+    filled = total = 0
+    for key, value in node.items():
+        if key in DOC_KEYS:
+            continue
+        if isinstance(value, dict):
+            f, t = count_measured(value)
+            filled += f
+            total += t
+        else:
+            total += 1
+            filled += value is not None
+    return filled, total
+
+
+def main():
+    repo_default = os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_sched.json"
+    )
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("artifact", help="measured BENCH_sched.json (CI artifact)")
+    ap.add_argument(
+        "--repo",
+        default=repo_default,
+        help="committed copy holding the schema (default: repo root)",
+    )
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="validate the artifact against the schema; write nothing",
+    )
+    args = ap.parse_args()
+
+    with open(args.repo) as f:
+        schema = json.load(f)
+    with open(args.artifact) as f:
+        artifact = json.load(f)
+
+    errors = schema_errors(schema, artifact)
+    if errors:
+        print(f"{args.artifact}: schema check FAILED", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+
+    filled, total = count_measured(artifact)
+    print(f"{args.artifact}: schema ok ({filled}/{total} leaves measured)")
+    if args.check:
+        return 0
+
+    merged = merge(schema, artifact)
+    with open(args.repo, "w") as f:
+        json.dump(merged, f, indent=1)
+        f.write("\n")
+    print(f"merged into {args.repo}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
