@@ -281,6 +281,50 @@ fn main() {
     }
     json = json.obj("topology_16_core", topo);
 
+    // Synthetic traffic patterns on the 16-core ring (docs/TRAFFIC.md):
+    // the kernel cost of the adversarial TrafficSpec loads the Table 3
+    // apps never produce. One contention row (hotspot), one geometry row
+    // (transpose) and the uniform-random baseline; the pattern *shapes*
+    // themselves are gated by rust/tests/traffic.rs — this row tracks
+    // what they cost to simulate.
+    let mut traffic_rows = JsonObj::new();
+    {
+        let ring = platforms::preset("ring-16").expect("ring-16 preset");
+        for name in ["uniform-random", "hotspot", "transpose"] {
+            let mut cfg = RunConfig::for_spec(&ring);
+            cfg.traffic = Some(name.to_string());
+            cfg.ops_per_core = 512;
+            cfg.mode = parti_sim::config::Mode::Virtual;
+            let w = make_workload(&cfg).expect("workload");
+            let mut last = None;
+            let (m, lo, hi) = measure(5, || {
+                last = Some(run_with_workload(&cfg, &w).unwrap());
+            });
+            let r = last.expect("measured at least once");
+            bench_util::report(
+                &format!("virtual 16-core traffic[{name}]"),
+                m,
+                lo,
+                hi,
+            );
+            let requeued = r.stats.get("hnf.requeued").unwrap_or(0.0);
+            println!(
+                "  {name}: sim_ticks={} retries={} hnf_requeued={requeued:.0}",
+                r.sim_ticks, r.pdes.traffic_retries
+            );
+            traffic_rows = traffic_rows.obj(
+                &name.replace('-', "_"),
+                JsonObj::new()
+                    .u64("median_ns", m as u64)
+                    .u64("sim_ticks", r.sim_ticks)
+                    .u64("traffic_retries", r.pdes.traffic_retries)
+                    .u64("hnf_requeued", requeued as u64)
+                    .f64("events_per_sec", r.events_per_sec()),
+            );
+        }
+    }
+    json = json.obj("traffic_pattern_16_core", traffic_rows);
+
     // Adaptive quantum on the same 16-domain configuration: barrier count
     // and wall-clock, fixed vs horizon (results are bit-identical by the
     // determinism gate — only the border count may shrink), plus the

@@ -130,6 +130,14 @@ pub struct RunConfig {
     /// Quantum t_qΔ in ticks (ignored in serial mode).
     pub quantum: Tick,
     pub app: String,
+    /// Synthetic-traffic selector (`--traffic <name|file.toml>`): a named
+    /// scenario from [`crate::spec::traffic::scenarios`] or a TOML
+    /// [`crate::spec::traffic::TrafficSpec`] file. `None` runs `app`;
+    /// `Some` replaces the app workload with the elaborated traffic
+    /// (docs/TRAFFIC.md). A traffic spec carries its own `seed`, so a
+    /// scenario file is a self-contained, repeatable experiment; the
+    /// run-level `seed` below drives app workloads only.
+    pub traffic: Option<String>,
     pub ops_per_core: usize,
     pub seed: u64,
     /// Hard simulated-time limit.
@@ -169,6 +177,7 @@ impl Default for RunConfig {
             mode: Mode::Serial,
             quantum: 16 * NS,
             app: "synthetic".to_string(),
+            traffic: None,
             ops_per_core: 4096,
             seed: 42,
             max_ticks: 10_000_000_000_000, // 10 s simulated

@@ -14,6 +14,7 @@
 //! Instruction fetch is modelled architecturally: one line-granular ifetch
 //! through the L1I every `ifetch_every` ops, walking a private code region.
 
+use std::sync::atomic::Ordering::Relaxed;
 use std::sync::Arc;
 
 use crate::proto::{Cmd, Packet};
@@ -220,6 +221,10 @@ impl TimingCpu {
             }
             if self.outstanding >= self.params.lsq_size {
                 self.lsq_stalls += 1;
+                // Offered load the memory system pushed back on — the
+                // global backpressure signal next to offered/accepted
+                // (deterministic: a pure function of the simulation).
+                ctx.shared().pdes.traffic_retries.fetch_add(1, Relaxed);
                 return; // resume on MemResp
             }
             if self.gap_left > 0 {
@@ -340,6 +345,10 @@ impl TimingCpu {
         let is_ifetch = pkt.id & IFETCH_BIT != 0;
         if !is_ifetch {
             self.committed_ops += 1;
+            // One offered trace op accepted to completion; compared
+            // against `traffic_offered` in the summary, the gap is the
+            // unaccepted (truncated) remainder of a saturating run.
+            ctx.shared().pdes.traffic_accepted.fetch_add(1, Relaxed);
             if pkt.cmd == Cmd::ReadResp {
                 // Commutative fold: O3 responses arrive out of order, and
                 // serial/parallel runs may reorder same-tick completions.

@@ -294,6 +294,108 @@ pub fn render_quantum_rows(rows: &[QuantumPolicyRow]) -> String {
     s
 }
 
+/// One row of the traffic sweep (`figt`): a platform preset × traffic
+/// scenario point on the measurement kernel, reporting the
+/// offered/accepted/retries backpressure triple (docs/TRAFFIC.md) next
+/// to the HN-F contention stats that separate the patterns (hotspot
+/// concentrates `requeued`/`snoops_sent`; neighbor barely touches them).
+pub struct TrafficRow {
+    pub platform: String,
+    pub pattern: String,
+    pub cores: usize,
+    pub sim_ms: f64,
+    pub offered: u64,
+    pub accepted: u64,
+    pub retries: u64,
+    /// HN-F per-line serialisation requeues, summed over HN-Fs.
+    pub hnf_requeued: u64,
+    /// Coherence snoops the HN-Fs sent, summed.
+    pub snoops_sent: u64,
+}
+
+/// Platform presets the traffic sweep crosses with the scenario registry
+/// (one per interconnect topology, smallest first).
+pub const TRAFFIC_SWEEP_PLATFORMS: &[&str] = &["fig4-2", "ring-16", "mesh-64"];
+
+/// The topology × pattern traffic sweep: every scenario in
+/// [`crate::spec::traffic::scenarios`] on every preset of
+/// [`TRAFFIC_SWEEP_PLATFORMS`] that fits `--max-cores`, on the virtual
+/// measurement kernel (threaded with `--threaded`). Every reported
+/// counter is deterministic, so the table is a regression artefact, not
+/// just an illustration.
+pub fn fig_traffic(opts: &FigureOpts) -> Result<Vec<TrafficRow>> {
+    let mut rows = Vec::new();
+    for name in TRAFFIC_SWEEP_PLATFORMS {
+        let spec = crate::spec::platforms::resolve(name)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        if spec.cores > opts.max_cores {
+            continue;
+        }
+        for t in crate::spec::traffic::scenarios() {
+            let mut cfg = RunConfig::for_spec(&spec);
+            cfg.mode =
+                if opts.threaded { Mode::Parallel } else { Mode::Virtual };
+            cfg.quantum = *QUANTA_NS.last().unwrap() * NS;
+            cfg.quantum_policy = opts.quantum_policy;
+            cfg.ops_per_core = opts.ops_per_core;
+            cfg.host_cores = opts.host_cores;
+            cfg.traffic = Some(t.name.clone());
+            let r = run_once(&cfg)?;
+            rows.push(TrafficRow {
+                platform: spec.name.clone(),
+                pattern: t.name.clone(),
+                cores: spec.cores,
+                sim_ms: r.sim_seconds() * 1e3,
+                offered: r.pdes.traffic_offered,
+                accepted: r.pdes.traffic_accepted,
+                retries: r.pdes.traffic_retries,
+                hnf_requeued: r.stats.sum_suffix(".requeued") as u64,
+                snoops_sent: r.stats.sum_suffix(".snoops_sent") as u64,
+            });
+        }
+    }
+    if rows.is_empty() {
+        anyhow::bail!(
+            "no traffic sweep platform fits --max-cores {} (presets: {})",
+            opts.max_cores,
+            TRAFFIC_SWEEP_PLATFORMS.join(", ")
+        );
+    }
+    Ok(rows)
+}
+
+/// Render the traffic sweep as an aligned text table.
+pub fn render_traffic_rows(rows: &[TrafficRow]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<10} {:<18} {:>6} {:>10} {:>9} {:>9} {:>8} {:>9} {:>8}\n",
+        "platform",
+        "pattern",
+        "cores",
+        "sim(ms)",
+        "offered",
+        "accepted",
+        "retries",
+        "requeued",
+        "snoops"
+    ));
+    for r in rows {
+        s.push_str(&format!(
+            "{:<10} {:<18} {:>6} {:>10.4} {:>9} {:>9} {:>8} {:>9} {:>8}\n",
+            r.platform,
+            r.pattern,
+            r.cores,
+            r.sim_ms,
+            r.offered,
+            r.accepted,
+            r.retries,
+            r.hnf_requeued,
+            r.snoops_sent,
+        ));
+    }
+    s
+}
+
 /// §3.3: "simulations using the timing protocol and the detailed O3CPU
 /// yield only 20% of the performance obtained with the atomic protocol".
 pub struct ProtocolComparison {

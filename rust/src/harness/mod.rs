@@ -13,9 +13,20 @@ use crate::ruby::{build_atomic_system, build_system};
 use crate::runtime::Runtime;
 use crate::workload::{app_by_name, Workload};
 
-/// Produce the workload for a run: artifact path when available, bit-exact
-/// procedural fallback otherwise.
+/// Produce the workload for a run: synthetic traffic when `--traffic`
+/// selects a spec (docs/TRAFFIC.md), else the app's artifact path when
+/// available, bit-exact procedural fallback otherwise.
 pub fn make_workload(cfg: &RunConfig) -> Result<Workload> {
+    if let Some(arg) = &cfg.traffic {
+        let spec = crate::spec::traffic::resolve(arg)
+            .map_err(|e| anyhow!("{e}"))?;
+        spec.validate().map_err(|e| anyhow!("{e}"))?;
+        return Ok(crate::workload::traffic_workload(
+            &spec,
+            cfg.system.cores,
+            cfg.ops_per_core,
+        ));
+    }
     let app = app_by_name(&cfg.app)
         .ok_or_else(|| anyhow!("unknown app '{}'", cfg.app))?;
     let dir = Runtime::default_dir();

@@ -4,8 +4,10 @@
 //! parti-sim run      --app blackscholes --cores 8 --mode virtual --quantum-ns 8
 //! parti-sim run      --platform ring-16 --mode parallel  # named platform
 //! parti-sim run      --platform my_soc.toml              # spec from disk
+//! parti-sim run      --traffic hotspot --threads 8       # synthetic traffic
 //! parti-sim compare  --app canneal --cores 32           # serial vs PDES
 //! parti-sim platforms                                   # preset registry
+//! parti-sim traffic                                     # traffic scenarios
 //! parti-sim fig7|fig8|fig9|tables|protocols             # paper artefacts
 //! parti-sim ffwd     --app dedup --cores 4              # KVM fast-forward
 //! parti-sim help
@@ -16,8 +18,8 @@ use anyhow::Result;
 use parti_sim::config::{Mode, RunConfig};
 use parti_sim::cpu::CpuModel;
 use parti_sim::harness::figures::{
-    atomic_vs_timing, fig7, fig8, fig9, fig_quantum_policy,
-    render_quantum_rows, render_rows, FigureOpts,
+    atomic_vs_timing, fig7, fig8, fig9, fig_quantum_policy, fig_traffic,
+    render_quantum_rows, render_rows, render_traffic_rows, FigureOpts,
 };
 use parti_sim::harness::{compare_modes, run_once, tables};
 use parti_sim::pdes::HostModel;
@@ -39,10 +41,13 @@ COMMANDS
   compare    serial reference vs PDES: speedup + accuracy
   platforms  list platform presets (--describe NAME, --dump NAME,
              --validate FILE.toml)
+  traffic    list synthetic-traffic scenarios (--describe NAME,
+             --dump NAME, --validate FILE.toml; docs/TRAFFIC.md)
   fig7       core & quantum sweep (synthetic + blackscholes)
   fig8       PARSEC subset + STREAM @ 32 cores
   fig9       cache miss-rate accuracy (same runs as fig8)
   figq       adaptive-quantum sweep: fixed vs horizon barrier savings
+  figt       traffic sweep: topology presets × traffic patterns
   tables     paper tables 1-3 (--which 0|1|2|3)
   protocols  §3.3 atomic-vs-timing throughput comparison
   ffwd       KVM fast-forward (functional warm-up)
@@ -56,6 +61,10 @@ RUN/COMPARE/FFWD FLAGS
                     flags still override it    [legacy Table 2 star]
   --app NAME        synthetic|blackscholes|canneal|dedup|ferret|
                     fluidanimate|swaptions|stream     [synthetic]
+  --traffic T       named traffic scenario (see `traffic`) or
+                    a TrafficSpec .toml file; replaces --app
+                    with elaborated synthetic traffic
+                    (docs/TRAFFIC.md)                 [off]
   --cores N         simulated cores          [4, or the platform's]
   --cpu MODEL       o3|minor|atomic|kvm               [o3]
   --mode MODE       serial|parallel|virtual           [serial]
@@ -126,6 +135,7 @@ fn run_config(a: &Args) -> Result<RunConfig> {
     // the platform (or the legacy baseline) already set.
     cfg.system.cores = a.get_usize("cores", cfg.system.cores);
     cfg.system.io_milli = a.get_u64("io-milli", cfg.system.io_milli);
+    cfg.traffic = a.get("traffic").map(String::from);
     if let Some(cpu) = a.get("cpu") {
         cfg.cpu_model = CpuModel::parse(cpu)
             .ok_or_else(|| anyhow::anyhow!("bad --cpu {cpu}"))?;
@@ -242,6 +252,34 @@ fn main() -> Result<()> {
                 );
             }
         }
+        Some("traffic") => {
+            use parti_sim::spec::traffic;
+            if let Some(name) = args.get("describe") {
+                let spec =
+                    traffic::resolve(name).map_err(|e| anyhow::anyhow!("{e}"))?;
+                println!("{}", spec.describe());
+            } else if let Some(name) = args.get("dump") {
+                let spec =
+                    traffic::resolve(name).map_err(|e| anyhow::anyhow!("{e}"))?;
+                print!("{}", spec.to_toml());
+            } else if let Some(path) = args.get("validate") {
+                let spec =
+                    traffic::resolve(path).map_err(|e| anyhow::anyhow!("{e}"))?;
+                spec.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
+                println!(
+                    "ok: traffic spec `{}` is valid ({}, seed {})",
+                    spec.name,
+                    spec.pattern.describe(),
+                    spec.seed
+                );
+            } else {
+                print!("{}", traffic::render_list());
+                println!(
+                    "\nUse `run --traffic <name|file.toml>`; `--describe`, \
+                     `--dump`, `--validate` inspect a spec (docs/TRAFFIC.md)."
+                );
+            }
+        }
         Some("fig7") => {
             let opts = figure_opts(&args, 120)?;
             println!("Fig. 7 — speedup & simulated-time error vs cores × quantum\n");
@@ -265,6 +303,15 @@ fn main() -> Result<()> {
                  policies; only border count and wall-clock change)\n"
             );
             println!("{}", render_quantum_rows(&fig_quantum_policy(&opts)?));
+        }
+        Some("figt") => {
+            let opts = figure_opts(&args, 64)?;
+            println!(
+                "Traffic sweep — topology presets × traffic patterns on the \
+                 measurement kernel\n(all reported counters are \
+                 deterministic; docs/TRAFFIC.md)\n"
+            );
+            println!("{}", render_traffic_rows(&fig_traffic(&opts)?));
         }
         Some("tables") => {
             let which = args.get_usize("which", 0);
@@ -350,6 +397,14 @@ fn print_summary(cfg: &RunConfig, s: &Summary) {
     println!(
         "  xbar: arb={:?} staged={} deferred_grants={}",
         cfg.xbar_arb, s.xbar_staged, s.xbar_deferred_grants
+    );
+    println!(
+        "  traffic: {} offered={} accepted={} retries={} phases={}",
+        cfg.traffic.as_deref().unwrap_or("app-trace"),
+        s.traffic_offered,
+        s.traffic_accepted,
+        s.traffic_retries,
+        s.traffic_phases
     );
     if cfg.profile {
         println!(

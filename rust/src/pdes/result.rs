@@ -56,6 +56,17 @@ pub struct PdesSnapshot {
     /// Border grant decisions deferred on a still-occupied layer
     /// (deterministic; a request waiting k borders counts k times).
     pub xbar_deferred_grants: u64,
+    /// Memory ops the workload offered (total trace ops; deterministic).
+    pub traffic_offered: u64,
+    /// Offered ops accepted to completion by the memory system
+    /// (deterministic; `< traffic_offered` when a saturating pattern is
+    /// truncated — the offered-vs-accepted backpressure signal).
+    pub traffic_accepted: u64,
+    /// LSQ-full issue retries — backpressure on offered load
+    /// (deterministic).
+    pub traffic_retries: u64,
+    /// Traffic phases of the workload (`bursty-phase`; deterministic).
+    pub traffic_phases: u64,
     /// `--profile`: host ns executing window claims, summed over threads.
     pub prof_window_ns: u64,
     /// `--profile`: host ns waiting at the freeze barrier, summed over
@@ -83,6 +94,10 @@ impl PdesSnapshot {
             inbox_merge_ns: s.pdes.inbox_merge_ns.load(Relaxed),
             xbar_staged: s.pdes.xbar_staged.load(Relaxed),
             xbar_deferred_grants: s.pdes.xbar_deferred_grants.load(Relaxed),
+            traffic_offered: s.pdes.traffic_offered.load(Relaxed),
+            traffic_accepted: s.pdes.traffic_accepted.load(Relaxed),
+            traffic_retries: s.pdes.traffic_retries.load(Relaxed),
+            traffic_phases: s.pdes.traffic_phases.load(Relaxed),
             prof_window_ns: s.pdes.prof_window_ns.load(Relaxed),
             prof_freeze_wait_ns: s.pdes.prof_freeze_wait_ns.load(Relaxed),
             prof_border_sync_ns: s.pdes.prof_border_sync_ns.load(Relaxed),

@@ -705,7 +705,19 @@ pub fn build_from_spec(
     let id = b.add(shared_dom, Box::new(arb));
     debug_assert_eq!(id, lay.xbar_arb());
 
-    BuiltSystem { machine: b.finish(), xbar, layout: lay }
+    let machine = b.finish();
+    // Seed the offered-load side of the offered/accepted backpressure
+    // pair (docs/TRAFFIC.md): both are pure functions of the workload,
+    // so they participate in the bit-identity gate.
+    machine.shared.pdes.traffic_offered.store(
+        workload.total_ops() as u64,
+        std::sync::atomic::Ordering::Relaxed,
+    );
+    machine.shared.pdes.traffic_phases.store(
+        workload.phases() as u64,
+        std::sync::atomic::Ordering::Relaxed,
+    );
+    BuiltSystem { machine, xbar, layout: lay }
 }
 
 /// Build the atomic-protocol system (AtomicCPU / KVMCPU; serial only).
@@ -766,7 +778,16 @@ pub fn build_atomic_system(
             );
         }
     }
-    (b.finish(), mem)
+    let machine = b.finish();
+    machine.shared.pdes.traffic_offered.store(
+        workload.total_ops() as u64,
+        std::sync::atomic::Ordering::Relaxed,
+    );
+    machine.shared.pdes.traffic_phases.store(
+        workload.phases() as u64,
+        std::sync::atomic::Ordering::Relaxed,
+    );
+    (machine, mem)
 }
 
 #[cfg(test)]

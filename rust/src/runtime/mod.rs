@@ -149,6 +149,7 @@ mod pjrt_impl {
             cores,
             barrier_every: app.barrier_every,
             name: app.traits_.name.to_string(),
+            phase_ops: 0,
         })
     }
 

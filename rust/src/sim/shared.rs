@@ -95,6 +95,21 @@ pub struct PdesStats {
     /// occupied (`--xbar-arb border`; deterministic — a request that
     /// waits k borders counts k times).
     pub xbar_deferred_grants: AtomicU64,
+    /// Memory ops the workload offers: total trace ops elaborated,
+    /// seeded by the system builder (deterministic — a pure function of
+    /// the workload).
+    pub traffic_offered: AtomicU64,
+    /// Offered ops the memory system accepted to completion (committed
+    /// data ops, summed over timing cores; deterministic). Falls short
+    /// of `traffic_offered` exactly when a saturating traffic pattern
+    /// is truncated (e.g. by `max_ticks`) — the backpressure signal.
+    pub traffic_accepted: AtomicU64,
+    /// Issue attempts a core retried because its LSQ was full — offered
+    /// load the memory system pushed back on (deterministic).
+    pub traffic_retries: AtomicU64,
+    /// Traffic phases of the longest core trace (`bursty-phase`
+    /// workloads; 0 = unphased; deterministic).
+    pub traffic_phases: AtomicU64,
     /// `--profile`: host ns spent executing window claims, summed over
     /// threads (host-timing dependent; zero when profiling is off).
     pub prof_window_ns: AtomicU64,

@@ -1,0 +1,673 @@
+//! The declarative traffic API: [`TrafficSpec`] describes synthetic
+//! memory traffic — the pattern, its intensity, read/write mix, sharing
+//! degree and seed — independently of the platform it runs on
+//! ([`super::SystemSpec`]) and of how the run is executed
+//! ([`crate::config::RunConfig`]).
+//!
+//! The paper's evaluation drives every platform with the same CPU-bound
+//! Table 3 apps, which barely exercise the interconnect: the ring and
+//! mesh presets never see adversarial fabric load, so the border inbox
+//! merge, the `XbarArbiter` and the stealing policies are gated only on
+//! friendly inputs. A `TrafficSpec` closes that gap. It can be
+//!
+//! * built in code (the examples do this),
+//! * loaded from / saved to TOML ([`TrafficSpec::from_toml`],
+//!   [`TrafficSpec::to_toml`] — the same hand-rolled flat subset
+//!   `SystemSpec` uses; the build environment is offline),
+//! * taken from the named scenario registry ([`scenarios`],
+//!   `parti-sim run --traffic hotspot`),
+//! * validated with actionable errors ([`TrafficSpec::validate`]),
+//!
+//! and then *elaborated* into per-core op traces by
+//! [`crate::workload::traffic::traffic_workload`]: deterministic
+//! counter-based RNG streams keyed by `(seed, core)`, so the generated
+//! traffic — and therefore the simulation — is independent of thread
+//! count, steal decisions and host timing (`tests/traffic.rs` gates
+//! bit-identity for every pattern on every topology).
+//!
+//! See `docs/TRAFFIC.md` for the schema, the pattern catalog and the
+//! determinism argument.
+
+use std::path::Path;
+
+/// The six synthetic access patterns (`docs/TRAFFIC.md` has ASCII
+/// sketches of each). A pattern only shapes the *remote* share of a
+/// core's accesses — the `sharing_milli` knob says how many ops leave
+/// the core's own private region.
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub enum TrafficPattern {
+    /// Every core targets a uniformly random core's private region —
+    /// the baseline all-to-all load.
+    #[default]
+    UniformRandom,
+    /// All remote traffic hammers a tiny shared window homed at the
+    /// HN-F: per-line transaction serialisation and snoop stress.
+    Hotspot,
+    /// On an `s x s` grid of cores, core `(r, c)` targets core
+    /// `(c, r)`'s region — the classic matrix-transpose exchange with
+    /// long mesh paths (falls back to the antidiagonal partner
+    /// `n-1-c` when the core count is not a perfect square).
+    Transpose,
+    /// Core `c` targets core `c+1`'s region (wrapping): the
+    /// nearest-neighbour halo exchange, the shortest-path contrast to
+    /// [`TrafficPattern::Transpose`].
+    Neighbor,
+    /// Cores pair up `(0,1), (2,3), ...`: the even core *stores* into
+    /// the pair's shared buffer, the odd core *loads* from it —
+    /// one-way data flow through the home node.
+    ProducerConsumer,
+    /// Alternates calm and saturating phases every
+    /// [`TrafficSpec::phase_ops`] ops (remote targets as
+    /// [`TrafficPattern::UniformRandom`]): exercises backpressure and
+    /// per-window load swings.
+    BurstyPhase,
+}
+
+/// Every pattern, in listing / documentation order.
+pub const ALL_PATTERNS: &[TrafficPattern] = &[
+    TrafficPattern::UniformRandom,
+    TrafficPattern::Hotspot,
+    TrafficPattern::Transpose,
+    TrafficPattern::Neighbor,
+    TrafficPattern::ProducerConsumer,
+    TrafficPattern::BurstyPhase,
+];
+
+impl TrafficPattern {
+    /// Parse the spec-TOML / CLI spelling (the kebab-case keyword).
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "uniform-random" => TrafficPattern::UniformRandom,
+            "hotspot" => TrafficPattern::Hotspot,
+            "transpose" => TrafficPattern::Transpose,
+            "neighbor" => TrafficPattern::Neighbor,
+            "producer-consumer" => TrafficPattern::ProducerConsumer,
+            "bursty-phase" => TrafficPattern::BurstyPhase,
+            _ => return None,
+        })
+    }
+
+    /// The TOML / CLI keyword.
+    pub fn keyword(&self) -> &'static str {
+        match self {
+            TrafficPattern::UniformRandom => "uniform-random",
+            TrafficPattern::Hotspot => "hotspot",
+            TrafficPattern::Transpose => "transpose",
+            TrafficPattern::Neighbor => "neighbor",
+            TrafficPattern::ProducerConsumer => "producer-consumer",
+            TrafficPattern::BurstyPhase => "bursty-phase",
+        }
+    }
+
+    /// One-line characterisation for listings.
+    pub fn describe(&self) -> &'static str {
+        match self {
+            TrafficPattern::UniformRandom => {
+                "uniform spray over every core's private region"
+            }
+            TrafficPattern::Hotspot => {
+                "all remote ops hammer one small HN-F-homed window"
+            }
+            TrafficPattern::Transpose => {
+                "core (r,c) targets core (c,r) — long mesh paths"
+            }
+            TrafficPattern::Neighbor => {
+                "core c targets core c+1 — nearest-neighbour halo"
+            }
+            TrafficPattern::ProducerConsumer => {
+                "even cores store, odd cores load a per-pair buffer"
+            }
+            TrafficPattern::BurstyPhase => {
+                "alternating calm and saturating phases"
+            }
+        }
+    }
+}
+
+/// Validation failure: every problem found, each with a fix hint
+/// (mirrors [`super::SpecError`] for the platform spec).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TrafficError {
+    pub errors: Vec<String>,
+}
+
+impl TrafficError {
+    fn one(msg: impl Into<String>) -> Self {
+        TrafficError { errors: vec![msg.into()] }
+    }
+}
+
+impl std::fmt::Display for TrafficError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invalid TrafficSpec:")?;
+        for e in &self.errors {
+            write!(f, "\n  - {e}")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for TrafficError {}
+
+/// Upper bound on `working_lines`: a private region is
+/// [`crate::workload::apps::PRIVATE_SPAN`] = 64 MiB of 64-byte lines.
+pub const MAX_WORKING_LINES: u64 = 64 * 1024 * 1024 / 64;
+
+/// Upper bound on `shared_lines` (a 64 MiB shared window).
+pub const MAX_SHARED_LINES: u64 = 64 * 1024 * 1024 / 64;
+
+/// A complete, serializable description of one synthetic traffic
+/// scenario. All `_milli` knobs are per-1000 fractions, like the
+/// existing `--io-milli` / `store_milli` conventions.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TrafficSpec {
+    /// Registry / file identity (informational; `traffic` lists it).
+    pub name: String,
+    /// One-line description for `traffic --describe`.
+    pub description: String,
+    /// Which access pattern shapes the remote ops.
+    pub pattern: TrafficPattern,
+    /// Generator seed; each core derives its own counter stream from
+    /// `(seed, core)`, so elaboration never depends on host state.
+    pub seed: u64,
+    /// Offered intensity per 1000 issue slots (1..=1000): 1000 issues
+    /// back-to-back, lower values insert compute gaps between ops.
+    pub intensity_milli: u64,
+    /// Intensity of the *burst* phases of `bursty-phase` (1..=1000);
+    /// ignored by every other pattern.
+    pub burst_intensity_milli: u64,
+    /// Ops per phase for `bursty-phase` (even phases are calm, odd
+    /// phases burst); ignored by every other pattern.
+    pub phase_ops: usize,
+    /// Store fraction per 1000 ops (0..=1000); `producer-consumer`
+    /// overrides it on remote ops (producers store, consumers load).
+    pub store_milli: u64,
+    /// Sharing degree per 1000 ops (0..=1000): the fraction of ops
+    /// that leave the core's own region for the pattern's target.
+    pub sharing_milli: u64,
+    /// Lines in each core's private working set (64-byte lines).
+    pub working_lines: u64,
+    /// Lines in the pattern's shared window: the hotspot window, or
+    /// the per-pair producer-consumer buffer.
+    pub shared_lines: u64,
+}
+
+impl Default for TrafficSpec {
+    fn default() -> Self {
+        TrafficSpec {
+            name: "custom".to_string(),
+            description: String::new(),
+            pattern: TrafficPattern::UniformRandom,
+            seed: 42,
+            intensity_milli: 800,
+            burst_intensity_milli: 1000,
+            phase_ops: 256,
+            store_milli: 300,
+            sharing_milli: 500,
+            working_lines: 4096,
+            shared_lines: 64,
+        }
+    }
+}
+
+impl TrafficSpec {
+    /// Rename in place (builder-style, used by the scenario registry).
+    pub fn named(
+        mut self,
+        name: impl Into<String>,
+        description: impl Into<String>,
+    ) -> Self {
+        self.name = name.into();
+        self.description = description.into();
+        self
+    }
+
+    /// Check every invariant elaboration relies on. Collects *all*
+    /// problems, each with an actionable hint, instead of stopping at
+    /// the first.
+    pub fn validate(&self) -> Result<(), TrafficError> {
+        let mut errors = Vec::new();
+        let mut err = |m: String| errors.push(m);
+
+        if self.intensity_milli == 0 || self.intensity_milli > 1000 {
+            err(format!(
+                "intensity_milli = {} is out of range — use 1..=1000 ops \
+                 per 1000 issue slots (0 would generate no traffic at all)",
+                self.intensity_milli
+            ));
+        }
+        if self.burst_intensity_milli == 0 || self.burst_intensity_milli > 1000
+        {
+            err(format!(
+                "burst_intensity_milli = {} is out of range — use 1..=1000 \
+                 for the bursty-phase burst phases",
+                self.burst_intensity_milli
+            ));
+        }
+        if self.phase_ops == 0 {
+            err("phase_ops = 0 — bursty-phase needs >= 1 op per phase"
+                .to_string());
+        }
+        if self.store_milli > 1000 {
+            err(format!(
+                "store_milli = {} is out of range — use 0..=1000 \
+                 (stores per 1000 ops)",
+                self.store_milli
+            ));
+        }
+        if self.sharing_milli > 1000 {
+            err(format!(
+                "sharing_milli = {} is out of range — use 0..=1000 \
+                 (remote ops per 1000)",
+                self.sharing_milli
+            ));
+        }
+        if self.working_lines == 0 || self.working_lines > MAX_WORKING_LINES {
+            err(format!(
+                "working_lines = {} is out of range — use \
+                 1..={MAX_WORKING_LINES} 64-byte lines (one private \
+                 region is 64 MiB)",
+                self.working_lines
+            ));
+        }
+        if self.shared_lines == 0 || self.shared_lines > MAX_SHARED_LINES {
+            err(format!(
+                "shared_lines = {} is out of range — use \
+                 1..={MAX_SHARED_LINES} 64-byte lines",
+                self.shared_lines
+            ));
+        }
+        if errors.is_empty() {
+            Ok(())
+        } else {
+            Err(TrafficError { errors })
+        }
+    }
+
+    // ---- TOML ----------------------------------------------------------
+
+    /// Serialise to the flat TOML subset (`key = value`, `#` comments,
+    /// double-quoted strings). [`TrafficSpec::from_toml`] round-trips
+    /// this exactly; `tests/properties.rs` holds the property test.
+    pub fn to_toml(&self) -> String {
+        let mut s = String::new();
+        s.push_str("# parti-sim traffic spec (docs/TRAFFIC.md)\n");
+        s.push_str(&format!("name = \"{}\"\n", self.name));
+        s.push_str(&format!("description = \"{}\"\n", self.description));
+        s.push_str(&format!("pattern = \"{}\"\n", self.pattern.keyword()));
+        s.push_str(&format!("seed = {}\n", self.seed));
+        s.push_str(&format!("intensity_milli = {}\n", self.intensity_milli));
+        s.push_str(&format!(
+            "burst_intensity_milli = {}\n",
+            self.burst_intensity_milli
+        ));
+        s.push_str(&format!("phase_ops = {}\n", self.phase_ops));
+        s.push_str(&format!("store_milli = {}\n", self.store_milli));
+        s.push_str(&format!("sharing_milli = {}\n", self.sharing_milli));
+        s.push_str(&format!("working_lines = {}\n", self.working_lines));
+        s.push_str(&format!("shared_lines = {}\n", self.shared_lines));
+        s
+    }
+
+    /// Parse the format emitted by [`TrafficSpec::to_toml`]. Unknown
+    /// keys are rejected (typos must not silently fall back to
+    /// defaults); missing keys keep the defaults. The parsed spec is
+    /// validated before being returned.
+    pub fn from_toml(text: &str) -> Result<Self, TrafficError> {
+        let mut spec = TrafficSpec::default();
+        let mut errors = Vec::new();
+
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let lineno = lineno + 1;
+            let Some((k, v)) = line.split_once('=') else {
+                errors.push(format!(
+                    "line {lineno}: expected `key = value`, got `{line}`"
+                ));
+                continue;
+            };
+            let (k, v) = (k.trim(), v.trim());
+            // String values are double-quoted; numbers are bare.
+            let as_str = v.strip_prefix('"').and_then(|s| s.strip_suffix('"'));
+            let mut as_num = || -> Option<u64> {
+                match v.parse::<u64>() {
+                    Ok(n) => Some(n),
+                    Err(e) => {
+                        errors.push(format!(
+                            "line {lineno}: {k} = {v}: {e} (expected an \
+                             unsigned integer)"
+                        ));
+                        None
+                    }
+                }
+            };
+            match k {
+                "name" | "description" | "pattern" => {
+                    let Some(sv) = as_str else {
+                        errors.push(format!(
+                            "line {lineno}: {k} must be a double-quoted \
+                             string, e.g. {k} = \"...\""
+                        ));
+                        continue;
+                    };
+                    match k {
+                        "name" => spec.name = sv.to_string(),
+                        "description" => spec.description = sv.to_string(),
+                        "pattern" => match TrafficPattern::parse(sv) {
+                            Some(p) => spec.pattern = p,
+                            None => errors.push(format!(
+                                "line {lineno}: pattern = \"{sv}\" — use one \
+                                 of uniform-random, hotspot, transpose, \
+                                 neighbor, producer-consumer, bursty-phase"
+                            )),
+                        },
+                        _ => unreachable!(),
+                    }
+                }
+                "seed" => {
+                    if let Some(n) = as_num() {
+                        spec.seed = n;
+                    }
+                }
+                "intensity_milli" => {
+                    if let Some(n) = as_num() {
+                        spec.intensity_milli = n;
+                    }
+                }
+                "burst_intensity_milli" => {
+                    if let Some(n) = as_num() {
+                        spec.burst_intensity_milli = n;
+                    }
+                }
+                "phase_ops" => {
+                    if let Some(n) = as_num() {
+                        spec.phase_ops = n as usize;
+                    }
+                }
+                "store_milli" => {
+                    if let Some(n) = as_num() {
+                        spec.store_milli = n;
+                    }
+                }
+                "sharing_milli" => {
+                    if let Some(n) = as_num() {
+                        spec.sharing_milli = n;
+                    }
+                }
+                "working_lines" => {
+                    if let Some(n) = as_num() {
+                        spec.working_lines = n;
+                    }
+                }
+                "shared_lines" => {
+                    if let Some(n) = as_num() {
+                        spec.shared_lines = n;
+                    }
+                }
+                _ => errors.push(format!(
+                    "line {lineno}: unknown key `{k}` — see docs/TRAFFIC.md \
+                     for the schema"
+                )),
+            }
+        }
+
+        if !errors.is_empty() {
+            return Err(TrafficError { errors });
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Load a spec from a `.toml` file on disk.
+    pub fn load(path: &Path) -> Result<Self, TrafficError> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            TrafficError::one(format!("cannot read {}: {e}", path.display()))
+        })?;
+        Self::from_toml(&text)
+    }
+
+    /// Multi-line human description for `traffic --describe`.
+    pub fn describe(&self) -> String {
+        format!(
+            "{name}: {desc}\n\
+             pattern        {pat} — {pdesc}\n\
+             intensity      {int}/1000 (burst {burst}/1000 every \
+             {phase} ops for bursty-phase)\n\
+             mix            {st}/1000 stores, {sh}/1000 remote\n\
+             footprint      {wl} working lines/core, {sl} shared lines\n\
+             seed           {seed}",
+            name = self.name,
+            desc = self.description,
+            pat = self.pattern.keyword(),
+            pdesc = self.pattern.describe(),
+            int = self.intensity_milli,
+            burst = self.burst_intensity_milli,
+            phase = self.phase_ops,
+            st = self.store_milli,
+            sh = self.sharing_milli,
+            wl = self.working_lines,
+            sl = self.shared_lines,
+            seed = self.seed,
+        )
+    }
+}
+
+// ---- Scenario registry -------------------------------------------------
+
+/// All built-in scenarios, one per pattern, in listing order. Each is
+/// named by its pattern keyword and tuned so the pattern's signature
+/// behaviour is visible (`tests/traffic.rs` gates the shapes).
+pub fn scenarios() -> Vec<TrafficSpec> {
+    let base = TrafficSpec::default();
+    vec![
+        base.clone().named(
+            "uniform-random",
+            "all-to-all spray over every private region — the baseline \
+             interconnect load",
+        ),
+        TrafficSpec {
+            pattern: TrafficPattern::Hotspot,
+            sharing_milli: 700,
+            store_milli: 400,
+            shared_lines: 8,
+            ..base.clone()
+        }
+        .named(
+            "hotspot",
+            "every remote op hammers an 8-line HN-F window — per-line \
+             serialisation and snoop stress",
+        ),
+        TrafficSpec {
+            pattern: TrafficPattern::Transpose,
+            sharing_milli: 600,
+            ..base.clone()
+        }
+        .named(
+            "transpose",
+            "matrix-transpose partner exchange — the long-path corner \
+             of a mesh",
+        ),
+        TrafficSpec {
+            pattern: TrafficPattern::Neighbor,
+            sharing_milli: 600,
+            ..base.clone()
+        }
+        .named(
+            "neighbor",
+            "nearest-neighbour halo exchange — the short-path contrast \
+             to transpose",
+        ),
+        TrafficSpec {
+            pattern: TrafficPattern::ProducerConsumer,
+            shared_lines: 256,
+            ..base.clone()
+        }
+        .named(
+            "producer-consumer",
+            "even cores fill a per-pair shared buffer, odd cores drain \
+             it — one-way flow through the home node",
+        ),
+        TrafficSpec {
+            pattern: TrafficPattern::BurstyPhase,
+            intensity_milli: 150,
+            burst_intensity_milli: 1000,
+            phase_ops: 256,
+            ..base.clone()
+        }
+        .named(
+            "bursty-phase",
+            "calm/saturating phases alternating every 256 ops — \
+             backpressure and window-load swings",
+        ),
+    ]
+}
+
+/// Look up a scenario by name.
+pub fn scenario(name: &str) -> Option<TrafficSpec> {
+    scenarios().into_iter().find(|s| s.name == name)
+}
+
+/// Resolve a CLI `--traffic` argument: a scenario name, or a path to a
+/// traffic TOML file (anything containing a path separator or ending
+/// in `.toml`). The error lists the available scenarios.
+pub fn resolve(arg: &str) -> Result<TrafficSpec, TrafficError> {
+    if arg.ends_with(".toml") || arg.contains('/') {
+        return TrafficSpec::load(Path::new(arg));
+    }
+    scenario(arg).ok_or_else(|| {
+        let names: Vec<String> =
+            scenarios().iter().map(|s| s.name.clone()).collect();
+        TrafficError {
+            errors: vec![format!(
+                "unknown traffic scenario `{arg}` — available scenarios: \
+                 {}; or pass a traffic spec file path ending in .toml",
+                names.join(", ")
+            )],
+        }
+    })
+}
+
+/// One-line-per-scenario listing for the `traffic` subcommand.
+pub fn render_list() -> String {
+    let mut s = format!(
+        "{:<18} {:>9} {:>6} {:>6} description\n",
+        "name", "intensity", "store", "remote"
+    );
+    for t in scenarios() {
+        s.push_str(&format!(
+            "{:<18} {:>9} {:>6} {:>6} {}\n",
+            t.name,
+            t.intensity_milli,
+            t.store_milli,
+            t.sharing_milli,
+            t.description,
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_validates() {
+        TrafficSpec::default().validate().unwrap();
+    }
+
+    #[test]
+    fn pattern_keywords_roundtrip() {
+        for &p in ALL_PATTERNS {
+            assert_eq!(TrafficPattern::parse(p.keyword()), Some(p));
+        }
+        assert_eq!(TrafficPattern::parse("zipf"), None);
+    }
+
+    #[test]
+    fn all_scenarios_validate_and_roundtrip() {
+        let all = scenarios();
+        assert_eq!(all.len(), ALL_PATTERNS.len(), "one scenario per pattern");
+        for t in all {
+            t.validate()
+                .unwrap_or_else(|e| panic!("scenario {}: {e}", t.name));
+            let back = TrafficSpec::from_toml(&t.to_toml())
+                .unwrap_or_else(|e| panic!("scenario {} toml: {e}", t.name));
+            assert_eq!(t, back, "scenario {} must round-trip", t.name);
+        }
+    }
+
+    #[test]
+    fn scenario_names_match_pattern_keywords() {
+        for (t, &p) in scenarios().iter().zip(ALL_PATTERNS) {
+            assert_eq!(t.name, p.keyword());
+            assert_eq!(t.pattern, p);
+            assert_eq!(resolve(&t.name).unwrap(), *t);
+        }
+    }
+
+    #[test]
+    fn unknown_scenario_error_lists_scenarios() {
+        let err = resolve("nope").unwrap_err();
+        assert!(err.errors[0].contains("hotspot"), "{err}");
+        assert!(err.errors[0].contains("bursty-phase"), "{err}");
+    }
+
+    #[test]
+    fn unknown_key_is_rejected_with_hint() {
+        let err = TrafficSpec::from_toml("patern = \"hotspot\"\n").unwrap_err();
+        assert!(err.errors[0].contains("unknown key `patern`"), "{err}");
+        assert!(err.to_string().contains("TRAFFIC.md"));
+    }
+
+    #[test]
+    fn unknown_pattern_is_rejected_with_choices() {
+        let err =
+            TrafficSpec::from_toml("pattern = \"zipf\"\n").unwrap_err();
+        assert!(err.errors[0].contains("producer-consumer"), "{err}");
+    }
+
+    #[test]
+    fn zero_intensity_is_rejected() {
+        let spec =
+            TrafficSpec { intensity_milli: 0, ..TrafficSpec::default() };
+        let err = spec.validate().unwrap_err();
+        assert!(err.errors[0].contains("intensity_milli"), "{err}");
+        assert!(
+            TrafficSpec::from_toml("intensity_milli = 0\n").is_err(),
+            "parse must validate"
+        );
+    }
+
+    #[test]
+    fn out_of_range_sharing_is_rejected() {
+        let spec =
+            TrafficSpec { sharing_milli: 1001, ..TrafficSpec::default() };
+        let err = spec.validate().unwrap_err();
+        assert!(err.errors[0].contains("sharing_milli"), "{err}");
+    }
+
+    #[test]
+    fn validation_collects_all_errors() {
+        let spec = TrafficSpec {
+            intensity_milli: 0,
+            phase_ops: 0,
+            working_lines: 0,
+            ..TrafficSpec::default()
+        };
+        let err = spec.validate().unwrap_err();
+        assert!(err.errors.len() >= 3, "{err}");
+        assert!(err.errors.iter().any(|e| e.contains("phase_ops")));
+        assert!(err.errors.iter().any(|e| e.contains("working_lines")));
+    }
+
+    #[test]
+    fn listing_mentions_every_scenario() {
+        let s = render_list();
+        for t in scenarios() {
+            assert!(s.contains(&t.name), "listing misses {}", t.name);
+        }
+    }
+}

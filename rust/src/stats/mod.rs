@@ -35,6 +35,15 @@ pub struct Summary {
     pub xbar_staged: u64,
     /// Crossbar grant decisions deferred at borders (deterministic).
     pub xbar_deferred_grants: u64,
+    /// Memory ops the workload offered (deterministic; docs/TRAFFIC.md).
+    pub traffic_offered: u64,
+    /// Offered ops accepted to completion (deterministic; shortfall
+    /// against `traffic_offered` is the backpressure signal).
+    pub traffic_accepted: u64,
+    /// LSQ-full issue retries (deterministic).
+    pub traffic_retries: u64,
+    /// Traffic phases of the longest trace (0 = unphased; deterministic).
+    pub traffic_phases: u64,
     /// `--profile` phase breakdowns, host ns summed over threads (all zero
     /// when profiling is off; host-timing dependent like `host_ns`).
     pub prof_window_ns: u64,
@@ -88,6 +97,10 @@ impl Summary {
             inbox_merge_ns_per_window: r.pdes.merge_ns_per_window(),
             xbar_staged: r.pdes.xbar_staged,
             xbar_deferred_grants: r.pdes.xbar_deferred_grants,
+            traffic_offered: r.pdes.traffic_offered,
+            traffic_accepted: r.pdes.traffic_accepted,
+            traffic_retries: r.pdes.traffic_retries,
+            traffic_phases: r.pdes.traffic_phases,
             prof_window_ns: r.pdes.prof_window_ns,
             prof_freeze_wait_ns: r.pdes.prof_freeze_wait_ns,
             prof_border_sync_ns: r.pdes.prof_border_sync_ns,
@@ -121,6 +134,10 @@ impl Summary {
             .f64("inbox_merge_ns_per_window", self.inbox_merge_ns_per_window)
             .u64("xbar_staged", self.xbar_staged)
             .u64("xbar_deferred_grants", self.xbar_deferred_grants)
+            .u64("traffic_offered", self.traffic_offered)
+            .u64("traffic_accepted", self.traffic_accepted)
+            .u64("traffic_retries", self.traffic_retries)
+            .u64("traffic_phases", self.traffic_phases)
             .u64("prof_window_ns", self.prof_window_ns)
             .u64("prof_freeze_wait_ns", self.prof_freeze_wait_ns)
             .u64("prof_border_sync_ns", self.prof_border_sync_ns)

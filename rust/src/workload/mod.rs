@@ -1,10 +1,13 @@
 //! Workloads: op traces, the procedural generator (bit-exact port of the
-//! Pallas kernel) and the application registry (Table 3).
+//! Pallas kernel), the application registry (Table 3) and the synthetic
+//! traffic elaborator ([`crate::spec::traffic`] holds the spec side).
 
 pub mod apps;
 pub mod gen;
 pub mod trace;
+pub mod traffic;
 
 pub use apps::{app_by_name, App, AppTraits, APPS, FIG8_APPS};
 pub use gen::{addrgen, squares32, store_value, AddrGenParams, GenOp};
 pub use trace::{CoreTrace, Workload};
+pub use traffic::{traffic_workload, TRAFFIC_SALT};

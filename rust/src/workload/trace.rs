@@ -70,6 +70,11 @@ pub struct Workload {
     pub barrier_every: usize,
     /// Human-readable name ("blackscholes", ...).
     pub name: String,
+    /// Traffic phase length in ops (0 = unphased). Set by the
+    /// `bursty-phase` traffic pattern ([`crate::workload::traffic`]);
+    /// the stats layer reports the resulting phase count as
+    /// `traffic_phases`.
+    pub phase_ops: usize,
 }
 
 impl Workload {
@@ -90,7 +95,7 @@ impl Workload {
                 ))
             })
             .collect();
-        Workload { cores, barrier_every, name: name.to_string() }
+        Workload { cores, barrier_every, name: name.to_string(), phase_ops: 0 }
     }
 
     pub fn n_cores(&self) -> usize {
@@ -99,6 +104,20 @@ impl Workload {
 
     pub fn total_ops(&self) -> usize {
         self.cores.iter().map(|c| c.len()).sum()
+    }
+
+    /// Number of traffic phases the longest core trace spans (0 for
+    /// unphased workloads) — surfaced as the `traffic_phases` counter.
+    pub fn phases(&self) -> usize {
+        if self.phase_ops == 0 {
+            return 0;
+        }
+        self.cores
+            .iter()
+            .map(|c| c.len())
+            .max()
+            .unwrap_or(0)
+            .div_ceil(self.phase_ops)
     }
 }
 

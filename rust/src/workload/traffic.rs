@@ -1,0 +1,338 @@
+//! Traffic elaboration: turn a [`TrafficSpec`] into per-core op traces.
+//!
+//! This is the generator half of the declarative traffic engine (the
+//! spec half — schema, validation, TOML, the scenario registry — lives
+//! in [`crate::spec::traffic`]). Each core's stream comes from its own
+//! counter-based RNG stream keyed by `(seed, core)`: op `k` of core `c`
+//! reads counters `base_ctr(c) + 4k .. + 4k+3`, exactly the
+//! [`super::gen::addrgen`] discipline, salted so traffic streams never
+//! alias the app generator's. Elaboration is therefore a pure function
+//! of `(spec, n_cores, ops_per_core)` — independent of thread count,
+//! steal decisions and host timing — which is what lets
+//! `tests/traffic.rs` assert threaded ≡ virtual bit-identity for every
+//! pattern (docs/TRAFFIC.md carries the determinism argument).
+
+use std::sync::Arc;
+
+use crate::spec::traffic::{TrafficPattern, TrafficSpec};
+
+use super::apps::{PRIVATE_BASE, PRIVATE_SPAN, SHARED_BASE};
+use super::gen::{squares32, GenOp, SQUARES_KEY};
+use super::trace::{CoreTrace, Workload};
+
+/// XORed into every traffic counter stream so that a traffic run with
+/// seed `s` never replays the byte-identical RNG draws of an app trace
+/// with the same seed.
+pub const TRAFFIC_SALT: u64 = 0xB5AD_4ECE_DA1C_E2A9;
+
+/// Traffic addresses are 64-byte-line aligned, like every generator.
+const LINE_BYTES: u64 = 64;
+
+/// Base of core `c`'s private region (the [`super::apps`] memory map;
+/// "private" is a convention — any core may address any region, which
+/// is exactly what the remote patterns do).
+fn private_base(core: usize) -> u64 {
+    PRIVATE_BASE + core as u64 * PRIVATE_SPAN
+}
+
+/// The transpose partner of `core` among `n` cores: on a perfect
+/// square `n = s*s`, core `(r, c)` maps to `(c, r)`; otherwise the
+/// antidiagonal partner `n-1-core` (still a fixed-point-free-ish
+/// involution, still long paths on a mesh).
+pub fn transpose_partner(core: usize, n: usize) -> usize {
+    let s = (1..=n).find(|&s| s * s >= n).unwrap_or(1);
+    if s * s == n {
+        (core % s) * s + core / s
+    } else {
+        n - 1 - core
+    }
+}
+
+/// X-then-Y hop distance between two cores' stations on a `cols`-wide
+/// mesh — the metric behind the transpose-vs-neighbor shape gate.
+pub fn mesh_hops(cols: usize, a: usize, b: usize) -> usize {
+    let cols = cols.max(1);
+    (a % cols).abs_diff(b % cols) + (a / cols).abs_diff(b / cols)
+}
+
+/// Generate core `core`'s op stream for one scenario. Pure function of
+/// its arguments; see the module docs for the counter discipline.
+pub fn ops_for_core(
+    spec: &TrafficSpec,
+    core: usize,
+    n_cores: usize,
+    ops_per_core: usize,
+) -> Vec<GenOp> {
+    let n = n_cores.max(1);
+    let working_lines = spec.working_lines.max(1);
+    let shared_lines = spec.shared_lines.max(1);
+    let phase_ops = spec.phase_ops.max(1);
+    let base_ctr = spec.seed ^ ((core as u64) << 40) ^ TRAFFIC_SALT;
+
+    (0..ops_per_core as u64)
+        .map(|k| {
+            let ctr = base_ctr.wrapping_add(k.wrapping_mul(4));
+            let r0 = squares32(ctr, SQUARES_KEY);
+            let r1 = squares32(ctr.wrapping_add(1), SQUARES_KEY);
+            let r2 = squares32(ctr.wrapping_add(2), SQUARES_KEY);
+            let r3 = squares32(ctr.wrapping_add(3), SQUARES_KEY);
+
+            // Odd phases of bursty-phase run at burst intensity; every
+            // other pattern holds the base intensity throughout.
+            let intensity = match spec.pattern {
+                TrafficPattern::BurstyPhase
+                    if (k as usize / phase_ops) % 2 == 1 =>
+                {
+                    spec.burst_intensity_milli
+                }
+                _ => spec.intensity_milli,
+            };
+
+            let line = (r1 as u64) % working_lines;
+            let remote = ((r0 % 1000) as u64) < spec.sharing_milli;
+            let mut is_store = ((r2 % 1000) as u64) < spec.store_milli;
+            let addr = if !remote {
+                private_base(core) + line * LINE_BYTES
+            } else {
+                match spec.pattern {
+                    TrafficPattern::UniformRandom
+                    | TrafficPattern::BurstyPhase => {
+                        private_base(r3 as usize % n) + line * LINE_BYTES
+                    }
+                    TrafficPattern::Hotspot => {
+                        SHARED_BASE + ((r1 as u64) % shared_lines) * LINE_BYTES
+                    }
+                    TrafficPattern::Transpose => {
+                        private_base(transpose_partner(core, n))
+                            + line * LINE_BYTES
+                    }
+                    TrafficPattern::Neighbor => {
+                        private_base((core + 1) % n) + line * LINE_BYTES
+                    }
+                    TrafficPattern::ProducerConsumer => {
+                        // The even core of each pair produces (stores),
+                        // the odd core consumes (loads).
+                        is_store = core % 2 == 0;
+                        let pair = (core / 2) as u64;
+                        SHARED_BASE
+                            + (pair * shared_lines + (r1 as u64) % shared_lines)
+                                * LINE_BYTES
+                    }
+                }
+            };
+            GenOp {
+                addr,
+                is_store,
+                gap: ((1000 - intensity.min(1000)) / 100) as u32,
+            }
+        })
+        .collect()
+}
+
+/// Elaborate a whole workload from a scenario: one trace per core, no
+/// software barriers (intensity shapes the load instead), and the
+/// phase structure recorded for the stats layer
+/// ([`Workload::phases`] / the `traffic_phases` counter).
+pub fn traffic_workload(
+    spec: &TrafficSpec,
+    n_cores: usize,
+    ops_per_core: usize,
+) -> Workload {
+    let cores = (0..n_cores)
+        .map(|c| {
+            Arc::new(CoreTrace::from_ops(
+                c as u16,
+                &ops_for_core(spec, c, n_cores, ops_per_core),
+            ))
+        })
+        .collect();
+    Workload {
+        cores,
+        barrier_every: 0,
+        name: spec.name.clone(),
+        phase_ops: if spec.pattern == TrafficPattern::BurstyPhase {
+            spec.phase_ops
+        } else {
+            0
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::traffic::{scenario, scenarios, MAX_WORKING_LINES};
+
+    fn spec_for(pattern: TrafficPattern) -> TrafficSpec {
+        scenarios()
+            .into_iter()
+            .find(|s| s.pattern == pattern)
+            .expect("one scenario per pattern")
+    }
+
+    #[test]
+    fn elaboration_is_deterministic_and_seed_sensitive() {
+        for t in scenarios() {
+            let a = traffic_workload(&t, 4, 128);
+            let b = traffic_workload(&t, 4, 128);
+            for (ca, cb) in a.cores.iter().zip(&b.cores) {
+                assert_eq!(ca.addr, cb.addr, "{}", t.name);
+                assert_eq!(ca.is_store, cb.is_store, "{}", t.name);
+                assert_eq!(ca.gap, cb.gap, "{}", t.name);
+            }
+            let other = TrafficSpec { seed: t.seed + 1, ..t.clone() };
+            let c = traffic_workload(&other, 4, 128);
+            assert_ne!(a.cores[0].addr, c.cores[0].addr, "{}", t.name);
+        }
+    }
+
+    #[test]
+    fn streams_are_independent_of_core_count_prefix() {
+        // Core 1's stream must not depend on how many cores exist for
+        // patterns whose targets don't encode the core count.
+        let t = spec_for(TrafficPattern::Hotspot);
+        let small = traffic_workload(&t, 2, 64);
+        let big = traffic_workload(&t, 8, 64);
+        assert_eq!(small.cores[1].addr, big.cores[1].addr);
+    }
+
+    #[test]
+    fn salt_decorrelates_from_addrgen() {
+        let p = super::super::gen::AddrGenParams::default();
+        let app = super::super::gen::addrgen(&p, 64);
+        let t = TrafficSpec { seed: p.seed, ..TrafficSpec::default() };
+        let ops = ops_for_core(&t, 0, 4, 64);
+        assert_ne!(
+            app.iter().map(|o| o.addr).collect::<Vec<_>>(),
+            ops.iter().map(|o| o.addr).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn all_addrs_line_aligned_and_in_range() {
+        for t in scenarios() {
+            let w = traffic_workload(&t, 8, 256);
+            for c in &w.cores {
+                for &a in &c.addr {
+                    assert_eq!(a % LINE_BYTES, 0, "{}", t.name);
+                    assert!(
+                        a >= PRIVATE_BASE,
+                        "{}: addr {a:#x} below the map",
+                        t.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharing_zero_stays_private() {
+        for &p in crate::spec::traffic::ALL_PATTERNS {
+            let t = TrafficSpec { sharing_milli: 0, ..spec_for(p) };
+            let ops = ops_for_core(&t, 2, 8, 256);
+            let base = private_base(2);
+            assert!(
+                ops.iter().all(|o| o.addr >= base
+                    && o.addr < base + MAX_WORKING_LINES * LINE_BYTES),
+                "{p:?} leaked out of the private region"
+            );
+        }
+    }
+
+    #[test]
+    fn hotspot_remote_confined_to_window() {
+        let t = spec_for(TrafficPattern::Hotspot);
+        let hi = SHARED_BASE + t.shared_lines * LINE_BYTES;
+        let ops = ops_for_core(&t, 0, 8, 2048);
+        let remote: Vec<_> =
+            ops.iter().filter(|o| o.addr >= SHARED_BASE).collect();
+        assert!(!remote.is_empty(), "sharing 700 must go remote");
+        assert!(remote.iter().all(|o| o.addr < hi), "window overflow");
+    }
+
+    #[test]
+    fn transpose_partner_is_an_involution() {
+        for n in [4usize, 9, 16, 64, 7, 12] {
+            for c in 0..n {
+                let p = transpose_partner(c, n);
+                assert!(p < n);
+                assert_eq!(transpose_partner(p, n), c, "n={n} c={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_crosses_more_mesh_hops_than_neighbor() {
+        // The ISSUE's shape gate at the pattern level: on an 8x8 mesh,
+        // the transpose exchange covers strictly more station hops
+        // than the halo exchange (the sim-level gate in
+        // tests/traffic.rs builds on this geometry).
+        let (n, cols) = (64usize, 8usize);
+        let tr: usize = (0..n)
+            .map(|c| mesh_hops(cols, c, transpose_partner(c, n)))
+            .sum();
+        let nb: usize = (0..n).map(|c| mesh_hops(cols, c, (c + 1) % n)).sum();
+        assert!(tr > 2 * nb, "transpose {tr} vs neighbor {nb}");
+    }
+
+    #[test]
+    fn producer_consumer_roles_and_disjoint_buffers() {
+        let t = spec_for(TrafficPattern::ProducerConsumer);
+        let prod = ops_for_core(&t, 0, 8, 512);
+        let cons = ops_for_core(&t, 1, 8, 512);
+        let pair0_hi = SHARED_BASE + t.shared_lines * LINE_BYTES;
+        for o in prod.iter().filter(|o| o.addr >= SHARED_BASE) {
+            assert!(o.is_store, "producers store");
+            assert!(o.addr < pair0_hi, "pair 0 stays in its buffer");
+        }
+        for o in cons.iter().filter(|o| o.addr >= SHARED_BASE) {
+            assert!(!o.is_store, "consumers load");
+            assert!(o.addr < pair0_hi, "pair 0 stays in its buffer");
+        }
+        let pair1 = ops_for_core(&t, 2, 8, 512);
+        for o in pair1.iter().filter(|o| o.addr >= SHARED_BASE) {
+            assert!(o.addr >= pair0_hi, "pair 1 buffer is disjoint");
+        }
+    }
+
+    #[test]
+    fn bursty_phases_alternate_gap() {
+        let t = spec_for(TrafficPattern::BurstyPhase);
+        let ops = ops_for_core(&t, 0, 4, 4 * t.phase_ops);
+        let calm_gap = ((1000 - t.intensity_milli) / 100) as u32;
+        let burst_gap = ((1000 - t.burst_intensity_milli) / 100) as u32;
+        assert_ne!(calm_gap, burst_gap, "scenario must separate phases");
+        for (i, o) in ops.iter().enumerate() {
+            let expect = if (i / t.phase_ops) % 2 == 1 {
+                burst_gap
+            } else {
+                calm_gap
+            };
+            assert_eq!(o.gap, expect, "op {i}");
+        }
+        let w = traffic_workload(&t, 4, 4 * t.phase_ops);
+        assert_eq!(w.phases(), 4);
+    }
+
+    #[test]
+    fn intensity_shapes_gap() {
+        let lazy = TrafficSpec {
+            intensity_milli: 100,
+            ..scenario("uniform-random").unwrap()
+        };
+        let eager = TrafficSpec { intensity_milli: 1000, ..lazy.clone() };
+        assert!(ops_for_core(&lazy, 0, 4, 64).iter().all(|o| o.gap == 9));
+        assert!(ops_for_core(&eager, 0, 4, 64).iter().all(|o| o.gap == 0));
+    }
+
+    #[test]
+    fn workload_carries_name_and_phase_structure() {
+        let t = scenario("hotspot").unwrap();
+        let w = traffic_workload(&t, 4, 128);
+        assert_eq!(w.name, "hotspot");
+        assert_eq!(w.n_cores(), 4);
+        assert_eq!(w.total_ops(), 512);
+        assert_eq!(w.phase_ops, 0, "only bursty-phase records phases");
+        assert_eq!(w.phases(), 0);
+    }
+}

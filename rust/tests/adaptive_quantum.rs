@@ -29,28 +29,14 @@ use parti_sim::sim::stats::StatSink;
 use parti_sim::sim::time::{Tick, NS};
 use parti_sim::stats::compare;
 
+mod common;
+use common::assert_identical_modulo_schedule as assert_identical;
+
 const POLICIES: [QuantumPolicy; 3] = [
     QuantumPolicy::Fixed,
     QuantumPolicy::Horizon,
     QuantumPolicy::Hybrid { max_leap: 4 },
 ];
-
-fn assert_identical(a: &RunResult, b: &RunResult, what: &str) {
-    assert_eq!(a.sim_ticks, b.sim_ticks, "{what}: sim_ticks");
-    assert_eq!(a.events, b.events, "{what}: events");
-    assert_eq!(a.pdes.cross_events, b.pdes.cross_events, "{what}: cross");
-    assert_eq!(a.pdes.postponed, b.pdes.postponed, "{what}: postponed");
-    assert_eq!(a.pdes.tpp_sum, b.pdes.tpp_sum, "{what}: tpp_sum");
-    assert_eq!(
-        a.stats.entries.len(),
-        b.stats.entries.len(),
-        "{what}: stat cardinality"
-    );
-    for ((an, av), (bn, bv)) in a.stats.entries.iter().zip(&b.stats.entries) {
-        assert_eq!(an, bn, "{what}: stat name order");
-        assert_eq!(av, bv, "{what}: per-component stat {an}");
-    }
-}
 
 /// The windows that executed at least one event, as (window_end, work).
 fn busy_windows(r: &RunResult) -> Vec<(Tick, Vec<u32>)> {

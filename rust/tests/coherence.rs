@@ -69,6 +69,7 @@ fn producer_consumer_workload(n_lines: u64) -> Workload {
         cores: vec![Arc::new(trace(prod)), Arc::new(trace(cons))],
         barrier_every: n_lines as usize,
         name: "producer-consumer".into(),
+        phase_ops: 0,
     }
 }
 
@@ -104,6 +105,7 @@ fn read_own_write() {
         cores: vec![Arc::new(trace(ops))],
         barrier_every: 0,
         name: "row".into(),
+        phase_ops: 0,
     };
     let r = run(w, Mode::Serial);
     assert_no_mismatch(&r, "read-own-write");
@@ -148,6 +150,7 @@ fn migratory_ownership() {
         cores: vec![Arc::new(trace(c0)), Arc::new(trace(c1))],
         barrier_every: 9,
         name: "migratory".into(),
+        phase_ops: 0,
     };
     for mode in [Mode::Serial, Mode::Virtual, Mode::Parallel] {
         let r = run(w.clone(), mode);
@@ -171,7 +174,7 @@ fn contention_torture_completes() {
         }
         cores.push(Arc::new(trace(ops)));
     }
-    let w = Workload { cores, barrier_every: 0, name: "torture".into() };
+    let w = Workload { cores, barrier_every: 0, name: "torture".into(), phase_ops: 0 };
     for mode in [Mode::Serial, Mode::Virtual, Mode::Parallel] {
         let r = run(w.clone(), mode);
         assert_eq!(
@@ -203,6 +206,7 @@ fn same_core_store_load_ordering() {
         ]))],
         barrier_every: 0,
         name: "st-ld".into(),
+        phase_ops: 0,
     };
     for mode in [Mode::Serial, Mode::Virtual] {
         let r = run(w.clone(), mode);
@@ -227,6 +231,7 @@ fn writeback_roundtrip_preserves_data() {
         cores: vec![Arc::new(trace(ops))],
         barrier_every: 0,
         name: "wb".into(),
+        phase_ops: 0,
     };
     let r = run(w, Mode::Serial);
     assert_no_mismatch(&r, "writeback roundtrip");

@@ -1,0 +1,117 @@
+//! Shared bit-identity harness for the determinism suites
+//! (docs/DETERMINISM.md). Every suite that gates "threaded == virtual"
+//! used to carry its own copy of the assert; this module is the single
+//! superset definition, so a newly added deterministic counter lands in
+//! every suite at once.
+//!
+//! Compiled per test binary (`mod common;`), so helpers a given suite
+//! does not use are expected dead code.
+#![allow(dead_code)]
+
+use parti_sim::config::{Mode, RunConfig};
+use parti_sim::harness::run_with_workload;
+use parti_sim::pdes::RunResult;
+use parti_sim::workload::Workload;
+
+/// The standard adversarial thread matrix: undersubscribed, matched and
+/// oversubscribed host threads, each with and without window stealing.
+pub const FULL_MATRIX: &[(usize, bool)] = &[
+    (1, false),
+    (1, true),
+    (2, false),
+    (2, true),
+    (8, false),
+    (8, true),
+];
+
+/// Bit-identity: everything deterministic must match exactly —
+/// `sim_ticks`, event counts, every deterministic PDES counter
+/// (including the border-staging and traffic counters) and every
+/// per-component statistic, in order. Host-side counters (`steals`,
+/// `stolen_events`, `inbox_reordered`, `inbox_merge_ns`, the `prof_*`
+/// wall-time buckets, wall-clock) are excluded by design — they describe
+/// the host execution, not the simulation.
+pub fn assert_bit_identical(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.sim_ticks, b.sim_ticks, "{what}: sim_ticks");
+    assert_eq!(a.events, b.events, "{what}: events");
+    assert_eq!(a.pdes.barriers, b.pdes.barriers, "{what}: barriers");
+    assert_eq!(
+        a.pdes.quanta_skipped, b.pdes.quanta_skipped,
+        "{what}: quanta_skipped"
+    );
+    assert_eq!(
+        a.pdes.inbox_staged, b.pdes.inbox_staged,
+        "{what}: inbox_staged"
+    );
+    assert_eq!(a.pdes.xbar_staged, b.pdes.xbar_staged, "{what}: xbar_staged");
+    assert_eq!(
+        a.pdes.xbar_deferred_grants, b.pdes.xbar_deferred_grants,
+        "{what}: xbar_deferred_grants"
+    );
+    assert_identical_modulo_schedule(a, b, what);
+}
+
+/// The weaker identity used when the *window schedule itself* is the
+/// independent variable (e.g. `fixed` vs `horizon` quantum policies):
+/// simulated results and all schedule-independent deterministic counters
+/// must match, while `barriers` / `quanta_skipped` / the staging counts
+/// are allowed to differ (that difference is the point of the policy).
+pub fn assert_identical_modulo_schedule(
+    a: &RunResult,
+    b: &RunResult,
+    what: &str,
+) {
+    assert_eq!(a.sim_ticks, b.sim_ticks, "{what}: sim_ticks");
+    assert_eq!(a.events, b.events, "{what}: events");
+    assert_eq!(a.pdes.cross_events, b.pdes.cross_events, "{what}: cross");
+    assert_eq!(a.pdes.postponed, b.pdes.postponed, "{what}: postponed");
+    assert_eq!(a.pdes.tpp_sum, b.pdes.tpp_sum, "{what}: tpp_sum");
+    assert_eq!(
+        a.pdes.traffic_offered, b.pdes.traffic_offered,
+        "{what}: traffic_offered"
+    );
+    assert_eq!(
+        a.pdes.traffic_accepted, b.pdes.traffic_accepted,
+        "{what}: traffic_accepted"
+    );
+    assert_eq!(
+        a.pdes.traffic_retries, b.pdes.traffic_retries,
+        "{what}: traffic_retries"
+    );
+    assert_eq!(
+        a.pdes.traffic_phases, b.pdes.traffic_phases,
+        "{what}: traffic_phases"
+    );
+    assert_eq!(
+        a.stats.entries.len(),
+        b.stats.entries.len(),
+        "{what}: stat cardinality"
+    );
+    for ((an, av), (bn, bv)) in a.stats.entries.iter().zip(&b.stats.entries) {
+        assert_eq!(an, bn, "{what}: stat name order");
+        assert_eq!(av, bv, "{what}: per-component stat {an}");
+    }
+}
+
+/// The standard matrix gate: for each `(threads, steal)` point, run
+/// `vcfg` on the threaded kernel against the pre-computed deterministic
+/// `reference` (normally a virtual-kernel run of the same `vcfg` and
+/// workload) and require full bit-identity. `what_prefix` labels
+/// failures (the point's knobs are appended).
+pub fn assert_threaded_matches(
+    reference: &RunResult,
+    vcfg: &RunConfig,
+    w: &Workload,
+    matrix: &[(usize, bool)],
+    what_prefix: &str,
+) {
+    for &(threads, steal) in matrix {
+        let mut cfg = vcfg.clone();
+        cfg.mode = Mode::Parallel;
+        cfg.steal = steal;
+        cfg.threads = threads;
+        let r = run_with_workload(&cfg, w).unwrap();
+        let what = format!("{what_prefix}/steal={steal}/threads={threads}");
+        assert_bit_identical(reference, &r, &what);
+    }
+}

@@ -19,10 +19,12 @@
 
 use parti_sim::config::{Mode, RunConfig};
 use parti_sim::harness::{make_workload, run_with_workload};
-use parti_sim::pdes::RunResult;
 use parti_sim::sched::{InboxOrder, QuantumPolicy, XbarArb};
 use parti_sim::sim::time::NS;
 use parti_sim::stats::compare;
+
+mod common;
+use common::{assert_bit_identical, assert_threaded_matches, FULL_MATRIX};
 
 const POLICIES: [QuantumPolicy; 3] = [
     QuantumPolicy::Fixed,
@@ -47,36 +49,6 @@ fn base_cfg(order: InboxOrder, policy: QuantumPolicy) -> RunConfig {
     c
 }
 
-/// Bit-identity: everything deterministic must match exactly. Host-side
-/// counters (`steals`, `stolen_events`, `inbox_reordered`,
-/// `inbox_merge_ns`, wall-clock) are excluded by design — they describe
-/// the host execution, not the simulation.
-fn assert_bit_identical(a: &RunResult, b: &RunResult, what: &str) {
-    assert_eq!(a.sim_ticks, b.sim_ticks, "{what}: sim_ticks");
-    assert_eq!(a.events, b.events, "{what}: events");
-    assert_eq!(a.pdes.cross_events, b.pdes.cross_events, "{what}: cross");
-    assert_eq!(a.pdes.postponed, b.pdes.postponed, "{what}: postponed");
-    assert_eq!(a.pdes.tpp_sum, b.pdes.tpp_sum, "{what}: tpp_sum");
-    assert_eq!(a.pdes.barriers, b.pdes.barriers, "{what}: barriers");
-    assert_eq!(
-        a.pdes.quanta_skipped, b.pdes.quanta_skipped,
-        "{what}: quanta_skipped"
-    );
-    assert_eq!(
-        a.pdes.inbox_staged, b.pdes.inbox_staged,
-        "{what}: inbox_staged"
-    );
-    assert_eq!(
-        a.stats.entries.len(),
-        b.stats.entries.len(),
-        "{what}: stat cardinality"
-    );
-    for ((an, av), (bn, bv)) in a.stats.entries.iter().zip(&b.stats.entries) {
-        assert_eq!(an, bn, "{what}: stat name order");
-        assert_eq!(av, bv, "{what}: per-component stat {an}");
-    }
-}
-
 #[test]
 fn border_threaded_is_bit_identical_to_virtual_across_all_knobs() {
     for policy in POLICIES {
@@ -88,19 +60,13 @@ fn border_threaded_is_bit_identical_to_virtual_across_all_knobs() {
             reference.pdes.inbox_staged > 0,
             "sharing app must exercise the handoff"
         );
-        for steal in [false, true] {
-            for threads in [1usize, 2, 8] {
-                let mut cfg = vcfg.clone();
-                cfg.mode = Mode::Parallel;
-                cfg.steal = steal;
-                cfg.threads = threads;
-                let r = run_with_workload(&cfg, &w).unwrap();
-                let what = format!(
-                    "{policy:?}/steal={steal}/threads={threads}"
-                );
-                assert_bit_identical(&reference, &r, &what);
-            }
-        }
+        assert_threaded_matches(
+            &reference,
+            &vcfg,
+            &w,
+            FULL_MATRIX,
+            &format!("{policy:?}"),
+        );
     }
 }
 

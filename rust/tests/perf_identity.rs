@@ -15,49 +15,12 @@
 
 use parti_sim::config::{Mode, RunConfig};
 use parti_sim::harness::{make_workload, run_with_workload};
-use parti_sim::pdes::RunResult;
 use parti_sim::sched::{BucketShape, QuantumPolicy, QueueKind};
 use parti_sim::sim::time::NS;
 use parti_sim::spec::{platforms, SystemSpec};
 
-/// Bit-identity: everything deterministic must match exactly (the
-/// `tests/xbar_arb.rs` criteria; host-side counters — `steals`,
-/// `stolen_events`, `inbox_reordered`, `inbox_merge_ns`, the `prof_*`
-/// wall-time buckets — are excluded by design: they describe the host
-/// execution, not the simulation).
-fn assert_bit_identical(a: &RunResult, b: &RunResult, what: &str) {
-    assert_eq!(a.sim_ticks, b.sim_ticks, "{what}: sim_ticks");
-    assert_eq!(a.events, b.events, "{what}: events");
-    assert_eq!(a.pdes.cross_events, b.pdes.cross_events, "{what}: cross");
-    assert_eq!(a.pdes.postponed, b.pdes.postponed, "{what}: postponed");
-    assert_eq!(a.pdes.tpp_sum, b.pdes.tpp_sum, "{what}: tpp_sum");
-    assert_eq!(a.pdes.barriers, b.pdes.barriers, "{what}: barriers");
-    assert_eq!(
-        a.pdes.quanta_skipped, b.pdes.quanta_skipped,
-        "{what}: quanta_skipped"
-    );
-    assert_eq!(
-        a.pdes.inbox_staged, b.pdes.inbox_staged,
-        "{what}: inbox_staged"
-    );
-    assert_eq!(
-        a.pdes.xbar_staged, b.pdes.xbar_staged,
-        "{what}: xbar_staged"
-    );
-    assert_eq!(
-        a.pdes.xbar_deferred_grants, b.pdes.xbar_deferred_grants,
-        "{what}: xbar_deferred_grants"
-    );
-    assert_eq!(
-        a.stats.entries.len(),
-        b.stats.entries.len(),
-        "{what}: stat cardinality"
-    );
-    for ((an, av), (bn, bv)) in a.stats.entries.iter().zip(&b.stats.entries) {
-        assert_eq!(an, bn, "{what}: stat name order");
-        assert_eq!(av, bv, "{what}: per-component stat {an}");
-    }
-}
+mod common;
+use common::assert_bit_identical;
 
 /// PDES config on `spec` with a sharing workload plus IO traffic, so the
 /// matrix exercises the inbox merge, the crossbar arbitration *and* its

@@ -14,41 +14,15 @@
 use parti_sim::config::{Mode, RunConfig};
 use parti_sim::cpu::CpuModel;
 use parti_sim::harness::{make_workload, run_with_workload};
-use parti_sim::pdes::RunResult;
 use parti_sim::sched::QuantumPolicy;
 use parti_sim::sim::time::NS;
 use parti_sim::spec::{platforms, Interconnect, SystemSpec};
 use parti_sim::stats::compare;
 
-// ---- helpers ----------------------------------------------------------
+mod common;
+use common::{assert_bit_identical, assert_threaded_matches, FULL_MATRIX};
 
-/// Bit-identity: everything deterministic must match exactly (same
-/// criteria as `tests/inbox_order.rs`; host-side counters excluded).
-fn assert_bit_identical(a: &RunResult, b: &RunResult, what: &str) {
-    assert_eq!(a.sim_ticks, b.sim_ticks, "{what}: sim_ticks");
-    assert_eq!(a.events, b.events, "{what}: events");
-    assert_eq!(a.pdes.cross_events, b.pdes.cross_events, "{what}: cross");
-    assert_eq!(a.pdes.postponed, b.pdes.postponed, "{what}: postponed");
-    assert_eq!(a.pdes.tpp_sum, b.pdes.tpp_sum, "{what}: tpp_sum");
-    assert_eq!(a.pdes.barriers, b.pdes.barriers, "{what}: barriers");
-    assert_eq!(
-        a.pdes.quanta_skipped, b.pdes.quanta_skipped,
-        "{what}: quanta_skipped"
-    );
-    assert_eq!(
-        a.pdes.inbox_staged, b.pdes.inbox_staged,
-        "{what}: inbox_staged"
-    );
-    assert_eq!(
-        a.stats.entries.len(),
-        b.stats.entries.len(),
-        "{what}: stat cardinality"
-    );
-    for ((an, av), (bn, bv)) in a.stats.entries.iter().zip(&b.stats.entries) {
-        assert_eq!(an, bn, "{what}: stat name order");
-        assert_eq!(av, bv, "{what}: per-component stat {an}");
-    }
-}
+// ---- helpers ----------------------------------------------------------
 
 /// A PDES run config on `spec` with a sharing workload sized so the whole
 /// preset matrix stays test-suite-fast (total core-ops roughly constant).
@@ -268,19 +242,13 @@ fn preset_matrix_threaded_is_bit_identical_to_virtual() {
                 reference.pdes.inbox_staged > 0,
                 "{name}: sharing app must exercise the handoff"
             );
-            for steal in [false, true] {
-                for threads in [1usize, 2, 8] {
-                    let mut cfg = vcfg.clone();
-                    cfg.mode = Mode::Parallel;
-                    cfg.steal = steal;
-                    cfg.threads = threads;
-                    let r = run_with_workload(&cfg, &w).unwrap();
-                    let what = format!(
-                        "{name}/{policy:?}/steal={steal}/threads={threads}"
-                    );
-                    assert_bit_identical(&reference, &r, &what);
-                }
-            }
+            assert_threaded_matches(
+                &reference,
+                &vcfg,
+                &w,
+                FULL_MATRIX,
+                &format!("{name}/{policy:?}"),
+            );
         }
     }
 }

@@ -1,7 +1,8 @@
 //! Property-based tests on the coordinator invariants (event ordering,
 //! cache replacement, message-buffer ordering, crossbar layer exclusivity,
-//! host-model monotonicity), driven by the in-tree deterministic
-//! property-test harness ([`parti_sim::util::prop`]).
+//! host-model monotonicity, traffic-spec TOML round-trip), driven by the
+//! in-tree deterministic property-test harness
+//! ([`parti_sim::util::prop`]).
 
 use std::collections::BTreeMap;
 
@@ -12,6 +13,9 @@ use parti_sim::ruby::{MsgKind, RubyMsg};
 use parti_sim::sched::{QueueKind, SchedQueue, Scheduler};
 use parti_sim::sim::event::{prio, EventKind};
 use parti_sim::sim::ids::CompId;
+use parti_sim::spec::traffic::{
+    TrafficSpec, ALL_PATTERNS, MAX_SHARED_LINES, MAX_WORKING_LINES,
+};
 use parti_sim::util::prop::check;
 use parti_sim::workload::{addrgen, AddrGenParams};
 use parti_sim::xbar::{default_xbar, Occupy};
@@ -400,6 +404,112 @@ fn prop_host_model_bounds_and_monotonicity() {
         let s8 = mk(8).speedup(serial_events, &work);
         assert!(s8 >= s2 - 1e-9, "more host cores must not hurt");
     });
+}
+
+// ---------------------------------------------------------------------
+// TrafficSpec: `spec -> TOML -> spec` is the identity over a seeded walk
+// of the valid spec space, and every single-knob excursion outside the
+// documented ranges is rejected — by `validate()` directly and by the
+// `from_toml` path (so a hand-edited scenario file cannot smuggle a
+// broken spec past the CLI).
+// ---------------------------------------------------------------------
+
+/// One random point in the *valid* TrafficSpec space.
+fn random_traffic_spec(
+    g: &mut parti_sim::util::prop::Gen,
+    i: usize,
+) -> TrafficSpec {
+    TrafficSpec {
+        name: format!("prop-{i}"),
+        description: format!("traffic property walk point {i}"),
+        pattern: *g.pick(ALL_PATTERNS),
+        seed: g.u64(),
+        intensity_milli: g.range_u64(1, 1000),
+        burst_intensity_milli: g.range_u64(1, 1000),
+        phase_ops: g.range_usize(1, 4096),
+        store_milli: g.range_u64(0, 1000),
+        sharing_milli: g.range_u64(0, 1000),
+        working_lines: g.range_u64(1, MAX_WORKING_LINES),
+        shared_lines: g.range_u64(1, MAX_SHARED_LINES),
+    }
+}
+
+#[test]
+fn prop_traffic_spec_toml_roundtrip_is_identity() {
+    check("traffic-toml-roundtrip", 64, |g, i| {
+        let spec = random_traffic_spec(g, i);
+        spec.validate()
+            .unwrap_or_else(|e| panic!("walk left the valid region: {e}"));
+        let toml = spec.to_toml();
+        let back = TrafficSpec::from_toml(&toml)
+            .unwrap_or_else(|e| panic!("roundtrip parse failed: {e}\n{toml}"));
+        assert_eq!(spec, back, "TOML roundtrip must be the identity");
+    });
+}
+
+#[test]
+fn prop_traffic_spec_out_of_range_knobs_are_rejected() {
+    // Each case takes a valid spec and pushes exactly one knob outside
+    // its range; both validate() and the serialise-then-parse path must
+    // refuse, and the error must name the offending knob.
+    let break_one: &[(&str, fn(&mut TrafficSpec))] = &[
+        ("intensity_milli", |s| s.intensity_milli = 0),
+        ("intensity_milli", |s| s.intensity_milli = 1001),
+        ("burst_intensity_milli", |s| s.burst_intensity_milli = 0),
+        ("phase_ops", |s| s.phase_ops = 0),
+        ("store_milli", |s| s.store_milli = 2000),
+        ("sharing_milli", |s| s.sharing_milli = 1001),
+        ("working_lines", |s| s.working_lines = 0),
+        ("working_lines", |s| s.working_lines = MAX_WORKING_LINES + 1),
+        ("shared_lines", |s| s.shared_lines = MAX_SHARED_LINES + 1),
+    ];
+    check("traffic-rejection", 40, |g, i| {
+        let mut spec = random_traffic_spec(g, i);
+        let (knob, breaker) = *g.pick(break_one);
+        breaker(&mut spec);
+        let err = spec
+            .validate()
+            .expect_err("an out-of-range knob must fail validation");
+        assert!(
+            err.errors.iter().any(|e| e.contains(knob)),
+            "{knob}: error must name the knob, got {err}"
+        );
+        let err = TrafficSpec::from_toml(&spec.to_toml())
+            .expect_err("from_toml must re-validate");
+        assert!(err.errors.iter().any(|e| e.contains(knob)), "{err}");
+    });
+}
+
+#[test]
+fn traffic_toml_rejects_unknown_keys_and_collects_all_errors() {
+    // A typo must not silently fall back to a default...
+    let err = TrafficSpec::from_toml("sharring_milli = 500\n").unwrap_err();
+    assert!(
+        err.errors[0].contains("unknown key `sharring_milli`"),
+        "{err}"
+    );
+    // ...and the hint points at the schema doc.
+    assert!(err.to_string().contains("docs/TRAFFIC.md"), "{err}");
+    // Zero intensity and out-of-range sharing are refused together with
+    // the unknown key: one parse reports every problem at once.
+    let err = TrafficSpec::from_toml(
+        "intensity_milli = 0\nsharing_milli = 1500\nhotness = 3\n",
+    )
+    .unwrap_err();
+    assert!(err.errors.iter().any(|e| e.contains("hotness")), "{err}");
+    // Parse-layer errors (the unknown key) are reported first; the
+    // value-range problems surface once the schema is fixed.
+    let err =
+        TrafficSpec::from_toml("intensity_milli = 0\nsharing_milli = 1500\n")
+            .unwrap_err();
+    assert!(
+        err.errors.iter().any(|e| e.contains("intensity_milli")),
+        "{err}"
+    );
+    assert!(
+        err.errors.iter().any(|e| e.contains("sharing_milli")),
+        "{err}"
+    );
 }
 
 // ---------------------------------------------------------------------

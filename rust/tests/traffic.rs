@@ -1,0 +1,232 @@
+//! Gates for the synthetic-traffic engine (docs/TRAFFIC.md).
+//!
+//! The engine's contract has three legs, and each gets an adversarial
+//! gate here:
+//!
+//! * **Determinism** — every pattern's elaboration is a pure function of
+//!   its `TrafficSpec`, so on every preset topology the threaded kernel
+//!   must stay bit-identical to the virtual reference across
+//!   `--threads {1,2,8}` × `--steal` × `--io-milli {0,5}`, including the
+//!   inbox/crossbar staging counters and the new
+//!   offered/accepted/retries traffic counters.
+//! * **Shape** — the patterns must actually produce their advertised
+//!   contention structure: the hotspot scenario concentrates per-line
+//!   serialisation (`hnf.requeued`) and snoop traffic at the HN-F well
+//!   beyond uniform-random, and the transpose exchange covers far more
+//!   mesh station hops than the neighbor halo exchange.
+//! * **Repeatability** — re-elaborating and re-running the same scenario
+//!   is bit-identical; changing only the spec's seed moves the traces.
+
+use parti_sim::config::{Mode, RunConfig};
+use parti_sim::harness::{make_workload, run_with_workload};
+use parti_sim::sched::QuantumPolicy;
+use parti_sim::sim::time::NS;
+use parti_sim::spec::platforms;
+use parti_sim::spec::traffic::{scenario, scenarios};
+use parti_sim::stats::Summary;
+use parti_sim::workload::apps::{PRIVATE_BASE, PRIVATE_SPAN};
+use parti_sim::workload::traffic::mesh_hops;
+
+mod common;
+use common::{assert_bit_identical, assert_threaded_matches, FULL_MATRIX};
+
+/// A traffic run on `preset`, sized so the whole pattern × preset matrix
+/// stays test-suite-fast while `--io-milli 5` (one IO access per 200
+/// ops) still fires on every core — the same geometry as
+/// tests/xbar_arb.rs.
+fn traffic_cfg(preset: &str, scenario_name: &str, io_milli: u64) -> RunConfig {
+    let spec = platforms::preset(preset).unwrap();
+    let mut cfg = RunConfig::for_spec(&spec);
+    cfg.traffic = Some(scenario_name.to_string());
+    cfg.ops_per_core = match preset {
+        "fig4-2" => 768,
+        "ring-16" => 320,
+        _ => 224,
+    };
+    cfg.mode = Mode::Virtual;
+    cfg.quantum = 8 * NS;
+    cfg.quantum_policy = QuantumPolicy::Hybrid { max_leap: 4 };
+    cfg.system.io_milli = io_milli;
+    cfg
+}
+
+/// The tentpole matrix for one preset: every pattern × `--io-milli
+/// {0,5}` × the full `--threads`/`--steal` grid, gated on full
+/// bit-identity against the virtual reference. Split per preset so the
+/// three presets run on separate test threads.
+fn preset_matrix(preset: &str) {
+    for t in scenarios() {
+        for io_milli in [0u64, 5] {
+            let vcfg = traffic_cfg(preset, &t.name, io_milli);
+            let w = make_workload(&vcfg).unwrap();
+            let reference = run_with_workload(&vcfg, &w).unwrap();
+            let what = format!("{preset}/{}/io={io_milli}", t.name);
+            assert!(reference.events > 0, "{what}: empty run");
+            assert_eq!(
+                reference.pdes.traffic_offered,
+                (vcfg.system.cores * vcfg.ops_per_core) as u64,
+                "{what}: offered load must be the full trace"
+            );
+            assert_eq!(
+                reference.pdes.traffic_accepted,
+                reference.pdes.traffic_offered,
+                "{what}: a completed run accepts every offered op"
+            );
+            assert_eq!(
+                reference.pdes.traffic_retries as f64,
+                reference.stats.sum_suffix(".lsq_stalls"),
+                "{what}: retries must mirror the per-core LSQ stalls"
+            );
+            assert!(
+                reference.pdes.inbox_staged > 0,
+                "{what}: sharing traffic must exercise the inbox handoff"
+            );
+            if io_milli > 0 {
+                assert!(
+                    reference.pdes.xbar_staged > 0,
+                    "{what}: io_milli must exercise the crossbar"
+                );
+            } else {
+                assert_eq!(reference.pdes.xbar_staged, 0, "{what}: inert");
+            }
+            assert_threaded_matches(&reference, &vcfg, &w, FULL_MATRIX, &what);
+        }
+    }
+}
+
+#[test]
+fn fig4_2_every_pattern_threaded_matches_virtual() {
+    preset_matrix("fig4-2");
+}
+
+#[test]
+fn ring_16_every_pattern_threaded_matches_virtual() {
+    preset_matrix("ring-16");
+}
+
+#[test]
+fn mesh_64_every_pattern_threaded_matches_virtual() {
+    preset_matrix("mesh-64");
+}
+
+#[test]
+fn hotspot_concentrates_contention_at_the_hnf() {
+    // ring-16 (cores < 28, so no private/shared address aliasing): the
+    // hotspot scenario hammers 8 shared lines from 16 cores, which must
+    // show up as per-line transaction serialisation (`requeued`) and
+    // multi-sharer snoop traffic at the HN-F, both well beyond what the
+    // uniform-random scenario's scattered remote accesses produce.
+    let mut results = Vec::new();
+    for name in ["uniform-random", "hotspot"] {
+        let cfg = traffic_cfg("ring-16", name, 0);
+        let w = make_workload(&cfg).unwrap();
+        results.push(run_with_workload(&cfg, &w).unwrap());
+    }
+    let (uni, hot) = (&results[0], &results[1]);
+    let stat = |r: &parti_sim::pdes::RunResult, n: &str| {
+        r.stats.get(n).unwrap_or(0.0)
+    };
+    assert!(
+        stat(hot, "hnf.requeued") > stat(uni, "hnf.requeued"),
+        "hotspot must serialise on the hot lines: requeued {} vs {}",
+        stat(hot, "hnf.requeued"),
+        stat(uni, "hnf.requeued")
+    );
+    assert!(
+        stat(hot, "hnf.snoops_sent") > stat(uni, "hnf.snoops_sent"),
+        "hot-line stores must out-snoop uniform remote traffic: {} vs {}",
+        stat(hot, "hnf.snoops_sent"),
+        stat(uni, "hnf.snoops_sent")
+    );
+}
+
+#[test]
+fn transpose_on_mesh_crosses_more_hops_than_neighbor() {
+    // All coherence traffic is HN-F-mediated (no direct core-to-core
+    // messages), so the fabric cannot distinguish *which* core owns a
+    // remote line — the hop structure the two patterns advertise lives
+    // in the requester→owner geometry of the elaborated traces. On the
+    // 8-wide mesh-64, the transpose exchange must cover far more
+    // station hops than the one-step halo exchange. The two scenarios
+    // share seed and sharing degree, so op k of core c is remote in
+    // both or neither and the comparison is op-for-op.
+    let cols = 8;
+    let mut sums = Vec::new();
+    for name in ["transpose", "neighbor"] {
+        let cfg = traffic_cfg("mesh-64", name, 0);
+        let w = make_workload(&cfg).unwrap();
+        let mut hops = 0usize;
+        for (c, trace) in w.cores.iter().enumerate() {
+            for &a in &trace.addr {
+                let owner = ((a - PRIVATE_BASE) / PRIVATE_SPAN) as usize;
+                if owner != c && owner < w.n_cores() {
+                    hops += mesh_hops(cols, c, owner);
+                }
+            }
+        }
+        sums.push(hops);
+    }
+    assert!(
+        sums[0] > 2 * sums[1],
+        "transpose ({}) must cross well over twice the mesh hops of \
+         neighbor ({})",
+        sums[0],
+        sums[1]
+    );
+}
+
+#[test]
+fn same_scenario_is_repeat_deterministic_and_seed_moves_it() {
+    let cfg = traffic_cfg("ring-16", "hotspot", 0);
+    let w1 = make_workload(&cfg).unwrap();
+    let a = run_with_workload(&cfg, &w1).unwrap();
+    // Independent re-elaboration + re-run: bit-identical.
+    let w2 = make_workload(&cfg).unwrap();
+    let b = run_with_workload(&cfg, &w2).unwrap();
+    assert_bit_identical(&a, &b, "re-elaborated scenario");
+    // Only the seed changes, via the TOML file path (the other half of
+    // `--traffic`): the traces must move.
+    let mut spec = scenario("hotspot").unwrap();
+    spec.seed += 1;
+    let path = std::env::temp_dir().join("parti_sim_traffic_seed_test.toml");
+    std::fs::write(&path, spec.to_toml()).unwrap();
+    let mut fcfg = cfg.clone();
+    fcfg.traffic = Some(path.to_str().unwrap().to_string());
+    let w3 = make_workload(&fcfg).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_ne!(
+        w1.cores[0].addr, w3.cores[0].addr,
+        "reseeding must change the traces"
+    );
+}
+
+#[test]
+fn bursty_phase_reports_its_phase_structure() {
+    let cfg = traffic_cfg("fig4-2", "bursty-phase", 0);
+    let w = make_workload(&cfg).unwrap();
+    assert_eq!(w.phases(), 3, "768 ops / 256-op phases");
+    let r = run_with_workload(&cfg, &w).unwrap();
+    assert_eq!(r.pdes.traffic_phases, 3);
+    // The counters survive into the summary and its JSON export.
+    let s = Summary::from_result(&r);
+    assert_eq!(s.traffic_phases, 3);
+    assert_eq!(s.traffic_offered, r.pdes.traffic_offered);
+    let json = s.to_json();
+    for key in [
+        "traffic_offered",
+        "traffic_accepted",
+        "traffic_retries",
+        "traffic_phases",
+    ] {
+        assert!(json.contains(key), "summary JSON must carry {key}");
+    }
+}
+
+#[test]
+fn unphased_patterns_report_zero_phases() {
+    let cfg = traffic_cfg("fig4-2", "uniform-random", 0);
+    let w = make_workload(&cfg).unwrap();
+    assert_eq!(w.phases(), 0);
+    let r = run_with_workload(&cfg, &w).unwrap();
+    assert_eq!(r.pdes.traffic_phases, 0);
+}

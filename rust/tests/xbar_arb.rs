@@ -21,40 +21,8 @@ use parti_sim::sched::{QuantumPolicy, XbarArb};
 use parti_sim::sim::time::NS;
 use parti_sim::spec::platforms;
 
-/// Bit-identity: everything deterministic must match exactly (the
-/// `tests/inbox_order.rs` criteria plus the crossbar counters; host-side
-/// counters — `steals`, `stolen_events`, `inbox_reordered`,
-/// `inbox_merge_ns`, wall-clock — are excluded by design).
-fn assert_bit_identical(a: &RunResult, b: &RunResult, what: &str) {
-    assert_eq!(a.sim_ticks, b.sim_ticks, "{what}: sim_ticks");
-    assert_eq!(a.events, b.events, "{what}: events");
-    assert_eq!(a.pdes.cross_events, b.pdes.cross_events, "{what}: cross");
-    assert_eq!(a.pdes.postponed, b.pdes.postponed, "{what}: postponed");
-    assert_eq!(a.pdes.tpp_sum, b.pdes.tpp_sum, "{what}: tpp_sum");
-    assert_eq!(a.pdes.barriers, b.pdes.barriers, "{what}: barriers");
-    assert_eq!(
-        a.pdes.quanta_skipped, b.pdes.quanta_skipped,
-        "{what}: quanta_skipped"
-    );
-    assert_eq!(
-        a.pdes.inbox_staged, b.pdes.inbox_staged,
-        "{what}: inbox_staged"
-    );
-    assert_eq!(a.pdes.xbar_staged, b.pdes.xbar_staged, "{what}: xbar_staged");
-    assert_eq!(
-        a.pdes.xbar_deferred_grants, b.pdes.xbar_deferred_grants,
-        "{what}: xbar_deferred_grants"
-    );
-    assert_eq!(
-        a.stats.entries.len(),
-        b.stats.entries.len(),
-        "{what}: stat cardinality"
-    );
-    for ((an, av), (bn, bv)) in a.stats.entries.iter().zip(&b.stats.entries) {
-        assert_eq!(an, bn, "{what}: stat name order");
-        assert_eq!(av, bv, "{what}: per-component stat {an}");
-    }
-}
+mod common;
+use common::{assert_bit_identical, assert_threaded_matches, FULL_MATRIX};
 
 /// A sharing workload on `preset`, sized so the whole matrix stays
 /// test-suite-fast while every core still issues IO at `--io-milli 5`
@@ -100,22 +68,15 @@ fn border_arb_threaded_is_bit_identical_to_virtual_across_the_matrix() {
             } else {
                 assert_eq!(reference.pdes.xbar_staged, 0, "{preset}: inert");
             }
-            let matrix: &[(usize, bool)] = if io_milli > 0 {
-                &[(1, false), (1, true), (2, false), (2, true), (8, false), (8, true)]
-            } else {
-                &[(2, true)]
-            };
-            for &(threads, steal) in matrix {
-                let mut cfg = vcfg.clone();
-                cfg.mode = Mode::Parallel;
-                cfg.steal = steal;
-                cfg.threads = threads;
-                let r = run_with_workload(&cfg, &w).unwrap();
-                let what = format!(
-                    "{preset}/io={io_milli}/steal={steal}/threads={threads}"
-                );
-                assert_bit_identical(&reference, &r, &what);
-            }
+            let matrix: &[(usize, bool)] =
+                if io_milli > 0 { FULL_MATRIX } else { &[(2, true)] };
+            assert_threaded_matches(
+                &reference,
+                &vcfg,
+                &w,
+                matrix,
+                &format!("{preset}/io={io_milli}"),
+            );
         }
     }
 }
