@@ -1,166 +1,108 @@
 //! Design-space exploration — the use case the paper motivates: sweep
 //! micro-architecture parameters under a detailed timing model,
-//! accelerated by the parti PDES kernel. The whole sweep is driven by the
-//! declarative [`SystemSpec`] platform API: each point is a spec edit,
-//! never a hand-wired machine.
+//! accelerated by the parti PDES kernel. Since the sweep layer landed,
+//! each part is a named [`SweepSpec`] from the registry driven through
+//! [`run_sweep`]: the spec declares the axes, the orchestrator expands,
+//! schedules and journals the points, and the summary table is rendered
+//! straight from the journal records (docs/SWEEP.md).
 //!
-//! Part 1 sweeps the private L2 capacity (cache axis); part 2 sweeps the
-//! interconnect topology — star vs ring vs mesh — at fixed caches
-//! (fabric axis); part 3 sweeps the synthetic [`TrafficSpec`] patterns on
-//! a fixed ring fabric (workload axis, docs/TRAFFIC.md). For each point
-//! the sweep reports simulated runtime, miss rates (from the serial
-//! reference) and the PDES speedup + accuracy at the chosen quantum.
+//! Part 1 sweeps the private L2 capacity (cache axis, preset
+//! `l2-capacity`); part 2 sweeps the interconnect topology — star vs
+//! ring vs mesh — at fixed caches (fabric axis, preset `fabric-4core`);
+//! part 3 sweeps the synthetic [`TrafficSpec`] patterns on a fixed ring
+//! fabric (workload axis, preset `ring-traffic`, docs/TRAFFIC.md).
+//!
+//! The same sweeps run from the CLI, journaled and resumable:
 //!
 //! ```sh
 //! cargo run --release --example dse_sweep
+//! cargo run --release -- sweep run --spec l2-capacity --journal j.jsonl
 //! ```
 //!
+//! [`SweepSpec`]: parti_sim::spec::sweep::SweepSpec
+//! [`run_sweep`]: parti_sim::harness::sweep::run_sweep
 //! [`TrafficSpec`]: parti_sim::spec::traffic::TrafficSpec
 
-use parti_sim::config::{Mode, RunConfig};
-use parti_sim::harness::{make_workload, run_with_workload};
-use parti_sim::pdes::HostModel;
-use parti_sim::sim::time::NS;
-use parti_sim::spec::{platforms, traffic, Interconnect, SystemSpec};
-use parti_sim::stats::{avg_miss_rate, compare};
+use std::path::PathBuf;
 
-/// Serial reference + virtual PDES on one spec; returns
-/// (serial_result, speedup, sim_time_error).
-fn run_point(
-    spec: &SystemSpec,
-    app: &str,
-) -> anyhow::Result<(parti_sim::pdes::RunResult, f64, f64)> {
-    spec.validate()?;
-    let mut cfg = RunConfig::for_spec(spec);
-    cfg.app = app.to_string();
-    cfg.ops_per_core = 4096;
+use parti_sim::harness::sweep::{run_sweep, SweepOptions};
+use parti_sim::harness::tables::sweep_table;
+use parti_sim::spec::sweep;
+use parti_sim::stats::SweepRecord;
 
-    let workload = make_workload(&cfg)?;
-    let serial = run_with_workload(&cfg, &workload)?;
+/// A scratch journal per part (the example cleans up after itself; real
+/// sweeps keep the journal — that is the resume point).
+fn scratch_journal(name: &str) -> PathBuf {
+    let p = std::env::temp_dir()
+        .join(format!("parti_dse_{}_{name}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    p
+}
 
-    let mut par = cfg.clone();
-    par.mode = Mode::Virtual;
-    par.quantum = 8 * NS;
-    let pdes = run_with_workload(&par, &workload)?;
-
-    let mut host = HostModel::default();
-    host.calibrate_cost(&serial);
-    let speedup = host.speedup(serial.events, pdes.work.as_ref().unwrap());
-    let acc = compare(&serial, &pdes);
-    anyhow::ensure!(acc.checksum_match, "functional mismatch in DSE run");
-    Ok((serial, speedup, acc.sim_time_error))
+/// Run a registry sweep end to end and render its journal records.
+fn run_preset(name: &str) -> anyhow::Result<Vec<SweepRecord>> {
+    let spec = sweep::sweep(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown sweep preset `{name}`"))?;
+    let journal = scratch_journal(name);
+    let opts =
+        SweepOptions { journal: journal.clone(), ..SweepOptions::default() };
+    let out = run_sweep(&spec, &opts)?;
+    anyhow::ensure!(
+        out.ran == out.points,
+        "sweep `{name}` ran {} of {} points",
+        out.ran,
+        out.points
+    );
+    print!("{}", sweep_table(&out.records));
+    let _ = std::fs::remove_file(&journal);
+    Ok(out.records)
 }
 
 fn main() -> anyhow::Result<()> {
-    let app = "canneal"; // cache-hungry and sharing-heavy
-    let base = SystemSpec { cores: 4, ..SystemSpec::default() };
-
     // ---- Part 1: L2 capacity (cache axis) ---------------------------
-    println!("DSE 1: private L2 capacity, app={app}, 4 cores, O3+CHI-lite\n");
     println!(
-        "{:>8} {:>12} {:>10} {:>10} {:>9} {:>9}",
-        "L2(KiB)", "sim_time(us)", "l2_miss", "l3_miss", "speedup", "terr(%)"
+        "DSE 1: private L2 capacity (sweep `l2-capacity`): app=canneal, \
+         4 cores, O3+CHI-lite\n"
     );
-    for kib in [256u64, 512, 1024, 2048] {
-        let mut spec = base.clone().named(
-            format!("dse-l2-{kib}k"),
-            "L2 capacity sweep point",
-        );
-        spec.l2.size_bytes = kib * 1024;
-        let (serial, speedup, terr) = run_point(&spec, app)?;
-        println!(
-            "{:>8} {:>12.2} {:>10.4} {:>10.4} {:>8.2}x {:>9.2}",
-            kib,
-            serial.sim_seconds() * 1e6,
-            avg_miss_rate(&serial, ".l2.miss_rate"),
-            avg_miss_rate(&serial, "hnf.miss_rate"),
-            speedup,
-            terr * 100.0,
-        );
-    }
+    run_preset("l2-capacity")?;
 
     // ---- Part 2: interconnect topology (fabric axis) ----------------
     println!(
-        "\nDSE 2: interconnect topology, app={app}, 4 cores, Table 2 caches\n"
+        "\nDSE 2: interconnect topology (sweep `fabric-4core`): \
+         app=canneal, 4 cores, Table 2 caches\n"
     );
-    println!(
-        "{:>10} {:>12} {:>12} {:>9} {:>9}",
-        "fabric", "sim_time(us)", "noc_routed", "speedup", "terr(%)"
-    );
-    for ic in [
-        Interconnect::Star,
-        Interconnect::Ring,
-        Interconnect::Mesh { cols: 2 },
-    ] {
-        let spec = SystemSpec { interconnect: ic, ..base.clone() }
-            .named("dse-fabric", "topology sweep point");
-        let (serial, speedup, terr) = run_point(&spec, app)?;
-        println!(
-            "{:>10} {:>12.2} {:>12} {:>8.2}x {:>9.2}",
-            ic.describe(spec.cores),
-            serial.sim_seconds() * 1e6,
-            serial.stats.sum_suffix(".routed") as u64,
-            speedup,
-            terr * 100.0,
-        );
-    }
+    run_preset("fabric-4core")?;
     println!(
         "\n(longer fabrics route the same coherence traffic over more \
-         hops: simulated time grows, PDES still matches the serial \
-         reference bit-for-bit on checksums; speedup = modeled wall-clock \
-         on the paper's 64-core host)"
+         hops: simulated time grows while the journal's deterministic \
+         counters stay host-independent — `host_*` fields are the only \
+         wall-clock data, and the canonical journal strips them)"
     );
 
     // ---- Part 3: synthetic traffic patterns (workload axis) ---------
     // The Table 3 apps are CPU-bound and barely load the fabric; the
     // TrafficSpec scenarios are the adversarial complement. Same ring,
     // same caches — only the traffic shape moves.
-    println!("\nDSE 3: synthetic traffic patterns, ring-16 fabric\n");
     println!(
-        "{:>18} {:>12} {:>9} {:>9} {:>9} {:>9}",
-        "pattern", "sim_time(us)", "offered", "retries", "requeued", "speedup"
+        "\nDSE 3: synthetic traffic patterns (sweep `ring-traffic`), \
+         ring-16 fabric\n"
     );
-    let ring = platforms::preset("ring-16").expect("registry preset");
-    for t in traffic::scenarios() {
-        let mut cfg = RunConfig::for_spec(&ring);
-        cfg.traffic = Some(t.name.clone());
-        cfg.ops_per_core = 512;
-        let w = make_workload(&cfg)?;
-        let serial = run_with_workload(&cfg, &w)?;
-
-        let mut par = cfg.clone();
-        par.mode = Mode::Virtual;
-        par.quantum = 8 * NS;
-        let pdes = run_with_workload(&par, &w)?;
-        // Traffic runs race on shared lines by design (no barriers), so
-        // load checksums are kernel-timing-dependent — the bit-identity
-        // gate for traffic is threaded ≡ virtual (tests/traffic.rs).
-        // The cross-kernel functional invariant is completion: both
-        // kernels accept every offered op.
+    let recs = run_preset("ring-traffic")?;
+    // The cross-kernel functional invariant for traffic is completion:
+    // every offered op is accepted (bit-identity itself is gated by
+    // tests/traffic.rs and tests/sweep.rs).
+    for r in &recs {
         anyhow::ensure!(
-            serial.pdes.traffic_offered == pdes.pdes.traffic_offered
-                && pdes.pdes.traffic_accepted == pdes.pdes.traffic_offered,
-            "traffic run did not complete"
-        );
-        let mut host = HostModel::default();
-        host.calibrate_cost(&serial);
-        let speedup =
-            host.speedup(serial.events, pdes.work.as_ref().unwrap());
-        println!(
-            "{:>18} {:>12.2} {:>9} {:>9} {:>9} {:>8.2}x",
-            t.name,
-            serial.sim_seconds() * 1e6,
-            pdes.pdes.traffic_offered,
-            pdes.pdes.traffic_retries,
-            serial.stats.get("hnf.requeued").unwrap_or(0.0) as u64,
-            speedup,
+            r.traffic_offered > 0 && r.traffic_accepted == r.traffic_offered,
+            "traffic point `{}` did not complete",
+            r.id
         );
     }
     println!(
         "\n(each row is a named TrafficSpec — `parti-sim traffic` lists \
-         them, `run --traffic <name>` replays one; the hotspot row's \
-         requeued column is the HN-F serialising its 8 hot lines, and \
-         retries counts LSQ backpressure from the offered load)"
+         them; the whole part is one `sweep run --spec ring-traffic`, \
+         journaled, shardable with --shard i/N and resumable with \
+         --resume)"
     );
     Ok(())
 }

@@ -607,6 +607,52 @@ fn main() {
     }
     json = json.obj("xbar_arb_16_domain", xbar_rows);
 
+    // Sweep orchestrator outer pool: the `quick` registry sweep (4 whole
+    // simulations) at outer 1 vs 4. The journal bytes are pool-size
+    // invariant (tests/sweep.rs gates that); this row tracks what the
+    // outer pool buys in points/sec on this host (docs/SWEEP.md).
+    let mut sweep_rows = JsonObj::new();
+    {
+        use parti_sim::harness::sweep::{run_sweep, SweepOptions};
+        let spec =
+            parti_sim::spec::sweep::sweep("quick").expect("quick preset");
+        for outer in [1usize, 4] {
+            let journal = std::env::temp_dir().join(format!(
+                "parti_bench_sweep_{}_o{outer}.jsonl",
+                std::process::id()
+            ));
+            let mut points = 0usize;
+            let (m, lo, hi) = measure(5, || {
+                let _ = std::fs::remove_file(&journal);
+                let opts = SweepOptions {
+                    journal: journal.clone(),
+                    outer: Some(outer),
+                    ..SweepOptions::default()
+                };
+                let out = run_sweep(&spec, &opts).unwrap();
+                points = out.ran;
+            });
+            let _ = std::fs::remove_file(&journal);
+            bench_util::report(
+                &format!("sweep_outer_pool[quick/outer{outer}]"),
+                m,
+                lo,
+                hi,
+            );
+            let m_ns = m as f64;
+            let pps =
+                if m_ns > 0.0 { points as f64 / (m_ns / 1e9) } else { 0.0 };
+            println!("  outer{outer}: {points} points, {pps:.2} points/s");
+            sweep_rows = sweep_rows.obj(
+                &format!("outer{outer}"),
+                JsonObj::new()
+                    .u64("median_ns", m as u64)
+                    .f64("points_per_sec", pps),
+            );
+        }
+    }
+    json = json.obj("sweep_outer_pool", sweep_rows);
+
     // End-to-end serial kernel throughput (the L3 §Perf headline).
     let mut cfg = RunConfig {
         app: "blackscholes".to_string(),

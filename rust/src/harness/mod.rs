@@ -2,6 +2,7 @@
 //! regeneration (one entry per paper table/figure, DESIGN.md §5).
 
 pub mod figures;
+pub mod sweep;
 pub mod tables;
 
 use anyhow::{anyhow, Result};

@@ -1,0 +1,597 @@
+//! The sweep orchestrator: expands a [`SweepSpec`] into a deterministic
+//! point list, runs the points on a claim-based *outer* pool of whole
+//! simulations, and journals one [`SweepRecord`] per point (append-only
+//! JSONL, docs/SWEEP.md).
+//!
+//! Three invariants make sweeps composable, and `tests/sweep.rs` gates
+//! each one on journal bytes (modulo the `host_*` wall-clock fields):
+//!
+//! * **Pool-size invariance.** Workers *claim* points dynamically (an
+//!   atomic cursor — idle workers steal whatever is next), but records
+//!   pass through an in-order committer: a record is written only when
+//!   every earlier point's record is already written. The journal is a
+//!   pure function of the point list, whatever `--outer` is, and a
+//!   killed sweep always leaves a clean point-order prefix.
+//! * **Shard decomposition.** `--shard i/N` keeps the points whose
+//!   expansion index is `i (mod N)` — a partition by construction, so
+//!   the sorted union of N shard journals equals the unsharded journal
+//!   (`tests/properties.rs` holds the partition property).
+//! * **Resume.** On `--resume` the journal is re-read and completed
+//!   point ids are skipped; intact lines are kept byte-for-byte, and a
+//!   truncated or garbled line (a killed writer, a bad merge) is
+//!   reported with its line number and its point re-run.
+//!
+//! The outer pool multiplies with the threaded kernel's *inner* threads,
+//! so the default width follows the budget rule `outer × inner ≤
+//! budget_cores` ([`budget_outer`]; `--outer`/`--budget-cores`
+//! override).
+
+use std::collections::BTreeMap;
+use std::fs::OpenOptions;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{Mode, RunConfig};
+use crate::sim::time::NS;
+use crate::spec::sweep::{
+    fabric_keyword, mode_keyword, policy_keyword, Sampling, SweepSpec,
+};
+use crate::spec::{platforms, SystemSpec};
+use crate::stats::journal::SweepRecord;
+use crate::util::prop::Gen;
+
+use super::{make_workload, run_with_workload};
+
+/// One expanded sweep point: a canonical id and a ready-to-run config.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    /// Position in the expanded point list (`SweepRecord::index`).
+    pub index: usize,
+    /// Canonical id built from the *resolved* axis values — the resume
+    /// key, stable across shards and pool sizes.
+    pub id: String,
+    pub cfg: RunConfig,
+}
+
+/// Expand a spec into its deterministic point list: the full grid in
+/// field order, or the `sample_seed`-keyed random subset. Point ids,
+/// order and indices are a pure function of the spec.
+pub fn expand(spec: &SweepSpec) -> Result<Vec<SweepPoint>> {
+    spec.validate().map_err(|e| anyhow!("{e}"))?;
+    let plats: Vec<SystemSpec> = spec
+        .platforms
+        .iter()
+        .map(|p| platforms::resolve(p).map_err(|e| anyhow!("{e}")))
+        .collect::<Result<_>>()?;
+    let dims = spec.axis_lens();
+    let total: usize = dims.iter().product();
+    let chosen: Vec<usize> = match spec.sampling {
+        Sampling::Grid => (0..total).collect(),
+        Sampling::Random => sample_indices(spec, total),
+    };
+    let mut points = Vec::with_capacity(chosen.len());
+    for (index, &gi) in chosen.iter().enumerate() {
+        let mut rest = gi;
+        let mut coord = [0usize; 8];
+        for d in (0..8).rev() {
+            coord[d] = rest % dims[d];
+            rest /= dims[d];
+        }
+        points.push(make_point(spec, &plats, coord, index)?);
+    }
+    Ok(points)
+}
+
+/// Distinct grid indices for `sampling = "random"`: rejection-sample
+/// from the deterministic CBRNG stream, then fill any collision-starved
+/// remainder in ascending order (still deterministic).
+fn sample_indices(spec: &SweepSpec, total: usize) -> Vec<usize> {
+    let want = spec.samples.min(total);
+    let mut g = Gen::new(spec.sample_seed);
+    let mut seen = std::collections::BTreeSet::new();
+    let mut chosen = Vec::with_capacity(want);
+    let mut attempts = 0usize;
+    let cap = want.saturating_mul(64).saturating_add(1024);
+    while chosen.len() < want && attempts < cap {
+        attempts += 1;
+        let gi = g.range_usize(0, total - 1);
+        if seen.insert(gi) {
+            chosen.push(gi);
+        }
+    }
+    for gi in 0..total {
+        if chosen.len() >= want {
+            break;
+        }
+        if seen.insert(gi) {
+            chosen.push(gi);
+        }
+    }
+    chosen
+}
+
+fn make_point(
+    spec: &SweepSpec,
+    plats: &[SystemSpec],
+    coord: [usize; 8],
+    index: usize,
+) -> Result<SweepPoint> {
+    let mut plat = plats[coord[0]].clone();
+    if let Some(&c) = spec.cores.get(coord[1]) {
+        plat.cores = c;
+    }
+    if let Some(&k) = spec.l2_kib.get(coord[2]) {
+        plat.l2.size_bytes = k * 1024;
+    }
+    if let Some(&f) = spec.fabrics.get(coord[3]) {
+        plat.interconnect = f;
+    }
+    let workload = &spec.workloads[coord[4]];
+    let kernel = spec.kernels[coord[5]];
+    let q_ns = spec.quantum_ns[coord[6]];
+    let policy = spec.quantum_policies[coord[7]];
+    let id = format!(
+        "{}+c{}+l2:{}k+{}+{}+{}+q{}+{}",
+        plat.name,
+        plat.cores,
+        plat.l2.size_bytes / 1024,
+        fabric_keyword(plat.interconnect),
+        workload,
+        mode_keyword(kernel),
+        q_ns,
+        policy_keyword(policy),
+    );
+    // Overrides can break a platform (e.g. ragged mesh rows) — surface
+    // the spec's actionable hints with the point named.
+    plat.validate().map_err(|e| anyhow!("sweep point {id}: {e}"))?;
+    let mut cfg = RunConfig::for_spec(&plat);
+    match workload.split_once(':') {
+        Some(("app", name)) => cfg.app = name.to_string(),
+        Some(("traffic", name)) => cfg.traffic = Some(name.to_string()),
+        _ => bail!("sweep point {id}: bad workload entry `{workload}`"),
+    }
+    cfg.ops_per_core = spec.ops_per_core;
+    cfg.seed = spec.seed;
+    cfg.mode = kernel;
+    cfg.quantum = q_ns * NS;
+    cfg.quantum_policy = policy;
+    if kernel == Mode::Parallel {
+        cfg.threads = spec.inner_threads;
+    }
+    Ok(SweepPoint { index, id, cfg })
+}
+
+/// Parse a `--shard i/N` argument.
+pub fn parse_shard(s: &str) -> Result<(usize, usize)> {
+    let (i, n) = s
+        .split_once('/')
+        .ok_or_else(|| anyhow!("--shard wants i/N, e.g. 0/2 (got `{s}`)"))?;
+    let i: usize = i
+        .trim()
+        .parse()
+        .map_err(|e| anyhow!("--shard index `{}`: {e}", i.trim()))?;
+    let n: usize = n
+        .trim()
+        .parse()
+        .map_err(|e| anyhow!("--shard count `{}`: {e}", n.trim()))?;
+    if n == 0 {
+        bail!("--shard i/N needs N >= 1");
+    }
+    if i >= n {
+        bail!("--shard {i}/{n} is out of range — the index runs 0..{n}");
+    }
+    Ok((i, n))
+}
+
+/// The points shard `i` of `N` owns: expansion index ≡ i (mod N). Every
+/// point lands in exactly one shard (total + disjoint by construction).
+pub fn shard_points(
+    points: &[SweepPoint],
+    shard: (usize, usize),
+) -> Vec<SweepPoint> {
+    points
+        .iter()
+        .filter(|p| p.index % shard.1 == shard.0)
+        .cloned()
+        .collect()
+}
+
+/// Host hardware threads (the default `budget_cores`).
+pub fn host_parallelism() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// The budget rule: outer × inner ≤ budget_cores, i.e. the outer pool
+/// defaults to `budget_cores / inner` (at least 1). An explicit
+/// `--outer` overrides the rule — oversubscribing is allowed, it just
+/// stops being the default.
+pub fn budget_outer(
+    requested: Option<usize>,
+    inner: usize,
+    budget_cores: usize,
+) -> usize {
+    match requested {
+        Some(n) => n.max(1),
+        None => (budget_cores / inner.max(1)).max(1),
+    }
+}
+
+/// One unparsable journal line, reported with its 1-based line number.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct JournalIssue {
+    pub line: usize,
+    pub error: String,
+}
+
+/// Tolerant journal read: intact records plus per-line issues.
+pub struct JournalScan {
+    pub records: Vec<SweepRecord>,
+    pub issues: Vec<JournalIssue>,
+}
+
+/// Read a journal, keeping intact records and collecting issues for
+/// truncated / garbled lines instead of failing.
+pub fn scan_journal(path: &Path) -> Result<JournalScan> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("cannot read journal {}: {e}", path.display()))?;
+    let mut out = JournalScan { records: Vec::new(), issues: Vec::new() };
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        match SweepRecord::from_json_line(line) {
+            Ok(r) => out.records.push(r),
+            Err(e) => out.issues.push(JournalIssue { line: i + 1, error: e }),
+        }
+    }
+    Ok(out)
+}
+
+fn strict_records(path: &Path) -> Result<Vec<SweepRecord>> {
+    let scan = scan_journal(path)?;
+    if let Some(i) = scan.issues.first() {
+        bail!("{}:{}: {}", path.display(), i.line, i.error);
+    }
+    Ok(scan.records)
+}
+
+/// The journal's canonical form: every record re-emitted without the
+/// `host_*` wall-clock fields, sorted by point index. Two runs of the
+/// same point set must agree on this byte-for-byte.
+pub fn canonical_journal(path: &Path) -> Result<Vec<String>> {
+    let mut rs = strict_records(path)?;
+    rs.sort_by_key(|r| r.index);
+    Ok(rs.iter().map(|r| r.to_canonical_line()).collect())
+}
+
+/// Canonical form of several journals merged — the shard-union gate
+/// compares this against the unsharded run.
+pub fn canonical_journal_union<P: AsRef<Path>>(
+    paths: &[P],
+) -> Result<Vec<String>> {
+    let mut rs = Vec::new();
+    for p in paths {
+        rs.extend(strict_records(p.as_ref())?);
+    }
+    rs.sort_by_key(|r| r.index);
+    Ok(rs.iter().map(|r| r.to_canonical_line()).collect())
+}
+
+/// How to execute a sweep (the `sweep run` flag surface).
+#[derive(Clone, Debug)]
+pub struct SweepOptions {
+    /// Append-only JSONL results file.
+    pub journal: PathBuf,
+    /// Outer pool width; `None` applies the budget rule.
+    pub outer: Option<usize>,
+    /// Deterministic `(i, N)` partition of the point set.
+    pub shard: Option<(usize, usize)>,
+    /// Skip points already journaled (and repair damaged lines).
+    pub resume: bool,
+    /// Host-core budget the outer × inner product must fit in.
+    pub budget_cores: usize,
+    /// Stop after this many *new* points (CI smoke, kill-testing).
+    pub max_points: Option<usize>,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        SweepOptions {
+            journal: PathBuf::from("sweep_journal.jsonl"),
+            outer: None,
+            shard: None,
+            resume: false,
+            budget_cores: host_parallelism(),
+            max_points: None,
+        }
+    }
+}
+
+/// What a sweep run did, with the journal's full record set (old + new,
+/// index-sorted) ready for rendering.
+pub struct SweepOutcome {
+    /// Points in this run's (post-shard) point set.
+    pub points: usize,
+    /// Points skipped because the journal already had them.
+    pub skipped: usize,
+    /// Points executed (and appended) by this run.
+    pub ran: usize,
+    /// Outer pool width actually used.
+    pub outer: usize,
+    /// Damaged journal lines that were dropped and re-run.
+    pub repaired: Vec<JournalIssue>,
+    pub records: Vec<SweepRecord>,
+}
+
+struct Commit {
+    file: std::fs::File,
+    /// Next pending-list slot the journal is waiting on.
+    next: usize,
+    /// Finished records not yet writable (a predecessor is still
+    /// running).
+    ready: BTreeMap<usize, SweepRecord>,
+    written: Vec<SweepRecord>,
+    failed: Option<String>,
+}
+
+fn run_point(point: &SweepPoint) -> Result<SweepRecord> {
+    let w = make_workload(&point.cfg)?;
+    let r = run_with_workload(&point.cfg, &w)?;
+    Ok(SweepRecord::from_run(point.index as u64, &point.id, &r))
+}
+
+/// Run a sweep end to end: expand, shard, skip journaled points, drain
+/// the rest on the outer pool, appending records in point order.
+pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepOutcome> {
+    let all = expand(spec)?;
+    let points = match opts.shard {
+        Some(s) => shard_points(&all, s),
+        None => all,
+    };
+
+    let mut done: BTreeMap<String, SweepRecord> = BTreeMap::new();
+    let mut repaired = Vec::new();
+    if opts.journal.exists() {
+        let scan = scan_journal(&opts.journal)?;
+        if !opts.resume && !(scan.records.is_empty() && scan.issues.is_empty())
+        {
+            bail!(
+                "journal {} already holds {} record(s) — pass --resume to \
+                 skip completed points, or point --journal at a fresh file",
+                opts.journal.display(),
+                scan.records.len()
+            );
+        }
+        if !scan.issues.is_empty() {
+            // Rewrite with only the intact lines: the damaged points are
+            // re-run below, never silently skipped.
+            let mut body = String::new();
+            for r in &scan.records {
+                body.push_str(&r.to_json_line());
+                body.push('\n');
+            }
+            std::fs::write(&opts.journal, body).map_err(|e| {
+                anyhow!(
+                    "cannot rewrite journal {}: {e}",
+                    opts.journal.display()
+                )
+            })?;
+        }
+        for r in scan.records {
+            done.insert(r.id.clone(), r);
+        }
+        repaired = scan.issues;
+    }
+
+    let skipped = points.iter().filter(|p| done.contains_key(&p.id)).count();
+    let mut pending: Vec<&SweepPoint> =
+        points.iter().filter(|p| !done.contains_key(&p.id)).collect();
+    if let Some(k) = opts.max_points {
+        pending.truncate(k);
+    }
+
+    let inner = if spec.kernels.contains(&Mode::Parallel) {
+        spec.inner_threads.max(1)
+    } else {
+        1
+    };
+    let outer = budget_outer(opts.outer, inner, opts.budget_cores)
+        .min(pending.len().max(1));
+
+    let file = OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&opts.journal)
+        .map_err(|e| {
+            anyhow!("cannot open journal {}: {e}", opts.journal.display())
+        })?;
+    let commit = Mutex::new(Commit {
+        file,
+        next: 0,
+        ready: BTreeMap::new(),
+        written: Vec::new(),
+        failed: None,
+    });
+    let claim = AtomicUsize::new(0);
+    let pending = &pending;
+
+    std::thread::scope(|s| {
+        for _ in 0..outer {
+            s.spawn(|| loop {
+                let k = claim.fetch_add(1, Ordering::Relaxed);
+                if k >= pending.len() {
+                    break;
+                }
+                if commit.lock().unwrap().failed.is_some() {
+                    break;
+                }
+                let point = pending[k];
+                let res = run_point(point);
+                let mut guard = commit.lock().unwrap();
+                let c = &mut *guard;
+                match res {
+                    Ok(rec) => {
+                        c.ready.insert(k, rec);
+                        // In-order commit: write only the contiguous
+                        // prefix, so journal bytes are independent of
+                        // which worker finished first.
+                        while let Some(r) = c.ready.remove(&c.next) {
+                            let line = r.to_json_line();
+                            if let Err(e) = writeln!(c.file, "{line}") {
+                                c.failed =
+                                    Some(format!("journal write: {e}"));
+                                break;
+                            }
+                            c.written.push(r);
+                            c.next += 1;
+                        }
+                        if c.failed.is_none() {
+                            if let Err(e) = c.file.flush() {
+                                c.failed =
+                                    Some(format!("journal flush: {e}"));
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        if c.failed.is_none() {
+                            c.failed = Some(format!(
+                                "point {} ({}): {e}",
+                                point.index, point.id
+                            ));
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    let commit = commit.into_inner().unwrap();
+    if let Some(msg) = commit.failed {
+        bail!("sweep aborted: {msg}");
+    }
+    let ran = commit.written.len();
+    let mut records: Vec<SweepRecord> =
+        points.iter().filter_map(|p| done.get(&p.id).cloned()).collect();
+    records.extend(commit.written);
+    records.sort_by_key(|r| r.index);
+    Ok(SweepOutcome {
+        points: points.len(),
+        skipped,
+        ran,
+        outer,
+        repaired,
+        records,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::sweep;
+
+    #[test]
+    fn expand_is_deterministic_and_ids_unique() {
+        let spec = sweep::sweep("quick").unwrap();
+        let a = expand(&spec).unwrap();
+        let b = expand(&spec).unwrap();
+        assert_eq!(a.len(), spec.point_count());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.index, y.index);
+            assert_eq!(x.id, y.id);
+        }
+        let mut ids: Vec<&str> = a.iter().map(|p| p.id.as_str()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), a.len(), "ids must be unique");
+    }
+
+    #[test]
+    fn random_sampling_is_seeded_and_distinct() {
+        let spec = sweep::sweep("random-dse").unwrap();
+        let a = expand(&spec).unwrap();
+        assert_eq!(a.len(), 24);
+        let b = expand(&spec).unwrap();
+        assert_eq!(
+            a.iter().map(|p| p.id.clone()).collect::<Vec<_>>(),
+            b.iter().map(|p| p.id.clone()).collect::<Vec<_>>(),
+        );
+        let reseeded =
+            SweepSpec { sample_seed: spec.sample_seed + 1, ..spec };
+        let c = expand(&reseeded).unwrap();
+        assert_ne!(
+            a.iter().map(|p| p.id.clone()).collect::<Vec<_>>(),
+            c.iter().map(|p| p.id.clone()).collect::<Vec<_>>(),
+            "a different sample_seed draws a different subset"
+        );
+    }
+
+    #[test]
+    fn shards_partition_the_point_set() {
+        let spec = sweep::sweep("ring-traffic").unwrap();
+        let all = expand(&spec).unwrap();
+        for n in 1..=4 {
+            let mut seen = Vec::new();
+            for i in 0..n {
+                for p in shard_points(&all, (i, n)) {
+                    seen.push(p.index);
+                }
+            }
+            seen.sort_unstable();
+            let want: Vec<usize> = (0..all.len()).collect();
+            assert_eq!(seen, want, "shards {n} must partition");
+        }
+    }
+
+    #[test]
+    fn shard_parse_rejects_bad_input() {
+        assert_eq!(parse_shard("0/2").unwrap(), (0, 2));
+        assert_eq!(parse_shard("2/3").unwrap(), (2, 3));
+        assert!(parse_shard("3/3").is_err());
+        assert!(parse_shard("1of2").is_err());
+        assert!(parse_shard("1/0").is_err());
+        assert!(parse_shard("x/2").is_err());
+    }
+
+    #[test]
+    fn budget_rule_divides_and_clamps() {
+        assert_eq!(budget_outer(None, 1, 8), 8);
+        assert_eq!(budget_outer(None, 4, 8), 2);
+        assert_eq!(budget_outer(None, 16, 8), 1, "never below 1");
+        assert_eq!(budget_outer(Some(5), 16, 8), 5, "explicit wins");
+        assert_eq!(budget_outer(Some(0), 1, 8), 1);
+    }
+
+    #[test]
+    fn point_ids_name_resolved_values() {
+        let spec = SweepSpec {
+            cores: vec![4],
+            l2_kib: vec![512],
+            ..sweep::SweepSpec::default()
+        };
+        let pts = expand(&spec).unwrap();
+        assert_eq!(pts.len(), 1);
+        assert_eq!(
+            pts[0].id,
+            "fig4-2+c4+l2:512k+star+app:synthetic+virtual+q8+fixed"
+        );
+        assert_eq!(pts[0].cfg.system.cores, 4);
+        assert_eq!(pts[0].cfg.system.l2.size_bytes, 512 * 1024);
+    }
+
+    #[test]
+    fn bad_override_is_reported_with_point_id() {
+        let spec = SweepSpec {
+            cores: vec![5],
+            fabrics: vec![crate::spec::Interconnect::Mesh { cols: 4 }],
+            ..sweep::SweepSpec::default()
+        };
+        let err = expand(&spec).unwrap_err().to_string();
+        assert!(err.contains("mesh"), "{err}");
+        assert!(err.contains("+c5+"), "error names the point: {err}");
+    }
+}

@@ -1,6 +1,8 @@
-//! Regenerate the paper's tables 1-3 from the implementation itself.
+//! Regenerate the paper's tables 1-3 from the implementation itself,
+//! plus the sweep-journal summary table (docs/SWEEP.md).
 
 use crate::config::SystemConfig;
+use crate::stats::SweepRecord;
 use crate::workload::APPS;
 
 /// Table 1: CPU models and their timing features.
@@ -70,9 +72,68 @@ pub fn table3() -> String {
     s
 }
 
+/// Render sweep-journal records as a summary table, index-sorted. Only
+/// deterministic fields appear — the table, like the canonical journal,
+/// is reproducible across hosts and pool sizes.
+pub fn sweep_table(records: &[SweepRecord]) -> String {
+    let idw = records
+        .iter()
+        .map(|r| r.id.len())
+        .max()
+        .unwrap_or(0)
+        .max("point id".len());
+    let mut s = String::new();
+    s.push_str(&format!(
+        "| {:>5} | {:<idw$} | {:>12} | {:>10} | {:>8} | {:>10} | {:>8} |\n",
+        "point", "point id", "sim_time_us", "events", "l2_miss", "offered", "retries",
+    ));
+    s.push_str(&format!(
+        "|{:->7}|{:->w$}|{:->14}|{:->12}|{:->10}|{:->12}|{:->10}|\n",
+        "", "", "", "", "", "", "",
+        w = idw + 2,
+    ));
+    for r in records {
+        s.push_str(&format!(
+            "| {:>5} | {:<idw$} | {:>12.3} | {:>10} | {:>8.4} | {:>10} | {:>8} |\n",
+            r.index,
+            r.id,
+            r.sim_seconds * 1e6,
+            r.events,
+            r.l2_miss_rate,
+            r.traffic_offered,
+            r.traffic_retries,
+        ));
+    }
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn sweep_table_lists_every_record() {
+        let line = concat!(
+            "{\"index\": 3, ",
+            "\"id\": \"fig4-2+c4+l2:512k+star+app:canneal+virtual+q8+fixed\", ",
+            "\"sim_ticks\": 123000, \"sim_seconds\": 0.000123, ",
+            "\"events\": 42, \"committed_ops\": 10, \"barriers\": 2, ",
+            "\"quanta_skipped\": 0, \"cross_events\": 5, \"postponed\": 1, ",
+            "\"inbox_staged\": 4, \"xbar_staged\": 3, ",
+            "\"xbar_deferred_grants\": 0, \"traffic_offered\": 64, ",
+            "\"traffic_accepted\": 64, \"traffic_retries\": 7, ",
+            "\"traffic_phases\": 0, \"routed\": 9, \"hnf_requeued\": 0, ",
+            "\"load_checksum\": 17, \"l1d_miss_rate\": 0.25, ",
+            "\"l2_miss_rate\": 0.125, \"l3_miss_rate\": 0.0625}",
+        );
+        let rec = SweepRecord::from_json_line(line).unwrap();
+        let t = sweep_table(&[rec]);
+        assert!(t.contains("point id"), "{t}");
+        assert!(t.contains("fig4-2+c4+l2:512k+star+app:canneal+virtual+q8+fixed"));
+        assert!(t.contains(" 0.1250 |"), "{t}");
+        assert!(t.contains(" 7 |"), "{t}");
+        assert_eq!(t.lines().count(), 3, "header + rule + one row");
+    }
 
     #[test]
     fn tables_render() {

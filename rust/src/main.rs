@@ -6,6 +6,7 @@
 //! parti-sim run      --platform my_soc.toml              # spec from disk
 //! parti-sim run      --traffic hotspot --threads 8       # synthetic traffic
 //! parti-sim compare  --app canneal --cores 32           # serial vs PDES
+//! parti-sim sweep run --spec quick --shard 0/2          # journaled DSE
 //! parti-sim platforms                                   # preset registry
 //! parti-sim traffic                                     # traffic scenarios
 //! parti-sim fig7|fig8|fig9|tables|protocols             # paper artefacts
@@ -43,6 +44,8 @@ COMMANDS
              --validate FILE.toml)
   traffic    list synthetic-traffic scenarios (--describe NAME,
              --dump NAME, --validate FILE.toml; docs/TRAFFIC.md)
+  sweep      journaled DSE sweeps: `sweep run --spec S`, `sweep list`
+             (--describe, --dump, --validate as above; docs/SWEEP.md)
   fig7       core & quantum sweep (synthetic + blackscholes)
   fig8       PARSEC subset + STREAM @ 32 cores
   fig9       cache miss-rate accuracy (same runs as fig8)
@@ -100,6 +103,20 @@ RUN/COMPARE/FFWD FLAGS
   --json            emit the summary as JSON
 
   Flags are documented in detail in docs/CLI.md.
+
+SWEEP FLAGS (sweep run; docs/SWEEP.md)
+  --spec S          named sweep (see `sweep list`) or a
+                    SweepSpec .toml file              [required]
+  --journal PATH    append-only JSONL results file
+                    (one record per point)  [sweep_journal.jsonl]
+  --outer N         outer pool width (whole simulations);
+                    default follows the budget rule
+                    outer x inner <= --budget-cores
+  --budget-cores N  host-core budget for the rule   [host cores]
+  --shard i/N       run only points with index = i (mod N)
+  --resume          skip journaled points; damaged lines are
+                    reported with line numbers and re-run
+  --max-points K    stop after K new points (smoke tests)
 
 FIGURE FLAGS
   --ops N           trace ops per core                [2048]
@@ -278,6 +295,94 @@ fn main() -> Result<()> {
                     "\nUse `run --traffic <name|file.toml>`; `--describe`, \
                      `--dump`, `--validate` inspect a spec (docs/TRAFFIC.md)."
                 );
+            }
+        }
+        Some("sweep") => {
+            use parti_sim::harness::sweep as orch;
+            use parti_sim::spec::sweep;
+            if let Some(name) = args.get("describe") {
+                let spec =
+                    sweep::resolve(name).map_err(|e| anyhow::anyhow!("{e}"))?;
+                println!("{}", spec.describe());
+            } else if let Some(name) = args.get("dump") {
+                let spec =
+                    sweep::resolve(name).map_err(|e| anyhow::anyhow!("{e}"))?;
+                print!("{}", spec.to_toml());
+            } else if let Some(path) = args.get("validate") {
+                let spec =
+                    sweep::resolve(path).map_err(|e| anyhow::anyhow!("{e}"))?;
+                let points = orch::expand(&spec)?;
+                println!(
+                    "ok: sweep `{}` is valid ({} point(s))",
+                    spec.name,
+                    points.len()
+                );
+            } else {
+                match args.rest.first().map(|s| s.as_str()) {
+                    Some("run") => {
+                        let arg = args.get("spec").ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "sweep run needs --spec <name|file.toml> \
+                                 (see `sweep list`)"
+                            )
+                        })?;
+                        let spec = sweep::resolve(arg)
+                            .map_err(|e| anyhow::anyhow!("{e}"))?;
+                        let mut opts = orch::SweepOptions {
+                            journal: args
+                                .get_str("journal", "sweep_journal.jsonl")
+                                .into(),
+                            resume: args.has("resume"),
+                            ..Default::default()
+                        };
+                        if let Some(o) = args.get("outer") {
+                            opts.outer = Some(o.parse().map_err(|e| {
+                                anyhow::anyhow!("bad --outer {o}: {e}")
+                            })?);
+                        }
+                        opts.budget_cores =
+                            args.get_usize("budget-cores", opts.budget_cores);
+                        if let Some(s) = args.get("shard") {
+                            opts.shard = Some(orch::parse_shard(s)?);
+                        }
+                        if let Some(k) = args.get("max-points") {
+                            opts.max_points = Some(k.parse().map_err(|e| {
+                                anyhow::anyhow!("bad --max-points {k}: {e}")
+                            })?);
+                        }
+                        let out = orch::run_sweep(&spec, &opts)?;
+                        for i in &out.repaired {
+                            eprintln!(
+                                "journal: repaired damaged line {} ({}); \
+                                 its point was re-run",
+                                i.line, i.error
+                            );
+                        }
+                        println!(
+                            "sweep `{}`: {} point(s), {} skipped \
+                             (journaled), {} ran on outer pool of {}",
+                            spec.name, out.points, out.skipped, out.ran,
+                            out.outer
+                        );
+                        println!("journal: {}\n", opts.journal.display());
+                        print!("{}", tables::sweep_table(&out.records));
+                    }
+                    None | Some("list") => {
+                        print!("{}", sweep::render_list());
+                        println!(
+                            "\nUse `sweep run --spec <name|file.toml>` \
+                             (--journal, --outer, --shard i/N, --resume); \
+                             `--describe`, `--dump`, `--validate` inspect \
+                             a spec (docs/SWEEP.md)."
+                        );
+                    }
+                    Some(other) => {
+                        return Err(anyhow::anyhow!(
+                            "unknown sweep verb `{other}` — use `sweep \
+                             run` or `sweep list`"
+                        ));
+                    }
+                }
             }
         }
         Some("fig7") => {

@@ -29,6 +29,7 @@
 //! adding a topology.
 
 pub mod platforms;
+pub mod sweep;
 pub mod traffic;
 
 use crate::config::{CacheConfig, RunConfig, SystemConfig};

@@ -1,0 +1,1005 @@
+//! The declarative sweep API: [`SweepSpec`] describes a whole *design
+//! space* — platform axes ([`super::SystemSpec`] presets plus cache /
+//! core / fabric overrides) × workloads (Table 3 apps and
+//! [`super::traffic`] scenarios) × run-policy levers (kernel, quantum,
+//! `--quantum-policy`) — independently of how the points are executed
+//! ([`crate::harness::sweep`] owns the outer pool, the journal and the
+//! shard arithmetic).
+//!
+//! This is the paper's actual use case: the 42.7× speedup only matters
+//! because architects run thousands of configurations, not one. A
+//! `SweepSpec` can be
+//!
+//! * built in code (the tests and examples do this),
+//! * loaded from / saved to TOML ([`SweepSpec::from_toml`],
+//!   [`SweepSpec::to_toml`] — the same hand-rolled flat subset the
+//!   platform and traffic specs use; axis lists are comma-separated
+//!   inside one quoted string),
+//! * taken from the named registry ([`sweeps`],
+//!   `parti-sim sweep run --spec quick`),
+//! * validated with actionable errors ([`SweepSpec::validate`]),
+//!
+//! and then *expanded* into a deterministic point list by
+//! [`crate::harness::sweep::expand`]: grid sampling enumerates the full
+//! cartesian product in field order, random sampling draws a
+//! deterministic distinct subset keyed by `sample_seed` — either way the
+//! point list (ids, order, indices) is a pure function of the spec, which
+//! is what makes `--shard i/N` partitions and journal resume exact
+//! (`tests/sweep.rs` gates this).
+//!
+//! See `docs/SWEEP.md` for the schema, the budget rule and the journal
+//! format.
+
+use std::path::Path;
+
+use super::{platforms, traffic, Interconnect, MAX_CORES};
+use crate::config::Mode;
+use crate::sched::QuantumPolicy;
+
+/// How the point set is drawn from the axis grid.
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub enum Sampling {
+    /// Every combination, in field order (platforms outermost,
+    /// quantum_policies innermost).
+    #[default]
+    Grid,
+    /// `samples` distinct grid points, drawn by the deterministic
+    /// counter-based RNG keyed by `sample_seed`.
+    Random,
+}
+
+impl Sampling {
+    /// Parse the spec-TOML / CLI spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "grid" => Sampling::Grid,
+            "random" => Sampling::Random,
+            _ => return None,
+        })
+    }
+
+    /// The TOML / CLI keyword.
+    pub fn keyword(&self) -> &'static str {
+        match self {
+            Sampling::Grid => "grid",
+            Sampling::Random => "random",
+        }
+    }
+}
+
+/// The sweep spelling of a kernel [`Mode`] (round-trips with
+/// [`Mode::parse`]).
+pub fn mode_keyword(m: Mode) -> &'static str {
+    match m {
+        Mode::Serial => "serial",
+        Mode::Parallel => "parallel",
+        Mode::Virtual => "virtual",
+    }
+}
+
+/// The sweep spelling of a [`QuantumPolicy`]: `fixed`, `horizon`,
+/// `hybrid:<max_leap>` (the bare `hybrid` keyword loses the leap cap, so
+/// sweeps always spell it out).
+pub fn policy_keyword(p: QuantumPolicy) -> String {
+    match p {
+        QuantumPolicy::Fixed => "fixed".to_string(),
+        QuantumPolicy::Horizon => "horizon".to_string(),
+        QuantumPolicy::Hybrid { max_leap } => format!("hybrid:{max_leap}"),
+    }
+}
+
+/// Parse [`policy_keyword`] spellings (also accepts the CLI's bare
+/// `hybrid`, which carries the default leap cap).
+pub fn parse_policy(s: &str) -> Option<QuantumPolicy> {
+    if let Some(n) = s.strip_prefix("hybrid:") {
+        return n.parse().ok().map(|max_leap| QuantumPolicy::Hybrid { max_leap });
+    }
+    QuantumPolicy::parse(s)
+}
+
+/// The sweep spelling of an [`Interconnect`]: `star`, `ring`,
+/// `mesh:<cols>` (the platform-TOML splits the width into `mesh_cols`;
+/// a one-token axis value keeps sweep lists flat).
+pub fn fabric_keyword(ic: Interconnect) -> String {
+    match ic {
+        Interconnect::Star => "star".to_string(),
+        Interconnect::Ring => "ring".to_string(),
+        Interconnect::Mesh { cols } => format!("mesh:{cols}"),
+    }
+}
+
+/// Parse [`fabric_keyword`] spellings.
+pub fn parse_fabric(s: &str) -> Option<Interconnect> {
+    if let Some(n) = s.strip_prefix("mesh:") {
+        return n.parse().ok().map(|cols| Interconnect::Mesh { cols });
+    }
+    match s.to_ascii_lowercase().as_str() {
+        "star" => Some(Interconnect::Star),
+        "ring" => Some(Interconnect::Ring),
+        _ => None,
+    }
+}
+
+/// Validation failure: every problem found, each with a fix hint
+/// (mirrors [`super::SpecError`] / [`traffic::TrafficError`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SweepError {
+    pub errors: Vec<String>,
+}
+
+impl SweepError {
+    fn one(msg: impl Into<String>) -> Self {
+        SweepError { errors: vec![msg.into()] }
+    }
+}
+
+impl std::fmt::Display for SweepError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invalid SweepSpec:")?;
+        for e in &self.errors {
+            write!(f, "\n  - {e}")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for SweepError {}
+
+/// Hard cap on the expanded point count — "millions of configurations"
+/// is the design target, an accidental billion-point grid is a typo.
+pub const MAX_SWEEP_POINTS: usize = 1 << 24;
+
+/// Upper bound on a quantum axis value in ns (1 ms of simulated time per
+/// window is far past any useful accuracy/speed trade).
+pub const MAX_QUANTUM_NS: u64 = 1_000_000;
+
+/// A complete, serializable description of one design-space sweep.
+///
+/// The first eight fields are *axes* (every combination is a point);
+/// `cores`, `l2_kib` and `fabrics` may be empty, meaning "keep each
+/// platform's own value" (one implicit entry). The remaining fields are
+/// per-sweep scalars shared by every point.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SweepSpec {
+    /// Registry / file identity (informational; `sweep list` shows it).
+    pub name: String,
+    /// One-line description for `sweep --describe`.
+    pub description: String,
+    /// Platform axis: preset names or spec `.toml` paths.
+    pub platforms: Vec<String>,
+    /// Core-count overrides applied to each platform (empty = keep).
+    pub cores: Vec<usize>,
+    /// Private-L2 capacity overrides in KiB (empty = keep).
+    pub l2_kib: Vec<u64>,
+    /// Interconnect overrides, spelled `star`/`ring`/`mesh:<cols>`
+    /// (empty = keep).
+    pub fabrics: Vec<Interconnect>,
+    /// Workload axis: `app:<name>` or `traffic:<scenario|file.toml>`.
+    pub workloads: Vec<String>,
+    /// Kernel axis: `serial`/`parallel`/`virtual`.
+    pub kernels: Vec<Mode>,
+    /// Quantum axis in ns.
+    pub quantum_ns: Vec<u64>,
+    /// Window-advance policy axis (`fixed`/`horizon`/`hybrid:<n>`).
+    pub quantum_policies: Vec<QuantumPolicy>,
+    /// Grid or random point selection.
+    pub sampling: Sampling,
+    /// Points drawn when `sampling = "random"` (clamped to the grid).
+    pub samples: usize,
+    /// Seed for the random draw (grid ignores it).
+    pub sample_seed: u64,
+    /// Ops per core for every point.
+    pub ops_per_core: usize,
+    /// Workload seed for `app:` points (traffic specs carry their own).
+    pub seed: u64,
+    /// Host threads per `parallel`-kernel point — the *inner* width the
+    /// outer×inner ≤ budget rule divides by (docs/SWEEP.md).
+    pub inner_threads: usize,
+}
+
+impl Default for SweepSpec {
+    fn default() -> Self {
+        SweepSpec {
+            name: "custom".to_string(),
+            description: String::new(),
+            platforms: vec!["fig4-2".to_string()],
+            cores: Vec::new(),
+            l2_kib: Vec::new(),
+            fabrics: Vec::new(),
+            workloads: vec!["app:synthetic".to_string()],
+            kernels: vec![Mode::Virtual],
+            quantum_ns: vec![8],
+            quantum_policies: vec![QuantumPolicy::Fixed],
+            sampling: Sampling::Grid,
+            samples: 16,
+            sample_seed: 7,
+            ops_per_core: 256,
+            seed: 42,
+            inner_threads: 1,
+        }
+    }
+}
+
+fn first_dup<T: PartialEq + std::fmt::Debug>(v: &[T]) -> Option<String> {
+    for (i, a) in v.iter().enumerate() {
+        if v[..i].contains(a) {
+            return Some(format!("{a:?}"));
+        }
+    }
+    None
+}
+
+impl SweepSpec {
+    /// Rename in place (builder-style, used by the sweep registry).
+    pub fn named(
+        mut self,
+        name: impl Into<String>,
+        description: impl Into<String>,
+    ) -> Self {
+        self.name = name.into();
+        self.description = description.into();
+        self
+    }
+
+    /// Per-axis grid lengths, in expansion order (platforms outermost).
+    /// Optional axes count one implicit "keep the platform's value"
+    /// entry when empty.
+    pub fn axis_lens(&self) -> [usize; 8] {
+        [
+            self.platforms.len().max(1),
+            self.cores.len().max(1),
+            self.l2_kib.len().max(1),
+            self.fabrics.len().max(1),
+            self.workloads.len().max(1),
+            self.kernels.len().max(1),
+            self.quantum_ns.len().max(1),
+            self.quantum_policies.len().max(1),
+        ]
+    }
+
+    /// Full cartesian-grid size (`None` on usize overflow).
+    pub fn grid_len(&self) -> Option<usize> {
+        self.axis_lens().iter().try_fold(1usize, |a, &l| a.checked_mul(l))
+    }
+
+    /// Points a run would execute: the grid, or the (clamped) random
+    /// sample count.
+    pub fn point_count(&self) -> usize {
+        let grid = self.grid_len().unwrap_or(usize::MAX);
+        match self.sampling {
+            Sampling::Grid => grid,
+            Sampling::Random => self.samples.min(grid),
+        }
+    }
+
+    /// Check every invariant expansion relies on. Collects *all*
+    /// problems, each with an actionable hint, instead of stopping at
+    /// the first.
+    pub fn validate(&self) -> Result<(), SweepError> {
+        let mut errors = Vec::new();
+        let mut err = |m: String| errors.push(m);
+
+        if self.platforms.is_empty() {
+            err("platforms is empty — list at least one preset name or \
+                 platform spec .toml path (`parti-sim platforms` lists the \
+                 presets)"
+                .to_string());
+        }
+        for p in &self.platforms {
+            let is_path = p.ends_with(".toml") || p.contains('/');
+            if !is_path && platforms::preset(p).is_none() {
+                let names: Vec<String> =
+                    platforms::presets().iter().map(|s| s.name.clone()).collect();
+                err(format!(
+                    "platforms entry `{p}` is not a preset — available: {}; \
+                     or use a platform spec file path ending in .toml",
+                    names.join(", ")
+                ));
+            }
+        }
+        for &c in &self.cores {
+            if c == 0 || c > MAX_CORES {
+                err(format!(
+                    "cores entry {c} is out of range — overrides must be \
+                     1..={MAX_CORES}"
+                ));
+            }
+        }
+        for &k in &self.l2_kib {
+            if k == 0 || k > 1 << 20 {
+                err(format!(
+                    "l2_kib entry {k} is out of range — use 1..={} KiB",
+                    1u64 << 20
+                ));
+            }
+        }
+        for f in &self.fabrics {
+            if let Interconnect::Mesh { cols } = f {
+                if *cols == 0 {
+                    err("fabrics entry mesh:0 — a mesh needs >= 1 column"
+                        .to_string());
+                }
+            }
+        }
+        if self.workloads.is_empty() {
+            err("workloads is empty — list at least one `app:<name>` or \
+                 `traffic:<scenario>` entry"
+                .to_string());
+        }
+        for w in &self.workloads {
+            match w.split_once(':') {
+                Some(("app", name)) => {
+                    if crate::workload::app_by_name(name).is_none() {
+                        err(format!(
+                            "workloads entry `{w}`: unknown app `{name}` — \
+                             the Table 3 names are synthetic, blackscholes, \
+                             canneal, dedup, ferret, fluidanimate, \
+                             swaptions, stream"
+                        ));
+                    }
+                }
+                Some(("traffic", name)) => {
+                    let is_path = name.ends_with(".toml") || name.contains('/');
+                    if !is_path && traffic::scenario(name).is_none() {
+                        err(format!(
+                            "workloads entry `{w}`: unknown traffic scenario \
+                             `{name}` — `parti-sim traffic` lists them"
+                        ));
+                    }
+                }
+                _ => err(format!(
+                    "workloads entry `{w}` — use `app:<name>` or \
+                     `traffic:<scenario|file.toml>`"
+                )),
+            }
+        }
+        if self.kernels.is_empty() {
+            err("kernels is empty — list serial, parallel and/or virtual"
+                .to_string());
+        }
+        if self.quantum_ns.is_empty() {
+            err("quantum_ns is empty — list at least one quantum in ns"
+                .to_string());
+        }
+        for &q in &self.quantum_ns {
+            if q == 0 || q > MAX_QUANTUM_NS {
+                err(format!(
+                    "quantum_ns entry {q} is out of range — use \
+                     1..={MAX_QUANTUM_NS} ns"
+                ));
+            }
+        }
+        if self.quantum_policies.is_empty() {
+            err("quantum_policies is empty — list fixed, horizon and/or \
+                 hybrid:<max_leap>"
+                .to_string());
+        }
+        for &p in &self.quantum_policies {
+            if p == (QuantumPolicy::Hybrid { max_leap: 0 }) {
+                err("quantum_policies entry hybrid:0 — the leap cap must \
+                     be >= 1"
+                    .to_string());
+            }
+        }
+        if self.ops_per_core == 0 || self.ops_per_core > 1 << 22 {
+            err(format!(
+                "ops_per_core = {} is out of range — use 1..={}",
+                self.ops_per_core,
+                1usize << 22
+            ));
+        }
+        if self.sampling == Sampling::Random && self.samples == 0 {
+            err("samples = 0 with sampling = \"random\" — draw at least one \
+                 point (or use sampling = \"grid\")"
+                .to_string());
+        }
+        if self.samples > MAX_SWEEP_POINTS {
+            err(format!(
+                "samples = {} is out of range — the point cap is \
+                 {MAX_SWEEP_POINTS}",
+                self.samples
+            ));
+        }
+        if self.inner_threads == 0 || self.inner_threads > 1024 {
+            err(format!(
+                "inner_threads = {} is out of range — use 1..=1024 host \
+                 threads per parallel-kernel point",
+                self.inner_threads
+            ));
+        }
+        match self.grid_len() {
+            Some(n) if n <= MAX_SWEEP_POINTS => {}
+            _ => err(format!(
+                "the axes multiply to more than {MAX_SWEEP_POINTS} grid \
+                 points — shrink an axis or use sampling = \"random\""
+            )),
+        }
+        for (axis, dup) in [
+            ("platforms", first_dup(&self.platforms)),
+            ("cores", first_dup(&self.cores)),
+            ("l2_kib", first_dup(&self.l2_kib)),
+            ("fabrics", first_dup(&self.fabrics)),
+            ("workloads", first_dup(&self.workloads)),
+            ("kernels", first_dup(&self.kernels)),
+            ("quantum_ns", first_dup(&self.quantum_ns)),
+            ("quantum_policies", first_dup(&self.quantum_policies)),
+        ] {
+            if let Some(d) = dup {
+                err(format!(
+                    "{axis} lists {d} twice — duplicate axis values would \
+                     collide on the canonical point id"
+                ));
+            }
+        }
+        if errors.is_empty() {
+            Ok(())
+        } else {
+            Err(SweepError { errors })
+        }
+    }
+
+    // ---- TOML ----------------------------------------------------------
+
+    /// Serialise to the flat TOML subset (`key = value`, `#` comments,
+    /// double-quoted strings; axis lists are comma-separated inside one
+    /// quoted string). [`SweepSpec::from_toml`] round-trips this exactly;
+    /// `tests/properties.rs` holds the property test.
+    pub fn to_toml(&self) -> String {
+        fn join<T, F: Fn(&T) -> String>(items: &[T], f: F) -> String {
+            items.iter().map(f).collect::<Vec<_>>().join(", ")
+        }
+        let mut s = String::new();
+        s.push_str("# parti-sim sweep spec (docs/SWEEP.md)\n");
+        s.push_str(&format!("name = \"{}\"\n", self.name));
+        s.push_str(&format!("description = \"{}\"\n", self.description));
+        s.push_str(&format!(
+            "platforms = \"{}\"\n",
+            join(&self.platforms, |p| p.clone())
+        ));
+        s.push_str(&format!(
+            "cores = \"{}\"\n",
+            join(&self.cores, |c| c.to_string())
+        ));
+        s.push_str(&format!(
+            "l2_kib = \"{}\"\n",
+            join(&self.l2_kib, |k| k.to_string())
+        ));
+        s.push_str(&format!(
+            "fabrics = \"{}\"\n",
+            join(&self.fabrics, |f| fabric_keyword(*f))
+        ));
+        s.push_str(&format!(
+            "workloads = \"{}\"\n",
+            join(&self.workloads, |w| w.clone())
+        ));
+        s.push_str(&format!(
+            "kernels = \"{}\"\n",
+            join(&self.kernels, |m| mode_keyword(*m).to_string())
+        ));
+        s.push_str(&format!(
+            "quantum_ns = \"{}\"\n",
+            join(&self.quantum_ns, |q| q.to_string())
+        ));
+        s.push_str(&format!(
+            "quantum_policies = \"{}\"\n",
+            join(&self.quantum_policies, |p| policy_keyword(*p))
+        ));
+        s.push_str(&format!("sampling = \"{}\"\n", self.sampling.keyword()));
+        s.push_str(&format!("samples = {}\n", self.samples));
+        s.push_str(&format!("sample_seed = {}\n", self.sample_seed));
+        s.push_str(&format!("ops_per_core = {}\n", self.ops_per_core));
+        s.push_str(&format!("seed = {}\n", self.seed));
+        s.push_str(&format!("inner_threads = {}\n", self.inner_threads));
+        s
+    }
+
+    /// Parse the format emitted by [`SweepSpec::to_toml`]. Unknown keys
+    /// are rejected (typos must not silently fall back to defaults);
+    /// missing keys keep the defaults. The parsed spec is validated
+    /// before being returned.
+    pub fn from_toml(text: &str) -> Result<Self, SweepError> {
+        let mut spec = SweepSpec::default();
+        let mut errors = Vec::new();
+
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let lineno = lineno + 1;
+            let Some((k, v)) = line.split_once('=') else {
+                errors.push(format!(
+                    "line {lineno}: expected `key = value`, got `{line}`"
+                ));
+                continue;
+            };
+            let (k, v) = (k.trim(), v.trim());
+            // String values are double-quoted; numbers are bare.
+            let as_str = v.strip_prefix('"').and_then(|s| s.strip_suffix('"'));
+            let mut as_num = || -> Option<u64> {
+                match v.parse::<u64>() {
+                    Ok(n) => Some(n),
+                    Err(e) => {
+                        errors.push(format!(
+                            "line {lineno}: {k} = {v}: {e} (expected an \
+                             unsigned integer)"
+                        ));
+                        None
+                    }
+                }
+            };
+            match k {
+                "samples" => {
+                    if let Some(n) = as_num() {
+                        spec.samples = n as usize;
+                    }
+                }
+                "sample_seed" => {
+                    if let Some(n) = as_num() {
+                        spec.sample_seed = n;
+                    }
+                }
+                "ops_per_core" => {
+                    if let Some(n) = as_num() {
+                        spec.ops_per_core = n as usize;
+                    }
+                }
+                "seed" => {
+                    if let Some(n) = as_num() {
+                        spec.seed = n;
+                    }
+                }
+                "inner_threads" => {
+                    if let Some(n) = as_num() {
+                        spec.inner_threads = n as usize;
+                    }
+                }
+                _ => {
+                    let Some(sv) = as_str else {
+                        errors.push(format!(
+                            "line {lineno}: {k} must be a double-quoted \
+                             string, e.g. {k} = \"...\""
+                        ));
+                        continue;
+                    };
+                    let items: Vec<&str> = sv
+                        .split(',')
+                        .map(str::trim)
+                        .filter(|x| !x.is_empty())
+                        .collect();
+                    match k {
+                        "name" => spec.name = sv.to_string(),
+                        "description" => spec.description = sv.to_string(),
+                        "sampling" => match Sampling::parse(sv) {
+                            Some(m) => spec.sampling = m,
+                            None => errors.push(format!(
+                                "line {lineno}: sampling = \"{sv}\" — use \
+                                 grid or random"
+                            )),
+                        },
+                        "platforms" => {
+                            spec.platforms =
+                                items.iter().map(|x| x.to_string()).collect();
+                        }
+                        "workloads" => {
+                            spec.workloads =
+                                items.iter().map(|x| x.to_string()).collect();
+                        }
+                        "cores" => {
+                            spec.cores.clear();
+                            for x in &items {
+                                match x.parse::<usize>() {
+                                    Ok(n) => spec.cores.push(n),
+                                    Err(e) => errors.push(format!(
+                                        "line {lineno}: cores entry `{x}`: \
+                                         {e} (expected an unsigned integer)"
+                                    )),
+                                }
+                            }
+                        }
+                        "l2_kib" => {
+                            spec.l2_kib.clear();
+                            for x in &items {
+                                match x.parse::<u64>() {
+                                    Ok(n) => spec.l2_kib.push(n),
+                                    Err(e) => errors.push(format!(
+                                        "line {lineno}: l2_kib entry `{x}`: \
+                                         {e} (expected an unsigned integer)"
+                                    )),
+                                }
+                            }
+                        }
+                        "quantum_ns" => {
+                            spec.quantum_ns.clear();
+                            for x in &items {
+                                match x.parse::<u64>() {
+                                    Ok(n) => spec.quantum_ns.push(n),
+                                    Err(e) => errors.push(format!(
+                                        "line {lineno}: quantum_ns entry \
+                                         `{x}`: {e} (expected an unsigned \
+                                         integer)"
+                                    )),
+                                }
+                            }
+                        }
+                        "fabrics" => {
+                            spec.fabrics.clear();
+                            for x in &items {
+                                match parse_fabric(x) {
+                                    Some(f) => spec.fabrics.push(f),
+                                    None => errors.push(format!(
+                                        "line {lineno}: fabrics entry `{x}` \
+                                         — use star, ring or mesh:<cols>"
+                                    )),
+                                }
+                            }
+                        }
+                        "kernels" => {
+                            spec.kernels.clear();
+                            for x in &items {
+                                match Mode::parse(x) {
+                                    Some(m) => spec.kernels.push(m),
+                                    None => errors.push(format!(
+                                        "line {lineno}: kernels entry `{x}` \
+                                         — use serial, parallel or virtual"
+                                    )),
+                                }
+                            }
+                        }
+                        "quantum_policies" => {
+                            spec.quantum_policies.clear();
+                            for x in &items {
+                                match parse_policy(x) {
+                                    Some(p) => spec.quantum_policies.push(p),
+                                    None => errors.push(format!(
+                                        "line {lineno}: quantum_policies \
+                                         entry `{x}` — use fixed, horizon \
+                                         or hybrid:<max_leap>"
+                                    )),
+                                }
+                            }
+                        }
+                        _ => errors.push(format!(
+                            "line {lineno}: unknown key `{k}` — see \
+                             docs/SWEEP.md for the schema"
+                        )),
+                    }
+                }
+            }
+        }
+
+        if !errors.is_empty() {
+            return Err(SweepError { errors });
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Load a spec from a `.toml` file on disk.
+    pub fn load(path: &Path) -> Result<Self, SweepError> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            SweepError::one(format!("cannot read {}: {e}", path.display()))
+        })?;
+        Self::from_toml(&text)
+    }
+
+    /// Multi-line human description for `sweep --describe`.
+    pub fn describe(&self) -> String {
+        fn axis<T, F: Fn(&T) -> String>(v: &[T], f: F) -> String {
+            if v.is_empty() {
+                "(keep platform's)".to_string()
+            } else {
+                v.iter().map(f).collect::<Vec<_>>().join(", ")
+            }
+        }
+        format!(
+            "{name}: {desc}\n\
+             sampling       {samp} -> {pts} point(s)\n\
+             platforms      {plat}\n\
+             cores          {cores}\n\
+             l2_kib         {l2}\n\
+             fabrics        {fab}\n\
+             workloads      {wl}\n\
+             kernels        {kern}\n\
+             quantum_ns     {q}\n\
+             policies       {pol}\n\
+             scalars        ops_per_core {ops}, seed {seed}, \
+             inner_threads {inner}",
+            name = self.name,
+            desc = self.description,
+            samp = self.sampling.keyword(),
+            pts = self.point_count(),
+            plat = axis(&self.platforms, |p| p.clone()),
+            cores = axis(&self.cores, |c| c.to_string()),
+            l2 = axis(&self.l2_kib, |k| format!("{k}k")),
+            fab = axis(&self.fabrics, |f| fabric_keyword(*f)),
+            wl = axis(&self.workloads, |w| w.clone()),
+            kern = axis(&self.kernels, |m| mode_keyword(*m).to_string()),
+            q = axis(&self.quantum_ns, |q| q.to_string()),
+            pol = axis(&self.quantum_policies, |p| policy_keyword(*p)),
+            ops = self.ops_per_core,
+            seed = self.seed,
+            inner = self.inner_threads,
+        )
+    }
+}
+
+// ---- Sweep registry ----------------------------------------------------
+
+/// All built-in sweeps, in listing order. `quick` is the CI / bench
+/// workhorse; the next three are the classic DSE axes the example walks;
+/// `random-dse` shows the sampled mode.
+pub fn sweeps() -> Vec<SweepSpec> {
+    let base = SweepSpec::default();
+    vec![
+        SweepSpec {
+            workloads: vec![
+                "app:synthetic".to_string(),
+                "traffic:hotspot".to_string(),
+            ],
+            quantum_ns: vec![8, 16],
+            ops_per_core: 128,
+            ..base.clone()
+        }
+        .named(
+            "quick",
+            "4-point smoke grid — the CI shard/merge demo and the bench \
+             workload",
+        ),
+        SweepSpec {
+            cores: vec![4],
+            l2_kib: vec![256, 512, 1024, 2048],
+            workloads: vec!["app:canneal".to_string()],
+            ops_per_core: 4096,
+            ..base.clone()
+        }
+        .named(
+            "l2-capacity",
+            "private L2 capacity axis on the 4-core Fig. 4 star (canneal)",
+        ),
+        SweepSpec {
+            cores: vec![4],
+            fabrics: vec![
+                Interconnect::Star,
+                Interconnect::Ring,
+                Interconnect::Mesh { cols: 2 },
+            ],
+            workloads: vec!["app:canneal".to_string()],
+            ops_per_core: 4096,
+            ..base.clone()
+        }
+        .named(
+            "fabric-4core",
+            "star vs ring vs 2-wide mesh at Table 2 caches (canneal)",
+        ),
+        SweepSpec {
+            platforms: vec!["ring-16".to_string()],
+            workloads: traffic::scenarios()
+                .iter()
+                .map(|t| format!("traffic:{}", t.name))
+                .collect(),
+            ops_per_core: 512,
+            ..base.clone()
+        }
+        .named(
+            "ring-traffic",
+            "all six TrafficSpec patterns on the ring-16 fabric",
+        ),
+        SweepSpec {
+            sampling: Sampling::Random,
+            samples: 24,
+            platforms: vec![
+                "fig4-2".to_string(),
+                "fig4-8".to_string(),
+                "ring-16".to_string(),
+            ],
+            workloads: vec![
+                "app:blackscholes".to_string(),
+                "traffic:hotspot".to_string(),
+                "traffic:transpose".to_string(),
+            ],
+            quantum_ns: vec![4, 8, 16, 32],
+            quantum_policies: vec![
+                QuantumPolicy::Fixed,
+                QuantumPolicy::Horizon,
+            ],
+            ..base.clone()
+        }
+        .named(
+            "random-dse",
+            "24 random points over platform x workload x quantum x policy",
+        ),
+    ]
+}
+
+/// Look up a sweep by name.
+pub fn sweep(name: &str) -> Option<SweepSpec> {
+    sweeps().into_iter().find(|s| s.name == name)
+}
+
+/// Resolve a CLI `--spec` argument: a sweep name, or a path to a sweep
+/// TOML file (anything containing a path separator or ending in
+/// `.toml`). The error lists the available sweeps.
+pub fn resolve(arg: &str) -> Result<SweepSpec, SweepError> {
+    if arg.ends_with(".toml") || arg.contains('/') {
+        return SweepSpec::load(Path::new(arg));
+    }
+    sweep(arg).ok_or_else(|| {
+        let names: Vec<String> =
+            sweeps().iter().map(|s| s.name.clone()).collect();
+        SweepError {
+            errors: vec![format!(
+                "unknown sweep `{arg}` — available sweeps: {}; or pass a \
+                 sweep spec file path ending in .toml",
+                names.join(", ")
+            )],
+        }
+    })
+}
+
+/// One-line-per-sweep listing for the `sweep` subcommand.
+pub fn render_list() -> String {
+    let mut s = format!(
+        "{:<14} {:>8} {:>7} description\n",
+        "name", "sampling", "points"
+    );
+    for t in sweeps() {
+        s.push_str(&format!(
+            "{:<14} {:>8} {:>7} {}\n",
+            t.name,
+            t.sampling.keyword(),
+            t.point_count(),
+            t.description,
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_validates() {
+        SweepSpec::default().validate().unwrap();
+    }
+
+    #[test]
+    fn keywords_roundtrip() {
+        for m in [Mode::Serial, Mode::Parallel, Mode::Virtual] {
+            assert_eq!(Mode::parse(mode_keyword(m)), Some(m));
+        }
+        for p in [
+            QuantumPolicy::Fixed,
+            QuantumPolicy::Horizon,
+            QuantumPolicy::Hybrid { max_leap: 3 },
+        ] {
+            assert_eq!(parse_policy(&policy_keyword(p)), Some(p));
+        }
+        for f in [
+            Interconnect::Star,
+            Interconnect::Ring,
+            Interconnect::Mesh { cols: 4 },
+        ] {
+            assert_eq!(parse_fabric(&fabric_keyword(f)), Some(f));
+        }
+        assert_eq!(parse_fabric("torus"), None);
+        assert_eq!(parse_policy("sometimes"), None);
+    }
+
+    #[test]
+    fn all_sweeps_validate_and_roundtrip() {
+        let all = sweeps();
+        assert!(all.len() >= 5);
+        for t in all {
+            t.validate()
+                .unwrap_or_else(|e| panic!("sweep {}: {e}", t.name));
+            let back = SweepSpec::from_toml(&t.to_toml())
+                .unwrap_or_else(|e| panic!("sweep {} toml: {e}", t.name));
+            assert_eq!(t, back, "sweep {} must round-trip", t.name);
+        }
+    }
+
+    #[test]
+    fn grid_count_is_axis_product() {
+        let spec = SweepSpec {
+            workloads: vec!["app:synthetic".into(), "app:stream".into()],
+            kernels: vec![Mode::Serial, Mode::Virtual],
+            quantum_ns: vec![4, 8, 16],
+            ..SweepSpec::default()
+        };
+        assert_eq!(spec.grid_len(), Some(12));
+        assert_eq!(spec.point_count(), 12);
+        let sampled = SweepSpec {
+            sampling: Sampling::Random,
+            samples: 5,
+            ..spec.clone()
+        };
+        assert_eq!(sampled.point_count(), 5);
+        let clamped = SweepSpec {
+            sampling: Sampling::Random,
+            samples: 500,
+            ..spec
+        };
+        assert_eq!(clamped.point_count(), 12, "samples clamp to the grid");
+    }
+
+    #[test]
+    fn unknown_sweep_error_lists_sweeps() {
+        let err = resolve("nope").unwrap_err();
+        assert!(err.errors[0].contains("quick"), "{err}");
+        assert!(err.errors[0].contains("random-dse"), "{err}");
+    }
+
+    #[test]
+    fn unknown_key_is_rejected_with_hint() {
+        let err = SweepSpec::from_toml("kernles = \"virtual\"\n").unwrap_err();
+        assert!(err.errors[0].contains("unknown key `kernles`"), "{err}");
+        assert!(err.to_string().contains("SWEEP.md"));
+    }
+
+    #[test]
+    fn bad_axis_entries_are_rejected_with_choices() {
+        let err =
+            SweepSpec::from_toml("kernels = \"serial, warp\"\n").unwrap_err();
+        assert!(err.errors[0].contains("warp"), "{err}");
+        let err = SweepSpec::from_toml("fabrics = \"torus\"\n").unwrap_err();
+        assert!(err.errors[0].contains("mesh:<cols>"), "{err}");
+        let err = SweepSpec::from_toml("quantum_policies = \"soon\"\n")
+            .unwrap_err();
+        assert!(err.errors[0].contains("hybrid:<max_leap>"), "{err}");
+    }
+
+    #[test]
+    fn empty_list_means_keep_platform_value() {
+        let spec = SweepSpec::from_toml("cores = \"\"\n").unwrap();
+        assert!(spec.cores.is_empty());
+        assert_eq!(spec.axis_lens()[1], 1);
+    }
+
+    #[test]
+    fn unknown_workload_prefix_is_rejected() {
+        let spec = SweepSpec {
+            workloads: vec!["synthetic".to_string()],
+            ..SweepSpec::default()
+        };
+        let err = spec.validate().unwrap_err();
+        assert!(err.errors[0].contains("app:<name>"), "{err}");
+    }
+
+    #[test]
+    fn validation_collects_all_errors() {
+        let spec = SweepSpec {
+            platforms: vec!["atlantis".to_string()],
+            kernels: Vec::new(),
+            quantum_ns: vec![0],
+            ops_per_core: 0,
+            ..SweepSpec::default()
+        };
+        let err = spec.validate().unwrap_err();
+        assert!(err.errors.len() >= 4, "{err}");
+        assert!(err.errors.iter().any(|e| e.contains("atlantis")));
+        assert!(err.errors.iter().any(|e| e.contains("kernels")));
+        assert!(err.errors.iter().any(|e| e.contains("quantum_ns")));
+        assert!(err.errors.iter().any(|e| e.contains("ops_per_core")));
+    }
+
+    #[test]
+    fn duplicate_axis_values_are_rejected() {
+        let spec = SweepSpec {
+            quantum_ns: vec![8, 8],
+            ..SweepSpec::default()
+        };
+        let err = spec.validate().unwrap_err();
+        assert!(err.errors[0].contains("quantum_ns"), "{err}");
+        assert!(err.errors[0].contains("twice"), "{err}");
+    }
+
+    #[test]
+    fn listing_mentions_every_sweep() {
+        let s = render_list();
+        for t in sweeps() {
+            assert!(s.contains(&t.name), "listing misses {}", t.name);
+        }
+    }
+}

@@ -1,0 +1,458 @@
+//! The sweep journal record: one flat JSON object per completed sweep
+//! point, appended to a `.jsonl` journal by
+//! [`crate::harness::sweep::run_sweep`].
+//!
+//! The schema segregates determinism classes by *prefix*: every field
+//! is a pure function of the point's `RunConfig` (bit-identical across
+//! outer pool sizes, shards and resumes — `tests/sweep.rs` gates this)
+//! **except** the `host_*` fields, which depend on host wall-clock
+//! timing and are emitted last. Stripping the `host_*` keys yields the
+//! *canonical* form ([`SweepRecord::to_canonical_line`]) that the
+//! determinism gates and the CI shard-merge diff compare.
+//!
+//! Parsing ([`SweepRecord::from_json_line`]) exists for `--resume`: the
+//! journal is re-read to learn which point ids are already done. The
+//! parser is strict — a truncated or garbled line is an error carrying
+//! a reason, which the harness reports with its line number and repairs
+//! by re-running the point (never silently skipping it). Integers are
+//! parsed from their decimal tokens directly (not through `f64`), so a
+//! 64-bit checksum survives the round-trip exactly.
+
+use std::collections::BTreeMap;
+
+use crate::pdes::RunResult;
+use crate::stats::avg_miss_rate;
+use crate::util::json::JsonObj;
+
+/// One journaled sweep point. Field order here is emission order; the
+/// `host_*` fields stay last so the canonical prefix is contiguous.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepRecord {
+    /// Position in the expanded point list (the journal sort key).
+    pub index: u64,
+    /// Canonical point id (the resume key; docs/SWEEP.md).
+    pub id: String,
+    // -- deterministic results (the canonical section) ------------------
+    pub sim_ticks: u64,
+    pub sim_seconds: f64,
+    pub events: u64,
+    pub committed_ops: u64,
+    pub barriers: u64,
+    pub quanta_skipped: u64,
+    pub cross_events: u64,
+    pub postponed: u64,
+    pub inbox_staged: u64,
+    pub xbar_staged: u64,
+    pub xbar_deferred_grants: u64,
+    pub traffic_offered: u64,
+    pub traffic_accepted: u64,
+    pub traffic_retries: u64,
+    pub traffic_phases: u64,
+    /// Sum of the fabric `.routed` counters.
+    pub routed: u64,
+    /// HN-F per-line serialisation requeues.
+    pub hnf_requeued: u64,
+    /// XOR fold of the per-core `.load_checksum` stats (the functional
+    /// fingerprint; deterministic per kernel).
+    pub load_checksum: u64,
+    pub l1d_miss_rate: f64,
+    pub l2_miss_rate: f64,
+    pub l3_miss_rate: f64,
+    // -- host-timing-dependent (stripped from the canonical form) -------
+    pub host_ns: u64,
+    pub host_events_per_sec: f64,
+}
+
+impl SweepRecord {
+    /// Build the record for one finished run.
+    pub fn from_run(index: u64, id: &str, r: &RunResult) -> Self {
+        let load_checksum = r
+            .stats
+            .entries
+            .iter()
+            .filter(|(n, _)| n.ends_with(".load_checksum"))
+            .fold(0u64, |a, (_, v)| a ^ (*v as u64));
+        SweepRecord {
+            index,
+            id: id.to_string(),
+            sim_ticks: r.sim_ticks,
+            sim_seconds: r.sim_seconds(),
+            events: r.events,
+            committed_ops: r.stats.sum_suffix(".committed_ops") as u64,
+            barriers: r.pdes.barriers,
+            quanta_skipped: r.pdes.quanta_skipped,
+            cross_events: r.pdes.cross_events,
+            postponed: r.pdes.postponed,
+            inbox_staged: r.pdes.inbox_staged,
+            xbar_staged: r.pdes.xbar_staged,
+            xbar_deferred_grants: r.pdes.xbar_deferred_grants,
+            traffic_offered: r.pdes.traffic_offered,
+            traffic_accepted: r.pdes.traffic_accepted,
+            traffic_retries: r.pdes.traffic_retries,
+            traffic_phases: r.pdes.traffic_phases,
+            routed: r.stats.sum_suffix(".routed") as u64,
+            hnf_requeued: r.stats.get("hnf.requeued").unwrap_or(0.0) as u64,
+            load_checksum,
+            l1d_miss_rate: avg_miss_rate(r, ".l1d.miss_rate"),
+            l2_miss_rate: avg_miss_rate(r, ".l2.miss_rate"),
+            l3_miss_rate: avg_miss_rate(r, "hnf.miss_rate"),
+            host_ns: r.host_ns,
+            host_events_per_sec: r.events_per_sec(),
+        }
+    }
+
+    fn json_obj(&self, with_host: bool) -> JsonObj {
+        let mut j = JsonObj::new()
+            .u64("index", self.index)
+            .str("id", &self.id)
+            .u64("sim_ticks", self.sim_ticks)
+            .f64("sim_seconds", self.sim_seconds)
+            .u64("events", self.events)
+            .u64("committed_ops", self.committed_ops)
+            .u64("barriers", self.barriers)
+            .u64("quanta_skipped", self.quanta_skipped)
+            .u64("cross_events", self.cross_events)
+            .u64("postponed", self.postponed)
+            .u64("inbox_staged", self.inbox_staged)
+            .u64("xbar_staged", self.xbar_staged)
+            .u64("xbar_deferred_grants", self.xbar_deferred_grants)
+            .u64("traffic_offered", self.traffic_offered)
+            .u64("traffic_accepted", self.traffic_accepted)
+            .u64("traffic_retries", self.traffic_retries)
+            .u64("traffic_phases", self.traffic_phases)
+            .u64("routed", self.routed)
+            .u64("hnf_requeued", self.hnf_requeued)
+            .u64("load_checksum", self.load_checksum)
+            .f64("l1d_miss_rate", self.l1d_miss_rate)
+            .f64("l2_miss_rate", self.l2_miss_rate)
+            .f64("l3_miss_rate", self.l3_miss_rate);
+        if with_host {
+            j = j
+                .u64("host_ns", self.host_ns)
+                .f64("host_events_per_sec", self.host_events_per_sec);
+        }
+        j
+    }
+
+    /// The full journal line (canonical fields first, `host_*` last).
+    pub fn to_json_line(&self) -> String {
+        self.json_obj(true).build()
+    }
+
+    /// The record with every `host_*` field stripped — the form the
+    /// determinism gates compare byte-for-byte.
+    pub fn to_canonical_line(&self) -> String {
+        self.json_obj(false).build()
+    }
+
+    /// Strict parse of one journal line (full or canonical — the
+    /// `host_*` fields are optional and default to zero). Any malformed
+    /// syntax, missing canonical field or unknown field is an error.
+    pub fn from_json_line(line: &str) -> Result<Self, String> {
+        let mut map = parse_flat_object(line)?;
+        let m = &mut map;
+        let rec = SweepRecord {
+            index: take_u64(m, "index", true)?,
+            id: take_str(m, "id")?,
+            sim_ticks: take_u64(m, "sim_ticks", true)?,
+            sim_seconds: take_f64(m, "sim_seconds", true)?,
+            events: take_u64(m, "events", true)?,
+            committed_ops: take_u64(m, "committed_ops", true)?,
+            barriers: take_u64(m, "barriers", true)?,
+            quanta_skipped: take_u64(m, "quanta_skipped", true)?,
+            cross_events: take_u64(m, "cross_events", true)?,
+            postponed: take_u64(m, "postponed", true)?,
+            inbox_staged: take_u64(m, "inbox_staged", true)?,
+            xbar_staged: take_u64(m, "xbar_staged", true)?,
+            xbar_deferred_grants: take_u64(m, "xbar_deferred_grants", true)?,
+            traffic_offered: take_u64(m, "traffic_offered", true)?,
+            traffic_accepted: take_u64(m, "traffic_accepted", true)?,
+            traffic_retries: take_u64(m, "traffic_retries", true)?,
+            traffic_phases: take_u64(m, "traffic_phases", true)?,
+            routed: take_u64(m, "routed", true)?,
+            hnf_requeued: take_u64(m, "hnf_requeued", true)?,
+            load_checksum: take_u64(m, "load_checksum", true)?,
+            l1d_miss_rate: take_f64(m, "l1d_miss_rate", true)?,
+            l2_miss_rate: take_f64(m, "l2_miss_rate", true)?,
+            l3_miss_rate: take_f64(m, "l3_miss_rate", true)?,
+            host_ns: take_u64(m, "host_ns", false)?,
+            host_events_per_sec: take_f64(m, "host_events_per_sec", false)?,
+        };
+        if let Some(k) = map.keys().next() {
+            return Err(format!("unknown field `{k}`"));
+        }
+        Ok(rec)
+    }
+}
+
+/// A parsed flat JSON value: a string, or the raw token of a number.
+/// Numbers stay tokens so `u64` fields round-trip without an `f64`
+/// detour (a 64-bit checksum does not fit in 53 mantissa bits).
+enum JsonVal {
+    Str(String),
+    Raw(String),
+}
+
+fn take_u64(
+    map: &mut BTreeMap<String, JsonVal>,
+    k: &str,
+    required: bool,
+) -> Result<u64, String> {
+    match map.remove(k) {
+        Some(JsonVal::Raw(t)) => {
+            t.parse::<u64>().map_err(|e| format!("field `{k}` = {t}: {e}"))
+        }
+        Some(JsonVal::Str(_)) => Err(format!("field `{k}` must be a number")),
+        None if required => Err(format!("missing field `{k}`")),
+        None => Ok(0),
+    }
+}
+
+fn take_f64(
+    map: &mut BTreeMap<String, JsonVal>,
+    k: &str,
+    required: bool,
+) -> Result<f64, String> {
+    match map.remove(k) {
+        Some(JsonVal::Raw(t)) => {
+            t.parse::<f64>().map_err(|e| format!("field `{k}` = {t}: {e}"))
+        }
+        Some(JsonVal::Str(_)) => Err(format!("field `{k}` must be a number")),
+        None if required => Err(format!("missing field `{k}`")),
+        None => Ok(0.0),
+    }
+}
+
+fn take_str(
+    map: &mut BTreeMap<String, JsonVal>,
+    k: &str,
+) -> Result<String, String> {
+    match map.remove(k) {
+        Some(JsonVal::Str(s)) => Ok(s),
+        Some(JsonVal::Raw(_)) => Err(format!("field `{k}` must be a string")),
+        None => Err(format!("missing field `{k}`")),
+    }
+}
+
+/// Parse one flat JSON object (`{"k": v, ...}`; string or numeric
+/// values, no nesting) into a key → value map. Duplicate keys, nested
+/// containers and any trailing bytes are errors.
+fn parse_flat_object(line: &str) -> Result<BTreeMap<String, JsonVal>, String> {
+    let b = line.trim().as_bytes();
+    let mut i = 0usize;
+    let mut map = BTreeMap::new();
+
+    fn skip_ws(b: &[u8], i: &mut usize) {
+        while *i < b.len() && b[*i].is_ascii_whitespace() {
+            *i += 1;
+        }
+    }
+    fn expect(b: &[u8], i: &mut usize, c: u8) -> Result<(), String> {
+        skip_ws(b, i);
+        if *i < b.len() && b[*i] == c {
+            *i += 1;
+            Ok(())
+        } else {
+            Err(format!(
+                "expected `{}` at byte {} (truncated line?)",
+                c as char, *i
+            ))
+        }
+    }
+    fn string(b: &[u8], i: &mut usize) -> Result<String, String> {
+        expect(b, i, b'"')?;
+        let mut out = String::new();
+        while *i < b.len() {
+            match b[*i] {
+                b'"' => {
+                    *i += 1;
+                    return Ok(out);
+                }
+                b'\\' => {
+                    *i += 1;
+                    let esc = *b.get(*i).ok_or_else(|| {
+                        "string escape at end of line".to_string()
+                    })?;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'n' => out.push('\n'),
+                        b'u' => {
+                            let hex =
+                                b.get(*i + 1..*i + 5).ok_or_else(|| {
+                                    "truncated \\u escape".to_string()
+                                })?;
+                            let hex = std::str::from_utf8(hex)
+                                .map_err(|e| e.to_string())?;
+                            let cp = u32::from_str_radix(hex, 16)
+                                .map_err(|e| format!("\\u{hex}: {e}"))?;
+                            out.push(char::from_u32(cp).ok_or_else(|| {
+                                format!("\\u{hex}: bad codepoint")
+                            })?);
+                            *i += 4;
+                        }
+                        other => {
+                            return Err(format!(
+                                "unsupported escape \\{}",
+                                other as char
+                            ))
+                        }
+                    }
+                    *i += 1;
+                }
+                _ => {
+                    // Multi-byte UTF-8 sequences pass through untouched.
+                    let s = std::str::from_utf8(&b[*i..])
+                        .map_err(|e| e.to_string())?;
+                    let c = s.chars().next().unwrap();
+                    out.push(c);
+                    *i += c.len_utf8();
+                }
+            }
+        }
+        Err("unterminated string (truncated line?)".to_string())
+    }
+
+    expect(b, &mut i, b'{')?;
+    skip_ws(b, &mut i);
+    if i < b.len() && b[i] == b'}' {
+        i += 1;
+    } else {
+        loop {
+            let key = string(b, &mut i)?;
+            expect(b, &mut i, b':')?;
+            skip_ws(b, &mut i);
+            let val = if i < b.len() && b[i] == b'"' {
+                JsonVal::Str(string(b, &mut i)?)
+            } else {
+                let start = i;
+                while i < b.len() && !matches!(b[i], b',' | b'}') {
+                    i += 1;
+                }
+                let tok = std::str::from_utf8(&b[start..i])
+                    .map_err(|e| e.to_string())?
+                    .trim()
+                    .to_string();
+                if tok.is_empty() {
+                    return Err(format!("empty value for key `{key}`"));
+                }
+                if matches!(tok.as_bytes()[0], b'{' | b'[') {
+                    return Err(format!("nested value for key `{key}`"));
+                }
+                JsonVal::Raw(tok)
+            };
+            if map.insert(key.clone(), val).is_some() {
+                return Err(format!("duplicate key `{key}`"));
+            }
+            skip_ws(b, &mut i);
+            match b.get(i) {
+                Some(b',') => i += 1,
+                Some(b'}') => {
+                    i += 1;
+                    break;
+                }
+                _ => {
+                    return Err(format!(
+                        "expected `,` or `}}` at byte {i} (truncated line?)"
+                    ))
+                }
+            }
+        }
+    }
+    skip_ws(b, &mut i);
+    if i != b.len() {
+        return Err(format!("trailing bytes after object at byte {i}"));
+    }
+    Ok(map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> SweepRecord {
+        SweepRecord {
+            index: 3,
+            id: "fig4-2+c4+l2:512k+star+app:canneal+virtual+q8+fixed"
+                .to_string(),
+            sim_ticks: 123_456,
+            sim_seconds: 0.000123456,
+            events: 999,
+            committed_ops: 512,
+            barriers: 17,
+            quanta_skipped: 2,
+            cross_events: 40,
+            postponed: 4,
+            inbox_staged: 11,
+            xbar_staged: 0,
+            xbar_deferred_grants: 0,
+            traffic_offered: 0,
+            traffic_accepted: 0,
+            traffic_retries: 0,
+            traffic_phases: 0,
+            routed: 77,
+            hnf_requeued: 1,
+            // Not representable in f64 — the parser must keep it exact.
+            load_checksum: 0x8000_0000_0000_0401,
+            l1d_miss_rate: 0.125,
+            l2_miss_rate: 0.5,
+            l3_miss_rate: 0.25,
+            host_ns: 31_337,
+            host_events_per_sec: 1.5e6,
+        }
+    }
+
+    #[test]
+    fn full_line_roundtrips_exactly() {
+        let r = sample();
+        let back = SweepRecord::from_json_line(&r.to_json_line()).unwrap();
+        assert_eq!(r, back);
+        assert_eq!(back.load_checksum, 0x8000_0000_0000_0401);
+    }
+
+    #[test]
+    fn canonical_strips_host_fields_only() {
+        let r = sample();
+        let canon = r.to_canonical_line();
+        assert!(!canon.contains("host_"), "{canon}");
+        assert!(canon.contains("\"load_checksum\""));
+        let back = SweepRecord::from_json_line(&canon).unwrap();
+        assert_eq!(back.host_ns, 0);
+        assert_eq!(back.host_events_per_sec, 0.0);
+        assert_eq!(back.to_canonical_line(), canon, "canonical is stable");
+    }
+
+    #[test]
+    fn host_fields_differ_canonical_equal() {
+        let a = sample();
+        let b = SweepRecord { host_ns: 1, host_events_per_sec: 9.9, ..a.clone() };
+        assert_ne!(a.to_json_line(), b.to_json_line());
+        assert_eq!(a.to_canonical_line(), b.to_canonical_line());
+    }
+
+    #[test]
+    fn truncated_line_is_an_error() {
+        let line = sample().to_json_line();
+        for cut in [line.len() / 2, line.len() - 1] {
+            let err = SweepRecord::from_json_line(&line[..cut]).unwrap_err();
+            assert!(!err.is_empty());
+        }
+    }
+
+    #[test]
+    fn garbage_and_unknown_fields_are_errors() {
+        assert!(SweepRecord::from_json_line("not json").is_err());
+        assert!(SweepRecord::from_json_line("{}").unwrap_err().contains("index"));
+        let with_extra =
+            sample().to_json_line().replace("\"host_ns\"", "\"hots_ns\"");
+        let err = SweepRecord::from_json_line(&with_extra).unwrap_err();
+        assert!(err.contains("hots_ns"), "{err}");
+    }
+
+    #[test]
+    fn id_escapes_survive() {
+        let r = SweepRecord { id: "odd \"quoted\" id".to_string(), ..sample() };
+        let back = SweepRecord::from_json_line(&r.to_json_line()).unwrap();
+        assert_eq!(back.id, "odd \"quoted\" id");
+    }
+}

@@ -2,11 +2,13 @@
 //! comparison between runs (the paper's error metrics), and JSON export.
 
 pub mod accuracy;
+pub mod journal;
 
 use crate::pdes::RunResult;
 use crate::util::json::JsonObj;
 
 pub use accuracy::{cache_miss_rate_errors, compare, Accuracy};
+pub use journal::SweepRecord;
 
 /// Flat, serialisable summary of one run.
 #[derive(Debug, Clone)]

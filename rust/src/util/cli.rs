@@ -6,6 +6,8 @@ use std::collections::BTreeMap;
 pub struct Args {
     /// First non-flag token (the subcommand).
     pub command: Option<String>,
+    /// Non-flag tokens after the subcommand (e.g. `sweep run`'s verb).
+    pub rest: Vec<String>,
     flags: BTreeMap<String, String>,
     /// Flags present without a value.
     switches: Vec<String>,
@@ -28,6 +30,8 @@ impl Args {
                 }
             } else if out.command.is_none() {
                 out.command = Some(tok);
+            } else {
+                out.rest.push(tok);
             }
         }
         out
@@ -70,6 +74,16 @@ mod tests {
         assert_eq!(a.get_usize("cores", 1), 8);
         assert!(a.has("json"));
         assert!(!a.has("missing"));
+    }
+
+    #[test]
+    fn trailing_positionals_land_in_rest() {
+        let a = args("sweep run --spec quick --shard 0/2");
+        assert_eq!(a.command.as_deref(), Some("sweep"));
+        assert_eq!(a.rest, vec!["run".to_string()]);
+        assert_eq!(a.get_str("spec", "x"), "quick");
+        assert_eq!(a.get_str("shard", "x"), "0/2");
+        assert!(args("run").rest.is_empty());
     }
 
     #[test]

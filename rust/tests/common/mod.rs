@@ -93,6 +93,35 @@ pub fn assert_identical_modulo_schedule(
     }
 }
 
+/// Canonical form of a sweep journal (index-sorted records re-emitted
+/// without the `host_*` wall-clock fields), panicking on any damaged
+/// line — the strict read the sweep gates build on (docs/SWEEP.md).
+pub fn canonical_journal(path: &std::path::Path) -> Vec<String> {
+    parti_sim::harness::sweep::canonical_journal(path)
+        .unwrap_or_else(|e| panic!("{}: {e}", path.display()))
+}
+
+/// Gate: two journals hold bit-identical canonical records. Everything
+/// deterministic must match line for line; only `host_*` fields (which
+/// the canonical form strips) may differ between the underlying files.
+pub fn assert_journals_equivalent(
+    a: &std::path::Path,
+    b: &std::path::Path,
+    what: &str,
+) {
+    let (ca, cb) = (canonical_journal(a), canonical_journal(b));
+    assert_eq!(
+        ca.len(),
+        cb.len(),
+        "{what}: record counts differ ({} vs {})",
+        ca.len(),
+        cb.len()
+    );
+    for (i, (la, lb)) in ca.iter().zip(&cb).enumerate() {
+        assert_eq!(la, lb, "{what}: canonical record {i} differs");
+    }
+}
+
 /// The standard matrix gate: for each `(threads, steal)` point, run
 /// `vcfg` on the threaded kernel against the pre-computed deterministic
 /// `reference` (normally a virtual-kernel run of the same `vcfg` and

@@ -513,6 +513,187 @@ fn traffic_toml_rejects_unknown_keys_and_collects_all_errors() {
 }
 
 // ---------------------------------------------------------------------
+// SweepSpec: shard partitioning is total and disjoint over the expanded
+// point set; `spec -> TOML -> spec` is the identity over a seeded walk
+// of the valid spec space; every single-knob excursion is rejected by
+// `validate()` and by the `from_toml` path (docs/SWEEP.md).
+// ---------------------------------------------------------------------
+
+use parti_sim::config::Mode;
+use parti_sim::harness::sweep::{expand, shard_points};
+use parti_sim::sched::QuantumPolicy;
+use parti_sim::spec::sweep::{Sampling, SweepSpec};
+use parti_sim::spec::Interconnect;
+
+/// A non-empty, duplicate-free random subset of `pool` (SweepSpec
+/// rejects duplicate axis values).
+fn subset<T: Clone>(g: &mut parti_sim::util::prop::Gen, pool: &[T]) -> Vec<T> {
+    let mut out = Vec::new();
+    for t in pool {
+        if g.bool() {
+            out.push(t.clone());
+        }
+    }
+    if out.is_empty() {
+        out.push(pool[g.range_usize(0, pool.len() - 1)].clone());
+    }
+    out
+}
+
+/// One random point in the *valid* SweepSpec space. Axis pools stay
+/// inside every preset's constraints (ring fabrics need >= 2 cores;
+/// meshes are excluded because they also constrain divisibility).
+fn random_sweep_spec(
+    g: &mut parti_sim::util::prop::Gen,
+    i: usize,
+) -> SweepSpec {
+    let opt = |g: &mut parti_sim::util::prop::Gen, v: Vec<u64>| {
+        if g.bool() {
+            Vec::new()
+        } else {
+            v
+        }
+    };
+    let cores =
+        if g.bool() { Vec::new() } else { subset(g, &[2usize, 4, 6, 8]) };
+    let fabrics = if g.bool() {
+        Vec::new()
+    } else {
+        subset(g, &[Interconnect::Star, Interconnect::Ring])
+    };
+    let l2 = subset(g, &[128u64, 256, 512]);
+    let q = subset(g, &[4u64, 8, 16, 32]);
+    SweepSpec {
+        name: format!("prop-{i}"),
+        description: format!("sweep property walk point {i}"),
+        platforms: subset(
+            g,
+            &["fig4-2".to_string(), "fig4-8".to_string(), "ring-16".to_string()],
+        ),
+        cores,
+        l2_kib: opt(g, l2),
+        fabrics,
+        workloads: subset(
+            g,
+            &[
+                "app:synthetic".to_string(),
+                "app:canneal".to_string(),
+                "traffic:hotspot".to_string(),
+                "traffic:transpose".to_string(),
+            ],
+        ),
+        kernels: subset(g, &[Mode::Serial, Mode::Parallel, Mode::Virtual]),
+        quantum_ns: q,
+        quantum_policies: subset(
+            g,
+            &[
+                QuantumPolicy::Fixed,
+                QuantumPolicy::Horizon,
+                QuantumPolicy::Hybrid { max_leap: 8 },
+            ],
+        ),
+        sampling: if g.bool() { Sampling::Grid } else { Sampling::Random },
+        samples: g.range_usize(1, 64),
+        sample_seed: g.u64(),
+        ops_per_core: g.range_usize(1, 4096),
+        seed: g.u64(),
+        inner_threads: g.range_usize(1, 8),
+    }
+}
+
+#[test]
+fn prop_sweep_shard_partition_is_total_and_disjoint() {
+    check("sweep-shard-partition", 16, |g, i| {
+        let spec = random_sweep_spec(g, i);
+        spec.validate()
+            .unwrap_or_else(|e| panic!("walk left the valid region: {e}"));
+        let points = expand(&spec).unwrap();
+        for n in 1..=4usize {
+            let mut seen = Vec::new();
+            for s in 0..n {
+                let shard = shard_points(&points, (s, n));
+                for p in &shard {
+                    assert_eq!(
+                        p.index % n,
+                        s,
+                        "point {} landed in the wrong shard",
+                        p.index
+                    );
+                }
+                seen.extend(shard.iter().map(|p| p.index));
+            }
+            seen.sort_unstable();
+            let want: Vec<usize> = (0..points.len()).collect();
+            // Equality of the sorted union with 0..len is totality and
+            // disjointness at once (a duplicate would make it too long).
+            assert_eq!(seen, want, "shards {n}: not a partition");
+        }
+    });
+}
+
+#[test]
+fn prop_sweep_spec_toml_roundtrip_is_identity() {
+    check("sweep-toml-roundtrip", 64, |g, i| {
+        let spec = random_sweep_spec(g, i);
+        let toml = spec.to_toml();
+        let back = SweepSpec::from_toml(&toml)
+            .unwrap_or_else(|e| panic!("roundtrip parse failed: {e}\n{toml}"));
+        assert_eq!(spec, back, "TOML roundtrip must be the identity");
+    });
+}
+
+#[test]
+fn prop_sweep_spec_out_of_range_knobs_are_rejected() {
+    // Each case pushes exactly one knob outside its documented range;
+    // both validate() and the serialise-then-parse path must refuse,
+    // naming the offending knob.
+    let break_one: &[(&str, fn(&mut SweepSpec))] = &[
+        ("platforms", |s| s.platforms.clear()),
+        ("platforms", |s| s.platforms = vec!["atlantis".into()]),
+        ("cores", |s| s.cores = vec![0]),
+        ("l2_kib", |s| s.l2_kib = vec![0]),
+        ("workloads", |s| s.workloads.clear()),
+        ("workloads", |s| s.workloads = vec!["app:nosuch".into()]),
+        ("workloads", |s| s.workloads = vec!["hotspot".into()]),
+        ("kernels", |s| s.kernels.clear()),
+        ("quantum_ns", |s| s.quantum_ns.clear()),
+        ("quantum_ns", |s| s.quantum_ns = vec![0]),
+        ("quantum_ns", |s| s.quantum_ns = vec![8, 8]),
+        ("quantum_policies", |s| s.quantum_policies.clear()),
+        ("samples", |s| {
+            s.sampling = Sampling::Random;
+            s.samples = 0;
+        }),
+        ("ops_per_core", |s| s.ops_per_core = 0),
+        ("inner_threads", |s| s.inner_threads = 0),
+    ];
+    check("sweep-rejection", 40, |g, i| {
+        let mut spec = random_sweep_spec(g, i);
+        let (knob, breaker) = *g.pick(break_one);
+        breaker(&mut spec);
+        let err = spec
+            .validate()
+            .expect_err("an out-of-range knob must fail validation");
+        assert!(
+            err.errors.iter().any(|e| e.contains(knob)),
+            "{knob}: error must name the knob, got {err}"
+        );
+        let err = SweepSpec::from_toml(&spec.to_toml())
+            .expect_err("from_toml must re-validate");
+        assert!(err.errors.iter().any(|e| e.contains(knob)), "{err}");
+    });
+}
+
+#[test]
+fn sweep_toml_rejects_unknown_keys() {
+    // A typo must not silently fall back to a default, and the hint
+    // points at the schema doc.
+    let err = SweepSpec::from_toml("kernles = \"virtual\"\n").unwrap_err();
+    assert!(err.errors[0].contains("unknown key `kernles`"), "{err}");
+    assert!(err.to_string().contains("docs/SWEEP.md"), "{err}");
+}
+
+// ---------------------------------------------------------------------
 // addrgen: structural invariants for arbitrary parameters.
 // ---------------------------------------------------------------------
 

@@ -1,0 +1,196 @@
+//! Acceptance gates for the sweep orchestrator (docs/SWEEP.md):
+//!
+//! * the journal's canonical form is bit-identical whatever the outer
+//!   pool width (`--outer 1` ≡ `--outer 8`);
+//! * `--shard i/N` decomposes exactly — the sorted union of the shard
+//!   journals equals the unsharded journal for N ∈ {2, 3};
+//! * a killed sweep plus `--resume` equals the uninterrupted run;
+//! * a damaged journal line (truncation, trailing garbage) is reported
+//!   with its line number and its point re-run, never silently skipped;
+//! * wall-clock data lives only in `host_*` fields, which the canonical
+//!   form strips.
+
+mod common;
+
+use std::path::{Path, PathBuf};
+
+use parti_sim::config::Mode;
+use parti_sim::harness::sweep::{
+    canonical_journal_union, expand, run_sweep, SweepOptions, SweepOutcome,
+};
+use parti_sim::harness::{make_workload, run_with_workload};
+use parti_sim::spec::sweep::SweepSpec;
+use parti_sim::stats::SweepRecord;
+
+use common::{assert_journals_equivalent, canonical_journal};
+
+/// A unique temp path per test (tests run concurrently in one binary).
+fn tmp(name: &str) -> PathBuf {
+    let p = std::env::temp_dir()
+        .join(format!("parti_sweep_{}_{name}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+fn cleanup(paths: &[&PathBuf]) {
+    for p in paths {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+/// 8 cheap points: 2 workloads × 2 kernels × 2 quanta on the 2-core
+/// platform, threaded kernel at 2 inner threads.
+fn small_spec() -> SweepSpec {
+    SweepSpec {
+        name: "gate".to_string(),
+        workloads: vec!["app:synthetic".into(), "traffic:hotspot".into()],
+        kernels: vec![Mode::Virtual, Mode::Parallel],
+        quantum_ns: vec![8, 16],
+        inner_threads: 2,
+        ops_per_core: 64,
+        ..SweepSpec::default()
+    }
+}
+
+fn run(
+    spec: &SweepSpec,
+    journal: &Path,
+    tweak: impl FnOnce(&mut SweepOptions),
+) -> SweepOutcome {
+    let mut opts = SweepOptions {
+        journal: journal.to_path_buf(),
+        ..SweepOptions::default()
+    };
+    tweak(&mut opts);
+    run_sweep(spec, &opts).expect("sweep runs")
+}
+
+#[test]
+fn outer_pool_size_does_not_change_the_journal() {
+    let spec = small_spec();
+    let (j1, j8) = (tmp("outer1"), tmp("outer8"));
+    let a = run(&spec, &j1, |o| o.outer = Some(1));
+    let b = run(&spec, &j8, |o| o.outer = Some(8));
+    assert_eq!(a.ran, 8);
+    assert_eq!(b.ran, 8);
+    assert_eq!(b.outer, 8);
+    assert_journals_equivalent(&j1, &j8, "outer 1 vs outer 8");
+
+    // Wall-clock segregation: raw records carry `host_*`, canonical
+    // records do not — so the gate above really did compare bytes.
+    let raw = std::fs::read_to_string(&j1).unwrap();
+    assert!(raw.contains("\"host_ns\""), "raw journal keeps wall-clock");
+    for line in canonical_journal(&j1) {
+        assert!(!line.contains("host_"), "canonical strips host_*: {line}");
+    }
+    cleanup(&[&j1, &j8]);
+}
+
+#[test]
+fn shard_union_matches_unsharded() {
+    let spec = small_spec();
+    let whole = tmp("unsharded");
+    run(&spec, &whole, |_| {});
+    for n in [2usize, 3] {
+        let shards: Vec<PathBuf> =
+            (0..n).map(|i| tmp(&format!("shard{i}of{n}"))).collect();
+        let mut total = 0;
+        for (i, j) in shards.iter().enumerate() {
+            let out = run(&spec, j, |o| o.shard = Some((i, n)));
+            total += out.ran;
+        }
+        assert_eq!(total, 8, "shards cover every point exactly once");
+        let union = canonical_journal_union(&shards).unwrap();
+        assert_eq!(
+            union,
+            canonical_journal(&whole),
+            "union of {n} shard journals == unsharded journal"
+        );
+        cleanup(&shards.iter().collect::<Vec<_>>());
+    }
+    cleanup(&[&whole]);
+}
+
+#[test]
+fn resume_after_partial_run_matches_uninterrupted() {
+    let spec = small_spec();
+    let (full, part) = (tmp("full"), tmp("partial"));
+    run(&spec, &full, |_| {});
+    // "Kill after k": the in-order committer means stopping after 3
+    // points leaves the same clean prefix a real kill would.
+    let a = run(&spec, &part, |o| o.max_points = Some(3));
+    assert_eq!((a.ran, a.skipped), (3, 0));
+    let b = run(&spec, &part, |o| o.resume = true);
+    assert_eq!((b.ran, b.skipped), (5, 3), "resume skips the prefix");
+    assert_journals_equivalent(&part, &full, "kill+resume vs uninterrupted");
+    cleanup(&[&full, &part]);
+}
+
+#[test]
+fn truncated_journal_line_is_reported_and_rerun() {
+    let spec = small_spec();
+    let (full, hurt) = (tmp("full2"), tmp("truncated"));
+    run(&spec, &full, |_| {});
+    run(&spec, &hurt, |_| {});
+    // Chop line 4 mid-record, as a kill mid-write would.
+    let text = std::fs::read_to_string(&hurt).unwrap();
+    let mut lines: Vec<String> = text.lines().map(String::from).collect();
+    lines[3].truncate(lines[3].len() / 2);
+    std::fs::write(&hurt, lines.join("\n") + "\n").unwrap();
+
+    let out = run(&spec, &hurt, |o| o.resume = true);
+    assert_eq!(out.repaired.len(), 1, "one damaged line");
+    assert_eq!(out.repaired[0].line, 4, "reported with its line number");
+    assert_eq!((out.ran, out.skipped), (1, 7), "damaged point re-run");
+    assert_journals_equivalent(&hurt, &full, "repaired vs uninterrupted");
+    cleanup(&[&full, &hurt]);
+}
+
+#[test]
+fn trailing_garbage_is_reported_and_ignored() {
+    let spec = small_spec();
+    let j = tmp("garbage");
+    run(&spec, &j, |_| {});
+    let mut text = std::fs::read_to_string(&j).unwrap();
+    text.push_str("not json at all\n");
+    std::fs::write(&j, text).unwrap();
+
+    let out = run(&spec, &j, |o| o.resume = true);
+    assert_eq!(out.repaired.len(), 1);
+    assert_eq!(out.repaired[0].line, 9, "the appended garbage line");
+    assert_eq!((out.ran, out.skipped), (0, 8), "all real points intact");
+    for line in std::fs::read_to_string(&j).unwrap().lines() {
+        SweepRecord::from_json_line(line).expect("journal repaired clean");
+    }
+    cleanup(&[&j]);
+}
+
+#[test]
+fn journaled_records_match_direct_runs() {
+    let spec = small_spec();
+    let j = tmp("direct");
+    run(&spec, &j, |_| {});
+    let canon = canonical_journal(&j);
+    for (k, point) in expand(&spec).unwrap().iter().enumerate().take(3) {
+        let w = make_workload(&point.cfg).unwrap();
+        let r = run_with_workload(&point.cfg, &w).unwrap();
+        let rec = SweepRecord::from_run(point.index as u64, &point.id, &r);
+        assert_eq!(
+            canon[k],
+            rec.to_canonical_line(),
+            "orchestrated point {k} == direct run"
+        );
+    }
+    cleanup(&[&j]);
+}
+
+#[test]
+fn existing_journal_without_resume_is_refused() {
+    let spec = small_spec();
+    let j = tmp("norerun");
+    run(&spec, &j, |o| o.max_points = Some(1));
+    let opts = SweepOptions { journal: j.clone(), ..SweepOptions::default() };
+    let err = run_sweep(&spec, &opts).unwrap_err().to_string();
+    assert!(err.contains("--resume"), "error points at --resume: {err}");
+    cleanup(&[&j]);
+}

@@ -28,6 +28,7 @@ DEFAULT_FILES = [
     "docs/DETERMINISM.md",
     "docs/PERF.md",
     "docs/PLATFORMS.md",
+    "docs/SWEEP.md",
     "docs/TRAFFIC.md",
     "docs/XBAR.md",
 ]
