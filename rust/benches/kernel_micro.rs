@@ -653,6 +653,72 @@ fn main() {
     }
     json = json.obj("sweep_outer_pool", sweep_rows);
 
+    // Border-quiescent checkpoint round trip on fig4-8
+    // (docs/CHECKPOINT.md): what a snapshot costs to serialize, what a
+    // restore costs to parse + re-elaborate + load, and the file size.
+    // The snapshot is produced at the half-way border through the real
+    // snap rule; bit-identity of the resumed run is gated by
+    // rust/tests/checkpoint.rs — this row tracks only the cost.
+    {
+        use parti_sim::ckpt::{read_snapshot, snapshot_machine};
+        use parti_sim::harness::{rebuild_from_snapshot, run_to_checkpoint};
+        let spec = platforms::preset("fig4-8").expect("fig4-8 preset");
+        let mut cfg = RunConfig::for_spec(&spec);
+        cfg.app = "blackscholes".to_string();
+        cfg.ops_per_core = 1024;
+        cfg.mode = parti_sim::config::Mode::Virtual;
+        let w = make_workload(&cfg).expect("workload");
+        let full = run_with_workload(&cfg, &w).unwrap();
+        let path = std::env::temp_dir().join(format!(
+            "parti_bench_ckpt_{}.ckpt",
+            std::process::id()
+        ));
+        let (_partial, border) =
+            run_to_checkpoint(&cfg, full.sim_ticks / 2, &path).unwrap();
+        let border = border.expect("half-way border reached");
+        let bytes = std::fs::read(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let file_bytes = bytes.len() as u64;
+
+        let (restore_m, lo, hi) = measure(11, || {
+            let snap = read_snapshot(&bytes).unwrap();
+            let (machine, _eff, resumed) =
+                rebuild_from_snapshot(&snap, &cfg).unwrap();
+            std::hint::black_box((&machine, resumed));
+        });
+        bench_util::report(
+            "ckpt restore (parse+elaborate+load) fig4-8",
+            restore_m,
+            lo,
+            hi,
+        );
+
+        let snap = read_snapshot(&bytes).unwrap();
+        let (machine, eff, _resumed) =
+            rebuild_from_snapshot(&snap, &cfg).unwrap();
+        let (snap_m, lo, hi) = measure(11, || {
+            let again = snapshot_machine(&machine, &eff, border).unwrap();
+            std::hint::black_box(again.len());
+        });
+        bench_util::report("ckpt snapshot fig4-8", snap_m, lo, hi);
+        println!(
+            "  border={border} file={file_bytes} bytes \
+             snapshot={:.0}us restore={:.0}us",
+            snap_m as f64 / 1e3,
+            restore_m as f64 / 1e3
+        );
+        json = json.obj(
+            "checkpoint_roundtrip",
+            JsonObj::new().obj(
+                "fig4_8",
+                JsonObj::new()
+                    .u64("snapshot_ns", snap_m as u64)
+                    .u64("restore_ns", restore_m as u64)
+                    .u64("file_bytes", file_bytes),
+            ),
+        );
+    }
+
     // End-to-end serial kernel throughput (the L3 §Perf headline).
     let mut cfg = RunConfig {
         app: "blackscholes".to_string(),

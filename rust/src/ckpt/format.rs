@@ -1,0 +1,389 @@
+//! The on-disk snapshot format: header, record framing, and the pinned
+//! run-configuration text.
+//!
+//! A checkpoint file is:
+//!
+//! | section | contents |
+//! |---|---|
+//! | header | magic `PGEM5CKP`, format version, flags, spec hash, border tick, quantum, domain/component counts |
+//! | `R_CONFIG` | the pinned run-configuration (`key = value` text) |
+//! | `R_SPEC` | the full [`SystemSpec`] TOML the machine rebuilds from |
+//! | `R_SHARED` | shared cross-domain state (injector cursors, workload barrier, deterministic PDES counters) |
+//! | `R_DOMAIN` × n | per-domain clock, executed count and pending events in canonical order |
+//! | `R_COMP` × n | per-component architectural state via [`Component::save_state`] |
+//! | `R_END` | terminator (guards against silent truncation) |
+//!
+//! Every record is `tag: u8, len: u64, payload` — a reader can skip or
+//! diff records without understanding their payloads, and a truncated file
+//! fails with the exact byte offset. The `flags` header word is reserved
+//! for forward-compatible extensions (the planned O3 core model will carry
+//! much larger in-flight state; a flag bit lets old readers reject such
+//! snapshots cleanly instead of misparsing them).
+//!
+//! [`Component::save_state`]: crate::sim::component::Component::save_state
+//! [`SystemSpec`]: crate::spec::SystemSpec
+
+use crate::ckpt::io::{CkptError, StateReader, StateWriter};
+use crate::config::{Mode, RunConfig};
+use crate::cpu::CpuModel;
+use crate::sched::{InboxOrder, QuantumPolicy, XbarArb};
+use crate::sim::time::Tick;
+use crate::spec::SystemSpec;
+
+/// File magic: identifies a parti-gem5 checkpoint.
+pub const MAGIC: &[u8; 8] = b"PGEM5CKP";
+/// Current format version; bumped on any layout change.
+pub const VERSION: u32 = 1;
+
+/// Record tags, in file order.
+pub const R_CONFIG: u8 = 1;
+pub const R_SPEC: u8 = 2;
+pub const R_SHARED: u8 = 3;
+pub const R_DOMAIN: u8 = 4;
+pub const R_COMP: u8 = 5;
+pub const R_END: u8 = 6;
+
+pub fn tag_name(tag: u8) -> &'static str {
+    match tag {
+        R_CONFIG => "config",
+        R_SPEC => "spec",
+        R_SHARED => "shared",
+        R_DOMAIN => "domain",
+        R_COMP => "component",
+        R_END => "end",
+        _ => "unknown",
+    }
+}
+
+/// The fixed-size snapshot header.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Header {
+    pub version: u32,
+    /// Reserved feature bits (must be 0 in version 1); see module docs.
+    pub flags: u32,
+    /// FNV-1a over the spec TOML + pinned config text: a restore under a
+    /// different platform or result-determining run knob is rejected
+    /// before any state is touched.
+    pub spec_hash: u64,
+    /// The quantum border the snapshot was taken at.
+    pub tick: Tick,
+    /// The producer's quantum (result-determining; pinned).
+    pub quantum: Tick,
+    pub n_domains: u32,
+    pub n_components: u32,
+}
+
+impl Header {
+    pub fn write(&self, w: &mut StateWriter) {
+        w.raw(MAGIC);
+        w.u32(self.version);
+        w.u32(self.flags);
+        w.u64(self.spec_hash);
+        w.u64(self.tick);
+        w.u64(self.quantum);
+        w.u32(self.n_domains);
+        w.u32(self.n_components);
+    }
+
+    pub fn read(r: &mut StateReader) -> Result<Self, CkptError> {
+        let off = r.offset();
+        let mut magic = [0u8; 8];
+        for b in &mut magic {
+            *b = r.u8()?;
+        }
+        if &magic != MAGIC {
+            return Err(CkptError::Corrupt {
+                offset: off,
+                what: "not a parti-gem5 checkpoint (bad magic)".to_string(),
+            });
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            return Err(CkptError::Mismatch {
+                what: "format version".to_string(),
+                expected: VERSION.to_string(),
+                found: version.to_string(),
+            });
+        }
+        let flags = r.u32()?;
+        if flags != 0 {
+            return Err(CkptError::Mismatch {
+                what: "feature flags".to_string(),
+                expected: "0".to_string(),
+                found: format!("{flags:#x}"),
+            });
+        }
+        Ok(Header {
+            version,
+            flags,
+            spec_hash: r.u64()?,
+            tick: r.u64()?,
+            quantum: r.u64()?,
+            n_domains: r.u32()?,
+            n_components: r.u32()?,
+        })
+    }
+}
+
+/// 64-bit FNV-1a.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The snapshot's identity hash: spec TOML and pinned config text,
+/// NUL-separated so neither can masquerade as the other.
+pub fn spec_hash(spec_toml: &str, config_text: &str) -> u64 {
+    let mut bytes = Vec::with_capacity(spec_toml.len() + config_text.len() + 1);
+    bytes.extend_from_slice(spec_toml.as_bytes());
+    bytes.push(0);
+    bytes.extend_from_slice(config_text.as_bytes());
+    fnv1a(&bytes)
+}
+
+fn cpu_keyword(m: CpuModel) -> &'static str {
+    match m {
+        CpuModel::Kvm => "kvm",
+        CpuModel::Atomic => "atomic",
+        CpuModel::Minor => "minor",
+        CpuModel::O3 => "o3",
+    }
+}
+
+fn policy_keyword(p: QuantumPolicy) -> String {
+    match p {
+        QuantumPolicy::Fixed => "fixed".to_string(),
+        QuantumPolicy::Horizon => "horizon".to_string(),
+        QuantumPolicy::Hybrid { max_leap } => format!("hybrid:{max_leap}"),
+    }
+}
+
+fn parse_policy(s: &str) -> Option<QuantumPolicy> {
+    if let Some(n) = s.strip_prefix("hybrid:") {
+        return Some(QuantumPolicy::Hybrid { max_leap: n.parse().ok()? });
+    }
+    QuantumPolicy::parse(s)
+}
+
+/// Serialise the result-determining half of a [`RunConfig`] — the knobs a
+/// restore MUST reproduce for bit-identity. Everything absent from this
+/// text (kernel mode, thread count, stealing, queue implementation,
+/// calendar geometry, profiling) is proven result-invariant by the
+/// determinism suites and stays freely overridable at restore
+/// (docs/CHECKPOINT.md has the table).
+pub fn pinned_text(cfg: &RunConfig) -> String {
+    let mut s = String::new();
+    let mut kv = |k: &str, v: String| {
+        s.push_str(k);
+        s.push_str(" = ");
+        s.push_str(&v);
+        s.push('\n');
+    };
+    kv("cpu", cpu_keyword(cfg.cpu_model).to_string());
+    kv("app", cfg.app.clone());
+    kv("traffic", cfg.traffic.clone().unwrap_or_else(|| "-".to_string()));
+    kv("ops_per_core", cfg.ops_per_core.to_string());
+    kv("seed", cfg.seed.to_string());
+    kv("quantum", cfg.quantum.to_string());
+    kv("quantum_policy", policy_keyword(cfg.quantum_policy));
+    kv("inbox_order", match cfg.inbox_order {
+        InboxOrder::Host => "host".to_string(),
+        InboxOrder::Border => "border".to_string(),
+    });
+    kv("xbar_arb", match cfg.xbar_arb {
+        XbarArb::Host => "host".to_string(),
+        XbarArb::Border => "border".to_string(),
+    });
+    s
+}
+
+/// Rebuild a [`RunConfig`] from an embedded spec TOML + pinned config
+/// text. The platform half comes from the spec; the pinned knobs from the
+/// text; everything else keeps defaults (the restore entry points then
+/// apply the caller's free-axis overrides). `mode` defaults to
+/// [`Mode::Virtual`] — a checkpoint can only resume on a windowed kernel.
+pub fn config_from_snapshot(
+    spec: &SystemSpec,
+    config_text: &str,
+) -> Result<RunConfig, CkptError> {
+    let mut cfg = RunConfig::for_spec(spec);
+    cfg.mode = Mode::Virtual;
+    let bad = |k: &str, v: &str| CkptError::Mismatch {
+        what: format!("pinned config key `{k}`"),
+        expected: "a parseable value".to_string(),
+        found: v.to_string(),
+    };
+    for line in config_text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line.split_once('=').ok_or_else(|| CkptError::Corrupt {
+            offset: 0,
+            what: format!("pinned config line without `=`: {line}"),
+        })?;
+        let (k, v) = (k.trim(), v.trim());
+        match k {
+            "cpu" => {
+                cfg.cpu_model = CpuModel::parse(v).ok_or_else(|| bad(k, v))?
+            }
+            "app" => cfg.app = v.to_string(),
+            "traffic" => {
+                cfg.traffic =
+                    if v == "-" { None } else { Some(v.to_string()) }
+            }
+            "ops_per_core" => {
+                cfg.ops_per_core = v.parse().map_err(|_| bad(k, v))?
+            }
+            "seed" => cfg.seed = v.parse().map_err(|_| bad(k, v))?,
+            "quantum" => cfg.quantum = v.parse().map_err(|_| bad(k, v))?,
+            "quantum_policy" => {
+                cfg.quantum_policy =
+                    parse_policy(v).ok_or_else(|| bad(k, v))?
+            }
+            "inbox_order" => {
+                cfg.inbox_order =
+                    InboxOrder::parse(v).ok_or_else(|| bad(k, v))?
+            }
+            "xbar_arb" => {
+                cfg.xbar_arb = XbarArb::parse(v).ok_or_else(|| bad(k, v))?
+            }
+            _ => {
+                return Err(CkptError::Mismatch {
+                    what: "pinned config key".to_string(),
+                    expected: "a known key".to_string(),
+                    found: k.to_string(),
+                })
+            }
+        }
+    }
+    Ok(cfg)
+}
+
+/// Append one framed record.
+pub fn write_record(w: &mut StateWriter, tag: u8, payload: &[u8]) {
+    w.u8(tag);
+    w.bytes(payload);
+}
+
+/// Read one framed record, returning `(tag, payload, payload_offset)`.
+pub fn read_record<'a>(
+    r: &mut StateReader<'a>,
+) -> Result<(u8, &'a [u8], usize), CkptError> {
+    let off = r.offset();
+    let tag = r.u8()?;
+    if !(R_CONFIG..=R_END).contains(&tag) {
+        return Err(CkptError::Corrupt {
+            offset: off,
+            what: format!("bad record tag {tag}"),
+        });
+    }
+    let payload_off = r.offset() + 8;
+    let payload = r.bytes()?;
+    Ok((tag, payload, payload_off))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_roundtrip() {
+        let h = Header {
+            version: VERSION,
+            flags: 0,
+            spec_hash: 0x1234_5678_9abc_def0,
+            tick: 32_000,
+            quantum: 16_000,
+            n_domains: 3,
+            n_components: 20,
+        };
+        let mut w = StateWriter::new();
+        h.write(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = StateReader::new(&bytes);
+        assert_eq!(Header::read(&mut r).unwrap(), h);
+        assert!(r.is_done());
+    }
+
+    #[test]
+    fn header_rejects_version_bump() {
+        let h = Header {
+            version: VERSION,
+            flags: 0,
+            spec_hash: 1,
+            tick: 1,
+            quantum: 1,
+            n_domains: 1,
+            n_components: 1,
+        };
+        let mut w = StateWriter::new();
+        h.write(&mut w);
+        let mut bytes = w.into_bytes();
+        bytes[8] = VERSION as u8 + 1; // little-endian low byte of version
+        let mut r = StateReader::new(&bytes);
+        match Header::read(&mut r) {
+            Err(CkptError::Mismatch { what, .. }) => {
+                assert!(what.contains("version"))
+            }
+            other => panic!("expected version mismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn header_rejects_bad_magic() {
+        let bytes = b"NOTACKPT_____________________".to_vec();
+        let mut r = StateReader::new(&bytes);
+        assert!(matches!(
+            Header::read(&mut r),
+            Err(CkptError::Corrupt { offset: 0, .. })
+        ));
+    }
+
+    #[test]
+    fn pinned_text_roundtrips_through_config() {
+        let cfg = RunConfig {
+            app: "stream".to_string(),
+            traffic: Some("hotspot".to_string()),
+            ops_per_core: 128,
+            seed: 7,
+            quantum: 8_000,
+            quantum_policy: QuantumPolicy::Hybrid { max_leap: 9 },
+            ..RunConfig::default()
+        };
+        let text = pinned_text(&cfg);
+        let spec = cfg.spec();
+        let back = config_from_snapshot(&spec, &text).unwrap();
+        assert_eq!(pinned_text(&back), text);
+        assert_eq!(back.quantum, 8_000);
+        assert_eq!(back.quantum_policy, QuantumPolicy::Hybrid { max_leap: 9 });
+        assert_eq!(back.traffic.as_deref(), Some("hotspot"));
+        assert_eq!(back.mode, Mode::Virtual);
+    }
+
+    #[test]
+    fn spec_hash_separates_halves() {
+        // The NUL separator stops `spec+config` content from sliding
+        // between the two halves unnoticed.
+        assert_ne!(spec_hash("ab", "c"), spec_hash("a", "bc"));
+        assert_ne!(spec_hash("x", "y"), spec_hash("y", "x"));
+    }
+
+    #[test]
+    fn record_frame_roundtrip() {
+        let mut w = StateWriter::new();
+        write_record(&mut w, R_CONFIG, b"hello");
+        write_record(&mut w, R_END, b"");
+        let bytes = w.into_bytes();
+        let mut r = StateReader::new(&bytes);
+        let (tag, payload, off) = read_record(&mut r).unwrap();
+        assert_eq!((tag, payload, off), (R_CONFIG, &b"hello"[..], 9));
+        let (tag, payload, _) = read_record(&mut r).unwrap();
+        assert_eq!((tag, payload), (R_END, &b""[..]));
+        assert!(r.is_done());
+    }
+}

@@ -1,0 +1,585 @@
+//! Typed little-endian primitives for the checkpoint format.
+//!
+//! [`StateWriter`] and [`StateReader`] are the only (de)serialization
+//! surface the checkpoint subsystem uses — no serde, mirroring the
+//! repo's hand-rolled TOML/JSON plumbing. Every multi-byte integer is
+//! little-endian; every variable-length field is length-prefixed, so a
+//! reader can always report the exact byte offset where a truncated or
+//! corrupt file stops making sense ([`CkptError::Truncated`]).
+//!
+//! Canonical-ordering contract (docs/CHECKPOINT.md): callers must emit
+//! hash-map contents sorted by key and heap contents in `(tick, prio,
+//! seq)` / `(arrival, seq)` order, so a snapshot's bytes are a pure
+//! function of the simulation content — never of host iteration order.
+//! That is what makes checkpoint bytes invariant to the producing
+//! kernel.
+
+use crate::mem::LineState;
+use crate::proto::{Cmd, Packet};
+use crate::ruby::msg::{MsgKind, RubyMsg};
+use crate::sim::event::{Event, EventKind};
+use crate::sim::ids::CompId;
+use crate::sim::time::Tick;
+
+/// Everything that can go wrong producing or consuming a snapshot.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CkptError {
+    /// Host I/O failure (open/read/write).
+    Io(String),
+    /// The file ends before a field does; `offset` is the absolute byte
+    /// position of the incomplete read, `wanted` how many bytes it
+    /// needed.
+    Truncated { offset: usize, wanted: usize },
+    /// A structurally invalid value (bad tag, bad magic, bad UTF-8) at
+    /// an absolute byte offset.
+    Corrupt { offset: usize, what: String },
+    /// A well-formed snapshot that does not match this binary or run
+    /// configuration (format version, spec hash, component identity).
+    Mismatch { what: String, expected: String, found: String },
+}
+
+impl std::fmt::Display for CkptError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CkptError::Io(e) => write!(f, "checkpoint io: {e}"),
+            CkptError::Truncated { offset, wanted } => write!(
+                f,
+                "checkpoint truncated at byte {offset} ({wanted} more byte(s) needed)"
+            ),
+            CkptError::Corrupt { offset, what } => {
+                write!(f, "checkpoint corrupt at byte {offset}: {what}")
+            }
+            CkptError::Mismatch { what, expected, found } => write!(
+                f,
+                "checkpoint mismatch: {what} — snapshot has {found}, expected {expected}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CkptError {}
+
+/// Append-only little-endian byte sink.
+#[derive(Default)]
+pub struct StateWriter {
+    buf: Vec<u8>,
+}
+
+impl StateWriter {
+    pub fn new() -> Self {
+        StateWriter { buf: Vec::new() }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    pub fn opt_u64(&mut self, v: Option<u64>) {
+        match v {
+            None => self.u8(0),
+            Some(x) => {
+                self.u8(1);
+                self.u64(x);
+            }
+        }
+    }
+
+    pub fn raw(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    pub fn bytes(&mut self, bytes: &[u8]) {
+        self.u64(bytes.len() as u64);
+        self.raw(bytes);
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.bytes(s.as_bytes());
+    }
+
+    pub fn comp_id(&mut self, c: CompId) {
+        self.u32(c.0);
+    }
+
+    pub fn opt_comp_id(&mut self, c: Option<CompId>) {
+        match c {
+            None => self.u8(0),
+            Some(c) => {
+                self.u8(1);
+                self.comp_id(c);
+            }
+        }
+    }
+
+    pub fn line_state(&mut self, s: LineState) {
+        self.u8(match s {
+            LineState::Invalid => 0,
+            LineState::Shared => 1,
+            LineState::Exclusive => 2,
+            LineState::Modified => 3,
+        });
+    }
+
+    pub fn packet(&mut self, p: &Packet) {
+        self.u64(p.id);
+        self.u8(match p.cmd {
+            Cmd::ReadReq => 0,
+            Cmd::WriteReq => 1,
+            Cmd::ReadResp => 2,
+            Cmd::WriteResp => 3,
+        });
+        self.u64(p.addr);
+        self.u32(p.size);
+        self.u64(p.value);
+        self.comp_id(p.requester);
+        self.u16(p.core);
+        self.u64(p.issued);
+        self.u64(p.header_delay);
+        self.u64(p.payload_delay);
+    }
+
+    pub fn msg(&mut self, m: &RubyMsg) {
+        match m.kind {
+            MsgKind::SeqReq { is_store } => {
+                self.u8(0);
+                self.bool(is_store);
+            }
+            MsgKind::SeqResp => self.u8(1),
+            MsgKind::ReadShared => self.u8(2),
+            MsgKind::ReadUnique => self.u8(3),
+            MsgKind::WriteBackFull => self.u8(4),
+            MsgKind::Evict => self.u8(5),
+            MsgKind::SnpShared => self.u8(6),
+            MsgKind::SnpUnique => self.u8(7),
+            MsgKind::CompData { state } => {
+                self.u8(8);
+                self.line_state(state);
+            }
+            MsgKind::SnpResp { dirty, had_copy } => {
+                self.u8(9);
+                self.bool(dirty);
+                self.bool(had_copy);
+            }
+            MsgKind::Comp => self.u8(10),
+        }
+        self.u64(m.addr);
+        self.u64(m.value);
+        self.comp_id(m.src);
+        self.comp_id(m.dst);
+        self.u64(m.txn);
+        self.u16(m.core);
+        self.u64(m.issued);
+    }
+
+    pub fn event(&mut self, ev: &Event) {
+        self.u64(ev.tick);
+        self.u8(ev.prio);
+        self.u64(ev.seq);
+        self.comp_id(ev.target);
+        match &ev.kind {
+            EventKind::CpuTick => self.u8(0),
+            EventKind::MemReq { pkt } => {
+                self.u8(1);
+                self.packet(pkt);
+            }
+            EventKind::MemResp { pkt } => {
+                self.u8(2);
+                self.packet(pkt);
+            }
+            EventKind::RetryReq => self.u8(3),
+            EventKind::ConsumerWakeup => self.u8(4),
+            EventKind::XbarRelease { layer } => {
+                self.u8(5);
+                self.usize(*layer);
+            }
+            EventKind::DramTick => self.u8(6),
+            EventKind::WlBarrierRelease => self.u8(7),
+            EventKind::Generic { code, arg } => {
+                self.u8(8);
+                self.u32(*code);
+                self.u64(*arg);
+            }
+        }
+    }
+}
+
+/// Cursor over a byte slice, tracking the absolute offset for error
+/// reporting (`base` shifts reported offsets when reading a nested,
+/// length-framed payload out of a larger file).
+pub struct StateReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    base: usize,
+}
+
+impl<'a> StateReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        StateReader { buf, pos: 0, base: 0 }
+    }
+
+    /// Reader over a nested payload whose first byte sits at absolute
+    /// file offset `base` — truncation errors stay file-absolute.
+    pub fn with_base(buf: &'a [u8], base: usize) -> Self {
+        StateReader { buf, pos: 0, base }
+    }
+
+    /// Absolute offset of the next unread byte.
+    pub fn offset(&self) -> usize {
+        self.base + self.pos
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CkptError> {
+        if self.remaining() < n {
+            return Err(CkptError::Truncated {
+                offset: self.offset(),
+                wanted: n - self.remaining(),
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, CkptError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn bool(&mut self) -> Result<bool, CkptError> {
+        let off = self.offset();
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(CkptError::Corrupt {
+                offset: off,
+                what: format!("bad bool byte {v}"),
+            }),
+        }
+    }
+
+    pub fn u16(&mut self) -> Result<u16, CkptError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32, CkptError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, CkptError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn usize(&mut self) -> Result<usize, CkptError> {
+        Ok(self.u64()? as usize)
+    }
+
+    pub fn opt_u64(&mut self) -> Result<Option<u64>, CkptError> {
+        if self.bool()? {
+            Ok(Some(self.u64()?))
+        } else {
+            Ok(None)
+        }
+    }
+
+    pub fn bytes(&mut self) -> Result<&'a [u8], CkptError> {
+        let off = self.offset();
+        let n = self.u64()? as usize;
+        if n > self.remaining() {
+            return Err(CkptError::Truncated {
+                offset: off,
+                wanted: n - self.remaining(),
+            });
+        }
+        self.take(n)
+    }
+
+    pub fn str(&mut self) -> Result<&'a str, CkptError> {
+        let off = self.offset();
+        std::str::from_utf8(self.bytes()?).map_err(|e| CkptError::Corrupt {
+            offset: off,
+            what: format!("bad utf-8 string: {e}"),
+        })
+    }
+
+    pub fn comp_id(&mut self) -> Result<CompId, CkptError> {
+        Ok(CompId(self.u32()?))
+    }
+
+    pub fn opt_comp_id(&mut self) -> Result<Option<CompId>, CkptError> {
+        if self.bool()? {
+            Ok(Some(self.comp_id()?))
+        } else {
+            Ok(None)
+        }
+    }
+
+    pub fn line_state(&mut self) -> Result<LineState, CkptError> {
+        let off = self.offset();
+        Ok(match self.u8()? {
+            0 => LineState::Invalid,
+            1 => LineState::Shared,
+            2 => LineState::Exclusive,
+            3 => LineState::Modified,
+            v => {
+                return Err(CkptError::Corrupt {
+                    offset: off,
+                    what: format!("bad line-state tag {v}"),
+                })
+            }
+        })
+    }
+
+    pub fn packet(&mut self) -> Result<Packet, CkptError> {
+        let id = self.u64()?;
+        let off = self.offset();
+        let cmd = match self.u8()? {
+            0 => Cmd::ReadReq,
+            1 => Cmd::WriteReq,
+            2 => Cmd::ReadResp,
+            3 => Cmd::WriteResp,
+            v => {
+                return Err(CkptError::Corrupt {
+                    offset: off,
+                    what: format!("bad packet command tag {v}"),
+                })
+            }
+        };
+        Ok(Packet {
+            id,
+            cmd,
+            addr: self.u64()?,
+            size: self.u32()?,
+            value: self.u64()?,
+            requester: self.comp_id()?,
+            core: self.u16()?,
+            issued: self.u64()?,
+            header_delay: self.u64()?,
+            payload_delay: self.u64()?,
+        })
+    }
+
+    pub fn msg(&mut self) -> Result<RubyMsg, CkptError> {
+        let off = self.offset();
+        let kind = match self.u8()? {
+            0 => MsgKind::SeqReq { is_store: self.bool()? },
+            1 => MsgKind::SeqResp,
+            2 => MsgKind::ReadShared,
+            3 => MsgKind::ReadUnique,
+            4 => MsgKind::WriteBackFull,
+            5 => MsgKind::Evict,
+            6 => MsgKind::SnpShared,
+            7 => MsgKind::SnpUnique,
+            8 => MsgKind::CompData { state: self.line_state()? },
+            9 => MsgKind::SnpResp {
+                dirty: self.bool()?,
+                had_copy: self.bool()?,
+            },
+            10 => MsgKind::Comp,
+            v => {
+                return Err(CkptError::Corrupt {
+                    offset: off,
+                    what: format!("bad message kind tag {v}"),
+                })
+            }
+        };
+        Ok(RubyMsg {
+            kind,
+            addr: self.u64()?,
+            value: self.u64()?,
+            src: self.comp_id()?,
+            dst: self.comp_id()?,
+            txn: self.u64()?,
+            core: self.u16()?,
+            issued: self.u64()?,
+        })
+    }
+
+    pub fn event(&mut self) -> Result<Event, CkptError> {
+        let tick: Tick = self.u64()?;
+        let prio = self.u8()?;
+        let seq = self.u64()?;
+        let target = self.comp_id()?;
+        let off = self.offset();
+        let kind = match self.u8()? {
+            0 => EventKind::CpuTick,
+            1 => EventKind::MemReq { pkt: self.packet()? },
+            2 => EventKind::MemResp { pkt: self.packet()? },
+            3 => EventKind::RetryReq,
+            4 => EventKind::ConsumerWakeup,
+            5 => EventKind::XbarRelease { layer: self.usize()? },
+            6 => EventKind::DramTick,
+            7 => EventKind::WlBarrierRelease,
+            8 => EventKind::Generic { code: self.u32()?, arg: self.u64()? },
+            v => {
+                return Err(CkptError::Corrupt {
+                    offset: off,
+                    what: format!("bad event kind tag {v}"),
+                })
+            }
+        };
+        Ok(Event { tick, prio, seq, target, kind })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut w = StateWriter::new();
+        w.u8(7);
+        w.bool(true);
+        w.u16(0xBEEF);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 3);
+        w.opt_u64(None);
+        w.opt_u64(Some(42));
+        w.str("hnf");
+        let bytes = w.into_bytes();
+        let mut r = StateReader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert!(r.bool().unwrap());
+        assert_eq!(r.u16().unwrap(), 0xBEEF);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.opt_u64().unwrap(), None);
+        assert_eq!(r.opt_u64().unwrap(), Some(42));
+        assert_eq!(r.str().unwrap(), "hnf");
+        assert!(r.is_done());
+    }
+
+    #[test]
+    fn event_roundtrip_every_kind() {
+        let pkt = Packet::request(9, Cmd::WriteReq, 0x40, 64, 5, CompId(3), 1, 77);
+        let kinds = vec![
+            EventKind::CpuTick,
+            EventKind::MemReq { pkt },
+            EventKind::MemResp { pkt: pkt.make_response(11) },
+            EventKind::RetryReq,
+            EventKind::ConsumerWakeup,
+            EventKind::XbarRelease { layer: 2 },
+            EventKind::DramTick,
+            EventKind::WlBarrierRelease,
+            EventKind::Generic { code: 5, arg: 99 },
+        ];
+        let mut w = StateWriter::new();
+        for (i, k) in kinds.iter().enumerate() {
+            w.event(&Event {
+                tick: 1000 + i as u64,
+                prio: 50,
+                seq: i as u64,
+                target: CompId(i as u32),
+                kind: k.clone(),
+            });
+        }
+        let bytes = w.into_bytes();
+        let mut r = StateReader::new(&bytes);
+        for (i, _) in kinds.iter().enumerate() {
+            let ev = r.event().unwrap();
+            assert_eq!(ev.tick, 1000 + i as u64);
+            assert_eq!(ev.target, CompId(i as u32));
+        }
+        assert!(r.is_done());
+    }
+
+    #[test]
+    fn msg_roundtrip_every_kind() {
+        let kinds = vec![
+            MsgKind::SeqReq { is_store: true },
+            MsgKind::SeqResp,
+            MsgKind::ReadShared,
+            MsgKind::ReadUnique,
+            MsgKind::WriteBackFull,
+            MsgKind::Evict,
+            MsgKind::SnpShared,
+            MsgKind::SnpUnique,
+            MsgKind::CompData { state: LineState::Modified },
+            MsgKind::SnpResp { dirty: true, had_copy: false },
+            MsgKind::Comp,
+        ];
+        let mut w = StateWriter::new();
+        for k in &kinds {
+            w.msg(&RubyMsg {
+                kind: *k,
+                addr: 0x80,
+                value: 3,
+                src: CompId(1),
+                dst: CompId(2),
+                txn: 8,
+                core: 0,
+                issued: 12,
+            });
+        }
+        let bytes = w.into_bytes();
+        let mut r = StateReader::new(&bytes);
+        for k in &kinds {
+            let m = r.msg().unwrap();
+            assert_eq!(m.kind, *k);
+            assert_eq!(m.addr, 0x80);
+        }
+        assert!(r.is_done());
+    }
+
+    #[test]
+    fn truncation_reports_absolute_offset() {
+        let mut w = StateWriter::new();
+        w.u64(1);
+        w.u64(2);
+        let bytes = w.into_bytes();
+        let mut r = StateReader::with_base(&bytes[..12], 100);
+        r.u64().unwrap();
+        match r.u64() {
+            Err(CkptError::Truncated { offset, wanted }) => {
+                assert_eq!(offset, 108);
+                assert_eq!(wanted, 4);
+            }
+            other => panic!("expected truncation, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_tag_is_corrupt_not_panic() {
+        let mut r = StateReader::new(&[200]);
+        assert!(matches!(r.line_state(), Err(CkptError::Corrupt { .. })));
+    }
+}

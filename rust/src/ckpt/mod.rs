@@ -1,0 +1,79 @@
+//! Border-quiescent checkpoint/restore (docs/CHECKPOINT.md).
+//!
+//! A checkpoint freezes a windowed run at a quantum border, *inside* the
+//! border protocol's quiescent span: every thread is parked, every
+//! cross-domain mailbox has been drained, every staged inbox delivery and
+//! crossbar request has been merged, and every component sits between
+//! events. At that instant the machine's complete state is exactly
+//! \[per-domain clocks + pending event queues\] + \[per-component
+//! architectural state\] + \[shared cross-domain cursors\] — no in-flight
+//! protocol state exists anywhere else, so the snapshot is total by
+//! construction rather than by enumeration.
+//!
+//! The file format ([`format`]) is versioned and self-describing: the
+//! embedded [`SystemSpec`] TOML and pinned run-configuration let
+//! `restore` rebuild the exact component arena with zero external inputs,
+//! and the spec hash rejects a restore under different result-determining
+//! knobs before any state is touched. Canonical ordering everywhere
+//! (domains by id, components by [`CompId`], events by `(tick, prio,
+//! seq)`, maps by key) makes the bytes a pure function of the simulation
+//! content — the producing kernel, thread count and steal setting leave
+//! no fingerprint, which is what lets `ckpt diff` attribute any
+//! divergence to simulation state rather than host noise.
+//!
+//! The intended workflow (the "fork a thousand sweeps" recipe of
+//! docs/CHECKPOINT.md): run the expensive warm-up once, checkpoint at a
+//! border, then fan a sweep out from the snapshot — every point that
+//! shares the pinned axes restores in milliseconds and diverges only in
+//! its free axes (kernel mode, thread count, stealing, queue
+//! implementation), which the determinism suites prove result-invariant.
+//!
+//! [`SystemSpec`]: crate::spec::SystemSpec
+//! [`CompId`]: crate::sim::ids::CompId
+
+pub mod diff;
+pub mod format;
+pub mod io;
+pub mod restore;
+pub mod save;
+
+pub use diff::diff_snapshots;
+pub use format::{Header, MAGIC, VERSION};
+pub use io::{CkptError, StateReader, StateWriter};
+pub use restore::{apply, read_snapshot, CompImage, DomainImage, Snapshot};
+pub use save::snapshot_machine;
+
+use crate::sim::time::Tick;
+
+/// The snap rule under the fixed quantum policy, in closed form:
+/// `--checkpoint-at T` freezes at the first border `k·quantum >= T`
+/// (minimum one executed window — a snapshot of a never-run machine is
+/// just elaboration). Adaptive policies (`horizon`, `hybrid`) have no
+/// closed form — their borders depend on the event horizon — so the
+/// kernels implement the same rule operationally: the first *executed*
+/// border whose `window_end` reaches the requested tick, checked strictly
+/// after the stop verdict (a run that terminates first finishes
+/// normally).
+pub fn snap_to_border(requested: Tick, quantum: Tick) -> Tick {
+    requested.div_ceil(quantum).max(1) * quantum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snap_rule_fixed_policy() {
+        let q = 16_000;
+        // Tick 0 / anything inside the first window snaps to border 1.
+        assert_eq!(snap_to_border(0, q), q);
+        assert_eq!(snap_to_border(1, q), q);
+        assert_eq!(snap_to_border(q - 1, q), q);
+        // An exact border is its own snap target.
+        assert_eq!(snap_to_border(q, q), q);
+        assert_eq!(snap_to_border(7 * q, q), 7 * q);
+        // One past a border snaps forward, never backward.
+        assert_eq!(snap_to_border(q + 1, q), 2 * q);
+        assert_eq!(snap_to_border(7 * q + 1, q), 8 * q);
+    }
+}

@@ -1,0 +1,301 @@
+//! Checkpoint consumer: parse a snapshot and rebuild a machine from it.
+//!
+//! Restore is two independent halves. [`read_snapshot`] is pure parsing —
+//! it validates the header (magic, version, flags), walks the record
+//! sequence in its mandatory order, cross-checks the embedded spec hash
+//! and counts, and hands back a structured [`Snapshot`] without touching
+//! any simulator state. [`apply`] then overwrites a *freshly elaborated*
+//! machine — built from the snapshot's own embedded [`SystemSpec`] and
+//! pinned configuration, so the component arena is guaranteed congruent —
+//! with the recorded clocks, event queues and per-component state. The
+//! kernels resume it through `KernelCtl::resume_border` and continue
+//! bit-identically to the uninterrupted run (docs/CHECKPOINT.md).
+//!
+//! [`SystemSpec`]: crate::spec::SystemSpec
+
+use crate::ckpt::format::{
+    config_from_snapshot, read_record, spec_hash, tag_name, Header, R_COMP,
+    R_CONFIG, R_DOMAIN, R_END, R_SHARED, R_SPEC,
+};
+use crate::ckpt::io::{CkptError, StateReader};
+use crate::config::RunConfig;
+use crate::pdes::Machine;
+use crate::sched::Scheduler;
+use crate::sim::event::Event;
+use crate::sim::time::Tick;
+use crate::spec::SystemSpec;
+
+/// One domain's recorded execution state.
+#[derive(Clone, Debug)]
+pub struct DomainImage {
+    pub id: u32,
+    /// Local clock: tick of the last executed event.
+    pub now: Tick,
+    /// The queue's executed-pop counter.
+    pub executed: u64,
+    /// Pending events in canonical `(tick, prio, seq)` order.
+    pub events: Vec<Event>,
+}
+
+/// One component's recorded architectural state.
+#[derive(Clone, Debug)]
+pub struct CompImage {
+    pub id: u32,
+    /// Elaboration name; restore refuses a component whose name differs.
+    pub name: String,
+    /// Opaque [`Component::save_state`] bytes.
+    ///
+    /// [`Component::save_state`]: crate::sim::component::Component::save_state
+    pub state: Vec<u8>,
+    /// Absolute file offset of `state[0]` (error reporting stays
+    /// file-absolute through the nested framing).
+    pub state_off: usize,
+}
+
+/// A fully parsed snapshot.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub header: Header,
+    /// The pinned run-configuration text (docs/CHECKPOINT.md table).
+    pub config_text: String,
+    /// The platform as [`SystemSpec`] TOML.
+    pub spec_toml: String,
+    /// Opaque shared-state record payload.
+    pub shared: Vec<u8>,
+    /// Absolute file offset of `shared[0]`.
+    pub shared_off: usize,
+    pub domains: Vec<DomainImage>,
+    pub comps: Vec<CompImage>,
+}
+
+impl Snapshot {
+    /// Parse the embedded platform spec.
+    pub fn spec(&self) -> Result<SystemSpec, CkptError> {
+        SystemSpec::from_toml(&self.spec_toml).map_err(|e| {
+            CkptError::Corrupt {
+                offset: 0,
+                what: format!("embedded platform spec: {e}"),
+            }
+        })
+    }
+
+    /// Rebuild the producing run's configuration: platform from the
+    /// embedded spec, pinned knobs from the config record, free axes at
+    /// their defaults (callers override them before elaboration).
+    pub fn config(&self) -> Result<RunConfig, CkptError> {
+        config_from_snapshot(&self.spec()?, &self.config_text)
+    }
+}
+
+fn expect_tag(
+    found: u8,
+    expected: u8,
+    offset: usize,
+) -> Result<(), CkptError> {
+    if found == expected {
+        Ok(())
+    } else {
+        Err(CkptError::Corrupt {
+            offset,
+            what: format!(
+                "expected a {} record, found {}",
+                tag_name(expected),
+                tag_name(found)
+            ),
+        })
+    }
+}
+
+fn record_utf8(payload: &[u8], offset: usize) -> Result<String, CkptError> {
+    std::str::from_utf8(payload).map(str::to_string).map_err(|e| {
+        CkptError::Corrupt {
+            offset,
+            what: format!("bad utf-8 record: {e}"),
+        }
+    })
+}
+
+/// Ensure a nested record reader consumed its whole payload.
+fn expect_drained(
+    r: &StateReader,
+    what: &str,
+) -> Result<(), CkptError> {
+    if r.is_done() {
+        Ok(())
+    } else {
+        Err(CkptError::Corrupt {
+            offset: r.offset(),
+            what: format!("{what}: {} trailing byte(s)", r.remaining()),
+        })
+    }
+}
+
+/// Parse and validate a whole snapshot file. Rejects (with the exact byte
+/// offset where possible): truncation anywhere, out-of-order or unknown
+/// records, a spec-hash that does not match the embedded spec + config
+/// (i.e. a corrupted identity), domain/component counts that contradict
+/// the header, and trailing garbage after the end record.
+pub fn read_snapshot(bytes: &[u8]) -> Result<Snapshot, CkptError> {
+    let mut r = StateReader::new(bytes);
+    let header = Header::read(&mut r)?;
+
+    let rec_off = r.offset();
+    let (tag, payload, off) = read_record(&mut r)?;
+    expect_tag(tag, R_CONFIG, rec_off)?;
+    let config_text = record_utf8(payload, off)?;
+
+    let rec_off = r.offset();
+    let (tag, payload, off) = read_record(&mut r)?;
+    expect_tag(tag, R_SPEC, rec_off)?;
+    let spec_toml = record_utf8(payload, off)?;
+
+    let computed = spec_hash(&spec_toml, &config_text);
+    if computed != header.spec_hash {
+        return Err(CkptError::Mismatch {
+            what: "spec hash".to_string(),
+            expected: format!("{computed:#018x} (over the embedded spec + config)"),
+            found: format!("{:#018x}", header.spec_hash),
+        });
+    }
+
+    let rec_off = r.offset();
+    let (tag, payload, shared_off) = read_record(&mut r)?;
+    expect_tag(tag, R_SHARED, rec_off)?;
+    let shared = payload.to_vec();
+
+    let mut domains = Vec::with_capacity(header.n_domains as usize);
+    for i in 0..header.n_domains {
+        let rec_off = r.offset();
+        let (tag, payload, off) = read_record(&mut r)?;
+        expect_tag(tag, R_DOMAIN, rec_off)?;
+        let mut dr = StateReader::with_base(payload, off);
+        let id = dr.u32()?;
+        if id != i {
+            return Err(CkptError::Corrupt {
+                offset: off,
+                what: format!("domain record {i} carries id {id}"),
+            });
+        }
+        let now = dr.u64()?;
+        let executed = dr.u64()?;
+        let n_events = dr.usize()?;
+        let mut events = Vec::with_capacity(n_events.min(payload.len()));
+        for _ in 0..n_events {
+            events.push(dr.event()?);
+        }
+        expect_drained(&dr, &format!("domain {id} record"))?;
+        domains.push(DomainImage { id, now, executed, events });
+    }
+
+    let mut comps = Vec::with_capacity(header.n_components as usize);
+    for i in 0..header.n_components {
+        let rec_off = r.offset();
+        let (tag, payload, off) = read_record(&mut r)?;
+        expect_tag(tag, R_COMP, rec_off)?;
+        let mut cr = StateReader::with_base(payload, off);
+        let id = cr.u32()?;
+        if id != i {
+            return Err(CkptError::Corrupt {
+                offset: off,
+                what: format!("component record {i} carries id {id}"),
+            });
+        }
+        let name = cr.str()?.to_string();
+        let state_off = cr.offset() + 8;
+        let state = cr.bytes()?.to_vec();
+        expect_drained(&cr, &format!("component {name} record"))?;
+        comps.push(CompImage { id, name, state, state_off });
+    }
+
+    let rec_off = r.offset();
+    let (tag, payload, _) = read_record(&mut r)?;
+    expect_tag(tag, R_END, rec_off)?;
+    if !payload.is_empty() {
+        return Err(CkptError::Corrupt {
+            offset: rec_off,
+            what: "end record with payload".to_string(),
+        });
+    }
+    if !r.is_done() {
+        return Err(CkptError::Corrupt {
+            offset: r.offset(),
+            what: format!("{} byte(s) after the end record", r.remaining()),
+        });
+    }
+
+    Ok(Snapshot {
+        header,
+        config_text,
+        spec_toml,
+        shared,
+        shared_off,
+        domains,
+        comps,
+    })
+}
+
+/// Overwrite a freshly elaborated, never-initialised machine with the
+/// snapshot's state: shared cross-domain state, per-domain clocks and
+/// event queues (events re-sequence on insertion — canonical order in
+/// means the relative `(tick, prio)` tie-break order is preserved and
+/// post-restore events sort after every restored one, exactly as in the
+/// uninterrupted run), then every component in [`CompId`] order.
+///
+/// The machine must come from the snapshot's own spec + pinned config
+/// (`Snapshot::config`), so the structural checks here (domain count,
+/// component count/names) can only fire on a corrupted or mislabelled
+/// file — they are cheap insurance, not a compatibility layer.
+///
+/// [`CompId`]: crate::sim::ids::CompId
+pub fn apply(snap: &Snapshot, machine: &mut Machine) -> Result<(), CkptError> {
+    if machine.domains.len() != snap.header.n_domains as usize {
+        return Err(CkptError::Mismatch {
+            what: "domain count".to_string(),
+            expected: machine.domains.len().to_string(),
+            found: snap.header.n_domains.to_string(),
+        });
+    }
+    let shared = machine.shared.clone();
+    if shared.locate.len() != snap.header.n_components as usize {
+        return Err(CkptError::Mismatch {
+            what: "component count".to_string(),
+            expected: shared.locate.len().to_string(),
+            found: snap.header.n_components.to_string(),
+        });
+    }
+
+    let mut sr = StateReader::with_base(&snap.shared, snap.shared_off);
+    shared.restore_ckpt(&mut sr)?;
+    expect_drained(&sr, "shared-state record")?;
+
+    for img in &snap.domains {
+        let d = &mut machine.domains[img.id as usize];
+        assert!(
+            d.eq.is_empty(),
+            "restore target machine already initialised (domain {} queue \
+             not empty)",
+            img.id
+        );
+        d.now = img.now;
+        for ev in &img.events {
+            d.eq.insert(ev.clone());
+        }
+        d.eq.set_executed(img.executed);
+    }
+
+    for c in &snap.comps {
+        let (dom, local) = shared.locate[c.id as usize];
+        let comp = &mut machine.domains[dom.index()].comps[local as usize];
+        if comp.name() != c.name {
+            return Err(CkptError::Mismatch {
+                what: format!("component {} identity", c.id),
+                expected: comp.name().to_string(),
+                found: c.name.clone(),
+            });
+        }
+        let mut r = StateReader::with_base(&c.state, c.state_off);
+        comp.restore_state(&mut r)?;
+        expect_drained(&r, &format!("component {} state", c.name))?;
+    }
+    Ok(())
+}

@@ -1,0 +1,109 @@
+//! Checkpoint producer: serialize a machine frozen at a quantum border.
+//!
+//! The writer runs inside the quiescent span of the border the kernel
+//! stopped at (every mailbox drained, every staged inbox/xbar entry
+//! merged, every component idle between events) — that is what makes a
+//! complete architectural snapshot possible without any cooperation from
+//! mid-flight protocol state. Quiescence is asserted, not assumed: a
+//! non-empty mailbox or staging area panics rather than producing a
+//! silently incomplete file.
+//!
+//! Canonical ordering contract (docs/CHECKPOINT.md): domains are written
+//! in domain-id order, components in global [`CompId`] order, pending
+//! events in the queue's `(tick, prio, seq)` order, and every component
+//! serializes hash-map contents sorted by key. The resulting bytes are a
+//! pure function of the simulation content — identical whichever windowed
+//! kernel (threaded or virtual) produced the machine, at any thread
+//! count, with or without work stealing.
+//!
+//! [`CompId`]: crate::sim::ids::CompId
+
+use crate::ckpt::format::{
+    pinned_text, spec_hash, write_record, Header, R_COMP, R_CONFIG, R_DOMAIN,
+    R_END, R_SHARED, R_SPEC, VERSION,
+};
+use crate::ckpt::io::{CkptError, StateWriter};
+use crate::config::RunConfig;
+use crate::pdes::Machine;
+use crate::sched::Scheduler;
+use crate::sim::time::Tick;
+
+/// Serialize `machine`, frozen at quantum border `border`, into a
+/// self-describing snapshot. `cfg` must be the configuration the machine
+/// was built from — its pinned half (docs/CHECKPOINT.md) is embedded and
+/// hashed so a restore under different result-determining knobs is
+/// rejected up front.
+///
+/// Only timing CPU models are checkpointable: atomic/kvm cores share one
+/// functional memory image outside the component arena, so their machines
+/// have no complete per-component state to snapshot (they also only run
+/// on the serial kernel, which has no quantum borders to freeze at).
+pub fn snapshot_machine(
+    machine: &Machine,
+    cfg: &RunConfig,
+    border: Tick,
+) -> Result<Vec<u8>, CkptError> {
+    if !cfg.cpu_model.is_timing() {
+        return Err(CkptError::Mismatch {
+            what: "cpu model".to_string(),
+            expected: "a timing model (minor/o3)".to_string(),
+            found: format!("{:?}", cfg.cpu_model).to_ascii_lowercase(),
+        });
+    }
+    let shared = &machine.shared;
+    for (i, mbox) in shared.injectors.iter().enumerate() {
+        assert!(
+            mbox.is_empty(),
+            "domain {i} mailbox not drained: checkpoint outside the \
+             quiescent span"
+        );
+    }
+
+    let spec_toml = cfg.spec().to_toml();
+    let config_text = pinned_text(cfg);
+    let header = Header {
+        version: VERSION,
+        flags: 0,
+        spec_hash: spec_hash(&spec_toml, &config_text),
+        tick: border,
+        quantum: shared.quantum,
+        n_domains: machine.domains.len() as u32,
+        n_components: shared.locate.len() as u32,
+    };
+
+    let mut w = StateWriter::new();
+    header.write(&mut w);
+    write_record(&mut w, R_CONFIG, config_text.as_bytes());
+    write_record(&mut w, R_SPEC, spec_toml.as_bytes());
+
+    let mut sw = StateWriter::new();
+    shared.save_ckpt(&mut sw);
+    write_record(&mut w, R_SHARED, &sw.into_bytes());
+
+    for d in &machine.domains {
+        let mut dw = StateWriter::new();
+        dw.u32(d.id.0);
+        dw.u64(d.now);
+        dw.u64(d.eq.executed());
+        let events = d.eq.pending_events();
+        dw.usize(events.len());
+        for ev in &events {
+            dw.event(ev);
+        }
+        write_record(&mut w, R_DOMAIN, &dw.into_bytes());
+    }
+
+    for (cid, &(dom, local)) in shared.locate.iter().enumerate() {
+        let comp = &machine.domains[dom.index()].comps[local as usize];
+        let mut cw = StateWriter::new();
+        cw.u32(cid as u32);
+        cw.str(comp.name());
+        let mut state = StateWriter::new();
+        comp.save_state(&mut state);
+        cw.bytes(&state.into_bytes());
+        write_record(&mut w, R_COMP, &cw.into_bytes());
+    }
+
+    write_record(&mut w, R_END, b"");
+    Ok(w.into_bytes())
+}

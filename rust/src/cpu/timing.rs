@@ -17,6 +17,7 @@
 use std::sync::atomic::Ordering::Relaxed;
 use std::sync::Arc;
 
+use crate::ckpt::io::{CkptError, StateReader, StateWriter};
 use crate::proto::{Cmd, Packet};
 use crate::sim::component::{Component, Ctx};
 use crate::sim::event::{prio, EventKind};
@@ -408,5 +409,60 @@ impl Component for TimingCpu {
         out.add_u64("finish_tick", self.finish_tick);
         out.add_u64("load_checksum", self.load_checksum);
         out.add_u64("value_mismatches", self.value_mismatches);
+    }
+
+    fn save_state(&self, w: &mut StateWriter) {
+        w.usize(self.idx);
+        w.usize(self.outstanding);
+        w.u64(self.gap_left);
+        w.u64(self.next_txn);
+        let mut inflight: Vec<(u64, usize)> =
+            self.inflight_idx.iter().map(|(&k, &v)| (k, v)).collect();
+        inflight.sort_unstable_by_key(|&(k, _)| k);
+        w.usize(inflight.len());
+        for (txn, op_idx) in inflight {
+            w.u64(txn);
+            w.usize(op_idx);
+        }
+        w.u64(self.fetches);
+        w.bool(self.waiting_barrier);
+        w.usize(self.last_barrier_idx);
+        w.bool(self.tick_pending);
+        w.bool(self.done);
+        w.u64(self.committed_ops);
+        w.u64(self.loads);
+        w.u64(self.stores);
+        w.u64(self.lsq_stalls);
+        w.u64(self.barriers_hit);
+        w.u64(self.load_checksum);
+        w.u64(self.value_mismatches);
+        w.u64(self.finish_tick);
+    }
+
+    fn restore_state(&mut self, r: &mut StateReader) -> Result<(), CkptError> {
+        self.idx = r.usize()?;
+        self.outstanding = r.usize()?;
+        self.gap_left = r.u64()?;
+        self.next_txn = r.u64()?;
+        self.inflight_idx.clear();
+        for _ in 0..r.usize()? {
+            let txn = r.u64()?;
+            let op_idx = r.usize()?;
+            self.inflight_idx.insert(txn, op_idx);
+        }
+        self.fetches = r.u64()?;
+        self.waiting_barrier = r.bool()?;
+        self.last_barrier_idx = r.usize()?;
+        self.tick_pending = r.bool()?;
+        self.done = r.bool()?;
+        self.committed_ops = r.u64()?;
+        self.loads = r.u64()?;
+        self.stores = r.u64()?;
+        self.lsq_stalls = r.u64()?;
+        self.barriers_hit = r.u64()?;
+        self.load_checksum = r.u64()?;
+        self.value_mismatches = r.u64()?;
+        self.finish_tick = r.u64()?;
+        Ok(())
     }
 }

@@ -5,13 +5,20 @@ pub mod figures;
 pub mod sweep;
 pub mod tables;
 
+use std::path::Path;
+
 use anyhow::{anyhow, Result};
 
+use crate::ckpt;
 use crate::config::{Mode, RunConfig};
 use crate::cpu::CpuModel;
-use crate::pdes::{run_parallel, run_serial, run_virtual, HostModel, RunResult};
+use crate::pdes::{
+    run_parallel, run_parallel_ctl, run_serial, run_virtual, run_virtual_ctl,
+    HostModel, KernelCtl, Machine, RunOutcome, RunResult,
+};
 use crate::ruby::{build_atomic_system, build_system};
 use crate::runtime::Runtime;
+use crate::sim::time::Tick;
 use crate::workload::{app_by_name, Workload};
 
 /// Produce the workload for a run: synthetic traffic when `--traffic`
@@ -77,6 +84,110 @@ pub fn run_with_workload(cfg: &RunConfig, workload: &Workload) -> Result<RunResu
         Mode::Parallel => run_parallel(built.machine, cfg.max_ticks),
         Mode::Virtual => run_virtual(built.machine, cfg.max_ticks),
     })
+}
+
+/// Copy the free (non-pinned) axes of `from` onto `cfg`: the knobs a
+/// restored run may change without affecting results — kernel mode,
+/// thread count, stealing, queue implementation, calendar geometry,
+/// profiling, modeled host cores — plus the run cutoff, which is a
+/// stop condition rather than state (docs/CHECKPOINT.md has the table).
+pub fn apply_free_axes(cfg: &mut RunConfig, from: &RunConfig) {
+    cfg.mode = from.mode;
+    cfg.threads = from.threads;
+    cfg.steal = from.steal;
+    cfg.queue = from.queue;
+    cfg.bucket_shape = from.bucket_shape;
+    cfg.profile = from.profile;
+    cfg.host_cores = from.host_cores;
+    cfg.max_ticks = from.max_ticks;
+}
+
+/// Execute `cfg` until the first quantum border at/after `at` (the snap
+/// rule, docs/CHECKPOINT.md), write the snapshot to `out`, and return the
+/// partial-run result plus the border actually frozen at. A run that
+/// terminates before reaching `at` finishes normally and returns
+/// `(result, None)` — no file is written.
+pub fn run_to_checkpoint(
+    cfg: &RunConfig,
+    at: Tick,
+    out: &Path,
+) -> Result<(RunResult, Option<Tick>)> {
+    anyhow::ensure!(
+        cfg.cpu_model.is_timing(),
+        "checkpointing supports timing CPU models only (minor/o3): \
+         atomic/kvm cores share one functional memory image outside the \
+         component arena"
+    );
+    anyhow::ensure!(
+        cfg.mode != Mode::Serial,
+        "checkpoint needs a windowed kernel (--mode virtual|parallel): \
+         the serial reference has no quantum borders to freeze at"
+    );
+    cfg.spec().validate().map_err(|e| anyhow!("{e}"))?;
+    let workload = make_workload(cfg)?;
+    let built = build_system(cfg, &workload);
+    let ctl = KernelCtl { resume_border: None, checkpoint_at: Some(at) };
+    let outcome = match cfg.mode {
+        Mode::Parallel => run_parallel_ctl(built.machine, cfg.max_ticks, ctl),
+        _ => run_virtual_ctl(built.machine, cfg.max_ticks, ctl),
+    };
+    match outcome {
+        RunOutcome::Finished(result) => Ok((result, None)),
+        RunOutcome::Checkpointed { machine, border, result } => {
+            let bytes = ckpt::snapshot_machine(&machine, cfg, border)?;
+            std::fs::write(out, &bytes).map_err(|e| {
+                anyhow!("cannot write checkpoint {}: {e}", out.display())
+            })?;
+            Ok((result, Some(border)))
+        }
+    }
+}
+
+/// Elaborate the machine a snapshot describes and load its state — the
+/// shared rebuild step behind `run --restore` and `sweep run
+/// --from-checkpoint`. Pinned axes come from the snapshot; `free`
+/// contributes only its free axes ([`apply_free_axes`]). Returns the
+/// loaded machine, the effective configuration, and the border to resume
+/// from.
+pub fn rebuild_from_snapshot(
+    snap: &ckpt::Snapshot,
+    free: &RunConfig,
+) -> Result<(Machine, RunConfig, Tick)> {
+    let mut cfg = snap.config()?;
+    apply_free_axes(&mut cfg, free);
+    anyhow::ensure!(
+        cfg.mode != Mode::Serial,
+        "a checkpoint resumes on a windowed kernel (--mode \
+         virtual|parallel)"
+    );
+    cfg.spec().validate().map_err(|e| anyhow!("{e}"))?;
+    let workload = make_workload(&cfg)?;
+    let built = build_system(&cfg, &workload);
+    let mut machine = built.machine;
+    ckpt::apply(snap, &mut machine)?;
+    Ok((machine, cfg, snap.header.tick))
+}
+
+/// Restore a snapshot and run it to completion — bit-identical to the
+/// uninterrupted producing run past the border (gated by
+/// `tests/checkpoint.rs`). `re_checkpoint` optionally freezes the resumed
+/// run again at a later tick (snap rule as usual); the machine is
+/// discarded in the `Finished` arm of that case.
+pub fn restore_and_run(
+    snap: &ckpt::Snapshot,
+    free: &RunConfig,
+    re_checkpoint: Option<Tick>,
+) -> Result<(RunOutcome, RunConfig)> {
+    let (machine, cfg, border) = rebuild_from_snapshot(snap, free)?;
+    let ctl = KernelCtl {
+        resume_border: Some(border),
+        checkpoint_at: re_checkpoint,
+    };
+    let outcome = match cfg.mode {
+        Mode::Parallel => run_parallel_ctl(machine, cfg.max_ticks, ctl),
+        _ => run_virtual_ctl(machine, cfg.max_ticks, ctl),
+    };
+    Ok((outcome, cfg))
 }
 
 /// Serial reference + virtual-parallel run + host-model speedup — the

@@ -35,6 +35,7 @@ use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::ckpt;
 use crate::config::{Mode, RunConfig};
 use crate::sim::time::NS;
 use crate::spec::sweep::{
@@ -44,7 +45,7 @@ use crate::spec::{platforms, SystemSpec};
 use crate::stats::journal::SweepRecord;
 use crate::util::prop::Gen;
 
-use super::{make_workload, run_with_workload};
+use super::{make_workload, restore_and_run, run_with_workload};
 
 /// One expanded sweep point: a canonical id and a ready-to-run config.
 #[derive(Clone, Debug)]
@@ -296,6 +297,14 @@ pub struct SweepOptions {
     pub budget_cores: usize,
     /// Stop after this many *new* points (CI smoke, kill-testing).
     pub max_points: Option<usize>,
+    /// Fork points from this snapshot instead of cold-starting them:
+    /// every point whose pinned axes (platform spec + workload + quantum
+    /// policy knobs, docs/CHECKPOINT.md) match the snapshot's restores at
+    /// the recorded border and runs only the remainder; non-matching
+    /// points fall back to a cold run with a notice. Journal records are
+    /// identical either way — that is the whole point, and
+    /// `tests/checkpoint.rs` gates it.
+    pub from_checkpoint: Option<PathBuf>,
 }
 
 impl Default for SweepOptions {
@@ -307,6 +316,7 @@ impl Default for SweepOptions {
             resume: false,
             budget_cores: host_parallelism(),
             max_points: None,
+            from_checkpoint: None,
         }
     }
 }
@@ -338,7 +348,35 @@ struct Commit {
     failed: Option<String>,
 }
 
-fn run_point(point: &SweepPoint) -> Result<SweepRecord> {
+/// True when `point` can fork from `snap`: every pinned axis matches
+/// (compared as the exact texts the spec hash is computed over) and the
+/// point runs on a windowed kernel.
+fn point_matches_snapshot(point: &SweepPoint, snap: &ckpt::Snapshot) -> bool {
+    point.cfg.mode != Mode::Serial
+        && ckpt::format::pinned_text(&point.cfg) == snap.config_text
+        && point.cfg.spec().to_toml() == snap.spec_toml
+}
+
+fn run_point(
+    point: &SweepPoint,
+    fork: Option<&ckpt::Snapshot>,
+) -> Result<SweepRecord> {
+    if let Some(snap) = fork {
+        if point_matches_snapshot(point, snap) {
+            let (outcome, _) = restore_and_run(snap, &point.cfg, None)?;
+            let r = outcome.into_finished();
+            return Ok(SweepRecord::from_run(
+                point.index as u64,
+                &point.id,
+                &r,
+            ));
+        }
+        eprintln!(
+            "sweep: point {} does not share the checkpoint's pinned axes \
+             — cold run",
+            point.id
+        );
+    }
     let w = make_workload(&point.cfg)?;
     let r = run_with_workload(&point.cfg, &w)?;
     Ok(SweepRecord::from_run(point.index as u64, &point.id, &r))
@@ -387,6 +425,17 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepOutcome> 
         repaired = scan.issues;
     }
 
+    let fork = match &opts.from_checkpoint {
+        None => None,
+        Some(path) => {
+            let bytes = std::fs::read(path).map_err(|e| {
+                anyhow!("cannot read checkpoint {}: {e}", path.display())
+            })?;
+            Some(ckpt::read_snapshot(&bytes)?)
+        }
+    };
+    let fork = fork.as_ref();
+
     let skipped = points.iter().filter(|p| done.contains_key(&p.id)).count();
     let mut pending: Vec<&SweepPoint> =
         points.iter().filter(|p| !done.contains_key(&p.id)).collect();
@@ -430,7 +479,7 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepOutcome> 
                     break;
                 }
                 let point = pending[k];
-                let res = run_point(point);
+                let res = run_point(point, fork);
                 let mut guard = commit.lock().unwrap();
                 let c = &mut *guard;
                 match res {

@@ -24,6 +24,7 @@
 //! [`pdes`]. The legacy [`config::SystemConfig`] flag surface still works
 //! as a thin conversion into the spec.
 
+pub mod ckpt;
 pub mod config;
 pub mod cpu;
 pub mod harness;

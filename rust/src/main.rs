@@ -7,6 +7,9 @@
 //! parti-sim run      --traffic hotspot --threads 8       # synthetic traffic
 //! parti-sim compare  --app canneal --cores 32           # serial vs PDES
 //! parti-sim sweep run --spec quick --shard 0/2          # journaled DSE
+//! parti-sim run      --checkpoint-at 64000              # freeze at a border
+//! parti-sim run      --restore parti.ckpt --mode parallel --threads 8
+//! parti-sim ckpt     info|validate|diff ...             # snapshot tools
 //! parti-sim platforms                                   # preset registry
 //! parti-sim traffic                                     # traffic scenarios
 //! parti-sim fig7|fig8|fig9|tables|protocols             # paper artefacts
@@ -22,8 +25,10 @@ use parti_sim::harness::figures::{
     atomic_vs_timing, fig7, fig8, fig9, fig_quantum_policy, fig_traffic,
     render_quantum_rows, render_rows, render_traffic_rows, FigureOpts,
 };
-use parti_sim::harness::{compare_modes, run_once, tables};
-use parti_sim::pdes::HostModel;
+use parti_sim::harness::{
+    compare_modes, restore_and_run, run_once, run_to_checkpoint, tables,
+};
+use parti_sim::pdes::{HostModel, RunOutcome};
 use parti_sim::sched::{
     BucketShape, InboxOrder, QuantumPolicy, QueueKind, XbarArb,
 };
@@ -46,6 +51,8 @@ COMMANDS
              --dump NAME, --validate FILE.toml; docs/TRAFFIC.md)
   sweep      journaled DSE sweeps: `sweep run --spec S`, `sweep list`
              (--describe, --dump, --validate as above; docs/SWEEP.md)
+  ckpt       snapshot tools: `ckpt info F`, `ckpt validate F`,
+             `ckpt diff A B` (exit 1 on divergence; docs/CHECKPOINT.md)
   fig7       core & quantum sweep (synthetic + blackscholes)
   fig8       PARSEC subset + STREAM @ 32 cores
   fig9       cache miss-rate accuracy (same runs as fig8)
@@ -100,6 +107,15 @@ RUN/COMPARE/FFWD FLAGS
                     (window/freeze/border-sync/publish;
                     docs/PERF.md) — host-side only,
                     simulation results are unchanged
+  --checkpoint-at T freeze at the first quantum border >= T
+                    ticks (snap rule, docs/CHECKPOINT.md) and
+                    write a snapshot; needs a windowed kernel
+                    (defaults --mode to virtual)      [off]
+  --checkpoint-out F  snapshot file for --checkpoint-at
+                                                [parti.ckpt]
+  --restore F       resume a snapshot bit-identically: pinned
+                    axes come from the file, free axes (mode,
+                    threads, steal, queue, ...) from the flags
   --json            emit the summary as JSON
 
   Flags are documented in detail in docs/CLI.md.
@@ -117,6 +133,10 @@ SWEEP FLAGS (sweep run; docs/SWEEP.md)
   --resume          skip journaled points; damaged lines are
                     reported with line numbers and re-run
   --max-points K    stop after K new points (smoke tests)
+  --from-checkpoint F  fork every point that shares the
+                    snapshot's pinned axes from this file
+                    instead of cold-starting it
+                    (docs/CHECKPOINT.md)              [off]
 
 FIGURE FLAGS
   --ops N           trace ops per core                [2048]
@@ -207,13 +227,192 @@ fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     match args.command.as_deref() {
         Some("run") => {
-            let cfg = run_config(&args)?;
-            let result = run_once(&cfg)?;
+            let mut cfg = run_config(&args)?;
+            let ckpt_at = match args.get("checkpoint-at") {
+                Some(t) => Some(t.parse::<u64>().map_err(|e| {
+                    anyhow::anyhow!("bad --checkpoint-at {t}: {e}")
+                })?),
+                None => None,
+            };
+            let ckpt_out = std::path::PathBuf::from(
+                args.get_str("checkpoint-out", "parti.ckpt"),
+            );
+            let restore = args.get("restore");
+            if (ckpt_at.is_some() || restore.is_some())
+                && args.get("mode").is_none()
+            {
+                // Checkpointing needs a windowed kernel; keep `run`'s
+                // serial default for plain runs only.
+                cfg.mode = Mode::Virtual;
+            }
+            let (cfg, result) = if let Some(path) = restore {
+                let bytes = std::fs::read(path).map_err(|e| {
+                    anyhow::anyhow!("cannot read checkpoint {path}: {e}")
+                })?;
+                let snap = parti_sim::ckpt::read_snapshot(&bytes)
+                    .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+                let (outcome, eff) = restore_and_run(&snap, &cfg, ckpt_at)?;
+                eprintln!(
+                    "restored {path}: resuming at border {}",
+                    snap.header.tick
+                );
+                let result = match outcome {
+                    RunOutcome::Finished(result) => result,
+                    RunOutcome::Checkpointed { machine, border, result } => {
+                        let bytes = parti_sim::ckpt::snapshot_machine(
+                            &machine, &eff, border,
+                        )?;
+                        std::fs::write(&ckpt_out, &bytes).map_err(|e| {
+                            anyhow::anyhow!(
+                                "cannot write checkpoint {}: {e}",
+                                ckpt_out.display()
+                            )
+                        })?;
+                        eprintln!(
+                            "checkpoint: border {border} -> {} ({} bytes)",
+                            ckpt_out.display(),
+                            bytes.len()
+                        );
+                        result
+                    }
+                };
+                (eff, result)
+            } else if let Some(at) = ckpt_at {
+                let (result, border) =
+                    run_to_checkpoint(&cfg, at, &ckpt_out)?;
+                match border {
+                    Some(b) => eprintln!(
+                        "checkpoint: border {b} -> {}",
+                        ckpt_out.display()
+                    ),
+                    None => eprintln!(
+                        "run finished before tick {at}; no checkpoint \
+                         written"
+                    ),
+                }
+                (cfg, result)
+            } else {
+                let result = run_once(&cfg)?;
+                (cfg, result)
+            };
             let s = Summary::from_result(&result);
             if args.has("json") {
                 println!("{}", s.to_json());
             } else {
                 print_summary(&cfg, &s);
+            }
+        }
+        Some("ckpt") => {
+            use parti_sim::ckpt;
+            let path_arg = |i: usize, what: &str| -> Result<&String> {
+                args.rest.get(i).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "ckpt: missing {what} (see `parti-sim help`)"
+                    )
+                })
+            };
+            let read_file = |p: &str| -> Result<Vec<u8>> {
+                std::fs::read(p).map_err(|e| {
+                    anyhow::anyhow!("cannot read checkpoint {p}: {e}")
+                })
+            };
+            match args.rest.first().map(|s| s.as_str()) {
+                Some("info") => {
+                    let path = path_arg(1, "snapshot file")?;
+                    let bytes = read_file(path)?;
+                    let mut r = ckpt::StateReader::new(&bytes);
+                    let h = ckpt::Header::read(&mut r)
+                        .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+                    println!("file: {path} ({} bytes)", bytes.len());
+                    println!(
+                        "format: v{} (flags {:#06x})",
+                        h.version, h.flags
+                    );
+                    println!("spec hash: {:#018x}", h.spec_hash);
+                    println!(
+                        "border tick: {}  quantum: {}",
+                        h.tick, h.quantum
+                    );
+                    println!(
+                        "domains: {}  components: {}",
+                        h.n_domains, h.n_components
+                    );
+                    let mut seen = std::collections::BTreeMap::new();
+                    while !r.is_done() {
+                        let (tag, payload, _) =
+                            ckpt::format::read_record(&mut r)
+                                .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+                        let e = seen.entry(tag).or_insert((0usize, 0usize));
+                        e.0 += 1;
+                        e.1 += payload.len();
+                    }
+                    println!("records:");
+                    for (tag, (count, bytes)) in &seen {
+                        println!(
+                            "  {:<10} {:>4} record(s) {:>10} payload byte(s)",
+                            ckpt::format::tag_name(*tag),
+                            count,
+                            bytes
+                        );
+                    }
+                }
+                Some("validate") => {
+                    let path = path_arg(1, "snapshot file")?;
+                    let bytes = read_file(path)?;
+                    let snap = ckpt::read_snapshot(&bytes)
+                        .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+                    let spec = snap
+                        .spec()
+                        .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+                    let cfg = snap
+                        .config()
+                        .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+                    let pending: usize =
+                        snap.domains.iter().map(|d| d.events.len()).sum();
+                    println!(
+                        "ok: {path} is a valid v{} snapshot",
+                        snap.header.version
+                    );
+                    println!(
+                        "  platform `{}` ({} cores), app {}, border {}",
+                        spec.name,
+                        cfg.system.cores,
+                        cfg.traffic.as_deref().unwrap_or(&cfg.app),
+                        snap.header.tick
+                    );
+                    println!(
+                        "  {} domain(s), {} component(s), {} pending \
+                         event(s)",
+                        snap.header.n_domains,
+                        snap.header.n_components,
+                        pending
+                    );
+                }
+                Some("diff") => {
+                    let pa = path_arg(1, "first snapshot file")?;
+                    let pb = path_arg(2, "second snapshot file")?;
+                    let a = read_file(pa)?;
+                    let b = read_file(pb)?;
+                    match ckpt::diff_snapshots(&a, &b)
+                        .map_err(|e| anyhow::anyhow!("{e}"))?
+                    {
+                        None => println!(
+                            "identical: {pa} == {pb} ({} bytes)",
+                            a.len()
+                        ),
+                        Some(report) => {
+                            println!("{pa} vs {pb}:\n  {report}");
+                            std::process::exit(1);
+                        }
+                    }
+                }
+                other => {
+                    return Err(anyhow::anyhow!(
+                        "unknown ckpt verb `{}` — use `ckpt info F`, \
+                         `ckpt validate F` or `ckpt diff A B`",
+                        other.unwrap_or("")
+                    ));
+                }
             }
         }
         Some("compare") => {
@@ -350,6 +549,9 @@ fn main() -> Result<()> {
                                 anyhow::anyhow!("bad --max-points {k}: {e}")
                             })?);
                         }
+                        opts.from_checkpoint = args
+                            .get("from-checkpoint")
+                            .map(std::path::PathBuf::from);
                         let out = orch::run_sweep(&spec, &opts)?;
                         for i in &out.repaired {
                             eprintln!(

@@ -4,6 +4,8 @@
 //! victimisation and per-line coherence state + functional data. The
 //! *protocol* half lives in the Ruby controllers ([`crate::ruby`]).
 
+use crate::ckpt::io::{CkptError, StateReader, StateWriter};
+
 /// Per-line coherence state (CHI-lite MESI; see `ruby::msg`).
 #[derive(Copy, Clone, PartialEq, Eq, Debug, Default)]
 pub enum LineState {
@@ -194,6 +196,59 @@ impl CacheArray {
                 .filter(|l| l.state.is_valid())
                 .map(move |l| (self.addr_of(si, l.tag), l))
         })
+    }
+
+    /// Checkpoint producer half: every way of every set, *in way order*,
+    /// plus the LRU clock and the hit/miss counters. Way order matters:
+    /// `find` scans ways linearly and `invalidate` uses `swap_remove`, so
+    /// the physical ordering is architectural state that a bit-identical
+    /// resume must reproduce. Geometry (set count, associativity, line
+    /// size) is rebuilt from the spec, not serialized.
+    pub fn save_ckpt(&self, w: &mut StateWriter) {
+        w.usize(self.sets.len());
+        for set in &self.sets {
+            w.usize(set.len());
+            for l in set {
+                w.u64(l.tag);
+                w.line_state(l.state);
+                w.u64(l.data);
+                w.u64(l.lru);
+            }
+        }
+        w.u64(self.tick);
+        w.u64(self.hits);
+        w.u64(self.misses);
+    }
+
+    /// Checkpoint restore half for a freshly built array of the same
+    /// geometry.
+    pub fn restore_ckpt(
+        &mut self,
+        r: &mut StateReader,
+    ) -> Result<(), CkptError> {
+        let n = r.usize()?;
+        if n != self.sets.len() {
+            return Err(CkptError::Mismatch {
+                what: "cache set count".to_string(),
+                expected: self.sets.len().to_string(),
+                found: n.to_string(),
+            });
+        }
+        for set in &mut self.sets {
+            set.clear();
+            let ways = r.usize()?;
+            for _ in 0..ways {
+                let tag = r.u64()?;
+                let state = r.line_state()?;
+                let data = r.u64()?;
+                let lru = r.u64()?;
+                set.push(Line { tag, state, data, lru });
+            }
+        }
+        self.tick = r.u64()?;
+        self.hits = r.u64()?;
+        self.misses = r.u64()?;
+        Ok(())
     }
 }
 

@@ -14,6 +14,7 @@ use std::collections::VecDeque;
 
 use rustc_hash::FxHashMap;
 
+use crate::ckpt::io::{CkptError, StateReader, StateWriter};
 use crate::proto::Packet;
 use crate::sim::component::{Component, Ctx};
 use crate::sim::event::EventKind;
@@ -191,6 +192,68 @@ impl Component for DramCtrl {
         out.add_u64("row_misses", self.row_misses);
         out.add_u64("queue_delay_ticks", self.queue_delay_sum);
         out.add_u64("max_queue", self.max_queue as u64);
+    }
+
+    fn save_state(&self, w: &mut StateWriter) {
+        w.usize(self.banks.len());
+        for b in &self.banks {
+            w.opt_u64(b.open_row);
+            w.u64(b.busy_until);
+        }
+        w.usize(self.queue.len());
+        for pkt in &self.queue {
+            w.packet(pkt);
+        }
+        // Sparse backing store: sorted by line address for byte-stable output
+        // regardless of hash-map iteration order.
+        let mut lines: Vec<(u64, u64)> =
+            self.store.iter().map(|(&k, &v)| (k, v)).collect();
+        lines.sort_unstable_by_key(|&(k, _)| k);
+        w.usize(lines.len());
+        for (addr, val) in lines {
+            w.u64(addr);
+            w.u64(val);
+        }
+        w.bool(self.ticking);
+        w.u64(self.reads);
+        w.u64(self.writes);
+        w.u64(self.row_hits);
+        w.u64(self.row_misses);
+        w.u64(self.queue_delay_sum);
+        w.usize(self.max_queue);
+    }
+
+    fn restore_state(&mut self, r: &mut StateReader) -> Result<(), CkptError> {
+        let n_banks = r.usize()?;
+        if n_banks != self.banks.len() {
+            return Err(CkptError::Mismatch {
+                what: format!("{}: bank count", self.name),
+                expected: self.banks.len().to_string(),
+                found: n_banks.to_string(),
+            });
+        }
+        for b in &mut self.banks {
+            b.open_row = r.opt_u64()?;
+            b.busy_until = r.u64()?;
+        }
+        self.queue.clear();
+        for _ in 0..r.usize()? {
+            self.queue.push_back(r.packet()?);
+        }
+        self.store.clear();
+        for _ in 0..r.usize()? {
+            let addr = r.u64()?;
+            let val = r.u64()?;
+            self.store.insert(addr, val);
+        }
+        self.ticking = r.bool()?;
+        self.reads = r.u64()?;
+        self.writes = r.u64()?;
+        self.row_hits = r.u64()?;
+        self.row_misses = r.u64()?;
+        self.queue_delay_sum = r.u64()?;
+        self.max_queue = r.usize()?;
+        Ok(())
     }
 }
 

@@ -5,6 +5,7 @@
 //! generate *non-coherent* cross-domain traffic through the thread-safe
 //! IO-XBAR layers of §4.3.
 
+use crate::ckpt::io::{CkptError, StateReader, StateWriter};
 use crate::sim::component::{Component, Ctx};
 use crate::sim::event::EventKind;
 use crate::sim::stats::StatSink;
@@ -58,6 +59,19 @@ impl Component for Uart {
         out.add_u64("writes", self.writes);
         out.add_u64("bytes_written", self.bytes_written);
     }
+
+    fn save_state(&self, w: &mut StateWriter) {
+        w.u64(self.bytes_written);
+        w.u64(self.reads);
+        w.u64(self.writes);
+    }
+
+    fn restore_state(&mut self, r: &mut StateReader) -> Result<(), CkptError> {
+        self.bytes_written = r.u64()?;
+        self.reads = r.u64()?;
+        self.writes = r.u64()?;
+        Ok(())
+    }
 }
 
 /// A timer device: reads return the current simulated time in ns; writes are
@@ -104,5 +118,16 @@ impl Component for Timer {
     fn stats(&self, out: &mut StatSink) {
         out.add_u64("reads", self.reads);
         out.add_u64("writes", self.writes);
+    }
+
+    fn save_state(&self, w: &mut StateWriter) {
+        w.u64(self.reads);
+        w.u64(self.writes);
+    }
+
+    fn restore_state(&mut self, r: &mut StateReader) -> Result<(), CkptError> {
+        self.reads = r.u64()?;
+        self.writes = r.u64()?;
+        Ok(())
     }
 }

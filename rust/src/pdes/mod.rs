@@ -29,7 +29,45 @@ pub mod serial;
 pub mod virtual_host;
 
 pub use machine::{Machine, MachineBuilder};
-pub use parallel::run_parallel;
-pub use result::{PdesSnapshot, RunResult, WorkProfile};
+pub use parallel::{run_parallel, run_parallel_ctl};
+pub use result::{KernelCtl, PdesSnapshot, RunOutcome, RunResult, WorkProfile};
 pub use serial::run_serial;
-pub use virtual_host::{run_virtual, HostModel};
+pub use virtual_host::{run_virtual, run_virtual_ctl, HostModel};
+
+use std::sync::atomic::Ordering::Relaxed;
+
+use crate::sched::plan_next_window;
+use crate::sim::time::Tick;
+
+/// Resume prologue shared by both windowed kernels: plan the first window
+/// of a machine restored at `border`, exactly as the producing run would
+/// have planned it at that border (same policy, same post-sync horizon —
+/// the restored queues are bit-identical, so the plan is too). Returns
+/// `None` when the restored run is already over (stop flag raised, global
+/// quiescence, or the border at/past the cutoff) — the caller finishes
+/// without executing a window.
+pub fn plan_resume_window(
+    machine: &mut Machine,
+    border: Tick,
+    max_ticks: Tick,
+) -> Option<Tick> {
+    let shared = machine.shared.clone();
+    let stop = shared.should_stop();
+    let horizon = machine
+        .domains
+        .iter_mut()
+        .map(|d| d.next_tick())
+        .min()
+        .unwrap_or(Tick::MAX);
+    if stop || horizon == Tick::MAX || border >= max_ticks {
+        return None;
+    }
+    let plan = plan_next_window(
+        shared.policy.quantum_policy,
+        border,
+        shared.quantum,
+        horizon.min(max_ticks.saturating_sub(1)),
+    );
+    shared.pdes.quanta_skipped.fetch_add(plan.skipped_quanta, Relaxed);
+    Some(plan.window_end)
+}

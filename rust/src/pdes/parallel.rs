@@ -64,12 +64,29 @@ use crate::util::CachePadded;
 
 use super::domain::Domain;
 use super::machine::Machine;
-use super::result::{PdesSnapshot, RunResult};
+use super::result::{KernelCtl, PdesSnapshot, RunOutcome, RunResult};
 
 const VERDICT_CONTINUE: u8 = 0;
 const VERDICT_STOP: u8 = 1;
+/// The verdict leader saw the checkpoint border (snap rule hit): every
+/// thread breaks out of the window loop with its domain frozen inside the
+/// quiescent span, exactly as for a stop — but the caller gets the machine
+/// back for serialization instead of a finished result.
+const VERDICT_CHECKPOINT: u8 = 2;
 
-pub fn run_parallel(mut machine: Machine, max_ticks: Tick) -> RunResult {
+pub fn run_parallel(machine: Machine, max_ticks: Tick) -> RunResult {
+    run_parallel_ctl(machine, max_ticks, KernelCtl::default()).into_finished()
+}
+
+/// The threaded kernel with checkpoint/restore control: semantics identical
+/// to [`run_virtual_ctl`](super::virtual_host::run_virtual_ctl) — same snap
+/// rule, same resume plan — so under the border-ordered protocols the
+/// checkpoint bytes are producer-kernel invariant (docs/CHECKPOINT.md).
+pub fn run_parallel_ctl(
+    mut machine: Machine,
+    max_ticks: Tick,
+    ctl: KernelCtl,
+) -> RunOutcome {
     let n = machine.n_domains();
     assert!(n >= 2, "parallel kernel requires >= 2 domains");
     let shared = machine.shared.clone();
@@ -79,11 +96,34 @@ pub fn run_parallel(mut machine: Machine, max_ticks: Tick) -> RunResult {
     let n_threads =
         if policy.threads == 0 { n } else { policy.threads.min(n) };
 
-    // Component init is deterministic and single-threaded here (it was
-    // per-domain-thread before; the scheduled events are identical).
-    for dom in machine.domains.iter_mut() {
-        dom.init_components(&shared, quantum);
-    }
+    let initial_window_end = match ctl.resume_border {
+        None => {
+            // Component init is deterministic and single-threaded here (it
+            // was per-domain-thread before; the scheduled events are
+            // identical).
+            for dom in machine.domains.iter_mut() {
+                dom.init_components(&shared, quantum);
+            }
+            quantum
+        }
+        Some(border) => {
+            match super::plan_resume_window(&mut machine, border, max_ticks) {
+                Some(we) => we,
+                None => {
+                    // The restored run was already over at its border.
+                    return RunOutcome::Finished(RunResult {
+                        sim_ticks: machine.sim_ticks(),
+                        events: machine.events_executed(),
+                        host_ns: 0,
+                        stats: machine.collect_stats(),
+                        pdes: PdesSnapshot::from_shared(&machine.shared),
+                        work: None,
+                        n_domains: n,
+                    });
+                }
+            }
+        }
+    };
 
     // Domains become claimable work items. The mutexes are uncontended by
     // construction — claims and the static drain partition each hand a
@@ -109,7 +149,10 @@ pub fn run_parallel(mut machine: Machine, max_ticks: Tick) -> RunResult {
     let verdict = AtomicU8::new(VERDICT_CONTINUE);
     // Written by the verdict leader, read by everyone after the verdict
     // barrier (which provides the ordering).
-    let next_window_end = AtomicU64::new(quantum);
+    let next_window_end = AtomicU64::new(initial_window_end);
+    // Border the checkpoint verdict froze the machine at (leader-written,
+    // read after the scope joins).
+    let ckpt_border = AtomicU64::new(0);
 
     let start = Instant::now();
 
@@ -123,11 +166,12 @@ pub fn run_parallel(mut machine: Machine, max_ticks: Tick) -> RunResult {
             let claims = &claims;
             let verdict = &verdict;
             let next_window_end = &next_window_end;
+            let ckpt_border = &ckpt_border;
             let slots = &slots;
             handles.push(scope.spawn(move || {
                 let body = std::panic::AssertUnwindSafe(|| {
                     let mut w = barrier.waiter(ti);
-                    let mut window_end = quantum;
+                    let mut window_end = initial_window_end;
                     // `--profile`: per-phase wall breakdowns, summed over
                     // threads into PdesStats. Host-side observation only —
                     // no simulation decision reads these, so determinism
@@ -225,7 +269,18 @@ pub fn run_parallel(mut machine: Machine, max_ticks: Tick) -> RunResult {
                                 let stop = shared.should_stop()
                                     || quiescent
                                     || window_end >= max_ticks;
-                                if !stop {
+                                // Snap rule, strictly after the stop
+                                // verdict (same order as the virtual
+                                // kernel): freeze at the first executed
+                                // border reaching the requested tick.
+                                let ckpt = !stop
+                                    && ctl
+                                        .checkpoint_at
+                                        .is_some_and(|at| window_end >= at);
+                                if ckpt {
+                                    ckpt_border.store(window_end, Relaxed);
+                                }
+                                if !stop && !ckpt {
                                     // Clamp the leap target to the run
                                     // cutoff: windows past max_ticks are
                                     // never executed by any policy, so
@@ -252,7 +307,13 @@ pub fn run_parallel(mut machine: Machine, max_ticks: Tick) -> RunResult {
                                     }
                                 }
                                 verdict.store(
-                                    if stop { VERDICT_STOP } else { VERDICT_CONTINUE },
+                                    if stop {
+                                        VERDICT_STOP
+                                    } else if ckpt {
+                                        VERDICT_CHECKPOINT
+                                    } else {
+                                        VERDICT_CONTINUE
+                                    },
                                     Release,
                                 );
                             }
@@ -269,7 +330,7 @@ pub fn run_parallel(mut machine: Machine, max_ticks: Tick) -> RunResult {
                                 Relaxed,
                             );
                         }
-                        if verdict.load(Acquire) == VERDICT_STOP {
+                        if verdict.load(Acquire) != VERDICT_CONTINUE {
                             break;
                         }
                         window_end = next_window_end.load(Relaxed);
@@ -298,7 +359,7 @@ pub fn run_parallel(mut machine: Machine, max_ticks: Tick) -> RunResult {
         .collect();
 
     let host_ns = start.elapsed().as_nanos() as u64;
-    RunResult {
+    let result = RunResult {
         sim_ticks: machine.sim_ticks(),
         events: machine.events_executed(),
         host_ns,
@@ -306,5 +367,14 @@ pub fn run_parallel(mut machine: Machine, max_ticks: Tick) -> RunResult {
         pdes: PdesSnapshot::from_shared(&machine.shared),
         work: None,
         n_domains: n,
+    };
+    if verdict.load(Relaxed) == VERDICT_CHECKPOINT {
+        RunOutcome::Checkpointed {
+            machine,
+            border: ckpt_border.load(Relaxed),
+            result,
+        }
+    } else {
+        RunOutcome::Finished(result)
     }
 }

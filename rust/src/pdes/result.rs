@@ -136,6 +136,50 @@ impl PdesSnapshot {
     }
 }
 
+/// Kernel control block for checkpoint-producing and restored runs
+/// (docs/CHECKPOINT.md). Default = an ordinary cold run.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct KernelCtl {
+    /// Resume a machine restored from a snapshot taken at this border:
+    /// component init is skipped (the restored queues already hold the
+    /// pending events) and the first window is planned from this border
+    /// exactly as the producing run would have planned it.
+    pub resume_border: Option<Tick>,
+    /// Checkpoint request: stop at the first *executed* quantum border
+    /// whose `window_end >= checkpoint_at` (the snap rule — mid-window
+    /// ticks snap forward deterministically) and hand the machine back
+    /// inside the quiescent span. A run that terminates before reaching
+    /// the tick finishes normally.
+    pub checkpoint_at: Option<Tick>,
+}
+
+/// What a windowed kernel handed back: a finished run, or a machine frozen
+/// at a quantum border for checkpointing.
+pub enum RunOutcome {
+    Finished(RunResult),
+    /// The kernel stopped at `border` (inside the quiescent span: mailboxes
+    /// drained, inbox/xbar stages merged, every component idle between
+    /// events). `machine` holds the complete architectural state;
+    /// `result` summarises the partial run.
+    Checkpointed {
+        machine: super::machine::Machine,
+        border: Tick,
+        result: RunResult,
+    },
+}
+
+impl RunOutcome {
+    /// Unwrap a run that could not have checkpointed.
+    pub fn into_finished(self) -> RunResult {
+        match self {
+            RunOutcome::Finished(r) => r,
+            RunOutcome::Checkpointed { .. } => {
+                panic!("unexpected checkpoint outcome: none was requested")
+            }
+        }
+    }
+}
+
 /// Result of one run.
 pub struct RunResult {
     /// Total simulated time.

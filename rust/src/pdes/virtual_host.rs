@@ -25,9 +25,22 @@ use crate::sched::plan_next_window;
 use crate::sim::time::Tick;
 
 use super::machine::Machine;
-use super::result::{PdesSnapshot, RunResult, WorkProfile};
+use super::result::{KernelCtl, PdesSnapshot, RunOutcome, RunResult, WorkProfile};
 
-pub fn run_virtual(mut machine: Machine, max_ticks: Tick) -> RunResult {
+pub fn run_virtual(machine: Machine, max_ticks: Tick) -> RunResult {
+    run_virtual_ctl(machine, max_ticks, KernelCtl::default()).into_finished()
+}
+
+/// The virtual kernel with checkpoint/restore control (docs/CHECKPOINT.md):
+/// `ctl.resume_border` skips component init and replans from a restored
+/// border; `ctl.checkpoint_at` stops at the first executed border whose
+/// `window_end` reaches the requested tick (the snap rule) and returns the
+/// machine frozen inside the quiescent span.
+pub fn run_virtual_ctl(
+    mut machine: Machine,
+    max_ticks: Tick,
+    ctl: KernelCtl,
+) -> RunOutcome {
     let n = machine.n_domains();
     assert!(n >= 2, "virtual kernel requires >= 2 domains");
     let shared = machine.shared.clone();
@@ -38,10 +51,29 @@ pub fn run_virtual(mut machine: Machine, max_ticks: Tick) -> RunResult {
     let start = Instant::now();
     let mut work = WorkProfile::default();
 
-    let mut window_end = quantum;
-    for dom in machine.domains.iter_mut() {
-        dom.init_components(&shared, window_end);
-    }
+    let mut window_end = match ctl.resume_border {
+        None => {
+            let window_end = quantum;
+            for dom in machine.domains.iter_mut() {
+                dom.init_components(&shared, window_end);
+            }
+            window_end
+        }
+        Some(border) => {
+            match super::plan_resume_window(&mut machine, border, max_ticks) {
+                Some(we) => we,
+                None => {
+                    // The restored run was already over at its border.
+                    return RunOutcome::Finished(finish(
+                        machine,
+                        start.elapsed().as_nanos() as u64,
+                        work,
+                        n,
+                    ));
+                }
+            }
+        }
+    };
 
     // `--profile`: the same phase timers as the threaded kernel; on one
     // thread the freeze/publish waits are structurally zero, so only the
@@ -90,6 +122,22 @@ pub fn run_virtual(mut machine: Machine, max_ticks: Tick) -> RunResult {
         if stop || horizon == Tick::MAX || window_end >= max_ticks {
             break;
         }
+        // Snap rule (checked strictly after the stop verdict, so a run
+        // that terminates first finishes normally): the first executed
+        // border whose `window_end` reaches the requested tick is the
+        // checkpoint border. The machine is frozen here, inside the
+        // quiescent span — after `border_sync`, before the next plan.
+        if let Some(at) = ctl.checkpoint_at {
+            if window_end >= at {
+                let host_ns = start.elapsed().as_nanos() as u64;
+                let result = finish_ref(&machine, host_ns, work, n);
+                return RunOutcome::Checkpointed {
+                    machine,
+                    border: window_end,
+                    result,
+                };
+            }
+        }
         // Identical border plan as the threaded kernel: the quantum policy
         // may leap over windows that provably contain no events. The leap
         // target is clamped to the run cutoff — windows past max_ticks are
@@ -105,6 +153,19 @@ pub fn run_virtual(mut machine: Machine, max_ticks: Tick) -> RunResult {
     }
 
     let host_ns = start.elapsed().as_nanos() as u64;
+    RunOutcome::Finished(finish(machine, host_ns, work, n))
+}
+
+fn finish(machine: Machine, host_ns: u64, work: WorkProfile, n: usize) -> RunResult {
+    finish_ref(&machine, host_ns, work, n)
+}
+
+fn finish_ref(
+    machine: &Machine,
+    host_ns: u64,
+    work: WorkProfile,
+    n: usize,
+) -> RunResult {
     RunResult {
         sim_ticks: machine.sim_ticks(),
         events: machine.events_executed(),

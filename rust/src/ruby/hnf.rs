@@ -16,6 +16,7 @@ use std::collections::VecDeque;
 
 use rustc_hash::FxHashMap;
 
+use crate::ckpt::io::{CkptError, StateReader, StateWriter};
 use crate::mem::{CacheArray, LineState};
 use crate::proto::{Cmd, Packet};
 use crate::sim::component::{Component, Ctx};
@@ -465,5 +466,105 @@ impl Component for HnfCtrl {
         out.add_u64("dram_writebacks", self.dram_wbs);
         out.add_u64("requeued", self.requeued);
         out.add_u64("self_owner_refetch", self.self_owner_refetch);
+    }
+
+    fn save_state(&self, w: &mut StateWriter) {
+        self.l3.save_ckpt(w);
+        self.inbox.lock().unwrap().save_ckpt(w);
+        // Directory: sorted by line; empty entries elided (they are
+        // recreated on demand and would otherwise make the bytes depend on
+        // access history rather than architectural state).
+        let mut dir: Vec<(&u64, &DirEntry)> =
+            self.dir.iter().filter(|(_, e)| !e.is_empty()).collect();
+        dir.sort_unstable_by_key(|&(&line, _)| line);
+        w.usize(dir.len());
+        for (&line, e) in dir {
+            w.u64(line);
+            w.opt_comp_id(e.owner);
+            // Sharer order is architectural: `try_complete` pushes in
+            // arrival order and snoop fan-out follows it.
+            w.usize(e.sharers.len());
+            for &s in &e.sharers {
+                w.comp_id(s);
+            }
+        }
+        let mut busy: Vec<(&u64, &Txn)> = self.busy.iter().collect();
+        busy.sort_unstable_by_key(|&(&line, _)| line);
+        w.usize(busy.len());
+        for (&line, t) in busy {
+            w.u64(line);
+            w.msg(&t.req);
+            w.u32(t.pending_acks);
+            w.opt_u64(t.data);
+            w.bool(t.data_dirty);
+            w.bool(t.mem_pending);
+        }
+        let mut waiting: Vec<(&u64, &VecDeque<RubyMsg>)> =
+            self.waiting.iter().collect();
+        waiting.sort_unstable_by_key(|&(&line, _)| line);
+        w.usize(waiting.len());
+        for (&line, q) in waiting {
+            w.u64(line);
+            w.usize(q.len());
+            for msg in q {
+                w.msg(msg);
+            }
+        }
+        w.u64(self.read_shared);
+        w.u64(self.read_unique);
+        w.u64(self.snoops_sent);
+        w.u64(self.writebacks);
+        w.u64(self.stale_writebacks);
+        w.u64(self.dram_reads);
+        w.u64(self.dram_wbs);
+        w.u64(self.requeued);
+        w.u64(self.self_owner_refetch);
+    }
+
+    fn restore_state(&mut self, r: &mut StateReader) -> Result<(), CkptError> {
+        self.l3.restore_ckpt(r)?;
+        self.inbox.lock().unwrap().restore_ckpt(r)?;
+        self.dir.clear();
+        for _ in 0..r.usize()? {
+            let line = r.u64()?;
+            let owner = r.opt_comp_id()?;
+            let mut sharers = Vec::new();
+            for _ in 0..r.usize()? {
+                sharers.push(r.comp_id()?);
+            }
+            self.dir.insert(line, DirEntry { owner, sharers });
+        }
+        self.busy.clear();
+        for _ in 0..r.usize()? {
+            let line = r.u64()?;
+            let req = r.msg()?;
+            let pending_acks = r.u32()?;
+            let data = r.opt_u64()?;
+            let data_dirty = r.bool()?;
+            let mem_pending = r.bool()?;
+            self.busy.insert(
+                line,
+                Txn { req, pending_acks, data, data_dirty, mem_pending },
+            );
+        }
+        self.waiting.clear();
+        for _ in 0..r.usize()? {
+            let line = r.u64()?;
+            let mut q = VecDeque::new();
+            for _ in 0..r.usize()? {
+                q.push_back(r.msg()?);
+            }
+            self.waiting.insert(line, q);
+        }
+        self.read_shared = r.u64()?;
+        self.read_unique = r.u64()?;
+        self.snoops_sent = r.u64()?;
+        self.writebacks = r.u64()?;
+        self.stale_writebacks = r.u64()?;
+        self.dram_reads = r.u64()?;
+        self.dram_wbs = r.u64()?;
+        self.requeued = r.u64()?;
+        self.self_owner_refetch = r.u64()?;
+        Ok(())
     }
 }

@@ -50,6 +50,7 @@ use std::collections::BinaryHeap;
 use std::sync::atomic::Ordering::Relaxed;
 use std::sync::{Arc, Mutex};
 
+use crate::ckpt::io::{CkptError, StateReader, StateWriter};
 use crate::sched::InboxOrder;
 use crate::sim::component::Ctx;
 use crate::sim::event::{prio, EventKind};
@@ -401,6 +402,79 @@ impl Inbox {
 
     pub fn total_pending(&self) -> usize {
         self.bufs.iter().map(|b| b.len()).sum()
+    }
+
+    /// Checkpoint producer half for one consumer's inbox. Must run inside
+    /// the quiescent span of a quantum border, *after* the border merge:
+    /// the staging area is empty (asserted — a non-empty stage means the
+    /// caller is snapshotting non-quiescent state) and every per-buffer
+    /// capacity snapshot is fresh. In-transit messages are written in
+    /// canonical `(arrival, seq)` order, so the bytes are invariant to the
+    /// producing kernel. Buffer capacities are rebuilt from the topology,
+    /// not serialized.
+    pub fn save_ckpt(&self, w: &mut StateWriter) {
+        assert_eq!(
+            self.stage_total, 0,
+            "inbox checkpoint outside the quiescent span: staged deliveries present"
+        );
+        w.usize(self.bufs.len());
+        for b in &self.bufs {
+            debug_assert!(
+                b.staged_by.is_empty(),
+                "stale staging counts at a border checkpoint"
+            );
+            let mut entries: Vec<&Entry> =
+                b.heap.iter().map(|Reverse(e)| e).collect();
+            entries.sort_unstable_by_key(|e| (e.arrival, e.seq));
+            w.usize(entries.len());
+            for e in entries {
+                w.u64(e.arrival);
+                w.u64(e.seq);
+                w.msg(&e.msg);
+            }
+            w.u64(b.next_seq);
+            w.usize(b.border_len);
+            w.u64(b.enqueued);
+            w.usize(b.peak);
+        }
+        w.u64(self.pending_wakeup);
+    }
+
+    /// Checkpoint restore half: overwrite a freshly built inbox (same
+    /// topology, hence same buffer count and capacities) with the state
+    /// written by [`Self::save_ckpt`].
+    pub fn restore_ckpt(
+        &mut self,
+        r: &mut StateReader,
+    ) -> Result<(), CkptError> {
+        let n = r.usize()?;
+        if n != self.bufs.len() {
+            return Err(CkptError::Mismatch {
+                what: "inbox buffer count".to_string(),
+                expected: self.bufs.len().to_string(),
+                found: n.to_string(),
+            });
+        }
+        for b in &mut self.bufs {
+            b.heap.clear();
+            let k = r.usize()?;
+            for _ in 0..k {
+                let arrival = r.u64()?;
+                let seq = r.u64()?;
+                let msg = r.msg()?;
+                b.heap.push(Reverse(Entry { arrival, seq, msg }));
+            }
+            b.next_seq = r.u64()?;
+            b.border_len = r.usize()?;
+            b.staged_by.clear();
+            b.enqueued = r.u64()?;
+            b.peak = r.usize()?;
+        }
+        self.stage_runs.clear();
+        self.stage_total = 0;
+        self.stage_host_idx = 0;
+        self.pending_wakeup = r.u64()?;
+        Ok(())
     }
 }
 

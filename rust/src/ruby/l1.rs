@@ -14,6 +14,7 @@
 
 use rustc_hash::FxHashMap;
 
+use crate::ckpt::io::{CkptError, StateReader, StateWriter};
 use crate::mem::{CacheArray, LineState};
 use crate::sim::component::{Component, Ctx};
 use crate::sim::event::EventKind;
@@ -232,5 +233,64 @@ impl Component for L1Ctrl {
         out.add_u64("load_misses", self.load_misses);
         out.add_u64("store_lookups", self.store_lookups);
         out.add_u64("mshr_merges", self.mshr_merges);
+    }
+
+    fn save_state(&self, w: &mut StateWriter) {
+        self.array.save_ckpt(w);
+        self.inbox.lock().unwrap().save_ckpt(w);
+        let mut mshr: Vec<(&u64, &LineMshr)> = self.mshr.iter().collect();
+        mshr.sort_unstable_by_key(|&(&line, _)| line);
+        w.usize(mshr.len());
+        for (&line, m) in mshr {
+            w.u64(line);
+            w.u64(m.req_txn);
+            w.usize(m.waiters.len());
+            for msg in &m.waiters {
+                w.msg(msg);
+            }
+        }
+        let mut stale: Vec<(&u64, &Vec<RubyMsg>)> = self.stale.iter().collect();
+        stale.sort_unstable_by_key(|&(&txn, _)| txn);
+        w.usize(stale.len());
+        for (&txn, waiters) in stale {
+            w.u64(txn);
+            w.usize(waiters.len());
+            for msg in waiters {
+                w.msg(msg);
+            }
+        }
+        w.u64(self.load_hits);
+        w.u64(self.load_misses);
+        w.u64(self.store_lookups);
+        w.u64(self.mshr_merges);
+    }
+
+    fn restore_state(&mut self, r: &mut StateReader) -> Result<(), CkptError> {
+        self.array.restore_ckpt(r)?;
+        self.inbox.lock().unwrap().restore_ckpt(r)?;
+        self.mshr.clear();
+        for _ in 0..r.usize()? {
+            let line = r.u64()?;
+            let req_txn = r.u64()?;
+            let mut waiters = Vec::new();
+            for _ in 0..r.usize()? {
+                waiters.push(r.msg()?);
+            }
+            self.mshr.insert(line, LineMshr { req_txn, waiters });
+        }
+        self.stale.clear();
+        for _ in 0..r.usize()? {
+            let txn = r.u64()?;
+            let mut waiters = Vec::new();
+            for _ in 0..r.usize()? {
+                waiters.push(r.msg()?);
+            }
+            self.stale.insert(txn, waiters);
+        }
+        self.load_hits = r.u64()?;
+        self.load_misses = r.u64()?;
+        self.store_lookups = r.u64()?;
+        self.mshr_merges = r.u64()?;
+        Ok(())
     }
 }

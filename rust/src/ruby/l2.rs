@@ -18,6 +18,7 @@
 
 use rustc_hash::FxHashMap;
 
+use crate::ckpt::io::{CkptError, StateReader, StateWriter};
 use crate::mem::{CacheArray, LineState};
 use crate::sim::component::{Component, Ctx};
 use crate::sim::event::EventKind;
@@ -391,5 +392,65 @@ impl Component for L2Ctrl {
         out.add_u64("snoops", self.snoops);
         out.add_u64("snoop_hits", self.snoop_hits);
         out.add_u64("replays", self.replays);
+    }
+
+    fn save_state(&self, w: &mut StateWriter) {
+        self.array.save_ckpt(w);
+        self.inbox.lock().unwrap().save_ckpt(w);
+        let mut mshr: Vec<(&u64, &Mshr)> = self.mshr.iter().collect();
+        mshr.sort_unstable_by_key(|&(&line, _)| line);
+        w.usize(mshr.len());
+        for (&line, m) in mshr {
+            w.u64(line);
+            w.bool(m.want_unique);
+            w.usize(m.waiters.len());
+            for msg in &m.waiters {
+                w.msg(msg);
+            }
+        }
+        let mut wb: Vec<(u64, u64)> =
+            self.wb_buffer.iter().map(|(&k, &v)| (k, v)).collect();
+        wb.sort_unstable_by_key(|&(k, _)| k);
+        w.usize(wb.len());
+        for (line, data) in wb {
+            w.u64(line);
+            w.u64(data);
+        }
+        w.u64(self.stores);
+        w.u64(self.store_hits_writable);
+        w.u64(self.upgrades);
+        w.u64(self.writebacks);
+        w.u64(self.snoops);
+        w.u64(self.snoop_hits);
+        w.u64(self.replays);
+    }
+
+    fn restore_state(&mut self, r: &mut StateReader) -> Result<(), CkptError> {
+        self.array.restore_ckpt(r)?;
+        self.inbox.lock().unwrap().restore_ckpt(r)?;
+        self.mshr.clear();
+        for _ in 0..r.usize()? {
+            let line = r.u64()?;
+            let want_unique = r.bool()?;
+            let mut waiters = Vec::new();
+            for _ in 0..r.usize()? {
+                waiters.push(r.msg()?);
+            }
+            self.mshr.insert(line, Mshr { waiters, want_unique });
+        }
+        self.wb_buffer.clear();
+        for _ in 0..r.usize()? {
+            let line = r.u64()?;
+            let data = r.u64()?;
+            self.wb_buffer.insert(line, data);
+        }
+        self.stores = r.u64()?;
+        self.store_hits_writable = r.u64()?;
+        self.upgrades = r.u64()?;
+        self.writebacks = r.u64()?;
+        self.snoops = r.u64()?;
+        self.snoop_hits = r.u64()?;
+        self.replays = r.u64()?;
+        Ok(())
     }
 }

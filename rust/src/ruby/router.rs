@@ -14,6 +14,7 @@ use std::collections::VecDeque;
 
 use rustc_hash::FxHashMap;
 
+use crate::ckpt::io::{CkptError, StateReader, StateWriter};
 use crate::sim::component::{Component, Ctx};
 use crate::sim::event::EventKind;
 use crate::sim::ids::CompId;
@@ -140,5 +141,26 @@ impl Component for Router {
     fn stats(&self, out: &mut StatSink) {
         out.add_u64("routed", self.routed);
         out.add_u64("stalls", self.stalls);
+    }
+
+    fn save_state(&self, w: &mut StateWriter) {
+        self.inbox.lock().unwrap().save_ckpt(w);
+        w.usize(self.stalled.len());
+        for msg in &self.stalled {
+            w.msg(msg);
+        }
+        w.u64(self.routed);
+        w.u64(self.stalls);
+    }
+
+    fn restore_state(&mut self, r: &mut StateReader) -> Result<(), CkptError> {
+        self.inbox.lock().unwrap().restore_ckpt(r)?;
+        self.stalled.clear();
+        for _ in 0..r.usize()? {
+            self.stalled.push_back(r.msg()?);
+        }
+        self.routed = r.u64()?;
+        self.stalls = r.u64()?;
+        Ok(())
     }
 }

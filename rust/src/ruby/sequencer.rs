@@ -4,6 +4,7 @@
 
 use rustc_hash::FxHashMap;
 
+use crate::ckpt::io::{CkptError, StateReader, StateWriter};
 use crate::proto::{Cmd, Packet};
 use crate::sim::component::{Component, Ctx};
 use crate::sim::event::EventKind;
@@ -249,5 +250,54 @@ impl Component for Sequencer {
                 self.latency_sum as f64 / self.responses as f64 / 1000.0,
             );
         }
+    }
+
+    fn save_state(&self, w: &mut StateWriter) {
+        self.inbox.lock().unwrap().save_ckpt(w);
+        let mut coherent: Vec<&Packet> = self.outstanding.values().collect();
+        coherent.sort_unstable_by_key(|p| p.id);
+        w.usize(coherent.len());
+        for pkt in coherent {
+            w.packet(pkt);
+        }
+        w.usize(self.io_waiting.len());
+        for pkt in &self.io_waiting {
+            w.packet(pkt);
+        }
+        let mut io: Vec<&Packet> = self.io_outstanding.values().collect();
+        io.sort_unstable_by_key(|p| p.id);
+        w.usize(io.len());
+        for pkt in io {
+            w.packet(pkt);
+        }
+        w.u64(self.coherent_reqs);
+        w.u64(self.io_reqs);
+        w.u64(self.io_retries);
+        w.u64(self.latency_sum);
+        w.u64(self.responses);
+    }
+
+    fn restore_state(&mut self, r: &mut StateReader) -> Result<(), CkptError> {
+        self.inbox.lock().unwrap().restore_ckpt(r)?;
+        self.outstanding.clear();
+        for _ in 0..r.usize()? {
+            let pkt = r.packet()?;
+            self.outstanding.insert(pkt.id, pkt);
+        }
+        self.io_waiting.clear();
+        for _ in 0..r.usize()? {
+            self.io_waiting.push(r.packet()?);
+        }
+        self.io_outstanding.clear();
+        for _ in 0..r.usize()? {
+            let pkt = r.packet()?;
+            self.io_outstanding.insert(pkt.id, pkt);
+        }
+        self.coherent_reqs = r.u64()?;
+        self.io_reqs = r.u64()?;
+        self.io_retries = r.u64()?;
+        self.latency_sum = r.u64()?;
+        self.responses = r.u64()?;
+        Ok(())
     }
 }

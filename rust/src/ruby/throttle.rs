@@ -9,6 +9,7 @@
 //! only ever taken while holding *no* other inbox mutex (see
 //! [`super::inbox`]).
 
+use crate::ckpt::io::{CkptError, StateReader, StateWriter};
 use crate::sim::component::{Component, Ctx};
 use crate::sim::event::EventKind;
 use crate::sim::stats::StatSink;
@@ -143,5 +144,30 @@ impl Component for Throttle {
         out.add_u64("forwarded", self.forwarded);
         out.add_u64("data_msgs", self.data_msgs);
         out.add_u64("stalls", self.stalls);
+    }
+
+    fn save_state(&self, w: &mut StateWriter) {
+        self.inbox.lock().unwrap().save_ckpt(w);
+        w.u64(self.busy_until);
+        match &self.stalled_msg {
+            Some(msg) => {
+                w.bool(true);
+                w.msg(msg);
+            }
+            None => w.bool(false),
+        }
+        w.u64(self.forwarded);
+        w.u64(self.data_msgs);
+        w.u64(self.stalls);
+    }
+
+    fn restore_state(&mut self, r: &mut StateReader) -> Result<(), CkptError> {
+        self.inbox.lock().unwrap().restore_ckpt(r)?;
+        self.busy_until = r.u64()?;
+        self.stalled_msg = if r.bool()? { Some(r.msg()?) } else { None };
+        self.forwarded = r.u64()?;
+        self.data_msgs = r.u64()?;
+        self.stalls = r.u64()?;
+        Ok(())
     }
 }

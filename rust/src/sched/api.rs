@@ -69,6 +69,18 @@ pub trait Scheduler {
     /// Number of events popped (executed) from this queue.
     fn executed(&self) -> u64;
 
+    /// Every live event in canonical `(tick, prio, seq)` order, without
+    /// consuming anything or touching the executed counter. This is the
+    /// checkpoint producer's view of the queue: cancelled tombstones are
+    /// filtered out, so the result is a pure function of the schedule
+    /// history — identical across queue implementations and producing
+    /// kernels (docs/CHECKPOINT.md).
+    fn pending_events(&self) -> Vec<Event>;
+
+    /// Overwrite the executed-pop counter. Checkpoint restore uses this to
+    /// resume the producer's event accounting on a freshly built queue.
+    fn set_executed(&mut self, n: u64);
+
     /// gem5 reschedule = deschedule + schedule.
     fn reschedule(
         &mut self,

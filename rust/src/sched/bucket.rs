@@ -407,6 +407,27 @@ impl Scheduler for BucketQueue {
     fn executed(&self) -> u64 {
         self.executed
     }
+
+    fn pending_events(&self) -> Vec<Event> {
+        let live = |e: &&Event| self.pending.contains(&e.seq);
+        let mut evs: Vec<Event> = self
+            .cur
+            .iter()
+            .chain(self.overflow.iter())
+            .map(|Reverse(e)| e)
+            .filter(live)
+            .cloned()
+            .collect();
+        evs.extend(
+            self.ring.iter().flat_map(|slot| slot.iter()).filter(live).cloned(),
+        );
+        evs.sort_unstable_by_key(|e| e.key());
+        evs
+    }
+
+    fn set_executed(&mut self, n: u64) {
+        self.executed = n;
+    }
 }
 
 #[cfg(test)]

@@ -105,6 +105,21 @@ impl Scheduler for HeapQueue {
     fn executed(&self) -> u64 {
         self.executed
     }
+
+    fn pending_events(&self) -> Vec<Event> {
+        let mut evs: Vec<Event> = self
+            .heap
+            .iter()
+            .filter(|Reverse(e)| self.pending.contains(&e.seq))
+            .map(|Reverse(e)| e.clone())
+            .collect();
+        evs.sort_unstable_by_key(|e| e.key());
+        evs
+    }
+
+    fn set_executed(&mut self, n: u64) {
+        self.executed = n;
+    }
 }
 
 #[cfg(test)]

@@ -91,6 +91,14 @@ impl Scheduler for SchedQueue {
     fn executed(&self) -> u64 {
         delegate!(self, q => q.executed())
     }
+
+    fn pending_events(&self) -> Vec<Event> {
+        delegate!(self, q => q.pending_events())
+    }
+
+    fn set_executed(&mut self, n: u64) {
+        delegate!(self, q => q.set_executed(n))
+    }
 }
 
 #[cfg(test)]
@@ -110,5 +118,35 @@ mod tests {
             assert!(q.pop().is_none());
             assert_eq!(q.executed(), 2);
         }
+    }
+
+    /// `pending_events` is the checkpoint view of a queue: identical across
+    /// implementations, in canonical `(tick, prio, seq)` order, with
+    /// cancelled events filtered and the executed counter untouched.
+    #[test]
+    fn pending_events_is_canonical_and_kind_invariant() {
+        let views: Vec<Vec<(Tick, u8, u64, CompId)>> = [QueueKind::Heap, QueueKind::Bucket]
+            .into_iter()
+            .map(|kind| {
+                let mut q = SchedQueue::new(kind);
+                q.schedule(50_000, 50, CompId(0), EventKind::CpuTick);
+                q.schedule(7, 60, CompId(1), EventKind::CpuTick);
+                let h = q.schedule(7, 50, CompId(2), EventKind::CpuTick);
+                q.schedule(7, 50, CompId(3), EventKind::DramTick);
+                q.deschedule(h);
+                let before = q.executed();
+                let evs = q.pending_events();
+                assert_eq!(q.executed(), before, "pending_events must not pop");
+                assert_eq!(q.len(), 3);
+                evs.iter().map(|e| (e.tick, e.prio, e.seq, e.target)).collect()
+            })
+            .collect();
+        assert_eq!(views[0], views[1], "queue kinds disagree on pending view");
+        let ticks: Vec<Tick> = views[0].iter().map(|v| v.0).collect();
+        assert_eq!(ticks, vec![7, 7, 50_000]);
+        // prio breaks the same-tick tie: prio 50 (CompId 3, the survivor of
+        // the cancelled pair) sorts before prio 60 (CompId 1).
+        assert_eq!(views[0][0].3, CompId(3));
+        assert_eq!(views[0][1].3, CompId(1));
     }
 }

@@ -6,6 +6,7 @@
 //! sub-priority — semantically identical to gem5's synchronous call chains,
 //! but free of aliased mutable borrows.
 
+use crate::ckpt::io::{CkptError, StateReader, StateWriter};
 use crate::sched::{EventHandle, SchedQueue, Scheduler};
 use crate::sim::event::{prio, EventKind};
 use crate::sim::ids::{CompId, DomainId};
@@ -41,6 +42,33 @@ pub trait Component: Send {
     /// never be dropped by a quiescent verdict. `ctx.now()` is the border
     /// tick. Components without message buffers keep the no-op default.
     fn border_merge(&mut self, _ctx: &mut Ctx) {}
+
+    /// Checkpoint hook (the producer half, mirroring [`Self::border_merge`]
+    /// in placement): serialize every field that can differ from the
+    /// freshly-elaborated state — in-flight transactions, cache arrays,
+    /// message buffers, trace cursors, deterministic counters. Called by
+    /// the checkpoint writer at a quantum border inside the quiescent span
+    /// (after `border_merge`, before the window plan), so no producer is
+    /// running and staged cross-domain traffic has already been merged.
+    /// Map-like state must be written sorted by key so the bytes are
+    /// invariant to the producing kernel (docs/CHECKPOINT.md).
+    ///
+    /// Stateless components keep the no-op default; restore then verifies
+    /// the payload is empty, so a model that grows state without updating
+    /// both hooks fails loudly instead of resuming skewed.
+    fn save_state(&self, _out: &mut StateWriter) {}
+
+    /// Checkpoint hook (the restore half): overwrite this freshly-built
+    /// component's state from bytes produced by [`Self::save_state`]. The
+    /// restored machine skips `init` — pending events come back through
+    /// the domain queues — so restore must leave the component exactly as
+    /// the producer's quiescent border left it.
+    fn restore_state(
+        &mut self,
+        _src: &mut StateReader,
+    ) -> Result<(), CkptError> {
+        Ok(())
+    }
 
     /// Dump statistics.
     fn stats(&self, _out: &mut StatSink) {}

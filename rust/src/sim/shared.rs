@@ -9,6 +9,7 @@
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::ckpt::io::{CkptError, StateReader, StateWriter};
 use crate::sched::{Mailbox, RunPolicy};
 use crate::sim::ids::{CompId, DomainId};
 use crate::sim::time::Tick;
@@ -213,6 +214,112 @@ impl SharedState {
 
     pub fn should_stop(&self) -> bool {
         self.stop.load(Ordering::Acquire)
+    }
+
+    /// Checkpoint producer: serialize the cross-domain shared state — the
+    /// injector send cursors, the workload-barrier rendezvous, the core
+    /// completion count, and the *deterministic* PDES counters only.
+    ///
+    /// Host-timing-dependent counters (`steals`, `stolen_events`,
+    /// `inbox_reordered`, `inbox_merge_ns`, every `prof_*` field) are
+    /// deliberately excluded: they differ between producing kernels, and a
+    /// checkpoint's bytes must be a pure function of the simulation
+    /// content (docs/CHECKPOINT.md). Precondition: taken inside a quantum
+    /// border's quiescent span, so every mailbox is empty (asserted by the
+    /// checkpoint writer) and `stop` is false.
+    pub fn save_ckpt(&self, w: &mut StateWriter) {
+        w.usize(self.xseq.len());
+        for x in &self.xseq {
+            w.u64(x.load(Ordering::Relaxed));
+        }
+        w.u32(self.cores_done.load(Ordering::Relaxed));
+        let wl = self.wl_barrier.state.lock().unwrap();
+        w.u32(wl.participants);
+        w.usize(wl.waiting.len());
+        for c in &wl.waiting {
+            w.comp_id(*c);
+        }
+        w.u64(wl.max_arrival);
+        w.u64(wl.generation);
+        drop(wl);
+        let p = &self.pdes;
+        for ctr in [
+            &p.cross_events,
+            &p.postponed,
+            &p.tpp_sum,
+            &p.barriers,
+            &p.quanta_skipped,
+            &p.inbox_staged,
+            &p.xbar_staged,
+            &p.xbar_deferred_grants,
+            &p.traffic_offered,
+            &p.traffic_accepted,
+            &p.traffic_retries,
+            &p.traffic_phases,
+        ] {
+            w.u64(ctr.load(Ordering::Relaxed));
+        }
+    }
+
+    /// Checkpoint restore: overwrite the fields written by
+    /// [`Self::save_ckpt`] on a freshly built `SharedState`. The builder
+    /// already seeded `traffic_offered`/`traffic_phases` from the
+    /// regenerated workload; the snapshot values overwrite them with the
+    /// identical numbers (the workload is a pure function of the pinned
+    /// config).
+    pub fn restore_ckpt(
+        &self,
+        r: &mut StateReader,
+    ) -> Result<(), CkptError> {
+        let n = r.usize()?;
+        if n != self.xseq.len() {
+            return Err(CkptError::Mismatch {
+                what: "injector cursor count".to_string(),
+                expected: self.xseq.len().to_string(),
+                found: n.to_string(),
+            });
+        }
+        for x in &self.xseq {
+            x.store(r.u64()?, Ordering::Relaxed);
+        }
+        self.cores_done.store(r.u32()?, Ordering::Relaxed);
+        {
+            let mut wl = self.wl_barrier.state.lock().unwrap();
+            let participants = r.u32()?;
+            if participants != wl.participants {
+                return Err(CkptError::Mismatch {
+                    what: "workload barrier participants".to_string(),
+                    expected: wl.participants.to_string(),
+                    found: participants.to_string(),
+                });
+            }
+            let waiting = r.usize()?;
+            wl.waiting.clear();
+            for _ in 0..waiting {
+                let c = r.comp_id()?;
+                wl.waiting.push(c);
+            }
+            wl.max_arrival = r.u64()?;
+            wl.generation = r.u64()?;
+        }
+        let p = &self.pdes;
+        for ctr in [
+            &p.cross_events,
+            &p.postponed,
+            &p.tpp_sum,
+            &p.barriers,
+            &p.quanta_skipped,
+            &p.inbox_staged,
+            &p.xbar_staged,
+            &p.xbar_deferred_grants,
+            &p.traffic_offered,
+            &p.traffic_accepted,
+            &p.traffic_retries,
+            &p.traffic_phases,
+        ] {
+            ctr.store(r.u64()?, Ordering::Relaxed);
+        }
+        Ok(())
     }
 }
 

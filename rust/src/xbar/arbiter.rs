@@ -15,6 +15,7 @@
 
 use std::sync::Arc;
 
+use crate::ckpt::io::{CkptError, StateReader, StateWriter};
 use crate::sim::component::{Component, Ctx};
 use crate::sim::event::{prio, EventKind};
 use crate::sim::stats::StatSink;
@@ -90,5 +91,21 @@ impl Component for XbarArbiter {
             .sum();
         out.add_u64("pending", pending);
         self.xbar.stats(out);
+    }
+
+    /// The arbiter owns the crossbar's serialized image: it is the one
+    /// component holding the `XbarState` in elaboration order (sequencers
+    /// share the `Arc` but never serialize it).
+    fn save_state(&self, w: &mut StateWriter) {
+        self.xbar.save_ckpt(w);
+        w.u64(self.granted);
+        w.u64(self.skipped_borders);
+    }
+
+    fn restore_state(&mut self, r: &mut StateReader) -> Result<(), CkptError> {
+        self.xbar.restore_ckpt(r)?;
+        self.granted = r.u64()?;
+        self.skipped_borders = r.u64()?;
+        Ok(())
     }
 }

@@ -35,6 +35,7 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::sync::{Arc, Mutex};
 
+use crate::ckpt::io::{CkptError, StateReader, StateWriter};
 use crate::proto::Packet;
 use crate::sim::ids::CompId;
 use crate::sim::shared::PdesStats;
@@ -356,6 +357,90 @@ impl XbarState {
         out.add_u64("occupancies", self.occupancies.load(Relaxed));
         out.add_u64("busy_rejects", self.busy_rejects.load(Relaxed));
         out.add_u64("lock_rejects", self.lock_rejects.load(Relaxed));
+    }
+
+    /// Checkpoint producer half, called at a quantum border inside the
+    /// quiescent span (strictly after [`XbarState::border_grants`] ran for
+    /// that border): the window stage is empty by construction — only the
+    /// layer occupancies, host-mode wait lists and carried-over pending
+    /// queues are architectural.
+    pub fn save_ckpt(&self, w: &mut StateWriter) {
+        let arb = self.arb.lock().unwrap();
+        assert!(
+            arb.stage.is_empty() && arb.stage_seqs.is_empty(),
+            "xbar checkpoint outside the quiescent span: staged requests present"
+        );
+        w.usize(self.layers.len());
+        for layer in &self.layers {
+            let l = layer.lock().unwrap();
+            w.opt_comp_id(l.occupied_by);
+            w.usize(l.waiting.len());
+            for &c in &l.waiting {
+                w.comp_id(c);
+            }
+        }
+        for q in &arb.pending {
+            w.usize(q.len());
+            for s in q {
+                w.u64(s.req_tick);
+                w.u32(s.sender_dom);
+                w.u64(s.seq);
+                w.usize(s.layer);
+                w.comp_id(s.who);
+                w.packet(&s.pkt);
+            }
+        }
+        w.u64(self.occupancies.load(Relaxed));
+        w.u64(self.busy_rejects.load(Relaxed));
+        w.u64(self.lock_rejects.load(Relaxed));
+    }
+
+    /// Checkpoint restore half for a freshly built crossbar of the same
+    /// topology.
+    pub fn restore_ckpt(&self, r: &mut StateReader) -> Result<(), CkptError> {
+        let n = r.usize()?;
+        if n != self.layers.len() {
+            return Err(CkptError::Mismatch {
+                what: "xbar layer count".to_string(),
+                expected: self.layers.len().to_string(),
+                found: n.to_string(),
+            });
+        }
+        for layer in &self.layers {
+            let mut l = layer.lock().unwrap();
+            l.occupied_by = r.opt_comp_id()?;
+            l.waiting.clear();
+            for _ in 0..r.usize()? {
+                l.waiting.push(r.comp_id()?);
+            }
+        }
+        let mut arb = self.arb.lock().unwrap();
+        let mut work = 0u64;
+        for q in arb.pending.iter_mut() {
+            q.clear();
+            for _ in 0..r.usize()? {
+                let req_tick = r.u64()?;
+                let sender_dom = r.u32()?;
+                let seq = r.u64()?;
+                let layer = r.usize()?;
+                let who = r.comp_id()?;
+                let pkt = r.packet()?;
+                q.push_back(StagedReq {
+                    req_tick,
+                    sender_dom,
+                    seq,
+                    layer,
+                    who,
+                    pkt,
+                });
+                work += 1;
+            }
+        }
+        self.border_work.store(work, Relaxed);
+        self.occupancies.store(r.u64()?, Relaxed);
+        self.busy_rejects.store(r.u64()?, Relaxed);
+        self.lock_rejects.store(r.u64()?, Relaxed);
+        Ok(())
     }
 }
 

@@ -1,0 +1,371 @@
+//! Acceptance gates for border-quiescent checkpoint/restore
+//! (docs/CHECKPOINT.md):
+//!
+//! * checkpoint + restore ≡ the uninterrupted run, bit-identically, over
+//!   platforms × kernels × threads × stealing × IO traffic;
+//! * checkpoint bytes are invariant to the producing kernel (virtual vs
+//!   threaded, any thread count, stealing on or off);
+//! * `--checkpoint-at` mid-window snaps forward to the next border
+//!   (never backward) per the documented snap rule;
+//! * a version bump, a tampered pinned config (spec-hash mismatch) and a
+//!   truncated file are all rejected with typed, offset-carrying errors;
+//! * `ckpt diff` names the first diverging component of a perturbed
+//!   snapshot;
+//! * `sweep run --from-checkpoint` journals bit-identically to cold runs
+//!   of the same points.
+
+mod common;
+
+use std::path::PathBuf;
+
+use parti_sim::ckpt::{self, snap_to_border, CkptError};
+use parti_sim::config::{Mode, RunConfig};
+use parti_sim::cpu::CpuModel;
+use parti_sim::harness::sweep::{expand, run_sweep, SweepOptions};
+use parti_sim::harness::{restore_and_run, run_once, run_to_checkpoint};
+use parti_sim::sched::QuantumPolicy;
+use parti_sim::sim::time::NS;
+use parti_sim::spec::{platforms, sweep};
+
+use common::{assert_bit_identical, assert_journals_equivalent};
+
+/// A unique temp path per test (tests run concurrently in one binary).
+fn tmp(name: &str) -> PathBuf {
+    let p = std::env::temp_dir()
+        .join(format!("parti_ckpt_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+fn cleanup(paths: &[&PathBuf]) {
+    for p in paths {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+/// A windowed-kernel config on a named platform preset.
+fn cfg_for(platform: &str, io_milli: u64, ops: usize) -> RunConfig {
+    let spec = platforms::resolve(platform).unwrap();
+    let mut cfg = RunConfig::for_spec(&spec);
+    cfg.mode = Mode::Virtual;
+    cfg.app = "synthetic".into();
+    cfg.ops_per_core = ops;
+    cfg.quantum = 16 * NS;
+    cfg.system.io_milli = io_milli;
+    cfg
+}
+
+/// Checkpoint `cfg` halfway through its own run; returns the snapshot
+/// file, the frozen border and the uninterrupted reference result.
+fn checkpoint_halfway(
+    cfg: &RunConfig,
+    name: &str,
+) -> (PathBuf, u64, parti_sim::pdes::RunResult) {
+    let reference = run_once(cfg).unwrap();
+    let at = reference.sim_ticks / 2;
+    assert!(at > 0, "{name}: degenerate run");
+    let file = tmp(name);
+    let (_, border) = run_to_checkpoint(cfg, at, &file).unwrap();
+    let border = border
+        .unwrap_or_else(|| panic!("{name}: run ended before tick {at}"));
+    assert!(border >= at, "{name}: snap rule never goes backward");
+    (file, border, reference)
+}
+
+#[test]
+fn restore_matches_uninterrupted_across_matrix() {
+    for (platform, ops) in
+        [("fig4-2", 192usize), ("ring-16", 96), ("mesh-64", 16)]
+    {
+        for io_milli in [0u64, 5] {
+            let base = cfg_for(platform, io_milli, ops);
+            let name = format!("matrix_{platform}_{io_milli}");
+            let (file, _, reference) = checkpoint_halfway(&base, &name);
+            let bytes = std::fs::read(&file).unwrap();
+            let snap = ckpt::read_snapshot(&bytes).unwrap();
+
+            // Virtual restore.
+            let (outcome, _) = restore_and_run(&snap, &base, None).unwrap();
+            assert_bit_identical(
+                &reference,
+                &outcome.into_finished(),
+                &format!("{platform}/io={io_milli}/virtual"),
+            );
+
+            // Threaded restores across the adversarial matrix — the
+            // producing kernel was virtual, so this also crosses kernels.
+            for &(threads, steal) in common::FULL_MATRIX {
+                let mut free = base.clone();
+                free.mode = Mode::Parallel;
+                free.threads = threads;
+                free.steal = steal;
+                let (outcome, _) =
+                    restore_and_run(&snap, &free, None).unwrap();
+                assert_bit_identical(
+                    &reference,
+                    &outcome.into_finished(),
+                    &format!(
+                        "{platform}/io={io_milli}/threads={threads}\
+                         /steal={steal}"
+                    ),
+                );
+            }
+            cleanup(&[&file]);
+        }
+    }
+}
+
+#[test]
+fn checkpoint_bytes_are_producer_kernel_invariant() {
+    let base = cfg_for("fig4-2", 5, 256);
+    let reference = run_once(&base).unwrap();
+    let at = reference.sim_ticks / 2;
+    let fv = tmp("producer_virtual");
+    let (_, bv) = run_to_checkpoint(&base, at, &fv).unwrap();
+    let bv = bv.expect("checkpoint taken");
+    let golden = std::fs::read(&fv).unwrap();
+
+    for &(threads, steal) in common::FULL_MATRIX {
+        let mut cfg = base.clone();
+        cfg.mode = Mode::Parallel;
+        cfg.threads = threads;
+        cfg.steal = steal;
+        let f = tmp(&format!("producer_t{threads}_s{steal}"));
+        let (_, b) = run_to_checkpoint(&cfg, at, &f).unwrap();
+        assert_eq!(b, Some(bv), "threads={threads}/steal={steal}: border");
+        assert_eq!(
+            std::fs::read(&f).unwrap(),
+            golden,
+            "threads={threads}/steal={steal}: checkpoint bytes must not \
+             fingerprint the producing kernel"
+        );
+        cleanup(&[&f]);
+    }
+    cleanup(&[&fv]);
+}
+
+#[test]
+fn checkpoint_at_snaps_forward_to_next_border() {
+    let base = cfg_for("fig4-2", 0, 128);
+    let q = base.quantum;
+
+    // Mid-window request: forward to the *next* border, never backward.
+    let f1 = tmp("snap_mid");
+    let (_, border) = run_to_checkpoint(&base, q + 1, &f1).unwrap();
+    assert_eq!(border, Some(snap_to_border(q + 1, q)));
+    assert_eq!(border, Some(2 * q));
+
+    // An exact border is its own snap target.
+    let f2 = tmp("snap_exact");
+    let (_, border) = run_to_checkpoint(&base, q, &f2).unwrap();
+    assert_eq!(border, Some(q));
+
+    // Tick 0 still executes one window (a snapshot of a never-run
+    // machine would just be elaboration).
+    let f3 = tmp("snap_zero");
+    let (_, border) = run_to_checkpoint(&base, 0, &f3).unwrap();
+    assert_eq!(border, Some(q));
+    cleanup(&[&f1, &f2, &f3]);
+}
+
+#[test]
+fn adaptive_policy_checkpoint_roundtrips() {
+    for policy in
+        [QuantumPolicy::Horizon, QuantumPolicy::Hybrid { max_leap: 4 }]
+    {
+        let mut base = cfg_for("fig4-2", 0, 128);
+        base.quantum_policy = policy;
+        let name = format!("policy_{policy:?}");
+        let (file, _, reference) = checkpoint_halfway(&base, &name);
+        let bytes = std::fs::read(&file).unwrap();
+        let snap = ckpt::read_snapshot(&bytes).unwrap();
+        let (outcome, _) = restore_and_run(&snap, &base, None).unwrap();
+        assert_bit_identical(&reference, &outcome.into_finished(), &name);
+        cleanup(&[&file]);
+    }
+}
+
+#[test]
+fn restored_run_can_checkpoint_again() {
+    // Re-freezing a restored run at T2 must produce the same bytes as
+    // freezing a cold run at T2 — checkpoints compose.
+    let base = cfg_for("fig4-2", 0, 192);
+    let reference = run_once(&base).unwrap();
+    let (t1, t2) = (reference.sim_ticks / 3, 2 * reference.sim_ticks / 3);
+
+    let cold2 = tmp("rechkpt_cold");
+    let (_, b2) = run_to_checkpoint(&base, t2, &cold2).unwrap();
+    assert!(b2.is_some());
+
+    let first = tmp("rechkpt_first");
+    let (_, b1) = run_to_checkpoint(&base, t1, &first).unwrap();
+    assert!(b1.is_some());
+    let snap = ckpt::read_snapshot(&std::fs::read(&first).unwrap()).unwrap();
+    let (outcome, eff) = restore_and_run(&snap, &base, Some(t2)).unwrap();
+    match outcome {
+        parti_sim::pdes::RunOutcome::Checkpointed {
+            machine, border, ..
+        } => {
+            assert_eq!(Some(border), b2, "same snap target");
+            let again =
+                ckpt::snapshot_machine(&machine, &eff, border).unwrap();
+            assert_eq!(
+                again,
+                std::fs::read(&cold2).unwrap(),
+                "re-checkpoint == cold checkpoint at the same border"
+            );
+        }
+        parti_sim::pdes::RunOutcome::Finished(_) => {
+            panic!("resumed run finished before its re-checkpoint tick")
+        }
+    }
+    cleanup(&[&cold2, &first]);
+}
+
+#[test]
+fn run_finishing_first_writes_no_checkpoint() {
+    let base = cfg_for("fig4-2", 0, 32);
+    let file = tmp("never_reached");
+    let (result, border) =
+        run_to_checkpoint(&base, u64::MAX / 2, &file).unwrap();
+    assert!(border.is_none(), "run terminates before the requested tick");
+    assert!(!file.exists(), "no partial file left behind");
+    let reference = run_once(&base).unwrap();
+    assert_bit_identical(&reference, &result, "finished-first run");
+}
+
+#[test]
+fn serial_and_atomic_checkpoints_are_rejected() {
+    let mut serial = cfg_for("fig4-2", 0, 32);
+    serial.mode = Mode::Serial;
+    let err = match run_to_checkpoint(&serial, 1, &tmp("reject_serial")) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("serial checkpoint must be rejected"),
+    };
+    assert!(err.contains("windowed"), "points at the kernel: {err}");
+
+    let mut atomic = cfg_for("fig4-2", 0, 32);
+    atomic.cpu_model = CpuModel::Atomic;
+    atomic.mode = Mode::Serial;
+    let err = match run_to_checkpoint(&atomic, 1, &tmp("reject_atomic")) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("atomic checkpoint must be rejected"),
+    };
+    assert!(err.contains("timing"), "points at the CPU model: {err}");
+}
+
+#[test]
+fn version_hash_and_truncation_are_rejected() {
+    let base = cfg_for("fig4-2", 0, 64);
+    let (file, _, _) = checkpoint_halfway(&base, "reject_matrix");
+    let golden = std::fs::read(&file).unwrap();
+    assert!(ckpt::read_snapshot(&golden).is_ok());
+
+    // Version bump: byte 8 is the little-endian low byte of `version`.
+    let mut bumped = golden.clone();
+    bumped[8] += 1;
+    match ckpt::read_snapshot(&bumped) {
+        Err(CkptError::Mismatch { what, .. }) => {
+            assert!(what.contains("version"), "{what}")
+        }
+        other => panic!("expected version mismatch, got {other:?}"),
+    }
+
+    // Tampered pinned config: the header hash covers spec + config, so
+    // flipping one digit of `seed = 42` must trip the spec-hash check.
+    let mut tampered = golden.clone();
+    let needle = b"seed = ";
+    let pos = tampered
+        .windows(needle.len())
+        .position(|w| w == needle)
+        .expect("pinned config embeds the seed");
+    tampered[pos + needle.len()] ^= 1;
+    match ckpt::read_snapshot(&tampered) {
+        Err(CkptError::Mismatch { what, .. }) => {
+            assert!(what.contains("spec hash"), "{what}")
+        }
+        other => panic!("expected spec-hash mismatch, got {other:?}"),
+    }
+
+    // Truncation anywhere fails with the absolute byte offset.
+    for cut in [golden.len() - 5, golden.len() / 2, 20] {
+        match ckpt::read_snapshot(&golden[..cut]) {
+            Err(CkptError::Truncated { offset, wanted }) => {
+                assert!(offset <= cut, "offset {offset} inside the file");
+                assert!(wanted > 0);
+            }
+            other => panic!("cut at {cut}: expected truncation, got {other:?}"),
+        }
+    }
+    cleanup(&[&file]);
+}
+
+#[test]
+fn diff_names_first_diverging_component() {
+    let base = cfg_for("fig4-2", 0, 64);
+    let (file, _, _) = checkpoint_halfway(&base, "diff_perturb");
+    let golden = std::fs::read(&file).unwrap();
+
+    assert!(
+        ckpt::diff_snapshots(&golden, &golden).unwrap().is_none(),
+        "identical files diff clean"
+    );
+
+    // Flip the first byte of some component's state record; the report
+    // must name that component and the in-record byte offset.
+    let snap = ckpt::read_snapshot(&golden).unwrap();
+    let victim = snap
+        .comps
+        .iter()
+        .find(|c| !c.state.is_empty())
+        .expect("some component carries state");
+    let mut bad = golden.clone();
+    bad[victim.state_off] ^= 0xff;
+    let report = ckpt::diff_snapshots(&golden, &bad)
+        .unwrap()
+        .expect("perturbed snapshot diverges");
+    assert!(
+        report.contains(&victim.name),
+        "report names `{}`: {report}",
+        victim.name
+    );
+    assert!(
+        report.contains("state differs at byte 0 of"),
+        "report carries the byte offset: {report}"
+    );
+    cleanup(&[&file]);
+}
+
+#[test]
+fn sweep_forks_from_checkpoint_identically() {
+    let spec = sweep::resolve("quick").unwrap();
+    let points = expand(&spec).unwrap();
+    let donor = points
+        .iter()
+        .find(|p| p.cfg.mode != Mode::Serial)
+        .expect("quick has a windowed point");
+    let reference = run_once(&donor.cfg).unwrap();
+    let ck = tmp("sweep_donor");
+    let (_, border) =
+        run_to_checkpoint(&donor.cfg, reference.sim_ticks / 2, &ck).unwrap();
+    assert!(border.is_some(), "donor checkpoint taken");
+
+    let (cold_j, fork_j) = (tmp("sweep_cold"), tmp("sweep_forked"));
+    let cold = run_sweep(
+        &spec,
+        &SweepOptions { journal: cold_j.clone(), ..Default::default() },
+    )
+    .unwrap();
+    let forked = run_sweep(
+        &spec,
+        &SweepOptions {
+            journal: fork_j.clone(),
+            from_checkpoint: Some(ck.clone()),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(cold.ran, forked.ran, "same point coverage");
+    assert_journals_equivalent(&cold_j, &fork_j, "forked sweep vs cold");
+    cleanup(&[&ck, &cold_j, &fork_j]);
+}

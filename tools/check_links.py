@@ -24,6 +24,7 @@ DEFAULT_FILES = [
     "DESIGN.md",
     "ROADMAP.md",
     "docs/README.md",
+    "docs/CHECKPOINT.md",
     "docs/CLI.md",
     "docs/DETERMINISM.md",
     "docs/PERF.md",
