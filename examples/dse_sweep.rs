@@ -10,7 +10,9 @@
 //! `l2-capacity`); part 2 sweeps the interconnect topology — star vs
 //! ring vs mesh — at fixed caches (fabric axis, preset `fabric-4core`);
 //! part 3 sweeps the synthetic [`TrafficSpec`] patterns on a fixed ring
-//! fabric (workload axis, preset `ring-traffic`, docs/TRAFFIC.md).
+//! fabric (workload axis, preset `ring-traffic`, docs/TRAFFIC.md);
+//! part 4 sweeps the staged O3 pipeline's width × ROB capacity (cpu
+//! axes, preset `o3-capacity`, docs/O3.md).
 //!
 //! The same sweeps run from the CLI, journaled and resumable:
 //!
@@ -103,6 +105,42 @@ fn main() -> anyhow::Result<()> {
          them; the whole part is one `sweep run --spec ring-traffic`, \
          journaled, shardable with --shard i/N and resumable with \
          --resume)"
+    );
+
+    // ---- Part 4: O3 pipeline capacity (cpu axes) --------------------
+    // The staged O3 pipeline's geometry is a sweepable axis pair
+    // (docs/O3.md §7): width × ROB size on hotspot traffic. The point
+    // ids grow +w/+rob tokens because the axes are swept, and the
+    // journal's pipeline counters (issued, rob_full_stalls,
+    // rob_occupancy_sum) say *why* a geometry is slow, not just that
+    // it is.
+    println!(
+        "\nDSE 4: O3 width x ROB capacity (sweep `o3-capacity`), \
+         4-core star, hotspot traffic\n"
+    );
+    let recs = run_preset("o3-capacity")?;
+    anyhow::ensure!(recs.len() == 6, "width{{1,2,4}} x rob{{8,64}} is 6 points");
+    for r in &recs {
+        anyhow::ensure!(
+            r.id.contains("+w") && r.id.contains("+rob"),
+            "swept cpu axes must stamp the point id, got `{}`",
+            r.id
+        );
+        anyhow::ensure!(
+            r.traffic_accepted == r.traffic_offered,
+            "capacity point `{}` did not complete",
+            r.id
+        );
+        anyhow::ensure!(
+            r.issued >= r.traffic_offered,
+            "every offered op passes the issue stage (point `{}`)",
+            r.id
+        );
+    }
+    println!(
+        "\n(mean ROB occupancy per point is rob_occupancy_sum / \
+         (sim_ticks x cores) — a saturated ROB means rob_size is the \
+         binding constraint, docs/O3.md)"
     );
     Ok(())
 }

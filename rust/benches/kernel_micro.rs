@@ -15,6 +15,7 @@ use bench_util::{bench, measure};
 use std::sync::Mutex;
 
 use parti_sim::config::RunConfig;
+use parti_sim::cpu::CpuModel;
 use parti_sim::harness::{make_workload, run_with_workload};
 use parti_sim::mem::{CacheArray, LineState};
 use parti_sim::pdes::HostModel;
@@ -324,6 +325,51 @@ fn main() {
         }
     }
     json = json.obj("traffic_pattern_16_core", traffic_rows);
+
+    // CPU model cost on the 16-core ring (docs/O3.md): the staged O3
+    // pipeline against the in-order Minor baseline on the same miss-heavy
+    // traffic. O3's overlapped misses shrink sim_ticks (the model's whole
+    // point — gated by rust/tests/o3.rs); this row tracks what the extra
+    // pipeline bookkeeping costs the kernel in wall-clock per event, and
+    // carries the structural-stall counter so a geometry regression (a
+    // default that suddenly starves dispatch) shows up in the trajectory.
+    let mut cpu_rows = JsonObj::new();
+    {
+        let ring = platforms::preset("ring-16").expect("ring-16 preset");
+        for (name, model) in [("minor", CpuModel::Minor), ("o3", CpuModel::O3)]
+        {
+            let mut cfg = RunConfig::for_spec(&ring);
+            cfg.cpu_model = model;
+            cfg.traffic = Some("uniform-random".to_string());
+            cfg.ops_per_core = 512;
+            cfg.mode = parti_sim::config::Mode::Virtual;
+            let w = make_workload(&cfg).expect("workload");
+            let mut last = None;
+            let (m, lo, hi) = measure(5, || {
+                last = Some(run_with_workload(&cfg, &w).unwrap());
+            });
+            let r = last.expect("measured at least once");
+            bench_util::report(
+                &format!("virtual 16-core cpu-model[{name}]"),
+                m,
+                lo,
+                hi,
+            );
+            println!(
+                "  {name}: sim_ticks={} rob_full_stalls={} events={}",
+                r.sim_ticks, r.pdes.rob_full_stalls, r.events
+            );
+            cpu_rows = cpu_rows.obj(
+                name,
+                JsonObj::new()
+                    .u64("median_ns", m as u64)
+                    .u64("sim_ticks", r.sim_ticks)
+                    .u64("rob_full_stalls", r.pdes.rob_full_stalls)
+                    .f64("events_per_sec", r.events_per_sec()),
+            );
+        }
+    }
+    json = json.obj("o3_pipeline_16_core", cpu_rows);
 
     // Adaptive quantum on the same 16-domain configuration: barrier count
     // and wall-clock, fixed vs horizon (results are bit-identical by the

@@ -14,8 +14,8 @@
 //! [`SystemSpec`]: crate::spec::SystemSpec
 
 use crate::ckpt::format::{
-    config_from_snapshot, read_record, spec_hash, tag_name, Header, R_COMP,
-    R_CONFIG, R_DOMAIN, R_END, R_SHARED, R_SPEC,
+    config_from_snapshot, read_record, spec_hash, tag_name, Header, FLAG_O3,
+    R_COMP, R_CONFIG, R_DOMAIN, R_END, R_SHARED, R_SPEC,
 };
 use crate::ckpt::io::{CkptError, StateReader};
 use crate::config::RunConfig;
@@ -265,7 +265,7 @@ pub fn apply(snap: &Snapshot, machine: &mut Machine) -> Result<(), CkptError> {
     }
 
     let mut sr = StateReader::with_base(&snap.shared, snap.shared_off);
-    shared.restore_ckpt(&mut sr)?;
+    shared.restore_ckpt(&mut sr, snap.header.flags & FLAG_O3 != 0)?;
     expect_drained(&sr, "shared-state record")?;
 
     for img in &snap.domains {

@@ -19,8 +19,8 @@
 //! [`CompId`]: crate::sim::ids::CompId
 
 use crate::ckpt::format::{
-    pinned_text, spec_hash, write_record, Header, R_COMP, R_CONFIG, R_DOMAIN,
-    R_END, R_SHARED, R_SPEC, VERSION,
+    pinned_text, spec_hash, write_record, Header, FLAG_O3, R_COMP, R_CONFIG,
+    R_DOMAIN, R_END, R_SHARED, R_SPEC, VERSION,
 };
 use crate::ckpt::io::{CkptError, StateWriter};
 use crate::config::RunConfig;
@@ -61,9 +61,12 @@ pub fn snapshot_machine(
 
     let spec_toml = cfg.spec().to_toml();
     let config_text = pinned_text(cfg);
+    // O3 runs flag their larger frozen state (extended shared record,
+    // ROB/LSQ-carrying component records) so old readers reject cleanly.
+    let o3 = cfg.cpu_model == crate::cpu::CpuModel::O3;
     let header = Header {
         version: VERSION,
-        flags: 0,
+        flags: if o3 { FLAG_O3 } else { 0 },
         spec_hash: spec_hash(&spec_toml, &config_text),
         tick: border,
         quantum: shared.quantum,
@@ -77,7 +80,7 @@ pub fn snapshot_machine(
     write_record(&mut w, R_SPEC, spec_toml.as_bytes());
 
     let mut sw = StateWriter::new();
-    shared.save_ckpt(&mut sw);
+    shared.save_ckpt(&mut sw, o3);
     write_record(&mut w, R_SHARED, &sw.into_bytes());
 
     for d in &machine.domains {

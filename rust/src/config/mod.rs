@@ -11,7 +11,7 @@ use crate::sched::{
     BucketShape, InboxOrder, QuantumPolicy, QueueKind, RunPolicy, XbarArb,
 };
 use crate::sim::time::{Tick, NS};
-use crate::spec::{Interconnect, SystemSpec};
+use crate::spec::{CpuSpec, Interconnect, SystemSpec};
 
 /// Cache geometry + latency.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -49,6 +49,9 @@ pub struct SystemConfig {
     pub interconnect: Interconnect,
     /// Line-interleaved DRAM channels behind the HN-F.
     pub mem_channels: usize,
+    /// O3 pipeline geometry (see [`crate::spec::CpuSpec`]; ignored by
+    /// non-O3 models).
+    pub cpu_spec: CpuSpec,
 }
 
 impl Default for SystemConfig {
@@ -76,6 +79,7 @@ impl Default for SystemConfig {
             io_milli: 0,
             interconnect: Interconnect::Star,
             mem_channels: 1,
+            cpu_spec: CpuSpec::default(),
         }
     }
 }
@@ -259,6 +263,12 @@ impl SystemConfig {
         kv("interconnect", ic);
         kv("mesh_cols", cols);
         kv("mem_channels", c.mem_channels as u64);
+        kv("cpu_width", c.cpu_spec.width as u64);
+        kv("cpu_rob_size", c.cpu_spec.rob_size as u64);
+        kv("cpu_iq_size", c.cpu_spec.iq_size as u64);
+        kv("cpu_lsq_size", c.cpu_spec.lsq_size as u64);
+        kv("cpu_fetch_buf", c.cpu_spec.fetch_buf as u64);
+        kv("cpu_mshrs", c.cpu_spec.mshrs as u64);
         s
     }
 
@@ -299,6 +309,12 @@ impl SystemConfig {
                 "interconnect" => ic_code = v,
                 "mesh_cols" => mesh_cols = v as usize,
                 "mem_channels" => c.mem_channels = v as usize,
+                "cpu_width" => c.cpu_spec.width = v as usize,
+                "cpu_rob_size" => c.cpu_spec.rob_size = v as usize,
+                "cpu_iq_size" => c.cpu_spec.iq_size = v as usize,
+                "cpu_lsq_size" => c.cpu_spec.lsq_size = v as usize,
+                "cpu_fetch_buf" => c.cpu_spec.fetch_buf = v as usize,
+                "cpu_mshrs" => c.cpu_spec.mshrs = v as usize,
                 _ => {
                     let (p, field) = k
                         .split_once('_')

@@ -4,15 +4,24 @@
 //! |------------|--------------|----------|------|----------|
 //! | [`KvmCpu`] | n/a (native) | n/a      | ✗    | ffwd only|
 //! | [`AtomicCpu`] | none      | atomic   | ✗    | serial   |
-//! | [`TimingCpu`] Minor | in-order | timing | ✓  | **this work** |
-//! | [`TimingCpu`] O3 | out-of-order | timing | ✓ | **this work** |
+//! | [`TimingCpu`] (Minor) | in-order, 1 outstanding | timing | ✓ | **this work** |
+//! | [`O3Cpu`] | staged out-of-order (ROB/IQ/LSQ) | timing | ✓ | **this work** |
+//!
+//! Minor is the flat one-access-at-a-time issue loop; O3 is the staged
+//! pipeline of docs/O3.md — fetch/dispatch/issue/writeback/commit per
+//! core cycle with many memory requests in flight per sequencer. At the
+//! degenerate geometry (every [`crate::spec::CpuSpec`] knob = 1) O3
+//! issues the identical memory-request stream as Minor, tick for tick —
+//! `tests/o3.rs` gates that equivalence.
 
 pub mod atomic;
 pub mod kvm;
+pub mod o3;
 pub mod timing;
 
 pub use atomic::{AtomicCpu, AtomicLatencies, AtomicMem};
 pub use kvm::KvmCpu;
+pub use o3::O3Cpu;
 pub use timing::{CpuParams, PipelineKind, TimingCpu};
 
 /// Which CPU model drives the cores of a run.

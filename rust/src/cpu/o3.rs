@@ -1,0 +1,898 @@
+//! The staged out-of-order pipeline model (docs/O3.md, DESIGN.md §12).
+//!
+//! [`O3Cpu`] replaces the flat issue loop of [`super::TimingCpu`] for
+//! `--cpu o3`: every trace op flows through explicit stages — **fetch**
+//! (into a small fetch buffer), **dispatch** (in-order, allocates a
+//! reorder-buffer and issue-queue slot, pays the compute gap, takes
+//! software barriers and blocking ifetches), **issue** (oldest-first out
+//! of the issue queue into a split load/store queue, with store-to-load
+//! forwarding), **writeback** (Ruby responses mark entries done and free
+//! their LSQ slot) and **commit** (in-order retirement from the ROB
+//! head). Stages advance inside one core cycle until a fixpoint, so a
+//! dependence-free op can flow fetch→dispatch→issue in the cycle it
+//! arrives — which is exactly what makes the `width=1, rob=1, iq=1,
+//! lsq=1, fetch_buf=1` degeneracy gate hold: the minimal O3 issues every
+//! memory request on the same tick as the Minor pipeline
+//! (`tests/o3.rs`).
+//!
+//! Memory-level parallelism is the point: up to `lsq_size` loads and
+//! `lsq_size` stores can be in flight at once through the sequencer
+//! (whose MSHR-style cap is `CpuSpec::mshrs`,
+//! [`crate::ruby::sequencer`]), and compute gaps of younger ops overlap
+//! older misses. Same-address ops stay ordered: a load forwards from the
+//! youngest older in-ROB store to its address (never issuing a stale
+//! read), and a store waits until every older same-address op has
+//! completed. IO-window ops ([`crate::xbar`]) never forward and issue in
+//! strict program order among themselves, so device side effects happen
+//! exactly as the trace orders them.
+//!
+//! Everything here is a pure function of the simulation — stall
+//! counters, the occupancy integral and the forwarding decisions are
+//! deterministic, so threaded ≡ virtual bit-identity holds with all
+//! counters included, and the whole pipeline state (ROB/IQ/LSQ entries,
+//! in-flight map, gap cursor) freezes into the `FLAG_O3` checkpoint
+//! format (docs/CHECKPOINT.md §3).
+
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::Arc;
+
+use crate::ckpt::io::{CkptError, StateReader, StateWriter};
+use crate::proto::{Cmd, Packet};
+use crate::sim::component::{Component, Ctx};
+use crate::sim::event::{prio, EventKind};
+use crate::sim::ids::CompId;
+use crate::sim::shared::BarrierOutcome;
+use crate::sim::stats::StatSink;
+use crate::sim::time::{Clock, Tick};
+use crate::spec::CpuSpec;
+use crate::workload::CoreTrace;
+
+use super::timing::CpuParams;
+use crate::ruby::sequencer::IFETCH_SIZE;
+
+/// Low txn-id bit marking instruction fetches (same scheme as
+/// [`super::TimingCpu`]).
+const IFETCH_BIT: u64 = 1;
+
+/// Lifecycle of one reorder-buffer entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum OpState {
+    /// Dispatched, sitting in the issue queue.
+    WaitIssue,
+    /// Issued to the sequencer, waiting for the Ruby response.
+    WaitResp,
+    /// Completed (response received or store-to-load forwarded); retires
+    /// when it reaches the ROB head.
+    Done,
+}
+
+impl OpState {
+    fn to_u8(self) -> u8 {
+        match self {
+            OpState::WaitIssue => 0,
+            OpState::WaitResp => 1,
+            OpState::Done => 2,
+        }
+    }
+
+    fn from_u8(v: u8, off: usize) -> Result<Self, CkptError> {
+        Ok(match v {
+            0 => OpState::WaitIssue,
+            1 => OpState::WaitResp,
+            2 => OpState::Done,
+            _ => {
+                return Err(CkptError::Corrupt {
+                    offset: off,
+                    what: format!("bad O3 op state {v}"),
+                })
+            }
+        })
+    }
+}
+
+/// One in-flight op in the reorder buffer (kept in program order, so the
+/// deque is sorted by `idx`).
+#[derive(Clone, Debug)]
+struct RobEntry {
+    /// Trace index (unique — the writeback key).
+    idx: usize,
+    /// Effective address after IO substitution.
+    addr: u64,
+    is_store: bool,
+    /// Routed through the crossbar IO window (never forwards, strict
+    /// program order among IO ops).
+    is_io: bool,
+    /// Store payload from the trace (the forwarding source value).
+    value: u64,
+    state: OpState,
+    /// Load satisfied by store-to-load forwarding (no LSQ slot, no
+    /// memory request).
+    forwarded: bool,
+}
+
+/// What one dispatch attempt did.
+enum Dispatch {
+    /// Dispatched an op or sent a blocking ifetch.
+    Progress,
+    /// Head op cannot move this cycle (capacity, gap, drain, ...).
+    Blocked,
+    /// Entered a barrier wait — the tick must stop immediately.
+    Parked,
+}
+
+/// The staged out-of-order core (module docs above; knobs in
+/// [`CpuSpec`], ifetch/IO plumbing shared with [`CpuParams`]).
+pub struct O3Cpu {
+    name: String,
+    core: u16,
+    clock: Clock,
+    /// Pipeline geometry (width, rob/iq/lsq/fetch_buf sizes).
+    spec: CpuSpec,
+    /// Shared ifetch/IO knobs (`lsq_size`/`width` in here are unused —
+    /// [`CpuSpec`] owns the geometry).
+    params: CpuParams,
+    seq: CompId,
+    trace: Arc<CoreTrace>,
+    barrier_every: usize,
+    /// Private code region for ifetches.
+    code_base: u64,
+    code_size: u64,
+
+    /// Next trace index the fetch stage will buffer.
+    fetch_idx: usize,
+    /// Fetched-but-not-dispatched trace indices (≤ `fetch_buf`).
+    fetch_q: VecDeque<usize>,
+    /// Reorder buffer in program order (≤ `rob_size`).
+    rob: VecDeque<RobEntry>,
+    /// Entries in [`OpState::WaitIssue`] (≤ `iq_size`).
+    iq_used: usize,
+    /// Loads in flight to memory (≤ `lsq_size`).
+    lq_used: usize,
+    /// Stores in flight to memory (≤ `lsq_size`).
+    sq_used: usize,
+    /// Memory requests in flight, including ifetches.
+    outstanding: usize,
+    /// Unpaid compute gap of the next dispatch candidate, in cycles.
+    gap_left: u64,
+    /// Absolute tick the current gap payment completes (dispatch may not
+    /// proceed earlier even if a response wakes the core mid-gap).
+    gap_ready_at: Tick,
+    next_txn: u64,
+    /// In-flight data ops: txn -> trace index (the writeback key).
+    inflight_idx: rustc_hash::FxHashMap<u64, usize>,
+    fetches: u64,
+    /// A blocking ifetch is in flight — dispatch stalls until it lands.
+    ifetch_pending: bool,
+    waiting_barrier: bool,
+    last_barrier_idx: usize,
+    /// Earliest scheduled-but-unfired CpuTick (later stale events may
+    /// remain queued; spurious wake-ups are idempotent).
+    pending_tick: Option<Tick>,
+    done: bool,
+
+    /// Cycle the per-cycle width budgets below belong to.
+    cur_tick: Tick,
+    dispatched_t: usize,
+    issued_t: usize,
+    committed_t: usize,
+    /// Per-invocation once-only stall notes (reset every tick call).
+    noted_rob: bool,
+    noted_iq: bool,
+    noted_lsq: bool,
+    /// Last tick the ROB-occupancy integral was folded up to.
+    occ_last: Tick,
+
+    // stats (Minor-compatible names first, then the O3-only taxonomy)
+    committed_ops: u64,
+    loads: u64,
+    stores: u64,
+    lsq_stalls: u64,
+    barriers_hit: u64,
+    pub load_checksum: u64,
+    /// Loads whose observed value differed from `trace.expected`.
+    pub value_mismatches: u64,
+    finish_tick: Tick,
+    issued_ops: u64,
+    squashed: u64,
+    rob_full_stalls: u64,
+    iq_full_stalls: u64,
+    /// Time integral of ROB occupancy (entries × ticks).
+    rob_occupancy_sum: u64,
+    stl_forwards: u64,
+}
+
+impl O3Cpu {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: String,
+        core: u16,
+        clock: Clock,
+        spec: CpuSpec,
+        params: CpuParams,
+        seq: CompId,
+        trace: Arc<CoreTrace>,
+        barrier_every: usize,
+        code_base: u64,
+        code_size: u64,
+    ) -> Self {
+        let gap0 = trace.gap.first().copied().unwrap_or(0) as u64;
+        O3Cpu {
+            name,
+            core,
+            clock,
+            spec,
+            params,
+            seq,
+            trace,
+            barrier_every,
+            code_base,
+            code_size,
+            fetch_idx: 0,
+            fetch_q: VecDeque::new(),
+            rob: VecDeque::new(),
+            iq_used: 0,
+            lq_used: 0,
+            sq_used: 0,
+            outstanding: 0,
+            gap_left: gap0,
+            gap_ready_at: 0,
+            next_txn: 0,
+            inflight_idx: rustc_hash::FxHashMap::default(),
+            fetches: 0,
+            ifetch_pending: false,
+            waiting_barrier: false,
+            last_barrier_idx: usize::MAX,
+            pending_tick: None,
+            done: false,
+            cur_tick: 0,
+            dispatched_t: 0,
+            issued_t: 0,
+            committed_t: 0,
+            noted_rob: false,
+            noted_iq: false,
+            noted_lsq: false,
+            occ_last: 0,
+            committed_ops: 0,
+            loads: 0,
+            stores: 0,
+            lsq_stalls: 0,
+            barriers_hit: 0,
+            load_checksum: 0,
+            value_mismatches: 0,
+            finish_tick: 0,
+            issued_ops: 0,
+            squashed: 0,
+            rob_full_stalls: 0,
+            iq_full_stalls: 0,
+            rob_occupancy_sum: 0,
+            stl_forwards: 0,
+        }
+    }
+
+    fn alloc_txn(&mut self, ifetch: bool) -> u64 {
+        let id = ((self.core as u64) << 48)
+            | (self.next_txn << 1)
+            | if ifetch { IFETCH_BIT } else { 0 };
+        self.next_txn += 1;
+        id
+    }
+
+    /// Request a CpuTick at `at` (clamped to now). Only an *earlier*
+    /// request than the pending one schedules — later stale events stay
+    /// queued and wake the core spuriously, which is harmless.
+    fn want_tick_at(&mut self, ctx: &mut Ctx, at: Tick) {
+        let at = at.max(ctx.now());
+        if self.pending_tick.map_or(true, |p| at < p) {
+            self.pending_tick = Some(at);
+            ctx.schedule_abs_prio(
+                at,
+                ctx.self_id(),
+                EventKind::CpuTick,
+                prio::CPU,
+            );
+        }
+    }
+
+    /// Fold the ROB-occupancy integral up to `now` (call before any ROB
+    /// length change).
+    fn occ_accrue(&mut self, ctx: &mut Ctx) {
+        let now = ctx.now();
+        let dt = now - self.occ_last;
+        if dt > 0 && !self.rob.is_empty() {
+            let add = (self.rob.len() as u64).wrapping_mul(dt);
+            self.rob_occupancy_sum = self.rob_occupancy_sum.wrapping_add(add);
+            ctx.shared().pdes.rob_occupancy_sum.fetch_add(add, Relaxed);
+        }
+        self.occ_last = now;
+    }
+
+    fn send_mem(
+        &mut self,
+        ctx: &mut Ctx,
+        addr: u64,
+        store: bool,
+        value: u64,
+        ifetch: bool,
+    ) -> u64 {
+        let txn = self.alloc_txn(ifetch);
+        let pkt = Packet::request(
+            txn,
+            if store { Cmd::WriteReq } else { Cmd::ReadReq },
+            addr,
+            if ifetch { IFETCH_SIZE } else { 64 },
+            value,
+            ctx.self_id(),
+            self.core,
+            ctx.now(),
+        );
+        self.outstanding += 1;
+        ctx.schedule(0, self.seq, EventKind::MemReq { pkt });
+        txn
+    }
+
+    fn finish(&mut self, ctx: &mut Ctx) {
+        if !self.done {
+            self.done = true;
+            self.finish_tick = ctx.now();
+            ctx.core_done();
+        }
+    }
+
+    fn note_lsq_stall(&mut self, ctx: &mut Ctx) {
+        if !self.noted_lsq {
+            self.noted_lsq = true;
+            self.lsq_stalls += 1;
+            // Offered load the memory system pushed back on — paired
+            // with the lsq_stalls counter so the retries ≡ Σ lsq_stalls
+            // mirror holds for every CPU model (tests/traffic.rs).
+            ctx.shared().pdes.traffic_retries.fetch_add(1, Relaxed);
+        }
+    }
+
+    /// In-order retirement from the ROB head, up to `width` per cycle.
+    fn commit(&mut self, ctx: &mut Ctx) -> bool {
+        let mut progress = false;
+        while self.committed_t < self.spec.width {
+            match self.rob.front() {
+                Some(e) if e.state == OpState::Done => {}
+                _ => break,
+            }
+            self.occ_accrue(ctx);
+            self.rob.pop_front();
+            self.committed_t += 1;
+            self.committed_ops += 1;
+            // One offered trace op accepted to completion (the
+            // offered/accepted pair is the saturation signal).
+            ctx.shared().pdes.traffic_accepted.fetch_add(1, Relaxed);
+            progress = true;
+        }
+        progress
+    }
+
+    /// Oldest-first issue out of the issue queue, up to `width` per
+    /// cycle, respecting same-address ordering and LSQ capacity.
+    fn issue(&mut self, ctx: &mut Ctx) -> bool {
+        let mut progress = false;
+        let mut k = 0;
+        while k < self.rob.len() && self.issued_t < self.spec.width {
+            if self.rob[k].state != OpState::WaitIssue {
+                k += 1;
+                continue;
+            }
+            let (idx, addr, is_store, is_io, value) = {
+                let e = &self.rob[k];
+                (e.idx, e.addr, e.is_store, e.is_io, e.value)
+            };
+            if is_io {
+                // Device side effects happen in program order: an IO op
+                // waits for every older IO op to complete, and never
+                // forwards.
+                if self.rob.iter().take(k).any(|o| o.is_io && o.state != OpState::Done) {
+                    k += 1;
+                    continue;
+                }
+            } else if is_store {
+                // A store becomes globally visible at issue — every
+                // older same-address op must have completed first.
+                if self
+                    .rob
+                    .iter()
+                    .take(k)
+                    .any(|o| !o.is_io && o.addr == addr && o.state != OpState::Done)
+                {
+                    k += 1;
+                    continue;
+                }
+            } else {
+                // Load: the youngest older in-ROB store to this address
+                // forwards its value (memory may not hold it yet).
+                let fwd = self
+                    .rob
+                    .iter()
+                    .take(k)
+                    .rev()
+                    .find(|o| !o.is_io && o.is_store && o.addr == addr)
+                    .map(|o| o.value);
+                if let Some(v) = fwd {
+                    // Consume a txn id anyway so the tag stream (and the
+                    // checksum rotation) stays uniform with issued loads.
+                    let txn = self.alloc_txn(false);
+                    let e = &mut self.rob[k];
+                    e.state = OpState::Done;
+                    e.forwarded = true;
+                    self.iq_used -= 1;
+                    self.loads += 1;
+                    self.issued_t += 1;
+                    self.issued_ops += 1;
+                    ctx.shared().pdes.issued.fetch_add(1, Relaxed);
+                    self.stl_forwards += 1;
+                    let tag = ((txn >> 1) & 63) as u32;
+                    self.load_checksum =
+                        self.load_checksum.wrapping_add(v.rotate_left(tag));
+                    if !self.trace.expected.is_empty() {
+                        let want = self.trace.expected[idx];
+                        if want != crate::workload::trace::NO_EXPECT
+                            && v != want
+                        {
+                            self.value_mismatches += 1;
+                        }
+                    }
+                    progress = true;
+                    k += 1;
+                    continue;
+                }
+            }
+            // Split LSQ capacity gate.
+            let q_full = if is_store {
+                self.sq_used >= self.spec.lsq_size
+            } else {
+                self.lq_used >= self.spec.lsq_size
+            };
+            if q_full {
+                self.note_lsq_stall(ctx);
+                k += 1;
+                continue;
+            }
+            let txn_serial = self.next_txn;
+            self.send_mem(ctx, addr, is_store, value, false);
+            self.inflight_idx
+                .insert(((self.core as u64) << 48) | (txn_serial << 1), idx);
+            self.rob[k].state = OpState::WaitResp;
+            self.iq_used -= 1;
+            if is_store {
+                self.sq_used += 1;
+                self.stores += 1;
+            } else {
+                self.lq_used += 1;
+                self.loads += 1;
+            }
+            self.issued_t += 1;
+            self.issued_ops += 1;
+            ctx.shared().pdes.issued.fetch_add(1, Relaxed);
+            progress = true;
+            k += 1;
+        }
+        progress
+    }
+
+    /// Squash the fetch buffer on entering a barrier wait (the frontend
+    /// refetches past the sync point, like a pipeline flush).
+    fn squash_fetch(&mut self, ctx: &mut Ctx) {
+        let n = self.fetch_q.len() as u64;
+        if n > 0 {
+            self.squashed += n;
+            ctx.shared().pdes.squashed.fetch_add(n, Relaxed);
+            self.fetch_idx -= self.fetch_q.len();
+            self.fetch_q.clear();
+        }
+    }
+
+    /// In-order dispatch of the fetch-buffer head: capacity gates, gap
+    /// payment, software barriers and blocking ifetches in the same
+    /// order the Minor loop takes them (the degeneracy gate depends on
+    /// this ordering).
+    fn dispatch(&mut self, ctx: &mut Ctx) -> Dispatch {
+        if self.dispatched_t >= self.spec.width || self.ifetch_pending {
+            return Dispatch::Blocked;
+        }
+        let Some(&i) = self.fetch_q.front() else {
+            return Dispatch::Blocked;
+        };
+        if self.rob.len() >= self.spec.rob_size {
+            if !self.noted_rob {
+                self.noted_rob = true;
+                self.rob_full_stalls += 1;
+                ctx.shared().pdes.rob_full_stalls.fetch_add(1, Relaxed);
+            }
+            return Dispatch::Blocked;
+        }
+        if self.iq_used >= self.spec.iq_size {
+            if !self.noted_iq {
+                self.noted_iq = true;
+                self.iq_full_stalls += 1;
+                ctx.shared().pdes.iq_full_stalls.fetch_add(1, Relaxed);
+            }
+            return Dispatch::Blocked;
+        }
+        if self.gap_left > 0 {
+            let at = ctx.now() + self.clock.cycles(self.gap_left);
+            self.gap_left = 0;
+            self.gap_ready_at = at;
+            self.want_tick_at(ctx, at);
+        }
+        if ctx.now() < self.gap_ready_at {
+            return Dispatch::Blocked;
+        }
+        // Software barrier boundary?
+        if self.barrier_every > 0
+            && i > 0
+            && i % self.barrier_every == 0
+            && self.last_barrier_idx != i
+        {
+            // Barriers drain the whole pipeline first.
+            if !self.rob.is_empty() || self.outstanding > 0 {
+                return Dispatch::Blocked; // resume on MemResp
+            }
+            self.last_barrier_idx = i;
+            self.barriers_hit += 1;
+            match ctx.shared().wl_barrier.arrive(ctx.self_id(), ctx.now()) {
+                BarrierOutcome::Wait => {
+                    self.squash_fetch(ctx);
+                    self.waiting_barrier = true;
+                    return Dispatch::Parked;
+                }
+                BarrierOutcome::Release { waiters, release_at } => {
+                    let at = release_at.max(ctx.now());
+                    for w in waiters {
+                        ctx.schedule_abs(at, w, EventKind::WlBarrierRelease);
+                    }
+                    if ctx.border_ordered() {
+                        // Same border-postponed resume as TimingCpu: the
+                        // releasing arrival waits for its own release
+                        // event, so the resume tick is a pure function
+                        // of the simulation (docs/DETERMINISM.md).
+                        self.squash_fetch(ctx);
+                        self.waiting_barrier = true;
+                        ctx.schedule_self_postponed(
+                            at,
+                            EventKind::WlBarrierRelease,
+                        );
+                        return Dispatch::Parked;
+                    }
+                    // Host order: last arriver proceeds immediately.
+                }
+            }
+        }
+        // Periodic blocking instruction fetch (before the op).
+        if self.params.ifetch_every > 0
+            && i % self.params.ifetch_every == 0
+            && self.fetches <= (i / self.params.ifetch_every) as u64
+        {
+            let line = (self.fetches / 4 * 64) % self.code_size.max(64);
+            let addr = self.code_base + line;
+            self.fetches += 1;
+            self.send_mem(ctx, addr, false, 0, true);
+            self.ifetch_pending = true;
+            return Dispatch::Progress;
+        }
+        // Allocate the op into the ROB + IQ.
+        let (mut addr, mut store, value) = (
+            self.trace.addr[i],
+            self.trace.is_store[i],
+            self.trace.value[i],
+        );
+        // Periodic IO access through the crossbar (§4.3 traffic).
+        if self.params.io_every > 0 && i > 0 && i % self.params.io_every == 0
+        {
+            let page = (self.core as u64
+                + i as u64 / self.params.io_every as u64)
+                % self.params.io_pages;
+            addr = self.params.io_base + page * crate::xbar::IO_PAGE;
+            store = i % (2 * self.params.io_every) == 0;
+        }
+        let is_io = addr >= self.params.io_base;
+        self.fetch_q.pop_front();
+        self.occ_accrue(ctx);
+        self.rob.push_back(RobEntry {
+            idx: i,
+            addr,
+            is_store: store,
+            is_io,
+            value,
+            state: OpState::WaitIssue,
+            forwarded: false,
+        });
+        self.iq_used += 1;
+        self.dispatched_t += 1;
+        self.gap_left =
+            self.trace.gap.get(i + 1).copied().unwrap_or(0) as u64;
+        Dispatch::Progress
+    }
+
+    /// Refill the fetch buffer up to `fetch_buf` entries.
+    fn refill_fetch(&mut self) -> bool {
+        let mut progress = false;
+        while self.fetch_q.len() < self.spec.fetch_buf
+            && self.fetch_idx < self.trace.len()
+        {
+            self.fetch_q.push_back(self.fetch_idx);
+            self.fetch_idx += 1;
+            progress = true;
+        }
+        progress
+    }
+
+    fn tick(&mut self, ctx: &mut Ctx) {
+        if self.pending_tick == Some(ctx.now()) {
+            self.pending_tick = None;
+        }
+        if self.done || self.waiting_barrier {
+            return;
+        }
+        if ctx.now() != self.cur_tick {
+            self.cur_tick = ctx.now();
+            self.dispatched_t = 0;
+            self.issued_t = 0;
+            self.committed_t = 0;
+        }
+        self.noted_rob = false;
+        self.noted_iq = false;
+        self.noted_lsq = false;
+        // Advance all stages to a fixpoint within this cycle.
+        loop {
+            let mut progress = self.commit(ctx);
+            progress |= self.issue(ctx);
+            match self.dispatch(ctx) {
+                Dispatch::Progress => progress = true,
+                Dispatch::Blocked => {}
+                Dispatch::Parked => return,
+            }
+            progress |= self.refill_fetch();
+            if !progress {
+                break;
+            }
+        }
+        if self.fetch_idx >= self.trace.len()
+            && self.fetch_q.is_empty()
+            && self.rob.is_empty()
+            && self.outstanding == 0
+        {
+            self.finish(ctx);
+            return;
+        }
+        // A saturated width budget means more work next cycle.
+        if self.dispatched_t >= self.spec.width
+            || self.issued_t >= self.spec.width
+            || self.committed_t >= self.spec.width
+        {
+            let at = ctx.now() + self.clock.cycles(1);
+            self.want_tick_at(ctx, at);
+        }
+    }
+
+    fn on_resp(&mut self, pkt: Packet, ctx: &mut Ctx) {
+        debug_assert!(self.outstanding > 0);
+        self.outstanding -= 1;
+        if pkt.id & IFETCH_BIT != 0 {
+            self.ifetch_pending = false;
+        } else {
+            let idx = self.inflight_idx.remove(&pkt.id).unwrap_or_else(|| {
+                panic!("{}: response for unknown txn {:#x}", self.name, pkt.id)
+            });
+            // The ROB is in program order, so the writeback target is a
+            // binary search away.
+            let k = self
+                .rob
+                .binary_search_by(|e| e.idx.cmp(&idx))
+                .unwrap_or_else(|_| {
+                    panic!("{}: response for retired op {idx}", self.name)
+                });
+            let e = &mut self.rob[k];
+            debug_assert_eq!(e.state, OpState::WaitResp);
+            e.state = OpState::Done;
+            if e.is_store {
+                self.sq_used -= 1;
+            } else {
+                self.lq_used -= 1;
+            }
+            if pkt.cmd == Cmd::ReadResp {
+                // Commutative fold: responses arrive out of order.
+                let tag = ((pkt.id >> 1) & 63) as u32;
+                self.load_checksum = self
+                    .load_checksum
+                    .wrapping_add(pkt.value.rotate_left(tag));
+                if !self.trace.expected.is_empty() {
+                    let want = self.trace.expected[idx];
+                    if want != crate::workload::trace::NO_EXPECT
+                        && pkt.value != want
+                    {
+                        self.value_mismatches += 1;
+                    }
+                }
+            }
+        }
+        if self.done {
+            return;
+        }
+        self.want_tick_at(ctx, ctx.now());
+    }
+}
+
+impl Component for O3Cpu {
+    fn handle(&mut self, kind: EventKind, ctx: &mut Ctx) {
+        match kind {
+            EventKind::CpuTick => self.tick(ctx),
+            EventKind::MemResp { pkt } => self.on_resp(pkt, ctx),
+            EventKind::WlBarrierRelease => {
+                self.waiting_barrier = false;
+                let now = ctx.now();
+                self.want_tick_at(ctx, now);
+            }
+            other => panic!("{}: unexpected event {other:?}", self.name),
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn init(&mut self, ctx: &mut Ctx) {
+        if self.trace.is_empty() {
+            self.finish(ctx);
+        } else {
+            let now = ctx.now();
+            self.want_tick_at(ctx, now);
+        }
+    }
+
+    fn stats(&self, out: &mut StatSink) {
+        out.add_u64("committed_ops", self.committed_ops);
+        out.add_u64("loads", self.loads);
+        out.add_u64("stores", self.stores);
+        out.add_u64("ifetches", self.fetches);
+        out.add_u64("lsq_stalls", self.lsq_stalls);
+        out.add_u64("barriers", self.barriers_hit);
+        out.add_u64("finish_tick", self.finish_tick);
+        out.add_u64("load_checksum", self.load_checksum);
+        out.add_u64("value_mismatches", self.value_mismatches);
+        out.add_u64("issued", self.issued_ops);
+        out.add_u64("squashed", self.squashed);
+        out.add_u64("rob_full_stalls", self.rob_full_stalls);
+        out.add_u64("iq_full_stalls", self.iq_full_stalls);
+        out.add_u64("rob_occupancy_sum", self.rob_occupancy_sum);
+        out.add_u64("stl_forwards", self.stl_forwards);
+    }
+
+    fn save_state(&self, w: &mut StateWriter) {
+        w.usize(self.fetch_idx);
+        w.usize(self.fetch_q.len());
+        for &i in &self.fetch_q {
+            w.usize(i);
+        }
+        w.usize(self.rob.len());
+        for e in &self.rob {
+            w.usize(e.idx);
+            w.u64(e.addr);
+            w.bool(e.is_store);
+            w.bool(e.is_io);
+            w.u64(e.value);
+            w.u8(e.state.to_u8());
+            w.bool(e.forwarded);
+        }
+        w.usize(self.outstanding);
+        w.u64(self.gap_left);
+        w.u64(self.gap_ready_at);
+        w.u64(self.next_txn);
+        let mut inflight: Vec<(u64, usize)> =
+            self.inflight_idx.iter().map(|(&k, &v)| (k, v)).collect();
+        inflight.sort_unstable_by_key(|&(k, _)| k);
+        w.usize(inflight.len());
+        for (txn, op_idx) in inflight {
+            w.u64(txn);
+            w.usize(op_idx);
+        }
+        w.u64(self.fetches);
+        w.bool(self.ifetch_pending);
+        w.bool(self.waiting_barrier);
+        w.usize(self.last_barrier_idx);
+        w.opt_u64(self.pending_tick);
+        w.bool(self.done);
+        w.u64(self.cur_tick);
+        w.usize(self.dispatched_t);
+        w.usize(self.issued_t);
+        w.usize(self.committed_t);
+        w.u64(self.occ_last);
+        w.u64(self.committed_ops);
+        w.u64(self.loads);
+        w.u64(self.stores);
+        w.u64(self.lsq_stalls);
+        w.u64(self.barriers_hit);
+        w.u64(self.load_checksum);
+        w.u64(self.value_mismatches);
+        w.u64(self.finish_tick);
+        w.u64(self.issued_ops);
+        w.u64(self.squashed);
+        w.u64(self.rob_full_stalls);
+        w.u64(self.iq_full_stalls);
+        w.u64(self.rob_occupancy_sum);
+        w.u64(self.stl_forwards);
+    }
+
+    fn restore_state(&mut self, r: &mut StateReader) -> Result<(), CkptError> {
+        self.fetch_idx = r.usize()?;
+        self.fetch_q.clear();
+        for _ in 0..r.usize()? {
+            self.fetch_q.push_back(r.usize()?);
+        }
+        self.rob.clear();
+        for _ in 0..r.usize()? {
+            let idx = r.usize()?;
+            let addr = r.u64()?;
+            let is_store = r.bool()?;
+            let is_io = r.bool()?;
+            let value = r.u64()?;
+            let state_off = r.offset();
+            let state = OpState::from_u8(r.u8()?, state_off)?;
+            let forwarded = r.bool()?;
+            self.rob.push_back(RobEntry {
+                idx,
+                addr,
+                is_store,
+                is_io,
+                value,
+                state,
+                forwarded,
+            });
+        }
+        // Derived queue occupancy is recomputed, not stored.
+        self.iq_used =
+            self.rob.iter().filter(|e| e.state == OpState::WaitIssue).count();
+        self.lq_used = self
+            .rob
+            .iter()
+            .filter(|e| e.state == OpState::WaitResp && !e.is_store)
+            .count();
+        self.sq_used = self
+            .rob
+            .iter()
+            .filter(|e| e.state == OpState::WaitResp && e.is_store)
+            .count();
+        self.outstanding = r.usize()?;
+        self.gap_left = r.u64()?;
+        self.gap_ready_at = r.u64()?;
+        self.next_txn = r.u64()?;
+        self.inflight_idx.clear();
+        for _ in 0..r.usize()? {
+            let txn = r.u64()?;
+            let op_idx = r.usize()?;
+            self.inflight_idx.insert(txn, op_idx);
+        }
+        self.fetches = r.u64()?;
+        self.ifetch_pending = r.bool()?;
+        self.waiting_barrier = r.bool()?;
+        self.last_barrier_idx = r.usize()?;
+        self.pending_tick = r.opt_u64()?;
+        self.done = r.bool()?;
+        self.cur_tick = r.u64()?;
+        self.dispatched_t = r.usize()?;
+        self.issued_t = r.usize()?;
+        self.committed_t = r.usize()?;
+        self.occ_last = r.u64()?;
+        self.committed_ops = r.u64()?;
+        self.loads = r.u64()?;
+        self.stores = r.u64()?;
+        self.lsq_stalls = r.u64()?;
+        self.barriers_hit = r.u64()?;
+        self.load_checksum = r.u64()?;
+        self.value_mismatches = r.u64()?;
+        self.finish_tick = r.u64()?;
+        self.issued_ops = r.u64()?;
+        self.squashed = r.u64()?;
+        self.rob_full_stalls = r.u64()?;
+        self.iq_full_stalls = r.u64()?;
+        self.rob_occupancy_sum = r.u64()?;
+        self.stl_forwards = r.u64()?;
+        Ok(())
+    }
+}

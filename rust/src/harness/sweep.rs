@@ -77,8 +77,8 @@ pub fn expand(spec: &SweepSpec) -> Result<Vec<SweepPoint>> {
     let mut points = Vec::with_capacity(chosen.len());
     for (index, &gi) in chosen.iter().enumerate() {
         let mut rest = gi;
-        let mut coord = [0usize; 8];
-        for d in (0..8).rev() {
+        let mut coord = [0usize; 10];
+        for d in (0..10).rev() {
             coord[d] = rest % dims[d];
             rest /= dims[d];
         }
@@ -118,7 +118,7 @@ fn sample_indices(spec: &SweepSpec, total: usize) -> Vec<usize> {
 fn make_point(
     spec: &SweepSpec,
     plats: &[SystemSpec],
-    coord: [usize; 8],
+    coord: [usize; 10],
     index: usize,
 ) -> Result<SweepPoint> {
     let mut plat = plats[coord[0]].clone();
@@ -131,11 +131,17 @@ fn make_point(
     if let Some(&f) = spec.fabrics.get(coord[3]) {
         plat.interconnect = f;
     }
+    if let Some(&w) = spec.cpu_widths.get(coord[8]) {
+        plat.cpu_spec.width = w;
+    }
+    if let Some(&r) = spec.rob_sizes.get(coord[9]) {
+        plat.cpu_spec.rob_size = r;
+    }
     let workload = &spec.workloads[coord[4]];
     let kernel = spec.kernels[coord[5]];
     let q_ns = spec.quantum_ns[coord[6]];
     let policy = spec.quantum_policies[coord[7]];
-    let id = format!(
+    let mut id = format!(
         "{}+c{}+l2:{}k+{}+{}+{}+q{}+{}",
         plat.name,
         plat.cores,
@@ -146,6 +152,14 @@ fn make_point(
         q_ns,
         policy_keyword(policy),
     );
+    // CPU-geometry tokens appear only when the axis is swept, keeping
+    // existing point ids (the resume keys of old journals) unchanged.
+    if !spec.cpu_widths.is_empty() {
+        id.push_str(&format!("+w{}", plat.cpu_spec.width));
+    }
+    if !spec.rob_sizes.is_empty() {
+        id.push_str(&format!("+rob{}", plat.cpu_spec.rob_size));
+    }
     // Overrides can break a platform (e.g. ragged mesh rows) — surface
     // the spec's actionable hints with the point named.
     plat.validate().map_err(|e| anyhow!("sweep point {id}: {e}"))?;

@@ -77,6 +77,13 @@ RUN/COMPARE/FFWD FLAGS
                     (docs/TRAFFIC.md)                 [off]
   --cores N         simulated cores          [4, or the platform's]
   --cpu MODEL       o3|minor|atomic|kvm               [o3]
+  --cpu-width N     O3 per-stage width (docs/O3.md)   [4]
+  --rob-size N      O3 reorder-buffer entries         [64]
+  --iq-size N       O3 issue-queue entries            [32]
+  --lsq-size N      O3 load/store queue entries each  [16]
+  --fetch-buf N     O3 fetch-buffer entries           [8]
+  --mshrs N         sequencer MSHRs (coherent reqs
+                    in flight per core)               [8]
   --mode MODE       serial|parallel|virtual           [serial]
   --queue KIND      bucket|heap event queue           [bucket]
   --bucket-width N  bucket-queue slot width in ticks
@@ -177,6 +184,13 @@ fn run_config(a: &Args) -> Result<RunConfig> {
         cfg.cpu_model = CpuModel::parse(cpu)
             .ok_or_else(|| anyhow::anyhow!("bad --cpu {cpu}"))?;
     }
+    let cs = &mut cfg.system.cpu_spec;
+    cs.width = a.get_usize("cpu-width", cs.width);
+    cs.rob_size = a.get_usize("rob-size", cs.rob_size);
+    cs.iq_size = a.get_usize("iq-size", cs.iq_size);
+    cs.lsq_size = a.get_usize("lsq-size", cs.lsq_size);
+    cs.fetch_buf = a.get_usize("fetch-buf", cs.fetch_buf);
+    cs.mshrs = a.get_usize("mshrs", cs.mshrs);
     let mode = a.get_str("mode", "serial");
     cfg.mode = Mode::parse(&mode)
         .ok_or_else(|| anyhow::anyhow!("bad --mode {mode}"))?;
@@ -713,6 +727,23 @@ fn print_summary(cfg: &RunConfig, s: &Summary) {
         s.traffic_retries,
         s.traffic_phases
     );
+    if cfg.cpu_model == CpuModel::O3 {
+        let mean_occ = if s.sim_ticks > 0 {
+            s.rob_occupancy_sum as f64
+                / (s.sim_ticks as f64 * cfg.system.cores as f64)
+        } else {
+            0.0
+        };
+        println!(
+            "  o3: issued={} squashed={} rob_full={} iq_full={} \
+             rob_occ_mean={:.2}",
+            s.issued,
+            s.squashed,
+            s.rob_full_stalls,
+            s.iq_full_stalls,
+            mean_occ
+        );
+    }
     if cfg.profile {
         println!(
             "  profile (summed over threads): window={:.2}ms \

@@ -67,6 +67,19 @@ pub struct PdesSnapshot {
     pub traffic_retries: u64,
     /// Traffic phases of the workload (`bursty-phase`; deterministic).
     pub traffic_phases: u64,
+    /// Ops the O3 pipelines issued (memory or in-LSQ forward;
+    /// deterministic, zero under Minor).
+    pub issued: u64,
+    /// Fetched-but-undispatched ops squashed at workload barriers
+    /// (O3; deterministic).
+    pub squashed: u64,
+    /// O3 dispatch stalls on a full ROB (deterministic).
+    pub rob_full_stalls: u64,
+    /// O3 dispatch stalls on a full issue queue (deterministic).
+    pub iq_full_stalls: u64,
+    /// Time-integrated ROB occupancy, Σ entries × ticks over all O3
+    /// cores (deterministic).
+    pub rob_occupancy_sum: u64,
     /// `--profile`: host ns executing window claims, summed over threads.
     pub prof_window_ns: u64,
     /// `--profile`: host ns waiting at the freeze barrier, summed over
@@ -98,6 +111,11 @@ impl PdesSnapshot {
             traffic_accepted: s.pdes.traffic_accepted.load(Relaxed),
             traffic_retries: s.pdes.traffic_retries.load(Relaxed),
             traffic_phases: s.pdes.traffic_phases.load(Relaxed),
+            issued: s.pdes.issued.load(Relaxed),
+            squashed: s.pdes.squashed.load(Relaxed),
+            rob_full_stalls: s.pdes.rob_full_stalls.load(Relaxed),
+            iq_full_stalls: s.pdes.iq_full_stalls.load(Relaxed),
+            rob_occupancy_sum: s.pdes.rob_occupancy_sum.load(Relaxed),
             prof_window_ns: s.pdes.prof_window_ns.load(Relaxed),
             prof_freeze_wait_ns: s.pdes.prof_freeze_wait_ns.load(Relaxed),
             prof_border_sync_ns: s.pdes.prof_border_sync_ns.load(Relaxed),

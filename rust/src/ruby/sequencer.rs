@@ -2,6 +2,8 @@
 //! Ruby messages for the L1s, and routes IO-range packets to the crossbar
 //! (§3.4, Fig. 4 — the black↔blue protocol boundary).
 
+use std::collections::VecDeque;
+
 use rustc_hash::FxHashMap;
 
 use crate::ckpt::io::{CkptError, StateReader, StateWriter};
@@ -31,8 +33,15 @@ pub struct Sequencer {
     cpu: CompId,
     xbar: std::sync::Arc<XbarState>,
     io_base: u64,
+    /// MSHR-style cap on coherent transactions in flight at once. The
+    /// Minor CPU keeps at most one access outstanding so never hits it;
+    /// the O3 pipeline fills it (`CpuSpec::mshrs`).
+    mshrs: usize,
     /// Outstanding coherent transactions: txn -> original packet.
     outstanding: FxHashMap<u64, Packet>,
+    /// Coherent packets queued behind a full MSHR file, FIFO. One drains
+    /// per coherent completion, preserving arrival order deterministically.
+    coherent_waiting: VecDeque<Packet>,
     /// IO packets waiting for a layer retry.
     io_waiting: Vec<Packet>,
     /// IO packets in flight (for layer release on response).
@@ -43,6 +52,8 @@ pub struct Sequencer {
     io_retries: u64,
     latency_sum: Tick,
     responses: u64,
+    /// Requests that found all MSHRs busy and queued.
+    mshr_stalls: u64,
     /// Reusable wakeup drain buffer (perf: no alloc per wakeup).
     scratch: Vec<RubyMsg>,
 }
@@ -57,6 +68,7 @@ impl Sequencer {
         cpu: CompId,
         xbar: std::sync::Arc<XbarState>,
         io_base: u64,
+        mshrs: usize,
     ) -> Self {
         Sequencer {
             name,
@@ -66,7 +78,9 @@ impl Sequencer {
             cpu,
             xbar,
             io_base,
+            mshrs: mshrs.max(1),
             outstanding: FxHashMap::default(),
+            coherent_waiting: VecDeque::new(),
             io_waiting: Vec::new(),
             io_outstanding: FxHashMap::default(),
             coherent_reqs: 0,
@@ -74,11 +88,21 @@ impl Sequencer {
             io_retries: 0,
             latency_sum: 0,
             responses: 0,
+            mshr_stalls: 0,
             scratch: Vec::new(),
         }
     }
 
     fn issue_coherent(&mut self, pkt: Packet, ctx: &mut Ctx) {
+        if self.outstanding.len() >= self.mshrs {
+            self.mshr_stalls += 1;
+            self.coherent_waiting.push_back(pkt);
+            return;
+        }
+        self.send_coherent(pkt, ctx);
+    }
+
+    fn send_coherent(&mut self, pkt: Packet, ctx: &mut Ctx) {
         self.coherent_reqs += 1;
         let is_ifetch = pkt.size == IFETCH_SIZE;
         let link = if is_ifetch { &self.to_l1i } else { &self.to_l1d };
@@ -195,6 +219,13 @@ impl Component for Sequencer {
                                 );
                             };
                             let resp = pkt.make_response(msg.value);
+                            // A completion frees one MSHR: drain the
+                            // oldest queued coherent request into it.
+                            if let Some(next) =
+                                self.coherent_waiting.pop_front()
+                            {
+                                self.send_coherent(next, ctx);
+                            }
                             self.complete(resp, ctx);
                         }
                         other => {
@@ -242,6 +273,7 @@ impl Component for Sequencer {
         out.add_u64("coherent_reqs", self.coherent_reqs);
         out.add_u64("io_reqs", self.io_reqs);
         out.add_u64("io_lock_retries", self.io_retries);
+        out.add_u64("mshr_stalls", self.mshr_stalls);
         out.add_u64("responses", self.responses);
         out.add_u64("latency_sum_ticks", self.latency_sum);
         if self.responses > 0 {
@@ -275,6 +307,11 @@ impl Component for Sequencer {
         w.u64(self.io_retries);
         w.u64(self.latency_sum);
         w.u64(self.responses);
+        w.usize(self.coherent_waiting.len());
+        for pkt in &self.coherent_waiting {
+            w.packet(pkt);
+        }
+        w.u64(self.mshr_stalls);
     }
 
     fn restore_state(&mut self, r: &mut StateReader) -> Result<(), CkptError> {
@@ -298,6 +335,11 @@ impl Component for Sequencer {
         self.io_retries = r.u64()?;
         self.latency_sum = r.u64()?;
         self.responses = r.u64()?;
+        self.coherent_waiting.clear();
+        for _ in 0..r.usize()? {
+            self.coherent_waiting.push_back(r.packet()?);
+        }
+        self.mshr_stalls = r.u64()?;
         Ok(())
     }
 }

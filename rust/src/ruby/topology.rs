@@ -36,7 +36,10 @@ use std::sync::Arc;
 use rustc_hash::FxHashMap;
 
 use crate::config::{Mode, RunConfig};
-use crate::cpu::{AtomicCpu, AtomicLatencies, AtomicMem, CpuModel, CpuParams, KvmCpu, TimingCpu};
+use crate::cpu::{
+    AtomicCpu, AtomicLatencies, AtomicMem, CpuModel, CpuParams, KvmCpu, O3Cpu,
+    TimingCpu,
+};
 use crate::mem::{DramCtrl, DramTiming, Timer, Uart};
 use crate::pdes::{Machine, MachineBuilder};
 use crate::sim::ids::{CompId, DomainId};
@@ -332,18 +335,37 @@ pub fn build_from_spec(
         let code_base =
             crate::workload::apps::PRIVATE_BASE + i as u64 * crate::workload::apps::PRIVATE_SPAN
                 + 32 * 1024 * 1024; // code region in the upper private half
-        let cpu = TimingCpu::new(
-            format!("cpu{i}"),
-            i as u16,
-            clock,
-            params,
-            lay.seq(i),
-            workload.cores[i].clone(),
-            workload.barrier_every,
-            code_base,
-            4 * 1024, // loop body: 64 I-lines, fits any L1I (Table 2)
-        );
-        let id = b.add(d, Box::new(cpu));
+        let id = match spec.cpu {
+            CpuModel::O3 => b.add(
+                d,
+                Box::new(O3Cpu::new(
+                    format!("cpu{i}"),
+                    i as u16,
+                    clock,
+                    spec.cpu_spec,
+                    params,
+                    lay.seq(i),
+                    workload.cores[i].clone(),
+                    workload.barrier_every,
+                    code_base,
+                    4 * 1024, // loop body: 64 I-lines, fits any L1I
+                )),
+            ),
+            _ => b.add(
+                d,
+                Box::new(TimingCpu::new(
+                    format!("cpu{i}"),
+                    i as u16,
+                    clock,
+                    params,
+                    lay.seq(i),
+                    workload.cores[i].clone(),
+                    workload.barrier_every,
+                    code_base,
+                    4 * 1024, // loop body: 64 I-lines, fits any L1I
+                )),
+            ),
+        };
         debug_assert_eq!(id, lay.cpu(i));
 
         // Sequencer
@@ -365,6 +387,7 @@ pub fn build_from_spec(
             lay.cpu(i),
             xbar.clone(),
             IO_BASE,
+            spec.cpu_spec.mshrs,
         );
         let id = b.add(d, Box::new(seq));
         debug_assert_eq!(id, lay.seq(i));

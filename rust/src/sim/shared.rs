@@ -111,6 +111,19 @@ pub struct PdesStats {
     /// Traffic phases of the longest core trace (`bursty-phase`
     /// workloads; 0 = unphased; deterministic).
     pub traffic_phases: AtomicU64,
+    /// Ops the O3 pipelines issued to the memory system or forwarded
+    /// in-LSQ (deterministic; zero under Minor).
+    pub issued: AtomicU64,
+    /// Fetched-but-undispatched ops the O3 pipelines squashed at
+    /// workload-barrier boundaries (deterministic; zero under Minor).
+    pub squashed: AtomicU64,
+    /// O3 dispatch stalls on a full reorder buffer (deterministic).
+    pub rob_full_stalls: AtomicU64,
+    /// O3 dispatch stalls on a full issue queue (deterministic).
+    pub iq_full_stalls: AtomicU64,
+    /// Time-integrated ROB occupancy, summed over O3 cores: Σ entries ×
+    /// ticks (deterministic; divide by `sim_ticks × cores` for the mean).
+    pub rob_occupancy_sum: AtomicU64,
     /// `--profile`: host ns spent executing window claims, summed over
     /// threads (host-timing dependent; zero when profiling is off).
     pub prof_window_ns: AtomicU64,
@@ -227,7 +240,11 @@ impl SharedState {
     /// content (docs/CHECKPOINT.md). Precondition: taken inside a quantum
     /// border's quiescent span, so every mailbox is empty (asserted by the
     /// checkpoint writer) and `stop` is false.
-    pub fn save_ckpt(&self, w: &mut StateWriter) {
+    ///
+    /// `o3` is the snapshot's `FLAG_O3` bit: when set, the five O3
+    /// pipeline counters are appended after the base array. A flags = 0
+    /// (Minor) snapshot keeps the original byte layout exactly.
+    pub fn save_ckpt(&self, w: &mut StateWriter, o3: bool) {
         w.usize(self.xseq.len());
         for x in &self.xseq {
             w.u64(x.load(Ordering::Relaxed));
@@ -259,6 +276,17 @@ impl SharedState {
         ] {
             w.u64(ctr.load(Ordering::Relaxed));
         }
+        if o3 {
+            for ctr in [
+                &p.issued,
+                &p.squashed,
+                &p.rob_full_stalls,
+                &p.iq_full_stalls,
+                &p.rob_occupancy_sum,
+            ] {
+                w.u64(ctr.load(Ordering::Relaxed));
+            }
+        }
     }
 
     /// Checkpoint restore: overwrite the fields written by
@@ -270,6 +298,7 @@ impl SharedState {
     pub fn restore_ckpt(
         &self,
         r: &mut StateReader,
+        o3: bool,
     ) -> Result<(), CkptError> {
         let n = r.usize()?;
         if n != self.xseq.len() {
@@ -318,6 +347,17 @@ impl SharedState {
             &p.traffic_phases,
         ] {
             ctr.store(r.u64()?, Ordering::Relaxed);
+        }
+        if o3 {
+            for ctr in [
+                &p.issued,
+                &p.squashed,
+                &p.rob_full_stalls,
+                &p.iq_full_stalls,
+                &p.rob_occupancy_sum,
+            ] {
+                ctr.store(r.u64()?, Ordering::Relaxed);
+            }
         }
         Ok(())
     }

@@ -93,6 +93,43 @@ impl Interconnect {
     }
 }
 
+/// Micro-architecture knobs for the staged O3 pipeline
+/// ([`crate::cpu::O3Cpu`], docs/O3.md). The Minor model ignores them —
+/// its geometry is fixed (one outstanding access, width 1). Every knob
+/// is a sweepable axis ([`sweep::SweepSpec`]) and round-trips through
+/// the platform TOML as `cpu_width`, `cpu_rob_size`, `cpu_iq_size`,
+/// `cpu_lsq_size`, `cpu_fetch_buf` and `cpu_mshrs`.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct CpuSpec {
+    /// Ops per stage per cycle (dispatch/issue/commit budgets).
+    pub width: usize,
+    /// Reorder-buffer entries.
+    pub rob_size: usize,
+    /// Issue-queue entries (dispatched, waiting to issue).
+    pub iq_size: usize,
+    /// Split LSQ capacity: loads and stores each get this many in-flight
+    /// slots.
+    pub lsq_size: usize,
+    /// Fetch-buffer entries (ops buffered ahead of dispatch).
+    pub fetch_buf: usize,
+    /// Sequencer MSHR cap: coherent requests in flight per core before
+    /// the sequencer queues ([`crate::ruby::sequencer::Sequencer`]).
+    pub mshrs: usize,
+}
+
+impl Default for CpuSpec {
+    fn default() -> Self {
+        CpuSpec {
+            width: 4,
+            rob_size: 64,
+            iq_size: 32,
+            lsq_size: 16,
+            fetch_buf: 8,
+            mshrs: 8,
+        }
+    }
+}
+
 /// A complete, serializable description of one simulated platform.
 ///
 /// Field defaults are the paper's Table 2 machine with the Fig. 4 star —
@@ -129,6 +166,8 @@ pub struct SystemSpec {
     pub mem_channels: usize,
     /// IO accesses per 1000 ops (exercises the §4.3 crossbar path).
     pub io_milli: u64,
+    /// O3 pipeline geometry (ignored by non-O3 models).
+    pub cpu_spec: CpuSpec,
 }
 
 impl Default for SystemSpec {
@@ -188,6 +227,7 @@ impl SystemSpec {
             dram_mhz: sys.dram_mhz,
             mem_channels: sys.mem_channels,
             io_milli: sys.io_milli,
+            cpu_spec: sys.cpu_spec,
         }
     }
 
@@ -220,6 +260,7 @@ impl SystemSpec {
             dram_mhz: self.dram_mhz,
             mem_channels: self.mem_channels,
             io_milli: self.io_milli,
+            cpu_spec: self.cpu_spec,
         };
         (sys, self.cpu)
     }
@@ -312,6 +353,21 @@ impl SystemSpec {
                 self.mem_channels
             ));
         }
+        for (what, v, max) in [
+            ("cpu_width", self.cpu_spec.width, 16),
+            ("cpu_rob_size", self.cpu_spec.rob_size, 512),
+            ("cpu_iq_size", self.cpu_spec.iq_size, 512),
+            ("cpu_lsq_size", self.cpu_spec.lsq_size, 256),
+            ("cpu_fetch_buf", self.cpu_spec.fetch_buf, 256),
+            ("cpu_mshrs", self.cpu_spec.mshrs, 64),
+        ] {
+            if v == 0 || v > max {
+                err(format!(
+                    "{what} = {v} is out of range — the O3 pipeline needs \
+                     1..={max} (docs/O3.md lists the defaults)"
+                ));
+            }
+        }
         match self.interconnect {
             Interconnect::Star => {}
             Interconnect::Ring => {
@@ -368,6 +424,12 @@ impl SystemSpec {
             }
         ));
         s.push_str(&format!("cpu_mhz = {}\n", self.cpu_mhz));
+        s.push_str(&format!("cpu_width = {}\n", self.cpu_spec.width));
+        s.push_str(&format!("cpu_rob_size = {}\n", self.cpu_spec.rob_size));
+        s.push_str(&format!("cpu_iq_size = {}\n", self.cpu_spec.iq_size));
+        s.push_str(&format!("cpu_lsq_size = {}\n", self.cpu_spec.lsq_size));
+        s.push_str(&format!("cpu_fetch_buf = {}\n", self.cpu_spec.fetch_buf));
+        s.push_str(&format!("cpu_mshrs = {}\n", self.cpu_spec.mshrs));
         for (p, c) in [
             ("l1i", &self.l1i),
             ("l1d", &self.l1d),
@@ -468,6 +530,36 @@ impl SystemSpec {
                 "cpu_mhz" => {
                     if let Some(n) = as_num() {
                         spec.cpu_mhz = n;
+                    }
+                }
+                "cpu_width" => {
+                    if let Some(n) = as_num() {
+                        spec.cpu_spec.width = n as usize;
+                    }
+                }
+                "cpu_rob_size" => {
+                    if let Some(n) = as_num() {
+                        spec.cpu_spec.rob_size = n as usize;
+                    }
+                }
+                "cpu_iq_size" => {
+                    if let Some(n) = as_num() {
+                        spec.cpu_spec.iq_size = n as usize;
+                    }
+                }
+                "cpu_lsq_size" => {
+                    if let Some(n) = as_num() {
+                        spec.cpu_spec.lsq_size = n as usize;
+                    }
+                }
+                "cpu_fetch_buf" => {
+                    if let Some(n) = as_num() {
+                        spec.cpu_spec.fetch_buf = n as usize;
+                    }
+                }
+                "cpu_mshrs" => {
+                    if let Some(n) = as_num() {
+                        spec.cpu_spec.mshrs = n as usize;
                     }
                 }
                 "line_bytes" => {
@@ -598,7 +690,9 @@ impl SystemSpec {
              memory         {ch} channel(s) @ {dram} MHz\n\
              noc            {noc_ns:.1} ns/hop, {rb}-msg buffers, \
              {df} data flits\n\
-             io             {io} accesses per 1000 ops",
+             io             {io} accesses per 1000 ops\n\
+             o3 pipeline    width {w}, rob {rob}, iq {iq}, lsq {lsq}x2, \
+             fetch-buf {fb}, {mshrs} mshrs",
             name = self.name,
             desc = self.description,
             cores = self.cores,
@@ -620,6 +714,12 @@ impl SystemSpec {
             rb = self.router_buffer,
             df = self.data_flits,
             io = self.io_milli,
+            w = self.cpu_spec.width,
+            rob = self.cpu_spec.rob_size,
+            iq = self.cpu_spec.iq_size,
+            lsq = self.cpu_spec.lsq_size,
+            fb = self.cpu_spec.fetch_buf,
+            mshrs = self.cpu_spec.mshrs,
         )
     }
 }
@@ -675,6 +775,39 @@ mod tests {
         let back = SystemSpec::from_toml(&spec.to_toml()).unwrap();
         assert_eq!(back.interconnect, Interconnect::Mesh { cols: 4 });
         assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn toml_roundtrip_cpu_knobs() {
+        let spec = SystemSpec {
+            cpu_spec: CpuSpec {
+                width: 2,
+                rob_size: 8,
+                iq_size: 4,
+                lsq_size: 2,
+                fetch_buf: 3,
+                mshrs: 1,
+            },
+            ..SystemSpec::default()
+        }
+        .named("k", "tiny o3");
+        let toml = spec.to_toml();
+        assert!(toml.contains("cpu_rob_size = 8"), "{toml}");
+        let back = SystemSpec::from_toml(&toml).unwrap();
+        assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn cpu_knobs_out_of_range_rejected() {
+        let mut spec = SystemSpec::default();
+        spec.cpu_spec.width = 0;
+        spec.cpu_spec.rob_size = 100_000;
+        let err = spec.validate().unwrap_err();
+        assert!(err.errors.iter().any(|e| e.contains("cpu_width")), "{err}");
+        assert!(
+            err.errors.iter().any(|e| e.contains("cpu_rob_size")),
+            "{err}"
+        );
     }
 
     #[test]

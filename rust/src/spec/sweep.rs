@@ -182,6 +182,11 @@ pub struct SweepSpec {
     pub quantum_ns: Vec<u64>,
     /// Window-advance policy axis (`fixed`/`horizon`/`hybrid:<n>`).
     pub quantum_policies: Vec<QuantumPolicy>,
+    /// O3 per-stage width overrides (empty = keep each platform's;
+    /// only meaningful for `cpu = o3` platforms — docs/O3.md).
+    pub cpu_widths: Vec<usize>,
+    /// O3 reorder-buffer size overrides (empty = keep).
+    pub rob_sizes: Vec<usize>,
     /// Grid or random point selection.
     pub sampling: Sampling,
     /// Points drawn when `sampling = "random"` (clamped to the grid).
@@ -210,6 +215,8 @@ impl Default for SweepSpec {
             kernels: vec![Mode::Virtual],
             quantum_ns: vec![8],
             quantum_policies: vec![QuantumPolicy::Fixed],
+            cpu_widths: Vec::new(),
+            rob_sizes: Vec::new(),
             sampling: Sampling::Grid,
             samples: 16,
             sample_seed: 7,
@@ -244,7 +251,7 @@ impl SweepSpec {
     /// Per-axis grid lengths, in expansion order (platforms outermost).
     /// Optional axes count one implicit "keep the platform's value"
     /// entry when empty.
-    pub fn axis_lens(&self) -> [usize; 8] {
+    pub fn axis_lens(&self) -> [usize; 10] {
         [
             self.platforms.len().max(1),
             self.cores.len().max(1),
@@ -254,6 +261,8 @@ impl SweepSpec {
             self.kernels.len().max(1),
             self.quantum_ns.len().max(1),
             self.quantum_policies.len().max(1),
+            self.cpu_widths.len().max(1),
+            self.rob_sizes.len().max(1),
         ]
     }
 
@@ -381,6 +390,22 @@ impl SweepSpec {
                     .to_string());
             }
         }
+        for &w in &self.cpu_widths {
+            if w == 0 || w > 16 {
+                err(format!(
+                    "cpu_widths entry {w} is out of range — the O3 stage \
+                     width must be 1..=16 (docs/O3.md)"
+                ));
+            }
+        }
+        for &r in &self.rob_sizes {
+            if r == 0 || r > 512 {
+                err(format!(
+                    "rob_sizes entry {r} is out of range — the reorder \
+                     buffer must be 1..=512 entries (docs/O3.md)"
+                ));
+            }
+        }
         if self.ops_per_core == 0 || self.ops_per_core > 1 << 22 {
             err(format!(
                 "ops_per_core = {} is out of range — use 1..={}",
@@ -423,6 +448,8 @@ impl SweepSpec {
             ("kernels", first_dup(&self.kernels)),
             ("quantum_ns", first_dup(&self.quantum_ns)),
             ("quantum_policies", first_dup(&self.quantum_policies)),
+            ("cpu_widths", first_dup(&self.cpu_widths)),
+            ("rob_sizes", first_dup(&self.rob_sizes)),
         ] {
             if let Some(d) = dup {
                 err(format!(
@@ -483,6 +510,14 @@ impl SweepSpec {
         s.push_str(&format!(
             "quantum_policies = \"{}\"\n",
             join(&self.quantum_policies, |p| policy_keyword(*p))
+        ));
+        s.push_str(&format!(
+            "cpu_widths = \"{}\"\n",
+            join(&self.cpu_widths, |w| w.to_string())
+        ));
+        s.push_str(&format!(
+            "rob_sizes = \"{}\"\n",
+            join(&self.rob_sizes, |r| r.to_string())
         ));
         s.push_str(&format!("sampling = \"{}\"\n", self.sampling.keyword()));
         s.push_str(&format!("samples = {}\n", self.samples));
@@ -659,6 +694,32 @@ impl SweepSpec {
                                 }
                             }
                         }
+                        "cpu_widths" => {
+                            spec.cpu_widths.clear();
+                            for x in &items {
+                                match x.parse::<usize>() {
+                                    Ok(n) => spec.cpu_widths.push(n),
+                                    Err(e) => errors.push(format!(
+                                        "line {lineno}: cpu_widths entry \
+                                         `{x}`: {e} (expected an unsigned \
+                                         integer)"
+                                    )),
+                                }
+                            }
+                        }
+                        "rob_sizes" => {
+                            spec.rob_sizes.clear();
+                            for x in &items {
+                                match x.parse::<usize>() {
+                                    Ok(n) => spec.rob_sizes.push(n),
+                                    Err(e) => errors.push(format!(
+                                        "line {lineno}: rob_sizes entry \
+                                         `{x}`: {e} (expected an unsigned \
+                                         integer)"
+                                    )),
+                                }
+                            }
+                        }
                         _ => errors.push(format!(
                             "line {lineno}: unknown key `{k}` — see \
                              docs/SWEEP.md for the schema"
@@ -703,6 +764,8 @@ impl SweepSpec {
              kernels        {kern}\n\
              quantum_ns     {q}\n\
              policies       {pol}\n\
+             cpu_widths     {cw}\n\
+             rob_sizes      {rs}\n\
              scalars        ops_per_core {ops}, seed {seed}, \
              inner_threads {inner}",
             name = self.name,
@@ -717,6 +780,8 @@ impl SweepSpec {
             kern = axis(&self.kernels, |m| mode_keyword(*m).to_string()),
             q = axis(&self.quantum_ns, |q| q.to_string()),
             pol = axis(&self.quantum_policies, |p| policy_keyword(*p)),
+            cw = axis(&self.cpu_widths, |w| w.to_string()),
+            rs = axis(&self.rob_sizes, |r| r.to_string()),
             ops = self.ops_per_core,
             seed = self.seed,
             inner = self.inner_threads,
@@ -784,6 +849,19 @@ pub fn sweeps() -> Vec<SweepSpec> {
         .named(
             "ring-traffic",
             "all six TrafficSpec patterns on the ring-16 fabric",
+        ),
+        SweepSpec {
+            cores: vec![4],
+            cpu_widths: vec![1, 2, 4],
+            rob_sizes: vec![8, 64],
+            workloads: vec!["traffic:hotspot".to_string()],
+            ops_per_core: 512,
+            ..base.clone()
+        }
+        .named(
+            "o3-capacity",
+            "O3 width x ROB capacity grid on the 4-core star (hotspot \
+             traffic; docs/O3.md)",
         ),
         SweepSpec {
             sampling: Sampling::Random,
@@ -982,6 +1060,27 @@ mod tests {
         assert!(err.errors.iter().any(|e| e.contains("kernels")));
         assert!(err.errors.iter().any(|e| e.contains("quantum_ns")));
         assert!(err.errors.iter().any(|e| e.contains("ops_per_core")));
+    }
+
+    #[test]
+    fn cpu_axes_expand_and_reject_bad_entries() {
+        let spec = SweepSpec {
+            cpu_widths: vec![1, 2, 4],
+            rob_sizes: vec![8, 64],
+            ..SweepSpec::default()
+        };
+        spec.validate().unwrap();
+        assert_eq!(spec.grid_len(), Some(6));
+        let back = SweepSpec::from_toml(&spec.to_toml()).unwrap();
+        assert_eq!(spec, back);
+        let bad = SweepSpec {
+            cpu_widths: vec![0],
+            rob_sizes: vec![4096],
+            ..SweepSpec::default()
+        };
+        let err = bad.validate().unwrap_err();
+        assert!(err.errors.iter().any(|e| e.contains("cpu_widths")), "{err}");
+        assert!(err.errors.iter().any(|e| e.contains("rob_sizes")), "{err}");
     }
 
     #[test]

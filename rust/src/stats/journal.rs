@@ -48,6 +48,13 @@ pub struct SweepRecord {
     pub traffic_accepted: u64,
     pub traffic_retries: u64,
     pub traffic_phases: u64,
+    /// O3 pipeline counters (docs/O3.md): zero under `--cpu minor`.
+    /// Parse-optional so pre-O3 journals still resume cleanly.
+    pub issued: u64,
+    pub squashed: u64,
+    pub rob_full_stalls: u64,
+    pub iq_full_stalls: u64,
+    pub rob_occupancy_sum: u64,
     /// Sum of the fabric `.routed` counters.
     pub routed: u64,
     /// HN-F per-line serialisation requeues.
@@ -90,6 +97,11 @@ impl SweepRecord {
             traffic_accepted: r.pdes.traffic_accepted,
             traffic_retries: r.pdes.traffic_retries,
             traffic_phases: r.pdes.traffic_phases,
+            issued: r.pdes.issued,
+            squashed: r.pdes.squashed,
+            rob_full_stalls: r.pdes.rob_full_stalls,
+            iq_full_stalls: r.pdes.iq_full_stalls,
+            rob_occupancy_sum: r.pdes.rob_occupancy_sum,
             routed: r.stats.sum_suffix(".routed") as u64,
             hnf_requeued: r.stats.get("hnf.requeued").unwrap_or(0.0) as u64,
             load_checksum,
@@ -120,6 +132,11 @@ impl SweepRecord {
             .u64("traffic_accepted", self.traffic_accepted)
             .u64("traffic_retries", self.traffic_retries)
             .u64("traffic_phases", self.traffic_phases)
+            .u64("issued", self.issued)
+            .u64("squashed", self.squashed)
+            .u64("rob_full_stalls", self.rob_full_stalls)
+            .u64("iq_full_stalls", self.iq_full_stalls)
+            .u64("rob_occupancy_sum", self.rob_occupancy_sum)
             .u64("routed", self.routed)
             .u64("hnf_requeued", self.hnf_requeued)
             .u64("load_checksum", self.load_checksum)
@@ -169,6 +186,11 @@ impl SweepRecord {
             traffic_accepted: take_u64(m, "traffic_accepted", true)?,
             traffic_retries: take_u64(m, "traffic_retries", true)?,
             traffic_phases: take_u64(m, "traffic_phases", true)?,
+            issued: take_u64(m, "issued", false)?,
+            squashed: take_u64(m, "squashed", false)?,
+            rob_full_stalls: take_u64(m, "rob_full_stalls", false)?,
+            iq_full_stalls: take_u64(m, "iq_full_stalls", false)?,
+            rob_occupancy_sum: take_u64(m, "rob_occupancy_sum", false)?,
             routed: take_u64(m, "routed", true)?,
             hnf_requeued: take_u64(m, "hnf_requeued", true)?,
             load_checksum: take_u64(m, "load_checksum", true)?,
@@ -390,6 +412,11 @@ mod tests {
             traffic_accepted: 0,
             traffic_retries: 0,
             traffic_phases: 0,
+            issued: 530,
+            squashed: 0,
+            rob_full_stalls: 9,
+            iq_full_stalls: 3,
+            rob_occupancy_sum: 4096,
             routed: 77,
             hnf_requeued: 1,
             // Not representable in f64 — the parser must keep it exact.
@@ -428,6 +455,31 @@ mod tests {
         let b = SweepRecord { host_ns: 1, host_events_per_sec: 9.9, ..a.clone() };
         assert_ne!(a.to_json_line(), b.to_json_line());
         assert_eq!(a.to_canonical_line(), b.to_canonical_line());
+    }
+
+    #[test]
+    fn pre_o3_journal_lines_still_parse() {
+        // A journal written before the O3 pipeline counters existed has
+        // no `issued`/`squashed`/stall fields; `--resume` must still
+        // read it (the counters default to zero, like the host fields).
+        let mut line = sample().to_json_line();
+        for f in [
+            "issued",
+            "squashed",
+            "rob_full_stalls",
+            "iq_full_stalls",
+            "rob_occupancy_sum",
+        ] {
+            let needle = format!("\"{f}\": ");
+            let start = line.find(&needle).expect(f);
+            let end = start + line[start..].find(", ").unwrap() + 2;
+            line.replace_range(start..end, "");
+        }
+        assert!(!line.contains("rob_"), "{line}");
+        let back = SweepRecord::from_json_line(&line).unwrap();
+        assert_eq!(back.issued, 0);
+        assert_eq!(back.rob_occupancy_sum, 0);
+        assert_eq!(back.sim_ticks, sample().sim_ticks);
     }
 
     #[test]

@@ -46,6 +46,13 @@ pub struct Summary {
     pub traffic_retries: u64,
     /// Traffic phases of the longest trace (0 = unphased; deterministic).
     pub traffic_phases: u64,
+    /// O3 pipeline counters (deterministic; all zero under Minor —
+    /// docs/O3.md).
+    pub issued: u64,
+    pub squashed: u64,
+    pub rob_full_stalls: u64,
+    pub iq_full_stalls: u64,
+    pub rob_occupancy_sum: u64,
     /// `--profile` phase breakdowns, host ns summed over threads (all zero
     /// when profiling is off; host-timing dependent like `host_ns`).
     pub prof_window_ns: u64,
@@ -103,6 +110,11 @@ impl Summary {
             traffic_accepted: r.pdes.traffic_accepted,
             traffic_retries: r.pdes.traffic_retries,
             traffic_phases: r.pdes.traffic_phases,
+            issued: r.pdes.issued,
+            squashed: r.pdes.squashed,
+            rob_full_stalls: r.pdes.rob_full_stalls,
+            iq_full_stalls: r.pdes.iq_full_stalls,
+            rob_occupancy_sum: r.pdes.rob_occupancy_sum,
             prof_window_ns: r.pdes.prof_window_ns,
             prof_freeze_wait_ns: r.pdes.prof_freeze_wait_ns,
             prof_border_sync_ns: r.pdes.prof_border_sync_ns,
@@ -140,6 +152,11 @@ impl Summary {
             .u64("traffic_accepted", self.traffic_accepted)
             .u64("traffic_retries", self.traffic_retries)
             .u64("traffic_phases", self.traffic_phases)
+            .u64("issued", self.issued)
+            .u64("squashed", self.squashed)
+            .u64("rob_full_stalls", self.rob_full_stalls)
+            .u64("iq_full_stalls", self.iq_full_stalls)
+            .u64("rob_occupancy_sum", self.rob_occupancy_sum)
             .u64("prof_window_ns", self.prof_window_ns)
             .u64("prof_freeze_wait_ns", self.prof_freeze_wait_ns)
             .u64("prof_border_sync_ns", self.prof_border_sync_ns)

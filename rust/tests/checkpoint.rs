@@ -336,6 +336,141 @@ fn diff_names_first_diverging_component() {
     cleanup(&[&file]);
 }
 
+// ---------------------------------------------------------------------
+// O3 pipeline checkpoints (the `flags` header word, docs/CHECKPOINT.md
+// §3): an O3 snapshot freezes the pipeline mid-flight (non-empty
+// ROB/LSQ, outstanding sequencer requests) and restores bit-identically
+// on both windowed kernels; Minor snapshots keep flags = 0 and the
+// original "V1" layout; a reader without O3 support rejects an O3
+// snapshot at the flags word instead of misparsing it.
+// ---------------------------------------------------------------------
+
+use parti_sim::ckpt::format::FLAG_O3;
+use parti_sim::ckpt::{Header, StateReader};
+use parti_sim::spec::CpuSpec;
+
+/// A cramped O3 traffic config: narrow structures and few MSHRs keep
+/// ops in flight essentially all the time, so a mid-run border freezes
+/// a genuinely busy pipeline.
+fn o3_ckpt_cfg() -> RunConfig {
+    let mut cfg = cfg_for("ring-16", 5, 96);
+    cfg.traffic = Some("uniform-random".to_string());
+    cfg.system.cpu_spec = CpuSpec {
+        width: 2,
+        rob_size: 12,
+        iq_size: 6,
+        lsq_size: 4,
+        fetch_buf: 4,
+        mshrs: 3,
+    };
+    cfg
+}
+
+#[test]
+fn o3_checkpoint_freezes_mid_flight_and_restores_bit_identically() {
+    let base = o3_ckpt_cfg();
+    assert_eq!(base.cpu_model, CpuModel::O3, "presets default to o3");
+    let reference = run_once(&base).unwrap();
+
+    // Find a border where the frozen pipeline is demonstrably
+    // mid-flight: ops past issue but not yet committed live in the ROB
+    // (and their requests in the LSQ / sequencer outstanding set).
+    let mut chosen = None;
+    for (num, den) in [(1u64, 4u64), (1, 2), (3, 4)] {
+        let at = reference.sim_ticks * num / den;
+        let file = tmp(&format!("o3_midflight_{num}_{den}"));
+        let (partial, border) = run_to_checkpoint(&base, at, &file).unwrap();
+        assert!(border.is_some(), "run ended before tick {at}");
+        let issued = partial.stats.sum_suffix(".issued");
+        let committed = partial.stats.sum_suffix(".committed_ops");
+        if issued > committed {
+            chosen = Some((file, partial));
+            break;
+        }
+        cleanup(&[&file]);
+    }
+    let (file, partial) = chosen.expect(
+        "a cramped O3 pipeline must be mid-flight at some border \
+         (issued > committed nowhere?)",
+    );
+    assert!(
+        partial.stats.sum_suffix(".issued")
+            > partial.stats.sum_suffix(".committed_ops"),
+        "frozen state carries in-flight (issued, uncommitted) ops"
+    );
+
+    let bytes = std::fs::read(&file).unwrap();
+    let snap = ckpt::read_snapshot(&bytes).unwrap();
+    assert_eq!(snap.header.flags, FLAG_O3, "o3 snapshots set the flag");
+
+    // Bit-identical completion on the virtual kernel and across the
+    // threaded matrix.
+    let (outcome, _) = restore_and_run(&snap, &base, None).unwrap();
+    assert_bit_identical(
+        &reference,
+        &outcome.into_finished(),
+        "o3-midflight/virtual",
+    );
+    for &(threads, steal) in common::FULL_MATRIX {
+        let mut free = base.clone();
+        free.mode = Mode::Parallel;
+        free.threads = threads;
+        free.steal = steal;
+        let (outcome, _) = restore_and_run(&snap, &free, None).unwrap();
+        assert_bit_identical(
+            &reference,
+            &outcome.into_finished(),
+            &format!("o3-midflight/threads={threads}/steal={steal}"),
+        );
+    }
+    cleanup(&[&file]);
+}
+
+#[test]
+fn minor_checkpoints_keep_flags_zero_and_still_load() {
+    // The pre-O3 layout: a Minor run writes flags = 0 and none of the
+    // O3 extensions, and the current reader loads it exactly as before.
+    let mut base = cfg_for("fig4-2", 5, 128);
+    base.cpu_model = CpuModel::Minor;
+    let (file, _, reference) = checkpoint_halfway(&base, "minor_v1");
+    let bytes = std::fs::read(&file).unwrap();
+    let snap = ckpt::read_snapshot(&bytes).unwrap();
+    assert_eq!(snap.header.flags, 0, "minor snapshots stay V1 (flags 0)");
+    let (outcome, _) = restore_and_run(&snap, &base, None).unwrap();
+    assert_bit_identical(&reference, &outcome.into_finished(), "minor_v1");
+    cleanup(&[&file]);
+}
+
+#[test]
+fn o3_snapshot_is_rejected_by_a_reader_without_o3_support() {
+    let base = o3_ckpt_cfg();
+    let (file, _, _) = checkpoint_halfway(&base, "o3_flags_reject");
+    let golden = std::fs::read(&file).unwrap();
+    assert!(ckpt::read_snapshot(&golden).is_ok());
+
+    // A flags=0-era reader (modelled by the narrow supported mask) must
+    // refuse at the flags word — byte 12 — naming the missing feature.
+    let mut r = StateReader::new(&golden);
+    match Header::read_with_supported(&mut r, 0) {
+        Err(CkptError::Corrupt { offset, what }) => {
+            assert_eq!(offset, 12, "flags word offset");
+            assert!(what.contains("O3"), "hint names the feature: {what}");
+            assert!(what.contains("CHECKPOINT.md"), "{what}");
+        }
+        other => panic!("expected flags rejection, got {other:?}"),
+    }
+
+    // And the current reader symmetrically refuses bits *it* does not
+    // know (a future format extension), at the same offset.
+    let mut future = golden.clone();
+    future[15] |= 0x80; // high byte of the little-endian flags u32
+    match ckpt::read_snapshot(&future) {
+        Err(CkptError::Corrupt { offset, .. }) => assert_eq!(offset, 12),
+        other => panic!("expected unknown-flag rejection, got {other:?}"),
+    }
+    cleanup(&[&file]);
+}
+
 #[test]
 fn sweep_forks_from_checkpoint_identically() {
     let spec = sweep::resolve("quick").unwrap();

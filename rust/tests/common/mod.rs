@@ -82,6 +82,20 @@ pub fn assert_identical_modulo_schedule(
         a.pdes.traffic_phases, b.pdes.traffic_phases,
         "{what}: traffic_phases"
     );
+    assert_eq!(a.pdes.issued, b.pdes.issued, "{what}: issued");
+    assert_eq!(a.pdes.squashed, b.pdes.squashed, "{what}: squashed");
+    assert_eq!(
+        a.pdes.rob_full_stalls, b.pdes.rob_full_stalls,
+        "{what}: rob_full_stalls"
+    );
+    assert_eq!(
+        a.pdes.iq_full_stalls, b.pdes.iq_full_stalls,
+        "{what}: iq_full_stalls"
+    );
+    assert_eq!(
+        a.pdes.rob_occupancy_sum, b.pdes.rob_occupancy_sum,
+        "{what}: rob_occupancy_sum"
+    );
     assert_eq!(
         a.stats.entries.len(),
         b.stats.entries.len(),

@@ -556,6 +556,10 @@ fn random_sweep_spec(
     };
     let cores =
         if g.bool() { Vec::new() } else { subset(g, &[2usize, 4, 6, 8]) };
+    let cpu_widths =
+        if g.bool() { Vec::new() } else { subset(g, &[1usize, 2, 4, 8]) };
+    let rob_sizes =
+        if g.bool() { Vec::new() } else { subset(g, &[8usize, 32, 64, 128]) };
     let fabrics = if g.bool() {
         Vec::new()
     } else {
@@ -583,6 +587,8 @@ fn random_sweep_spec(
             ],
         ),
         kernels: subset(g, &[Mode::Serial, Mode::Parallel, Mode::Virtual]),
+        cpu_widths,
+        rob_sizes,
         quantum_ns: q,
         quantum_policies: subset(
             g,
@@ -660,6 +666,11 @@ fn prop_sweep_spec_out_of_range_knobs_are_rejected() {
         ("quantum_ns", |s| s.quantum_ns = vec![0]),
         ("quantum_ns", |s| s.quantum_ns = vec![8, 8]),
         ("quantum_policies", |s| s.quantum_policies.clear()),
+        ("cpu_widths", |s| s.cpu_widths = vec![0]),
+        ("cpu_widths", |s| s.cpu_widths = vec![17]),
+        ("cpu_widths", |s| s.cpu_widths = vec![2, 2]),
+        ("rob_sizes", |s| s.rob_sizes = vec![0]),
+        ("rob_sizes", |s| s.rob_sizes = vec![4096]),
         ("samples", |s| {
             s.sampling = Sampling::Random;
             s.samples = 0;
@@ -691,6 +702,93 @@ fn sweep_toml_rejects_unknown_keys() {
     let err = SweepSpec::from_toml("kernles = \"virtual\"\n").unwrap_err();
     assert!(err.errors[0].contains("unknown key `kernles`"), "{err}");
     assert!(err.to_string().contains("docs/SWEEP.md"), "{err}");
+}
+
+// ---------------------------------------------------------------------
+// CpuSpec: the O3 pipeline-geometry knobs survive the platform TOML
+// round-trip over a seeded walk of the valid knob space; every
+// single-knob excursion outside the documented ranges is rejected —
+// by `validate()` directly and by the `from_toml` path — naming the
+// offending TOML key (docs/O3.md).
+// ---------------------------------------------------------------------
+
+use parti_sim::spec::{CpuSpec, SystemSpec};
+
+/// One random point in the *valid* CpuSpec space (docs/O3.md ranges).
+fn random_cpu_spec(g: &mut parti_sim::util::prop::Gen) -> CpuSpec {
+    CpuSpec {
+        width: g.range_usize(1, 16),
+        rob_size: g.range_usize(1, 512),
+        iq_size: g.range_usize(1, 512),
+        lsq_size: g.range_usize(1, 256),
+        fetch_buf: g.range_usize(1, 256),
+        mshrs: g.range_usize(1, 64),
+    }
+}
+
+#[test]
+fn prop_cpu_spec_toml_roundtrip_is_identity() {
+    check("cpu-toml-roundtrip", 64, |g, i| {
+        let spec = SystemSpec {
+            cpu_spec: random_cpu_spec(g),
+            ..SystemSpec::default()
+        }
+        .named(format!("prop-{i}"), format!("cpu knob walk point {i}"));
+        spec.validate()
+            .unwrap_or_else(|e| panic!("walk left the valid region: {e}"));
+        let toml = spec.to_toml();
+        let back = SystemSpec::from_toml(&toml)
+            .unwrap_or_else(|e| panic!("roundtrip parse failed: {e}\n{toml}"));
+        assert_eq!(spec, back, "TOML roundtrip must be the identity");
+        assert_eq!(spec.cpu_spec, back.cpu_spec);
+    });
+}
+
+#[test]
+fn prop_cpu_spec_out_of_range_knobs_are_rejected() {
+    // Each case pushes exactly one knob outside its documented range
+    // (both below and above); validate() and the serialise-then-parse
+    // path must refuse, and the error must name the TOML key.
+    let break_one: &[(&str, fn(&mut CpuSpec))] = &[
+        ("cpu_width", |c| c.width = 0),
+        ("cpu_width", |c| c.width = 17),
+        ("cpu_rob_size", |c| c.rob_size = 0),
+        ("cpu_rob_size", |c| c.rob_size = 513),
+        ("cpu_iq_size", |c| c.iq_size = 0),
+        ("cpu_iq_size", |c| c.iq_size = 513),
+        ("cpu_lsq_size", |c| c.lsq_size = 0),
+        ("cpu_lsq_size", |c| c.lsq_size = 257),
+        ("cpu_fetch_buf", |c| c.fetch_buf = 0),
+        ("cpu_fetch_buf", |c| c.fetch_buf = 257),
+        ("cpu_mshrs", |c| c.mshrs = 0),
+        ("cpu_mshrs", |c| c.mshrs = 65),
+    ];
+    check("cpu-rejection", 48, |g, i| {
+        let mut cpu = random_cpu_spec(g);
+        let (knob, breaker) = *g.pick(break_one);
+        breaker(&mut cpu);
+        let spec = SystemSpec { cpu_spec: cpu, ..SystemSpec::default() }
+            .named(format!("prop-{i}"), "broken cpu knob");
+        let err = spec
+            .validate()
+            .expect_err("an out-of-range knob must fail validation");
+        assert!(
+            err.errors.iter().any(|e| e.contains(knob)),
+            "{knob}: error must name the knob, got {err}"
+        );
+        let err = SystemSpec::from_toml(&spec.to_toml())
+            .expect_err("from_toml must re-validate");
+        assert!(err.errors.iter().any(|e| e.contains(knob)), "{err}");
+    });
+}
+
+#[test]
+fn cpu_knob_typo_is_rejected_with_hint() {
+    // A misspelt cpu knob must not silently fall back to the default
+    // pipeline geometry, and the hint points at the schema doc.
+    let err = SystemSpec::from_toml("cpu_widht = 4\n").unwrap_err();
+    assert!(err.errors[0].contains("unknown key `cpu_widht`"), "{err}");
+    assert!(err.to_string().contains("PLATFORMS.md"), "{err}");
 }
 
 // ---------------------------------------------------------------------

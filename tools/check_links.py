@@ -27,6 +27,7 @@ DEFAULT_FILES = [
     "docs/CHECKPOINT.md",
     "docs/CLI.md",
     "docs/DETERMINISM.md",
+    "docs/O3.md",
     "docs/PERF.md",
     "docs/PLATFORMS.md",
     "docs/SWEEP.md",
